@@ -1,0 +1,48 @@
+//! Figure 4: word frequency count — words/second vs node count.
+//!
+//! Paper: Blaze > 10x Spark across 1–16 r5.xlarge nodes; "Blaze TCM"
+//! (TCMalloc) ≈ Blaze. Series here: blaze, blaze-tcm (pool allocator),
+//! conventional (Spark analog). Throughput is computed from the virtual
+//! makespan (measured per-node compute + modeled 10 Gbps interconnect).
+
+use blaze::apps::wordcount::wordcount;
+use blaze::bench;
+use blaze::coordinator::cluster::{Cluster, ClusterConfig, EngineKind};
+use blaze::prelude::*;
+use blaze::util::alloc::AllocMode;
+
+fn main() {
+    bench::figure_header(
+        "Figure 4: Word Frequency Count (words/second)",
+        "Blaze ~10x Spark; Blaze TCM ~= Blaze; near-linear node scaling",
+    );
+    let scale = bench::scale();
+    let lines = blaze::data::corpus_lines(40_000 * scale, 10, 42);
+    let n_words: u64 = lines.iter().map(|l| l.split_whitespace().count() as u64).sum();
+    println!("corpus: {} lines, {} words\n", lines.len(), n_words);
+
+    println!(
+        "{:<6} {:>16} {:>16} {:>16} {:>9}",
+        "nodes", "blaze (w/s)", "blaze-tcm (w/s)", "conv (w/s)", "speedup"
+    );
+    for nodes in bench::node_sweep() {
+        let run = |engine: EngineKind, alloc: AllocMode| {
+            let c = Cluster::new(
+                ClusterConfig::sized(nodes, 4).with_engine(engine).with_alloc(alloc),
+            );
+            let dv = DistVector::from_vec(&c, lines.clone());
+            wordcount(&c, &dv).0.throughput
+        };
+        let blaze = run(EngineKind::Eager, AllocMode::System);
+        let tcm = run(EngineKind::Eager, AllocMode::Pool);
+        let conv = run(EngineKind::Conventional, AllocMode::System);
+        println!(
+            "{:<6} {:>16.0} {:>16.0} {:>16.0} {:>8.1}x",
+            nodes,
+            blaze,
+            tcm,
+            conv,
+            blaze / conv
+        );
+    }
+}

@@ -1,0 +1,48 @@
+//! Figure 5: PageRank — links processed per second per iteration vs nodes.
+//!
+//! Paper: graph500 input (10M links), convergence 1e-5 (27 iterations);
+//! Blaze >> Spark GraphX. Series: blaze, blaze-tcm, conventional.
+
+use blaze::apps::pagerank::pagerank;
+use blaze::bench;
+use blaze::coordinator::cluster::{Cluster, ClusterConfig, EngineKind};
+use blaze::data::Graph;
+use blaze::util::alloc::AllocMode;
+
+fn main() {
+    bench::figure_header(
+        "Figure 5: PageRank (links/second/iteration)",
+        "Blaze >> Spark GraphX on a graph500 power-law graph, tol=1e-5",
+    );
+    // Default: 2^16 vertices, ~1M links. The paper's 10M-link input is
+    // BLAZE_BENCH_SCALE=8 (scale 19); host time grows linearly.
+    let scale = bench::scale();
+    let g = Graph::graph500(16 + scale.ilog2(), 16, 42);
+    println!(
+        "graph500: {} vertices, {} links, {} sinks\n",
+        g.n_vertices,
+        g.n_edges(),
+        g.sinks().len()
+    );
+
+    println!(
+        "{:<6} {:>10} {:>16} {:>16} {:>16} {:>9}",
+        "nodes", "iters", "blaze (l/s/it)", "blaze-tcm", "conv (l/s/it)", "speedup"
+    );
+    for nodes in bench::node_sweep() {
+        let run = |engine: EngineKind, alloc: AllocMode| {
+            let c = Cluster::new(
+                ClusterConfig::sized(nodes, 4).with_engine(engine).with_alloc(alloc),
+            );
+            let (report, result) = pagerank(&c, &g, 1e-5, 100);
+            (report.throughput, result.iterations)
+        };
+        let (blaze, iters) = run(EngineKind::Eager, AllocMode::System);
+        let (tcm, _) = run(EngineKind::Eager, AllocMode::Pool);
+        let (conv, _) = run(EngineKind::Conventional, AllocMode::System);
+        println!(
+            "{:<6} {:>10} {:>16.0} {:>16.0} {:>16.0} {:>8.1}x",
+            nodes, iters, blaze, tcm, conv, blaze / conv
+        );
+    }
+}

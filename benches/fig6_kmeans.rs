@@ -1,0 +1,54 @@
+//! Figure 6: K-Means — points processed per second per iteration vs nodes.
+//!
+//! Paper: 100M points around 5 centers; Blaze >> Spark MLlib. The
+//! assignment step runs through the AOT-compiled PJRT executable (Pallas
+//! pairwise kernel) when `make artifacts` has been run.
+
+use blaze::apps::kmeans::{distribute_blocks, init_first_k, kmeans};
+use blaze::bench;
+use blaze::coordinator::cluster::{Cluster, ClusterConfig, EngineKind};
+use blaze::data::PointSet;
+use blaze::runtime::Runtime;
+use blaze::util::alloc::AllocMode;
+
+fn main() {
+    bench::figure_header(
+        "Figure 6: K-Means (points/second/iteration)",
+        "Blaze >> Spark MLlib; 5 Gaussian clusters; assignment on PJRT",
+    );
+    let runtime = Runtime::load("artifacts").ok();
+    let (dim, k) = runtime.as_ref().map_or((4, 5), |rt| (rt.dim(), rt.k()));
+    let batch = runtime.as_ref().map_or(4096, Runtime::batch);
+    let scale = bench::scale();
+    let ps = PointSet::clustered(60_000 * scale, dim, k, 0.6, 42);
+    let init = init_first_k(&ps, k);
+    println!(
+        "{} points, dim={dim}, k={k}, pjrt={}\n",
+        ps.n,
+        runtime.is_some()
+    );
+
+    println!(
+        "{:<6} {:>8} {:>16} {:>16} {:>16} {:>9}",
+        "nodes", "iters", "blaze (p/s/it)", "blaze-tcm", "conv (p/s/it)", "speedup"
+    );
+    for nodes in bench::node_sweep() {
+        let run = |engine: EngineKind, alloc: AllocMode| {
+            let c = Cluster::new(
+                ClusterConfig::sized(nodes, 4).with_engine(engine).with_alloc(alloc),
+            );
+            let blocks = distribute_blocks(&c, &ps, batch);
+            let (report, result) = kmeans(
+                &c, &blocks, ps.n, dim, k, init.clone(), 1e-4, 20, runtime.as_ref(),
+            );
+            (report.throughput, result.iterations)
+        };
+        let (blaze, iters) = run(EngineKind::Eager, AllocMode::System);
+        let (tcm, _) = run(EngineKind::Eager, AllocMode::Pool);
+        let (conv, _) = run(EngineKind::Conventional, AllocMode::System);
+        println!(
+            "{:<6} {:>8} {:>16.0} {:>16.0} {:>16.0} {:>8.1}x",
+            nodes, iters, blaze, tcm, conv, blaze / conv
+        );
+    }
+}

@@ -1,0 +1,46 @@
+//! Figure 7: Expectation-Maximization (GMM) — points/second/iteration.
+//!
+//! Paper: 1M points, 5 components, 6 MapReduce operations per iteration;
+//! Blaze >> Spark MLlib. The fused PJRT E-step carries the production
+//! path; `benches/ablations.rs` compares it against the paper's literal
+//! 6-MR decomposition.
+
+use blaze::apps::gmm::gmm_from_points;
+use blaze::bench;
+use blaze::coordinator::cluster::{Cluster, ClusterConfig, EngineKind};
+use blaze::data::PointSet;
+use blaze::runtime::Runtime;
+use blaze::util::alloc::AllocMode;
+
+fn main() {
+    bench::figure_header(
+        "Figure 7: EM for Gaussian Mixture (points/second/iteration)",
+        "Blaze >> Spark MLlib; 5 components; E-step on PJRT (Pallas logpdf kernel)",
+    );
+    let runtime = Runtime::load("artifacts").ok();
+    let (dim, k) = runtime.as_ref().map_or((4, 5), |rt| (rt.dim(), rt.k()));
+    let scale = bench::scale();
+    let ps = PointSet::clustered(12_000 * scale, dim, k, 0.6, 43);
+    println!("{} points, dim={dim}, k={k}, pjrt={}\n", ps.n, runtime.is_some());
+
+    println!(
+        "{:<6} {:>8} {:>16} {:>16} {:>16} {:>9}",
+        "nodes", "iters", "blaze (p/s/it)", "blaze-tcm", "conv (p/s/it)", "speedup"
+    );
+    for nodes in bench::node_sweep() {
+        let run = |engine: EngineKind, alloc: AllocMode| {
+            let c = Cluster::new(
+                ClusterConfig::sized(nodes, 4).with_engine(engine).with_alloc(alloc),
+            );
+            let (report, result) = gmm_from_points(&c, &ps, k, 1e-6, 15, runtime.as_ref());
+            (report.throughput, result.iterations)
+        };
+        let (blaze, iters) = run(EngineKind::Eager, AllocMode::System);
+        let (tcm, _) = run(EngineKind::Eager, AllocMode::Pool);
+        let (conv, _) = run(EngineKind::Conventional, AllocMode::System);
+        println!(
+            "{:<6} {:>8} {:>16.0} {:>16.0} {:>16.0} {:>8.1}x",
+            nodes, iters, blaze, tcm, conv, blaze / conv
+        );
+    }
+}

@@ -1,0 +1,45 @@
+//! Figure 8: Nearest-100-neighbors — total points processed per second.
+//!
+//! Paper: 200M random points; Blaze and Spark are *closest* on this task
+//! (no intermediate key/value pairs — it's a distance scan + distributed
+//! top-k). Expect the smallest speedup of the five workloads.
+
+use blaze::apps::knn::knn;
+use blaze::bench;
+use blaze::coordinator::cluster::{Cluster, ClusterConfig, EngineKind};
+use blaze::data::PointSet;
+use blaze::runtime::Runtime;
+use blaze::util::alloc::AllocMode;
+
+fn main() {
+    bench::figure_header(
+        "Figure 8: Nearest 100 Neighbors (points/second)",
+        "smallest Blaze-vs-Spark gap (no intermediate pairs); near-linear scaling",
+    );
+    let runtime = Runtime::load("artifacts").ok();
+    let dim = runtime.as_ref().map_or(4, Runtime::dim);
+    let scale = bench::scale();
+    let ps = PointSet::uniform(120_000 * scale, dim, 44);
+    let query = vec![0.5f32; dim];
+    println!("{} points, dim={dim}, k=100, pjrt={}\n", ps.n, runtime.is_some());
+
+    println!(
+        "{:<6} {:>16} {:>16} {:>16} {:>9}",
+        "nodes", "blaze (p/s)", "blaze-tcm", "conv (p/s)", "speedup"
+    );
+    for nodes in bench::node_sweep() {
+        let run = |engine: EngineKind, alloc: AllocMode| {
+            let c = Cluster::new(
+                ClusterConfig::sized(nodes, 4).with_engine(engine).with_alloc(alloc),
+            );
+            knn(&c, &ps, &query, 100, runtime.as_ref()).0.throughput
+        };
+        let blaze = run(EngineKind::Eager, AllocMode::System);
+        let tcm = run(EngineKind::Eager, AllocMode::Pool);
+        let conv = run(EngineKind::Conventional, AllocMode::System);
+        println!(
+            "{:<6} {:>16.0} {:>16.0} {:>16.0} {:>8.1}x",
+            nodes, blaze, tcm, conv, blaze / conv
+        );
+    }
+}

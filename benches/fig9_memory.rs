@@ -1,0 +1,93 @@
+//! Figure 9: peak memory usage on a single node, per task.
+//!
+//! Paper: Spark uses ~10x Blaze's memory on PageRank / K-Means / GMM
+//! (intermediate pair materialization); k-NN is the one task where they are
+//! close (no intermediate pairs). Blaze TCM is the same order of magnitude
+//! as Blaze. Peak bytes here are the engines' intermediate-state
+//! accounting: thread caches + materialized pair buffers + in-flight
+//! serialized blocks (see `coordinator::metrics`).
+
+use blaze::apps::{gmm, kmeans, knn, pagerank, wordcount};
+use blaze::bench::{self, fmt_bytes};
+use blaze::coordinator::cluster::{Cluster, ClusterConfig, EngineKind};
+use blaze::data::{corpus_lines, Graph, PointSet};
+use blaze::prelude::*;
+use blaze::runtime::Runtime;
+use blaze::util::alloc::AllocMode;
+
+fn main() {
+    bench::figure_header(
+        "Figure 9: Peak memory usage on a single node",
+        "Spark ~10x Blaze on PageRank/K-Means/GMM; close on k-NN; TCM same order",
+    );
+    let runtime = Runtime::load("artifacts").ok();
+    let (dim, k) = runtime.as_ref().map_or((4, 5), |rt| (rt.dim(), rt.k()));
+    let batch = runtime.as_ref().map_or(4096, Runtime::batch);
+    let scale = bench::scale();
+
+    let lines = corpus_lines(40_000 * scale, 10, 42);
+    let graph = Graph::graph500(12 + scale.ilog2(), 16, 42);
+    let km = PointSet::clustered(60_000 * scale, dim, k, 0.6, 42);
+    let gm = PointSet::clustered(12_000 * scale, dim, k, 0.6, 43);
+    let nn = PointSet::uniform(120_000 * scale, dim, 44);
+    let query = vec![0.5f32; dim];
+
+    // Single local node, 12 workers like the paper's 12-logical-core box.
+    let mk = |engine: EngineKind, alloc: AllocMode| {
+        Cluster::new(ClusterConfig::sized(1, 12).with_engine(engine).with_alloc(alloc))
+    };
+
+    let peak = |c: &Cluster, prefix: &str| c.metrics().job_peak_bytes(prefix);
+
+    println!(
+        "{:<10} {:>14} {:>14} {:>14} {:>8}",
+        "task", "blaze", "blaze-tcm", "conventional", "ratio"
+    );
+    let configs = [
+        (EngineKind::Eager, AllocMode::System),
+        (EngineKind::Eager, AllocMode::Pool),
+        (EngineKind::Conventional, AllocMode::System),
+    ];
+    for task in ["wordcount", "pagerank", "kmeans", "gmm", "knn"] {
+        let mut peaks = [0u64; 3];
+        for (i, &(engine, alloc)) in configs.iter().enumerate() {
+            let c = mk(engine, alloc);
+            peaks[i] = match task {
+                "wordcount" => {
+                    let dv = DistVector::from_vec(&c, lines.clone());
+                    wordcount::wordcount(&c, &dv);
+                    peak(&c, "wordcount.")
+                }
+                "pagerank" => {
+                    pagerank::pagerank(&c, &graph, 1e-5, 15);
+                    peak(&c, "pagerank.")
+                }
+                "kmeans" => {
+                    let blocks = kmeans::distribute_blocks(&c, &km, batch);
+                    let init = kmeans::init_first_k(&km, k);
+                    kmeans::kmeans(&c, &blocks, km.n, dim, k, init, 1e-4, 10, runtime.as_ref());
+                    peak(&c, "kmeans.")
+                }
+                "gmm" => {
+                    gmm::gmm_from_points(&c, &gm, k, 1e-6, 8, runtime.as_ref());
+                    peak(&c, "gmm.")
+                }
+                "knn" => {
+                    knn::knn(&c, &nn, &query, 100, runtime.as_ref());
+                    // k-NN peak: candidate (dist, idx) vector + top-k heaps.
+                    peak(&c, "knn.").max((nn.n * std::mem::size_of::<(f32, u32)>()) as u64)
+                }
+                _ => unreachable!(),
+            };
+        }
+        println!(
+            "{:<10} {:>14} {:>14} {:>14} {:>7.1}x",
+            task,
+            fmt_bytes(peaks[0]),
+            fmt_bytes(peaks[1]),
+            fmt_bytes(peaks[2]),
+            peaks[2] as f64 / peaks[0].max(1) as f64
+        );
+    }
+    println!("\nratio = conventional / blaze (paper: ~10x on keyed tasks, ~1x on knn)");
+}

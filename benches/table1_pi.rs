@@ -1,0 +1,47 @@
+//! Table 1: Monte-Carlo π — Blaze MapReduce vs hand-optimized MPI+OpenMP.
+//!
+//! Paper: Blaze 0.14/1.44/14.2 s vs MPI+OpenMP 0.14/1.42/14.6 s at
+//! 10^7/10^8/10^9 samples (i7-8550U); SLOC 8 vs 24. The claim under test is
+//! **parity**: the small-key-range path compiles down to the same execution
+//! plan as the hand-written loop, so the ratio must stay ≈1 at every scale.
+//! (Absolute times differ from the paper's testbed; the ratio is the
+//! reproduced quantity.)
+
+use blaze::apps::pi::{pi_blaze, pi_hand_optimized, SLOC_BLAZE, SLOC_MPI_OPENMP};
+use blaze::bench;
+use blaze::prelude::*;
+
+fn main() {
+    bench::figure_header(
+        "Table 1: Monte Carlo Pi Estimation Performance",
+        "Blaze MapReduce ~= hand-optimized MPI+OpenMP at every sample count; SLOC 8 vs 24",
+    );
+    let reps = bench::reps();
+    // Paper scales 1e7..1e9; default here 1e6..1e8 (single host core),
+    // override with BLAZE_BENCH_SCALE=10 for the paper's sizes.
+    let scale = bench::scale() as u64;
+    let sample_counts = [1_000_000 * scale, 10_000_000 * scale, 100_000_000 * scale];
+
+    println!(
+        "{:<12} {:>22} {:>22} {:>9}",
+        "samples", "Blaze MapReduce (s)", "MPI+OpenMP (s)", "ratio"
+    );
+    for &n in &sample_counts {
+        let blaze = bench::time_host(reps, || {
+            let c = Cluster::local(1, 4);
+            pi_blaze(&c, n)
+        });
+        let hand = bench::time_host(reps, || {
+            let c = Cluster::local(1, 4);
+            pi_hand_optimized(&c, n)
+        });
+        println!(
+            "{:<12} {:>22} {:>22} {:>8.3}x",
+            format!("{:.0e}", n as f64),
+            blaze.to_string(),
+            hand.to_string(),
+            blaze.mean / hand.mean
+        );
+    }
+    println!("\nSLOC: Blaze {SLOC_BLAZE} vs MPI+OpenMP {SLOC_MPI_OPENMP} (paper: 8 vs 24)");
+}

@@ -1,0 +1,70 @@
+//! K-Means over the PJRT-compiled JAX/Pallas assignment kernel
+//! (paper §3.1.3) — the three-layer stack end to end on one workload.
+//!
+//! ```text
+//! cargo run --release --example kmeans_train [n_points] [nodes]
+//! ```
+//!
+//! Requires `make artifacts`. Falls back to the scalar mapper (with a
+//! warning) if the artifacts are missing.
+
+use blaze::apps::kmeans::{distribute_blocks, init_first_k, kmeans};
+use blaze::data::PointSet;
+use blaze::prelude::*;
+use blaze::runtime::Runtime;
+
+fn main() {
+    let n: usize = std::env::args().nth(1).map_or(100_000, |s| s.parse().expect("n_points"));
+    let nodes: usize = std::env::args().nth(2).map_or(4, |s| s.parse().expect("nodes"));
+
+    let runtime = match Runtime::load("artifacts") {
+        Ok(rt) => {
+            println!("PJRT runtime: {rt:?}");
+            Some(rt)
+        }
+        Err(e) => {
+            eprintln!("warning: no artifacts ({e:#}); using scalar mappers");
+            None
+        }
+    };
+    let (dim, k) = runtime.as_ref().map_or((4, 5), |rt| (rt.dim(), rt.k()));
+    let batch = runtime.as_ref().map_or(4096, Runtime::batch);
+
+    let points = PointSet::clustered(n, dim, k, 0.6, 42);
+    let cluster = Cluster::local(nodes, 4);
+    let blocks = distribute_blocks(&cluster, &points, batch);
+    let init = init_first_k(&points, k);
+
+    let t0 = std::time::Instant::now();
+    let (report, result) = kmeans(
+        &cluster, &blocks, n, dim, k, init, 1e-4, 50, runtime.as_ref(),
+    );
+    println!(
+        "{} points, k={k}, dim={dim}: converged in {} iterations, inertia {:.1}",
+        n, result.iterations, result.inertia
+    );
+    println!(
+        "virtual: {:.4}s makespan, {:.0} points/s/iter | host wall: {:.2}s",
+        report.makespan_sec,
+        report.throughput,
+        t0.elapsed().as_secs_f64()
+    );
+
+    // Center recovery vs the generating mixture.
+    let mut worst = 0.0f64;
+    for tc in points.true_centers.chunks_exact(dim) {
+        let best = result
+            .centers
+            .chunks_exact(dim)
+            .map(|ec| {
+                ec.iter()
+                    .zip(tc)
+                    .map(|(a, b)| f64::from(a - b).powi(2))
+                    .sum::<f64>()
+                    .sqrt()
+            })
+            .fold(f64::INFINITY, f64::min);
+        worst = worst.max(best);
+    }
+    println!("worst center recovery error: {worst:.4}");
+}

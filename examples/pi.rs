@@ -1,0 +1,44 @@
+//! Monte-Carlo π — the paper's Appendix A.2 example and Table 1 workload.
+//!
+//! ```text
+//! cargo run --release --example pi [n_samples]
+//! ```
+//!
+//! Runs the 8-line Blaze MapReduce version and the hand-optimized
+//! MPI+OpenMP-style parallel loop side by side (Table 1's comparison).
+
+use blaze::apps::pi::{pi_blaze, pi_hand_optimized, SLOC_BLAZE, SLOC_MPI_OPENMP};
+use blaze::prelude::*;
+
+fn main() {
+    let n: u64 = std::env::args()
+        .nth(1)
+        .map(|s| s.parse().expect("sample count"))
+        .unwrap_or(10_000_000);
+
+    println!("samples = {n}\n");
+    println!("{:<18} {:>12} {:>12} {:>8}", "implementation", "virtual(s)", "host(s)", "SLOC");
+    for nodes in [1usize, 4] {
+        let c = Cluster::local(nodes, 4);
+        let blaze_report = pi_blaze(&c, n);
+        let blaze_host = c.metrics().last_run().unwrap().host_wall_sec;
+        let c2 = Cluster::local(nodes, 4);
+        let hand_report = pi_hand_optimized(&c2, n);
+        let hand_host = c2.metrics().last_run().unwrap().host_wall_sec;
+        println!("--- {nodes} node(s) ---");
+        println!(
+            "{:<18} {:>12.4} {:>12.4} {:>8}",
+            "blaze mapreduce", blaze_report.makespan_sec, blaze_host, SLOC_BLAZE
+        );
+        println!(
+            "{:<18} {:>12.4} {:>12.4} {:>8}",
+            "mpi+openmp loop", hand_report.makespan_sec, hand_host, SLOC_MPI_OPENMP
+        );
+        println!(
+            "pi = {:.6} (blaze) / {:.6} (hand), ratio blaze/hand = {:.3}",
+            blaze_report.result,
+            hand_report.result,
+            blaze_report.makespan_sec / hand_report.makespan_sec
+        );
+    }
+}

@@ -1,0 +1,158 @@
+//! End-to-end validation driver (DESIGN.md §Validation story).
+//!
+//! ```text
+//! cargo run --release --example pipeline_e2e [--scale S]
+//! ```
+//!
+//! Runs **all five** paper workloads (word count, PageRank, k-means,
+//! EM-GMM, 100-NN) plus Monte-Carlo π on the simulated cluster at 1/2/4/8
+//! nodes under **both** engines, with the PJRT artifacts on the k-means /
+//! GMM / k-NN hot paths when available. Prints the paper's headline
+//! metric — per-task throughput and the Blaze-vs-conventional speedup —
+//! in EXPERIMENTS.md-ready rows. The paper's claim is >10x average.
+
+use blaze::apps::{gmm, kmeans, knn, pagerank, pi, wordcount, TaskReport};
+use blaze::coordinator::cluster::{Cluster, ClusterConfig, EngineKind};
+use blaze::data::{corpus_lines, Graph, PointSet};
+use blaze::prelude::*;
+use blaze::runtime::Runtime;
+
+fn cluster(nodes: usize, engine: EngineKind) -> Cluster {
+    Cluster::new(ClusterConfig::sized(nodes, 4).with_engine(engine))
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let scale: usize = args
+        .iter()
+        .position(|a| a == "--scale")
+        .and_then(|i| args.get(i + 1))
+        .map_or(1, |s| s.parse().expect("scale"));
+
+    let runtime = Runtime::load("artifacts").ok();
+    match &runtime {
+        Some(rt) => println!("PJRT runtime loaded: {rt:?}"),
+        None => println!("no artifacts; scalar mappers (run `make artifacts` for the full stack)"),
+    }
+    let (dim, k) = runtime.as_ref().map_or((4, 5), |rt| (rt.dim(), rt.k()));
+    let batch = runtime.as_ref().map_or(4096, Runtime::batch);
+
+    // Workload data (fixed across engines and cluster shapes).
+    let lines = corpus_lines(40_000 * scale, 10, 42);
+    let n_words: u64 = lines.iter().map(|l| l.split_whitespace().count() as u64).sum();
+    let graph = Graph::graph500(15 + scale.ilog2(), 16, 42);
+    let km_points = PointSet::clustered(240_000 * scale, dim, k, 0.6, 42);
+    let gmm_points = PointSet::clustered(48_000 * scale, dim, k, 0.6, 43);
+    let knn_points = PointSet::uniform(120_000 * scale, dim, 44);
+    let query = vec![0.5f32; dim];
+    println!(
+        "workloads: {} words | {} links | {}/{}/{} points (kmeans/gmm/knn)\n",
+        n_words,
+        graph.n_edges(),
+        km_points.n,
+        gmm_points.n,
+        knn_points.n
+    );
+
+    let node_counts = [1usize, 2, 4, 8];
+    let engines = [EngineKind::Eager, EngineKind::Conventional];
+    let mut rows: Vec<TaskReport> = Vec::new();
+
+    for &nodes in &node_counts {
+        for &engine in &engines {
+            // --- word count ---
+            let c = cluster(nodes, engine);
+            let dv = DistVector::from_vec(&c, lines.clone());
+            rows.push(wordcount::wordcount(&c, &dv).0);
+
+            // --- pagerank (paper tolerance 1e-5) ---
+            let c = cluster(nodes, engine);
+            rows.push(pagerank::pagerank(&c, &graph, 1e-5, 60).0);
+
+            // --- k-means ---
+            let c = cluster(nodes, engine);
+            let blocks = kmeans::distribute_blocks(&c, &km_points, batch);
+            let init = kmeans::init_first_k(&km_points, k);
+            rows.push(
+                kmeans::kmeans(
+                    &c, &blocks, km_points.n, dim, k, init, 1e-4, 20, runtime.as_ref(),
+                )
+                .0,
+            );
+
+            // --- EM-GMM ---
+            let c = cluster(nodes, engine);
+            rows.push(
+                gmm::gmm_from_points(&c, &gmm_points, k, 1e-6, 15, runtime.as_ref()).0,
+            );
+
+            // --- 100-NN ---
+            let c = cluster(nodes, engine);
+            rows.push(knn::knn(&c, &knn_points, &query, 100, runtime.as_ref()).0);
+
+            // --- pi (eager engine only: Table 1 is Blaze vs hand code) ---
+            if engine == EngineKind::Eager {
+                let c = cluster(nodes, engine);
+                rows.push(pi::pi_blaze(&c, 1_000_000 * scale as u64));
+            }
+        }
+    }
+
+    // ---- EXPERIMENTS.md-ready rows ----
+    println!("== per-run rows (virtual makespans; paper metric = items/s/iter) ==");
+    for row in &rows {
+        println!("{}", row.line());
+    }
+
+    // ---- headline: Blaze vs conventional speedup per task per shape ----
+    println!("\n== headline: Blaze speedup over conventional MapReduce ==");
+    println!(
+        "{:<10} {:>6} {:>14} {:>16} {:>9}",
+        "task", "nodes", "blaze (it/s)", "conv (it/s)", "speedup"
+    );
+    let mut speedups: Vec<f64> = Vec::new();
+    for &nodes in &node_counts {
+        for task in ["wordcount", "pagerank", "kmeans", "gmm", "knn"] {
+            let find = |engine: &str| {
+                rows.iter()
+                    .find(|r| r.task == task && r.nodes == nodes && r.engine == engine)
+                    .expect("row")
+            };
+            let b = find("blaze");
+            let c = find("conventional");
+            let speedup = b.throughput / c.throughput;
+            speedups.push(speedup);
+            println!(
+                "{:<10} {:>6} {:>14.0} {:>16.0} {:>8.1}x",
+                task, nodes, b.throughput, c.throughput, speedup
+            );
+        }
+    }
+    let geo: f64 =
+        (speedups.iter().map(|s| s.ln()).sum::<f64>() / speedups.len() as f64).exp();
+    println!("\ngeometric-mean Blaze speedup: {geo:.1}x  (paper: >10x average)");
+
+    // ---- scaling: throughput vs nodes for the eager engine ----
+    println!("\n== Blaze scaling (throughput normalized to 1 node) ==");
+    print!("{:<10}", "task");
+    for &n in &node_counts {
+        print!(" {n:>7}n");
+    }
+    println!();
+    for task in ["wordcount", "pagerank", "kmeans", "gmm", "knn", "pi"] {
+        let base = rows
+            .iter()
+            .find(|r| r.task == task && r.nodes == 1 && r.engine != "conventional")
+            .map(|r| r.throughput)
+            .unwrap_or(1.0);
+        print!("{task:<10}");
+        for &n in &node_counts {
+            let t = rows
+                .iter()
+                .find(|r| r.task == task && r.nodes == n && r.engine != "conventional")
+                .map_or(0.0, |r| r.throughput);
+            print!(" {:>7.2}x", t / base);
+        }
+        println!();
+    }
+}

@@ -1,0 +1,61 @@
+//! Quickstart: word frequency count, the paper's Appendix A.1 example.
+//!
+//! ```text
+//! cargo run --release --example quickstart [path/to/text.txt]
+//! ```
+//!
+//! With no argument a synthetic Zipf corpus is generated. This is the whole
+//! Blaze API in one screen: a cluster, a distributed container, one
+//! `mapreduce` call, and `collect`.
+
+use blaze::prelude::*;
+
+fn main() {
+    let cluster = Cluster::local(4, 4); // 4 virtual nodes x 4 workers
+
+    // Load file into a distributed container (paper's `load_file`) or
+    // generate a corpus.
+    let lines: DistVector<String> = match std::env::args().nth(1) {
+        Some(path) => load_file(&cluster, &path).expect("readable text file"),
+        None => DistVector::from_vec(&cluster, blaze::data::corpus_lines(20_000, 10, 42)),
+    };
+
+    // Define target hash map.
+    let mut words: DistHashMap<String, u64> = DistHashMap::new(&cluster);
+
+    // Perform mapreduce: split each line, emit (word, 1), reduce with sum.
+    mapreduce(
+        &lines,
+        |_, line: &String, emit| {
+            for w in line.split_whitespace() {
+                emit(w.to_string(), 1u64);
+            }
+        },
+        "sum",
+        &mut words,
+    );
+
+    // Output number of unique words (paper's `words.size()`).
+    println!("unique words: {}", words.len());
+
+    // Top 10 by count, via the distributed vector's topk.
+    let counts: Vec<(u64, String)> = collect_hashmap(&words)
+        .into_iter()
+        .map(|(w, c)| (c, w))
+        .collect();
+    let dv = DistVector::from_vec(&cluster, counts);
+    for (c, w) in dv.topk(10, |a, b| a.0.cmp(&b.0)) {
+        println!("{w:>12}  {c}");
+    }
+
+    let m = cluster.metrics();
+    let run = m.runs().first().expect("run recorded");
+    println!(
+        "\n{} pairs emitted, {} shuffled ({}x combine), {} B cross-node, virtual makespan {:.4}s",
+        run.pairs_emitted,
+        run.pairs_shuffled,
+        run.pairs_emitted / run.pairs_shuffled.max(1),
+        run.shuffle_bytes,
+        run.makespan_sec
+    );
+}

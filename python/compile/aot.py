@@ -1,0 +1,101 @@
+"""AOT driver: lower the Layer-2 models to HLO text for the rust runtime.
+
+HLO *text* (not ``.serialize()``) is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which the published xla
+crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text
+parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/README.md.
+
+Usage: ``cd python && python -m compile.aot --out ../artifacts``
+
+Shapes are fixed at AOT time (PJRT executables are monomorphic); the
+manifest records them so the rust runtime can pad and validate.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Fixed AOT shapes (overridable for experimentation via env).
+BATCH = int(os.environ.get("BLAZE_AOT_BATCH", 4096))
+DIM = int(os.environ.get("BLAZE_AOT_DIM", 4))
+K = int(os.environ.get("BLAZE_AOT_K", 5))
+QUERIES = int(os.environ.get("BLAZE_AOT_QUERIES", 1))
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def build_artifacts():
+    """(name, lowered) for every model entry point."""
+    lowerings = {
+        "kmeans_assign": jax.jit(model.kmeans_assign).lower(
+            _spec(BATCH, DIM), _spec(K, DIM), _spec(BATCH)
+        ),
+        "gmm_estep": jax.jit(model.gmm_estep).lower(
+            _spec(BATCH, DIM),
+            _spec(K, DIM),
+            _spec(K, DIM, DIM),
+            _spec(K),
+            _spec(K),
+            _spec(BATCH),
+        ),
+        "knn_dist": jax.jit(model.knn_dist).lower(
+            _spec(BATCH, DIM), _spec(QUERIES, DIM)
+        ),
+        "pairwise_dist": jax.jit(
+            lambda p, c: (model.knn_dist(p, c),)  # tuple for uniform unwrap
+        ).lower(_spec(BATCH, DIM), _spec(K, DIM)),
+    }
+    return lowerings
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out", default="../artifacts", help="output directory")
+    args = parser.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest = {
+        "batch": BATCH,
+        "dim": DIM,
+        "k": K,
+        "queries": QUERIES,
+        "tile_n": __import__(
+            "compile.kernels.pairwise", fromlist=["TILE_N"]
+        ).TILE_N,
+        "artifacts": {},
+    }
+    for name, lowered in build_artifacts().items():
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"][name] = {
+            "file": f"{name}.hlo.txt",
+            "hlo_bytes": len(text),
+        }
+        print(f"wrote {path} ({len(text)} chars)")
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {os.path.join(args.out, 'manifest.json')}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,11 @@
+"""Layer-1 Pallas kernels (build-time only; never on the request path).
+
+Kernels are lowered with ``interpret=True`` — the CPU PJRT plugin cannot run
+Mosaic custom-calls, so interpret mode is the correctness path and real-TPU
+performance is estimated analytically in DESIGN.md §Perf.
+"""
+
+from .pairwise import pairwise_dist2, pairwise_dist2_tiled
+from .gmm import gmm_logpdf
+
+__all__ = ["pairwise_dist2", "pairwise_dist2_tiled", "gmm_logpdf"]

@@ -1,0 +1,125 @@
+"""Tiled pairwise squared-distance Pallas kernel.
+
+The compute hot-spot shared by k-means (assignment step), k-NN (distance
+scoring) and, indirectly, the GMM E-step. For a tile of points ``x``
+(TILE_N, D) against a resident center block ``c`` (K, D):
+
+    dist2[i, k] = |x_i|^2 - 2 x_i . c_k + |c_k|^2
+
+The expansion maps the inner product onto the MXU systolic array (a plain
+matmul) instead of an elementwise subtract-square-reduce loop — the TPU
+rethink of the paper's cache-blocked CPU inner loop (DESIGN.md
+§Hardware-Adaptation). BlockSpecs express the HBM->VMEM schedule: points
+stream tile-by-tile over a 1-D grid, centers stay resident (K*D is small in
+all of the paper's workloads).
+
+VMEM footprint per grid step (f32): TILE_N*D (points) + K*D (centers)
++ TILE_N*K (out) + TILE_N + K (norms) — for TILE_N=512, D=8, K=64:
+~180 KiB, comfortably under the ~16 MiB/core budget, leaving room for
+double-buffering the point stream.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Tile of points processed per grid step.
+TILE_N = 512
+
+
+def _pairwise_kernel(x_ref, c_ref, o_ref):
+    """One grid step: distances for a (TILE_N, D) point tile."""
+    x = x_ref[...]  # (TILE_N, D) VMEM
+    c = c_ref[...]  # (K, D) VMEM, resident
+    # Row norms. keepdims so broadcasting stays 2-D (TPU-friendly).
+    x2 = jnp.sum(x * x, axis=1, keepdims=True)  # (TILE_N, 1)
+    c2 = jnp.sum(c * c, axis=1, keepdims=True).T  # (1, K)
+    # The MXU part: -2 x c^T.
+    xc = jax.lax.dot_general(
+        x,
+        c,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # (TILE_N, K)
+    # Distances are non-negative; clamp the cancellation error floor.
+    o_ref[...] = jnp.maximum(x2 - 2.0 * xc + c2, 0.0)
+
+
+def _pairwise_kernel_2d(x_ref, c_ref, o_ref):
+    """Two-axis grid step: (TILE_N, D) points x (TILE_K, D) centers."""
+    x = x_ref[...]
+    c = c_ref[...]
+    x2 = jnp.sum(x * x, axis=1, keepdims=True)
+    c2 = jnp.sum(c * c, axis=1, keepdims=True).T
+    xc = jax.lax.dot_general(
+        x,
+        c,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    o_ref[...] = jnp.maximum(x2 - 2.0 * xc + c2, 0.0)
+
+
+# Center tile for the large-K variant: K*D no longer fits VMEM comfortably
+# past a few thousand centers, so centers stream too.
+TILE_K = 128
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def pairwise_dist2_tiled(points, centers, *, interpret=True):
+    """Large-K variant of [`pairwise_dist2`]: 2-D grid tiling both the
+    point stream *and* the center set (k-NN against big reference sets,
+    vector-database-style scoring).
+
+    VMEM per grid step: TILE_N*D + TILE_K*D + TILE_N*TILE_K floats — for
+    TILE_N=512, TILE_K=128, D=64: ~420 KiB, independent of total K. Each
+    center tile is re-streamed once per point tile (HBM traffic K*D *
+    N/TILE_N), the classic tall-skinny matmul schedule.
+
+    Requires N % TILE_N == 0 and K % TILE_K == 0 (AOT wrappers pad).
+    """
+    n, d = points.shape
+    k, d2 = centers.shape
+    assert d == d2, f"dim mismatch {d} vs {d2}"
+    assert n % TILE_N == 0, f"N={n} must be a multiple of TILE_N={TILE_N}"
+    assert k % TILE_K == 0, f"K={k} must be a multiple of TILE_K={TILE_K}"
+    grid = (n // TILE_N, k // TILE_K)
+    return pl.pallas_call(
+        _pairwise_kernel_2d,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TILE_N, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((TILE_K, d), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((TILE_N, TILE_K), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, k), jnp.float32),
+        interpret=interpret,
+    )(points, centers)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def pairwise_dist2(points, centers, *, interpret=True):
+    """Squared Euclidean distances ``(N, K)`` between ``points`` ``(N, D)``
+    and ``centers`` ``(K, D)``.
+
+    ``N`` must be a multiple of ``TILE_N`` (the AOT wrapper pads); ``K`` and
+    ``D`` are free.
+    """
+    n, d = points.shape
+    k, d2 = centers.shape
+    assert d == d2, f"dim mismatch {d} vs {d2}"
+    assert n % TILE_N == 0, f"N={n} must be a multiple of TILE_N={TILE_N}"
+    grid = (n // TILE_N,)
+    return pl.pallas_call(
+        _pairwise_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TILE_N, d), lambda i: (i, 0)),  # stream point tiles
+            pl.BlockSpec((k, d), lambda i: (0, 0)),  # centers resident
+        ],
+        out_specs=pl.BlockSpec((TILE_N, k), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, k), jnp.float32),
+        interpret=interpret,
+    )(points, centers)

@@ -1,0 +1,52 @@
+"""Pure-jnp oracles for the Pallas kernels (the correctness ground truth).
+
+Every kernel in this package must match its oracle to float32 tolerance on
+arbitrary shapes; ``python/tests/test_kernels.py`` sweeps shapes and dtypes
+with hypothesis.
+"""
+
+import jax.numpy as jnp
+
+_LOG_2PI = 1.8378770664093453
+
+
+def pairwise_dist2_ref(points, centers):
+    """Naive (N, K) squared distances: materialize the (N, K, D) diff."""
+    diff = points[:, None, :] - centers[None, :, :]
+    return jnp.sum(diff * diff, axis=-1)
+
+
+def gmm_logpdf_ref(points, means, precisions, logdets, logweights):
+    """Naive weighted Gaussian log-densities (N, K)."""
+    diff = points[:, None, :] - means[None, :, :]  # (N, K, D)
+    quad = jnp.einsum("nkd,kde,nke->nk", diff, precisions, diff)
+    d = points.shape[1]
+    return logweights[None, :] - 0.5 * (d * _LOG_2PI + logdets[None, :] + quad)
+
+
+def kmeans_assign_ref(points, centers, valid):
+    """Oracle for the L2 k-means assignment step."""
+    d2 = pairwise_dist2_ref(points, centers)
+    assign = jnp.argmin(d2, axis=1)
+    k = centers.shape[0]
+    one_hot = (assign[:, None] == jnp.arange(k)[None, :]).astype(jnp.float32)
+    one_hot = one_hot * valid[:, None]
+    counts = jnp.sum(one_hot, axis=0)
+    sums = one_hot.T @ points
+    sq = jnp.sum(points * points, axis=1)
+    inertia = jnp.sum(jnp.min(d2, axis=1) * valid)
+    del sq
+    return assign.astype(jnp.int32), counts, sums, inertia
+
+
+def gmm_estep_ref(points, means, precisions, logdets, logweights, valid):
+    """Oracle for the L2 GMM E-step sufficient statistics."""
+    logp = gmm_logpdf_ref(points, means, precisions, logdets, logweights)
+    lse = jnp.log(jnp.sum(jnp.exp(logp - logp.max(axis=1, keepdims=True)), axis=1))
+    lse = lse + logp.max(axis=1)
+    resp = jnp.exp(logp - lse[:, None]) * valid[:, None]  # (N, K)
+    nk = jnp.sum(resp, axis=0)
+    mu_sums = resp.T @ points  # (K, D)
+    cov_sums = jnp.einsum("nk,nd,ne->kde", resp, points, points)
+    loglik = jnp.sum(lse * valid)
+    return nk, mu_sums, cov_sums, loglik

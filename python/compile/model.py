@@ -1,0 +1,88 @@
+"""Layer-2 JAX models: the numeric steps of the paper's workloads.
+
+Each function is a single jitted graph calling the Layer-1 Pallas kernels,
+returning *sufficient statistics* so the rust coordinator (Layer 3) can
+reduce across batches and nodes with the Blaze MapReduce machinery. Lowered
+once by ``aot.py``; never executed from python at run time.
+
+All functions take a ``valid`` mask so rust can pad the final partial batch
+to the fixed AOT batch size without polluting the statistics.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.gmm import gmm_logpdf
+from .kernels.pairwise import pairwise_dist2
+
+
+def kmeans_assign(points, centers, valid):
+    """K-means assignment step over one batch.
+
+    Args:
+      points: (B, D) f32.
+      centers: (K, D) f32.
+      valid: (B,) f32 — 1.0 for real rows, 0.0 for padding.
+
+    Returns:
+      assign: (B,) i32 — nearest center per point.
+      counts: (K,) f32 — masked points per center.
+      sums: (K, D) f32 — masked coordinate sums per center.
+      inertia: () f32 — masked sum of min squared distances.
+    """
+    d2 = pairwise_dist2(points, centers)  # L1 kernel
+    assign = jnp.argmin(d2, axis=1)
+    k = centers.shape[0]
+    one_hot = (assign[:, None] == jnp.arange(k)[None, :]).astype(jnp.float32)
+    one_hot = one_hot * valid[:, None]
+    counts = jnp.sum(one_hot, axis=0)
+    sums = jax.lax.dot_general(
+        one_hot, points, dimension_numbers=(((0,), (0,)), ((), ()))
+    )  # (K, D)
+    inertia = jnp.sum(jnp.min(d2, axis=1) * valid)
+    return assign.astype(jnp.int32), counts, sums, inertia
+
+
+def gmm_estep(points, means, precisions, logdets, logweights, valid):
+    """GMM E-step sufficient statistics over one batch (paper Eqs. 2-7).
+
+    Args:
+      points: (B, D) f32.
+      means: (K, D) f32.
+      precisions: (K, D, D) f32 — inverse covariances (rust computes them
+        from the M-step covariances with a small Cholesky, D is tiny).
+      logdets: (K,) f32 — log |Sigma_k|.
+      logweights: (K,) f32 — log alpha_k.
+      valid: (B,) f32 mask.
+
+    Returns:
+      nk: (K,) f32 — responsibility masses (Eq. 3 summed).
+      mu_sums: (K, D) f32 — responsibility-weighted coordinate sums (Eq. 5).
+      cov_sums: (K, D, D) f32 — responsibility-weighted outer products (Eq. 6).
+      loglik: () f32 — masked log-likelihood (Eq. 7).
+    """
+    logp = gmm_logpdf(points, means, precisions, logdets, logweights)  # L1
+    m = jnp.max(logp, axis=1)
+    lse = jnp.log(jnp.sum(jnp.exp(logp - m[:, None]), axis=1)) + m
+    resp = jnp.exp(logp - lse[:, None]) * valid[:, None]  # (B, K)
+    nk = jnp.sum(resp, axis=0)
+    mu_sums = jax.lax.dot_general(
+        resp, points, dimension_numbers=(((0,), (0,)), ((), ()))
+    )  # (K, D)
+    # (K, D, D): sum_i r_ik x_i x_i^T, as one einsum (fused by XLA).
+    cov_sums = jnp.einsum("nk,nd,ne->kde", resp, points, points)
+    loglik = jnp.sum(lse * valid)
+    return nk, mu_sums, cov_sums, loglik
+
+
+def knn_dist(points, queries):
+    """Squared distances from every point to every query (k-NN scoring).
+
+    Args:
+      points: (B, D) f32.
+      queries: (Q, D) f32.
+
+    Returns:
+      d2: (B, Q) f32.
+    """
+    return pairwise_dist2(points, queries)

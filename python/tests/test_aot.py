@@ -1,0 +1,55 @@
+"""AOT driver tests: the artifact bundle the rust runtime consumes."""
+
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+from compile import aot
+from compile.kernels.pairwise import TILE_N
+
+
+def test_batch_is_tile_multiple():
+    # The Pallas grid requires it; the rust runtime pads to BATCH.
+    assert aot.BATCH % TILE_N == 0
+
+
+def test_aot_main_writes_bundle(tmp_path):
+    # Run the real entry point into a temp dir and validate the bundle.
+    out = tmp_path / "artifacts"
+    proc = subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out", str(out)],
+        cwd=Path(__file__).resolve().parents[1],
+        capture_output=True,
+        text=True,
+        timeout=600,
+    )
+    assert proc.returncode == 0, proc.stderr
+    manifest = json.loads((out / "manifest.json").read_text())
+    assert manifest["batch"] == aot.BATCH
+    assert manifest["dim"] == aot.DIM
+    assert manifest["k"] == aot.K
+    assert set(manifest["artifacts"]) == {
+        "kmeans_assign",
+        "gmm_estep",
+        "knn_dist",
+        "pairwise_dist",
+    }
+    for name, info in manifest["artifacts"].items():
+        text = (out / info["file"]).read_text()
+        assert text.startswith("HloModule"), name
+        assert len(text) == info["hlo_bytes"], name
+        # Id-safe interchange: jax >= 0.5 proto ids overflow the crate's
+        # XLA; text must carry the module instead (see aot.py docstring).
+        assert "ENTRY" in text
+
+
+def test_hlo_text_has_expected_io_shapes():
+    lowered = aot.build_artifacts()["kmeans_assign"]
+    text = aot.to_hlo_text(lowered)
+    # Inputs: points (B, D), centers (K, D), valid (B,).
+    assert f"f32[{aot.BATCH},{aot.DIM}]" in text
+    assert f"f32[{aot.K},{aot.DIM}]" in text
+    assert f"f32[{aot.BATCH}]" in text
+    # Output tuple includes the assignment vector.
+    assert f"s32[{aot.BATCH}]" in text

@@ -1,0 +1,150 @@
+"""Layer-1 kernel correctness: Pallas (interpret) vs pure-jnp oracle.
+
+Hypothesis sweeps shapes; every case must match to float32 tolerance.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.gmm import gmm_logpdf
+from compile.kernels.pairwise import TILE_K, TILE_N, pairwise_dist2, pairwise_dist2_tiled
+from compile.kernels import ref
+
+
+def _points(rng, n, d, scale=5.0):
+    return jnp.asarray(rng.standard_normal((n, d)) * scale, dtype=jnp.float32)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    tiles=st.integers(min_value=1, max_value=3),
+    d=st.integers(min_value=1, max_value=16),
+    k=st.integers(min_value=1, max_value=32),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_pairwise_matches_ref(tiles, d, k, seed):
+    rng = np.random.default_rng(seed)
+    x = _points(rng, tiles * TILE_N, d)
+    c = _points(rng, k, d)
+    got = pairwise_dist2(x, c)
+    want = ref.pairwise_dist2_ref(x, c)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-3)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    tiles=st.integers(min_value=1, max_value=2),
+    d=st.integers(min_value=1, max_value=12),
+    k=st.integers(min_value=1, max_value=24),
+    dtype=st.sampled_from(["float32", "bfloat16", "float64"]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_pairwise_dtype_sweep(tiles, d, k, dtype, seed):
+    # The kernel must be numerically faithful across input dtypes: f32
+    # exact-ish, bf16 to its ~3-decimal-digit mantissa, f64 inputs accepted
+    # (accumulated in f32 per preferred_element_type).
+    rng = np.random.default_rng(seed)
+    jdt = jnp.dtype(dtype)
+    x = jnp.asarray(rng.standard_normal((tiles * TILE_N, d)) * 3, dtype=jdt)
+    c = jnp.asarray(rng.standard_normal((k, d)) * 3, dtype=jdt)
+    got = pairwise_dist2(x.astype(jnp.float32), c.astype(jnp.float32))
+    want = ref.pairwise_dist2_ref(
+        np.asarray(x, dtype=np.float64), np.asarray(c, dtype=np.float64)
+    )
+    tol = {"float32": 2e-3, "bfloat16": 0.15, "float64": 2e-3}[dtype]
+    np.testing.assert_allclose(got, want, rtol=tol, atol=tol * 10)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n_tiles=st.integers(min_value=1, max_value=2),
+    k_tiles=st.integers(min_value=1, max_value=3),
+    d=st.integers(min_value=1, max_value=16),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_pairwise_tiled_matches_ref_and_flat(n_tiles, k_tiles, d, seed):
+    # Large-K 2-D-grid variant: must agree with both the oracle and the
+    # centers-resident kernel.
+    rng = np.random.default_rng(seed)
+    x = _points(rng, n_tiles * TILE_N, d)
+    c = _points(rng, k_tiles * TILE_K, d)
+    got = pairwise_dist2_tiled(x, c)
+    want = ref.pairwise_dist2_ref(x, c)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-3)
+    flat = pairwise_dist2(x, c)
+    np.testing.assert_allclose(got, flat, rtol=1e-6, atol=1e-5)
+
+
+def test_pairwise_tiled_rejects_ragged_k():
+    x = jnp.zeros((TILE_N, 4), dtype=jnp.float32)
+    c = jnp.zeros((TILE_K + 1, 4), dtype=jnp.float32)
+    with pytest.raises(AssertionError):
+        pairwise_dist2_tiled(x, c)
+
+
+def test_pairwise_zero_distance_on_identical_points():
+    x = jnp.ones((TILE_N, 4), dtype=jnp.float32) * 3.5
+    c = jnp.ones((2, 4), dtype=jnp.float32) * 3.5
+    d2 = pairwise_dist2(x, c)
+    np.testing.assert_allclose(d2, np.zeros((TILE_N, 2)), atol=1e-4)
+
+
+def test_pairwise_is_nonnegative_under_cancellation():
+    # Far-from-origin points: |x|^2 - 2xc + |c|^2 cancels catastrophically;
+    # the kernel clamps at zero.
+    rng = np.random.default_rng(0)
+    x = _points(rng, TILE_N, 8, scale=1e3)
+    d2 = pairwise_dist2(x, x[:4])
+    assert (np.asarray(d2) >= 0).all()
+
+
+def test_pairwise_rejects_non_multiple_of_tile():
+    x = jnp.zeros((TILE_N + 1, 4), dtype=jnp.float32)
+    c = jnp.zeros((3, 4), dtype=jnp.float32)
+    with pytest.raises(AssertionError):
+        pairwise_dist2(x, c)
+
+
+def _random_gmm(rng, k, d):
+    means = jnp.asarray(rng.standard_normal((k, d)) * 3, dtype=jnp.float32)
+    # Random SPD covariances: A A^T + eps I.
+    a = rng.standard_normal((k, d, d)) * 0.5
+    covs = a @ a.transpose(0, 2, 1) + np.eye(d)[None] * 0.5
+    precs = jnp.asarray(np.linalg.inv(covs), dtype=jnp.float32)
+    logdets = jnp.asarray(np.linalg.slogdet(covs)[1], dtype=jnp.float32)
+    w = rng.random(k) + 0.1
+    logw = jnp.asarray(np.log(w / w.sum()), dtype=jnp.float32)
+    return means, precs, logdets, logw
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    tiles=st.integers(min_value=1, max_value=2),
+    d=st.integers(min_value=1, max_value=8),
+    k=st.integers(min_value=1, max_value=8),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_gmm_logpdf_matches_ref(tiles, d, k, seed):
+    rng = np.random.default_rng(seed)
+    x = _points(rng, tiles * TILE_N, d, scale=2.0)
+    means, precs, logdets, logw = _random_gmm(rng, k, d)
+    got = gmm_logpdf(x, means, precs, logdets, logw)
+    want = ref.gmm_logpdf_ref(x, means, precs, logdets, logw)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-3)
+
+
+def test_gmm_logpdf_standard_normal_closed_form():
+    # K=1, mu=0, Sigma=I, alpha=1: logpdf = -0.5*(d log 2pi + |x|^2).
+    d = 3
+    rng = np.random.default_rng(1)
+    x = _points(rng, TILE_N, d, scale=1.0)
+    means = jnp.zeros((1, d), dtype=jnp.float32)
+    precs = jnp.eye(d, dtype=jnp.float32)[None]
+    logdets = jnp.zeros((1,), dtype=jnp.float32)
+    logw = jnp.zeros((1,), dtype=jnp.float32)
+    got = gmm_logpdf(x, means, precs, logdets, logw)[:, 0]
+    want = -0.5 * (d * np.log(2 * np.pi) + np.sum(np.asarray(x) ** 2, axis=1))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)

@@ -1,0 +1,259 @@
+//! K-Means (paper §3.1.3, Fig 6).
+//!
+//! One MapReduce per iteration performs the assignment step; the update
+//! (refinement) step is serial on the driver, exactly as the paper
+//! describes. Points are distributed in fixed-size blocks so the mapper can
+//! hand each block to the AOT-compiled PJRT executable (Layer 2 JAX model
+//! wrapping the Layer 1 Pallas pairwise-distance kernel). Without a runtime
+//! the mapper falls back to a scalar rust loop — used by tests and as the
+//! no-artifact path.
+
+use crate::containers::DistVector;
+use crate::coordinator::cluster::Cluster;
+use crate::data::points::PointSet;
+use crate::mapreduce::mapreduce_labeled;
+use crate::runtime::Runtime;
+
+use super::TaskReport;
+
+/// A block of up to `batch` points, stored flat (row-major f32).
+pub type PointBlock = Vec<f32>;
+
+/// Chop a [`PointSet`] into distributed blocks of `batch` points.
+pub fn distribute_blocks(
+    cluster: &Cluster,
+    points: &PointSet,
+    batch: usize,
+) -> DistVector<PointBlock> {
+    let blocks: Vec<PointBlock> = points
+        .coords
+        .chunks(batch * points.dim)
+        .map(<[f32]>::to_vec)
+        .collect();
+    DistVector::from_vec(cluster, blocks)
+}
+
+/// K-Means outcome.
+#[derive(Debug, Clone)]
+pub struct KmeansResult {
+    /// Final centers, row-major `(k, dim)`.
+    pub centers: Vec<f32>,
+    /// Iterations executed.
+    pub iterations: usize,
+    /// Final inertia (sum of squared distances to assigned centers).
+    pub inertia: f64,
+}
+
+/// Lloyd's algorithm: `k` centers, stop when centers move less than `tol`
+/// (L2) or after `max_iters`.
+#[allow(clippy::too_many_arguments)]
+pub fn kmeans(
+    cluster: &Cluster,
+    blocks: &DistVector<PointBlock>,
+    n_points: usize,
+    dim: usize,
+    k: usize,
+    init_centers: Vec<f32>,
+    tol: f64,
+    max_iters: usize,
+    runtime: Option<&Runtime>,
+) -> (TaskReport, KmeansResult) {
+    assert_eq!(init_centers.len(), k * dim);
+    if let Some(rt) = runtime {
+        assert_eq!(rt.dim(), dim, "runtime compiled for dim {}", rt.dim());
+        assert_eq!(rt.k(), k, "runtime compiled for k {}", rt.k());
+    }
+    let mut centers = init_centers;
+    let mut iterations = 0;
+    let mut inertia = f64::INFINITY;
+
+    while iterations < max_iters {
+        // stats layout: [counts (k) | sums (k*dim) | inertia (1)] as f64.
+        let mut stats: Vec<Vec<f64>> = vec![vec![0.0; k + k * dim + 1]];
+        let centers_ref = &centers;
+        mapreduce_labeled(
+            &format!("kmeans.i{iterations}"),
+            blocks,
+            |_, block: &PointBlock, emit| {
+                let partial = match runtime {
+                    Some(rt) => assign_block_pjrt(rt, block, centers_ref, dim, k),
+                    None => assign_block_scalar(block, centers_ref, dim, k),
+                };
+                emit(0usize, partial);
+            },
+            "sum",
+            &mut stats,
+        );
+        let stats = &stats[0];
+
+        // Serial update step (paper: "The update step is implemented in
+        // serial.").
+        let mut moved2 = 0.0f64;
+        for c in 0..k {
+            let count = stats[c];
+            if count <= 0.0 {
+                continue; // empty cluster: keep the old center
+            }
+            for d in 0..dim {
+                let new = (stats[k + c * dim + d] / count) as f32;
+                let delta = f64::from(new - centers[c * dim + d]);
+                moved2 += delta * delta;
+                centers[c * dim + d] = new;
+            }
+        }
+        inertia = stats[k + k * dim];
+        iterations += 1;
+        if moved2.sqrt() < tol {
+            break;
+        }
+    }
+
+    let report = TaskReport::from_metrics(
+        cluster,
+        "kmeans",
+        "kmeans.",
+        n_points as u64,
+        iterations,
+        inertia,
+    );
+    (report, KmeansResult { centers, iterations, inertia })
+}
+
+/// PJRT assignment path: pad the block to the AOT batch and run the
+/// compiled Layer-2 graph.
+fn assign_block_pjrt(
+    rt: &Runtime,
+    block: &PointBlock,
+    centers: &[f32],
+    dim: usize,
+    k: usize,
+) -> Vec<f64> {
+    let batch = rt.batch();
+    let n = block.len() / dim;
+    debug_assert!(n <= batch, "block larger than AOT batch");
+    let mut padded = vec![0.0f32; batch * dim];
+    padded[..block.len()].copy_from_slice(block);
+    let mut valid = vec![0.0f32; batch];
+    for v in valid.iter_mut().take(n) {
+        *v = 1.0;
+    }
+    let out = rt
+        .kmeans_assign(&padded, centers, &valid)
+        .expect("kmeans_assign artifact must execute");
+    let mut stats = vec![0.0f64; k + k * dim + 1];
+    for c in 0..k {
+        stats[c] = f64::from(out.counts[c]);
+        for d in 0..dim {
+            stats[k + c * dim + d] = f64::from(out.sums[c * dim + d]);
+        }
+    }
+    stats[k + k * dim] = f64::from(out.inertia);
+    stats
+}
+
+/// Scalar fallback (and test oracle for the PJRT path).
+pub(crate) fn assign_block_scalar(
+    block: &[f32],
+    centers: &[f32],
+    dim: usize,
+    k: usize,
+) -> Vec<f64> {
+    let mut stats = vec![0.0f64; k + k * dim + 1];
+    for p in block.chunks_exact(dim) {
+        let mut best = 0usize;
+        let mut best_d2 = f32::INFINITY;
+        for c in 0..k {
+            let mut d2 = 0.0f32;
+            for d in 0..dim {
+                let diff = p[d] - centers[c * dim + d];
+                d2 += diff * diff;
+            }
+            if d2 < best_d2 {
+                best_d2 = d2;
+                best = c;
+            }
+        }
+        stats[best] += 1.0;
+        for d in 0..dim {
+            stats[k + best * dim + d] += f64::from(p[d]);
+        }
+        stats[k + k * dim] += f64::from(best_d2);
+    }
+    stats
+}
+
+/// Deterministic initialization: first `k` points of the set.
+pub fn init_first_k(points: &PointSet, k: usize) -> Vec<f32> {
+    points.coords[..k * points.dim].to_vec()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::cluster::{ClusterConfig, EngineKind};
+
+    fn small_set() -> PointSet {
+        PointSet::clustered(2000, 4, 5, 0.4, 11)
+    }
+
+    #[test]
+    fn converges_and_recovers_centers() {
+        let ps = small_set();
+        let c = Cluster::local(2, 2);
+        let blocks = distribute_blocks(&c, &ps, 256);
+        // Init: perturbed true centers (deterministic recovery check).
+        let init: Vec<f32> = ps.true_centers.iter().map(|v| v + 0.8).collect();
+        let (report, result) =
+            kmeans(&c, &blocks, ps.n, ps.dim, 5, init, 1e-4, 50, None);
+        assert!(result.iterations < 50, "did not converge");
+        for tc in ps.true_centers.chunks_exact(ps.dim) {
+            let best = result
+                .centers
+                .chunks_exact(ps.dim)
+                .map(|ec| {
+                    ec.iter()
+                        .zip(tc)
+                        .map(|(a, b)| f64::from(a - b).powi(2))
+                        .sum::<f64>()
+                        .sqrt()
+                })
+                .fold(f64::INFINITY, f64::min);
+            assert!(best < 0.15, "center unrecovered (dist {best})");
+        }
+        assert_eq!(report.items, 2000);
+    }
+
+    #[test]
+    fn engines_agree_bitwise_on_assignment_counts() {
+        let ps = small_set();
+        let init = init_first_k(&ps, 5);
+        let eager = Cluster::local(3, 2);
+        let conv =
+            Cluster::new(ClusterConfig::sized(3, 2).with_engine(EngineKind::Conventional));
+        let be = distribute_blocks(&eager, &ps, 128);
+        let bc = distribute_blocks(&conv, &ps, 128);
+        let (_, re) = kmeans(&eager, &be, ps.n, ps.dim, 5, init.clone(), 1e-4, 10, None);
+        let (_, rc) = kmeans(&conv, &bc, ps.n, ps.dim, 5, init, 1e-4, 10, None);
+        assert_eq!(re.iterations, rc.iterations);
+        assert_eq!(re.centers, rc.centers);
+    }
+
+    #[test]
+    fn single_iteration_inertia_matches_manual() {
+        // One block, one center: inertia = sum |x - c|^2.
+        let ps = PointSet { n: 3, dim: 2, coords: vec![0.0, 0.0, 1.0, 0.0, 0.0, 2.0], true_centers: vec![] };
+        let c = Cluster::local(1, 1);
+        let blocks = distribute_blocks(&c, &ps, 8);
+        let (_, result) = kmeans(&c, &blocks, 3, 2, 1, vec![0.0, 0.0], 1e9, 1, None);
+        assert!((result.inertia - 5.0).abs() < 1e-6, "inertia {}", result.inertia);
+    }
+
+    #[test]
+    fn block_distribution_covers_all_points() {
+        let ps = small_set();
+        let c = Cluster::local(4, 1);
+        let blocks = distribute_blocks(&c, &ps, 300);
+        let total: usize = blocks.collect().iter().map(|b| b.len() / ps.dim).sum();
+        assert_eq!(total, ps.n);
+    }
+}

@@ -1,0 +1,152 @@
+//! Nearest-100-neighbors search (paper §3.1.5, Fig 8).
+//!
+//! Exactly the paper's structure: compute each point's distance to the
+//! query, then use the distributed container's `topk` with a custom
+//! comparison function (smaller distance = higher priority). Distances are
+//! computed per block through the PJRT pairwise kernel when a runtime is
+//! available, else with a scalar loop.
+
+use std::time::Instant;
+
+use crate::containers::DistVector;
+use crate::coordinator::cluster::Cluster;
+use crate::coordinator::metrics::RunStats;
+use crate::data::points::PointSet;
+use crate::net::vtime::VirtualTime;
+use crate::runtime::Runtime;
+
+use super::kmeans::distribute_blocks;
+use super::TaskReport;
+
+/// One neighbor candidate.
+pub type Neighbor = (f32, u32); // (squared distance, point index)
+
+/// Find the `k` nearest neighbors of `query` among `points`.
+pub fn knn(
+    cluster: &Cluster,
+    points: &PointSet,
+    query: &[f32],
+    k: usize,
+    runtime: Option<&Runtime>,
+) -> (TaskReport, Vec<Neighbor>) {
+    assert_eq!(query.len(), points.dim);
+    let dim = points.dim;
+    let batch = runtime.map_or(4096, Runtime::batch);
+    let blocks = distribute_blocks(cluster, points, batch);
+
+    // Distance pass: per node, per block — measured as a compute phase.
+    let nodes = cluster.nodes();
+    let mut per_node_secs = vec![0.0f64; nodes];
+    let mut shards: Vec<Vec<Neighbor>> = Vec::with_capacity(nodes);
+    let mut global_base = 0u32;
+    for node in 0..nodes {
+        let t0 = Instant::now();
+        let mut shard: Vec<Neighbor> = Vec::new();
+        for block in blocks.shard(node) {
+            let n = block.len() / dim;
+            match runtime {
+                Some(rt) => {
+                    let mut padded = vec![0.0f32; rt.batch() * dim];
+                    padded[..block.len()].copy_from_slice(block);
+                    let d2 = rt.knn_dist(&padded, query).expect("knn_dist must execute");
+                    for (i, &d) in d2.iter().take(n).enumerate() {
+                        shard.push((d, global_base + i as u32));
+                    }
+                }
+                None => {
+                    for (i, p) in block.chunks_exact(dim).enumerate() {
+                        let d2: f32 = p
+                            .iter()
+                            .zip(query)
+                            .map(|(a, b)| (a - b) * (a - b))
+                            .sum();
+                        shard.push((d2, global_base + i as u32));
+                    }
+                }
+            }
+            global_base += n as u32;
+        }
+        per_node_secs[node] = t0.elapsed().as_secs_f64();
+        shards.push(shard);
+    }
+    let mut vt = VirtualTime::new();
+    vt.compute_phase("knn-distances", &per_node_secs, cluster.workers());
+    cluster.metrics().record_run(RunStats {
+        label: "knn.dist".into(),
+        engine: cluster.config().engine.to_string(),
+        nodes,
+        workers_per_node: cluster.workers(),
+        makespan_sec: vt.makespan(),
+        compute_sec: vt.makespan(),
+        pairs_emitted: points.n as u64,
+        ..Default::default()
+    });
+
+    // Top-k with the custom comparator (paper: "provide custom comparison
+    // functions to determine the priority ... based on Euclidean-distance").
+    let candidates: DistVector<Neighbor> = DistVector::from_shards(cluster, shards);
+    let neighbors = candidates.topk_labeled(
+        k,
+        |a: &Neighbor, b: &Neighbor| b.0.partial_cmp(&a.0).unwrap_or(std::cmp::Ordering::Equal),
+        "knn.topk",
+    );
+
+    let report = TaskReport::from_metrics(
+        cluster,
+        "knn",
+        "knn.",
+        points.n as u64,
+        1,
+        f64::from(neighbors.first().map_or(f32::NAN, |n| n.0)),
+    );
+    (report, neighbors)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn oracle(points: &PointSet, query: &[f32], k: usize) -> Vec<Neighbor> {
+        let mut all: Vec<Neighbor> = (0..points.n)
+            .map(|i| (points.dist2(i, query), i as u32))
+            .collect();
+        all.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+        all.truncate(k);
+        all
+    }
+
+    #[test]
+    fn matches_oracle() {
+        let ps = PointSet::uniform(5000, 3, 13);
+        let c = Cluster::local(4, 2);
+        let query = vec![0.5f32, 0.5, 0.5];
+        let (report, got) = knn(&c, &ps, &query, 100, None);
+        let want = oracle(&ps, &query, 100);
+        assert_eq!(got.len(), 100);
+        // Same distances (indices may tie-break differently).
+        let gd: Vec<f32> = got.iter().map(|n| n.0).collect();
+        let wd: Vec<f32> = want.iter().map(|n| n.0).collect();
+        assert_eq!(gd, wd);
+        assert_eq!(report.items, 5000);
+    }
+
+    #[test]
+    fn k_larger_than_n() {
+        let ps = PointSet::uniform(10, 2, 1);
+        let c = Cluster::local(2, 1);
+        let (_, got) = knn(&c, &ps, &[0.0, 0.0], 100, None);
+        assert_eq!(got.len(), 10);
+    }
+
+    #[test]
+    fn nearest_is_exact_on_plant() {
+        let mut ps = PointSet::uniform(1000, 2, 3);
+        // Plant an exact match at index 500.
+        ps.coords[500 * 2] = 0.25;
+        ps.coords[500 * 2 + 1] = 0.75;
+        let c = Cluster::local(3, 2);
+        let (_, got) = knn(&c, &ps, &[0.25, 0.75], 5, None);
+        assert_eq!(got[0].1, 500);
+        assert_eq!(got[0].0, 0.0);
+    }
+}

@@ -1,0 +1,87 @@
+//! The paper's workloads (§3.1), each written against the public Blaze API.
+//!
+//! Every app runs unchanged under both engines ([`EngineKind::Eager`] /
+//! [`EngineKind::Conventional`]) — the benches flip the cluster config to
+//! regenerate the paper's Blaze-vs-Spark comparisons with everything else
+//! held fixed.
+//!
+//! [`EngineKind::Eager`]: crate::coordinator::EngineKind::Eager
+//! [`EngineKind::Conventional`]: crate::coordinator::EngineKind::Conventional
+
+pub mod gmm;
+pub mod kmeans;
+pub mod knn;
+pub mod pagerank;
+pub mod pi;
+pub mod wordcount;
+
+/// Common result of one workload run, assembled from the cluster metrics.
+#[derive(Debug, Clone, Default)]
+pub struct TaskReport {
+    /// Task label ("wordcount", "pagerank", ...).
+    pub task: String,
+    /// Engine that ran it.
+    pub engine: String,
+    /// Cluster shape.
+    pub nodes: usize,
+    /// Items processed (words, links, points — the paper's per-task unit).
+    pub items: u64,
+    /// Iterations executed (1 for non-iterative tasks).
+    pub iterations: usize,
+    /// Virtual makespan of the whole job, seconds.
+    pub makespan_sec: f64,
+    /// Paper metric: items per second **per iteration** for iterative
+    /// tasks, plain items/second otherwise.
+    pub throughput: f64,
+    /// Peak intermediate memory over the job (Fig 9), bytes.
+    pub peak_bytes: u64,
+    /// Cross-node bytes shuffled over the job.
+    pub shuffle_bytes: u64,
+    /// Task-specific result value (π estimate, final loss, ...).
+    pub result: f64,
+}
+
+impl TaskReport {
+    /// Assemble a report from all runs recorded under `prefix`.
+    pub fn from_metrics(
+        cluster: &crate::coordinator::Cluster,
+        task: &str,
+        prefix: &str,
+        items: u64,
+        iterations: usize,
+        result: f64,
+    ) -> Self {
+        let metrics = cluster.metrics();
+        let makespan = metrics.job_makespan(prefix);
+        let per_iter = makespan / iterations.max(1) as f64;
+        Self {
+            task: task.to_string(),
+            engine: cluster.config().engine.to_string(),
+            nodes: cluster.nodes(),
+            items,
+            iterations,
+            makespan_sec: makespan,
+            throughput: items as f64 / per_iter,
+            peak_bytes: metrics.job_peak_bytes(prefix),
+            shuffle_bytes: metrics.job_shuffle_bytes(prefix),
+            result,
+        }
+    }
+
+    /// One human-readable summary line.
+    pub fn line(&self) -> String {
+        format!(
+            "{:<10} {:<13} n={:<2} items={:<12} iters={:<3} makespan={:>9.4}s thpt={:>12.0}/s peak={:>10}B shuffle={:>10}B result={:.6}",
+            self.task,
+            self.engine,
+            self.nodes,
+            self.items,
+            self.iterations,
+            self.makespan_sec,
+            self.throughput,
+            self.peak_bytes,
+            self.shuffle_bytes,
+            self.result
+        )
+    }
+}

@@ -1,0 +1,166 @@
+//! Monte-Carlo π estimation (paper §2.3.3, Table 1 and Appendix A.2).
+//!
+//! The canonical small-fixed-key-range workload: every sample reduces onto
+//! key 0. [`pi_blaze`] is the paper's 8-line MapReduce program;
+//! [`pi_hand_optimized`] is the MPI+OpenMP-style parallel for-loop with
+//! thread-local counters it is benchmarked against. Table 1's claim is that
+//! the two have the same execution plan and hence the same speed.
+
+use std::time::Instant;
+
+use crate::containers::DistRange;
+use crate::coordinator::cluster::Cluster;
+use crate::coordinator::metrics::RunStats;
+use crate::mapreduce::mapreduce_range_labeled;
+use crate::net::vtime::VirtualTime;
+use crate::util::rng::SplitRng;
+
+use super::TaskReport;
+
+/// π via Blaze MapReduce — mirrors Appendix A.2 line-for-line. The mapper
+/// uses [`crate::util::random::uniform`], the paper's worker-local
+/// `blaze::random::uniform()`; the engine publishes each worker's stream.
+pub fn pi_blaze(cluster: &Cluster, n_samples: u64) -> TaskReport {
+    let samples = DistRange::new(cluster, 0, n_samples);
+    let mut count = vec![0u64; 1];
+    mapreduce_range_labeled(
+        "pi.blaze",
+        &samples,
+        |_, emit| {
+            // Random function in std is not thread safe (paper comment).
+            let (x, y) = crate::util::random::uniform2();
+            // Map points within circle to key 0.
+            if x * x + y * y < 1.0 {
+                emit(0usize, 1u64);
+            }
+        },
+        "sum",
+        &mut count,
+    );
+    let pi = 4.0 * count[0] as f64 / n_samples as f64;
+    TaskReport::from_metrics(cluster, "pi", "pi.blaze", n_samples, 1, pi)
+}
+
+/// π via a hand-optimized parallel for-loop: per-worker local counters,
+/// tree-combined — the MPI+OpenMP comparator from Table 1. Runs on the same
+/// virtual cluster and is accounted identically.
+pub fn pi_hand_optimized(cluster: &Cluster, n_samples: u64) -> TaskReport {
+    let nodes = cluster.nodes();
+    let workers = cluster.workers();
+    let seed = cluster.config().seed;
+    let node_ranges = crate::coordinator::scheduler::block_ranges(n_samples as usize, nodes);
+    let mut per_node_secs = vec![0.0f64; nodes];
+    let mut node_counts = vec![0u64; nodes];
+    for node in 0..nodes {
+        let t0 = Instant::now();
+        let worker_ranges =
+            crate::coordinator::scheduler::block_ranges(node_ranges[node].len(), workers);
+        let mut node_total = 0u64;
+        for (w, wr) in worker_ranges.into_iter().enumerate() {
+            // Thread-local counter: the whole point of the comparison.
+            let mut local = 0u64;
+            let mut rng = SplitRng::new(seed, (node * workers + w) as u64);
+            for _ in wr {
+                let x = rng.uniform();
+                let y = rng.uniform();
+                if x * x + y * y < 1.0 {
+                    local += 1;
+                }
+            }
+            node_total += local;
+        }
+        node_counts[node] = node_total;
+        per_node_secs[node] = t0.elapsed().as_secs_f64();
+    }
+    // MPI_Reduce of one u64: log2(nodes) rounds of 8 bytes.
+    let mut vt = VirtualTime::new();
+    vt.compute_phase("parallel-for", &per_node_secs, workers);
+    let mut stride = 1usize;
+    let mut total: u64 = 0;
+    for &c in &node_counts {
+        total += c;
+    }
+    while stride < nodes {
+        let mut flows = crate::net::sim::FlowMatrix::new(nodes);
+        for src in (stride..nodes).step_by(stride * 2) {
+            flows.record(src, src - stride, 8);
+        }
+        vt.shuffle_overlapped("mpi-reduce", &flows, &cluster.config().network, 0.0);
+        stride *= 2;
+    }
+    let makespan = vt.makespan();
+    cluster.metrics().record_run(RunStats {
+        label: "pi.hand".into(),
+        engine: "mpi+openmp".into(),
+        nodes,
+        workers_per_node: workers,
+        makespan_sec: makespan,
+        compute_sec: per_node_secs.iter().cloned().fold(0.0, f64::max),
+        shuffle_bytes: 8 * (nodes.saturating_sub(1)) as u64,
+        pairs_emitted: total,
+        ..Default::default()
+    });
+    let pi = 4.0 * total as f64 / n_samples as f64;
+    let mut report =
+        TaskReport::from_metrics(cluster, "pi-hand", "pi.hand", n_samples, 1, pi);
+    report.engine = "mpi+openmp".into();
+    report
+}
+
+/// Source lines of code for the paper's Table 1 SLOC row: counted from the
+/// paper's Appendix A.2 listing (Blaze) and a canonical MPI+OpenMP π
+/// implementation (the paper reports 8 vs 24).
+pub const SLOC_BLAZE: usize = 8;
+/// See [`SLOC_BLAZE`].
+pub const SLOC_MPI_OPENMP: usize = 24;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn blaze_pi_converges() {
+        let c = Cluster::local(2, 2);
+        let report = pi_blaze(&c, 200_000);
+        assert!((report.result - std::f64::consts::PI).abs() < 0.02, "pi={}", report.result);
+        assert_eq!(report.items, 200_000);
+    }
+
+    #[test]
+    fn hand_pi_converges() {
+        let c = Cluster::local(2, 2);
+        let report = pi_hand_optimized(&c, 200_000);
+        assert!((report.result - std::f64::consts::PI).abs() < 0.02, "pi={}", report.result);
+    }
+
+    #[test]
+    fn blaze_and_hand_agree_exactly_same_streams() {
+        // Same seed, same worker streams → identical counts, identical π.
+        let c1 = Cluster::local(2, 2);
+        let c2 = Cluster::local(2, 2);
+        let a = pi_blaze(&c1, 50_000);
+        let b = pi_hand_optimized(&c2, 50_000);
+        assert_eq!(a.result, b.result, "same sample streams must agree");
+    }
+
+    #[test]
+    fn smallkey_path_shuffles_almost_nothing() {
+        let c = Cluster::local(4, 2);
+        let report = pi_blaze(&c, 100_000);
+        // Tree reduce of one key: a few bytes per round, nothing like the
+        // sample count.
+        assert!(report.shuffle_bytes < 1024, "shuffled {}B", report.shuffle_bytes);
+    }
+
+    #[test]
+    fn conventional_engine_also_correct_but_shuffles_more() {
+        use crate::coordinator::cluster::{ClusterConfig, EngineKind};
+        let c = Cluster::new(
+            ClusterConfig::sized(4, 2).with_engine(EngineKind::Conventional),
+        );
+        let report = pi_blaze(&c, 100_000);
+        assert!((report.result - std::f64::consts::PI).abs() < 0.05);
+        // Materializing ~78k hit-pairs costs real intermediate memory.
+        assert!(report.peak_bytes > 100_000, "peak={}B", report.peak_bytes);
+    }
+}

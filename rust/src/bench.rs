@@ -1,0 +1,127 @@
+//! Bench harness support (the offline build has no criterion).
+//!
+//! Each `benches/*.rs` is a `harness = false` binary that regenerates one
+//! of the paper's tables or figures. This module provides the shared
+//! measurement loop (warmup + repeated timed runs, mean ± std) and tabular
+//! printing so the bench outputs read like the paper's artifacts.
+
+use std::time::Instant;
+
+/// Mean ± standard deviation of repeated measurements.
+#[derive(Debug, Clone, Copy)]
+pub struct Sample {
+    /// Mean of the measurements.
+    pub mean: f64,
+    /// Sample standard deviation.
+    pub std: f64,
+    /// Number of measurements.
+    pub n: usize,
+}
+
+impl std::fmt::Display for Sample {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{:.4} ± {:.4}", self.mean, self.std)
+    }
+}
+
+/// Summarize raw measurements.
+pub fn summarize(xs: &[f64]) -> Sample {
+    let n = xs.len();
+    let mean = xs.iter().sum::<f64>() / n as f64;
+    let var = if n > 1 {
+        xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / (n - 1) as f64
+    } else {
+        0.0
+    };
+    Sample { mean, std: var.sqrt(), n }
+}
+
+/// Run `f` once as warmup (discarded, mirroring the paper's warmup runs),
+/// then `reps` timed runs; returns host-wall seconds per run.
+pub fn time_host<T>(reps: usize, mut f: impl FnMut() -> T) -> Sample {
+    let _ = f(); // warmup
+    let mut xs = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        xs.push(t0.elapsed().as_secs_f64());
+    }
+    summarize(&xs)
+}
+
+/// Repetition count from `BLAZE_BENCH_REPS` (default 3).
+pub fn reps() -> usize {
+    std::env::var("BLAZE_BENCH_REPS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(3)
+}
+
+/// Workload scale from `BLAZE_BENCH_SCALE` (default 1).
+pub fn scale() -> usize {
+    std::env::var("BLAZE_BENCH_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1)
+}
+
+/// Node counts to sweep (the paper's x-axis), from `BLAZE_BENCH_NODES`
+/// (comma separated) or the default `1,2,4,8,16`.
+pub fn node_sweep() -> Vec<usize> {
+    std::env::var("BLAZE_BENCH_NODES")
+        .ok()
+        .map(|s| {
+            s.split(',')
+                .map(|p| p.trim().parse().expect("node count"))
+                .collect()
+        })
+        .unwrap_or_else(|| vec![1, 2, 4, 8, 16])
+}
+
+/// Print a figure header in a recognizable block.
+pub fn figure_header(name: &str, paper_claim: &str) {
+    println!("==============================================================");
+    println!("{name}");
+    println!("paper: {paper_claim}");
+    println!("==============================================================");
+}
+
+/// Human-format bytes.
+pub fn fmt_bytes(b: u64) -> String {
+    if b >= 1 << 30 {
+        format!("{:.2} GiB", b as f64 / (1u64 << 30) as f64)
+    } else if b >= 1 << 20 {
+        format!("{:.2} MiB", b as f64 / (1u64 << 20) as f64)
+    } else if b >= 1 << 10 {
+        format!("{:.2} KiB", b as f64 / (1u64 << 10) as f64)
+    } else {
+        format!("{b} B")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summarize_mean_std() {
+        let s = summarize(&[1.0, 2.0, 3.0]);
+        assert!((s.mean - 2.0).abs() < 1e-12);
+        assert!((s.std - 1.0).abs() < 1e-12);
+        assert_eq!(s.n, 3);
+    }
+
+    #[test]
+    fn fmt_bytes_units() {
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert_eq!(fmt_bytes(2048), "2.00 KiB");
+        assert_eq!(fmt_bytes(3 << 20), "3.00 MiB");
+    }
+
+    #[test]
+    fn time_host_counts_reps() {
+        let s = time_host(5, || 1 + 1);
+        assert_eq!(s.n, 5);
+        assert!(s.mean >= 0.0);
+    }
+}

@@ -1,0 +1,224 @@
+//! Command-line launcher (hand-rolled parsing; the build is offline).
+//!
+//! ```text
+//! blaze <task> [--nodes N] [--workers W] [--engine blaze|conventional]
+//!              [--scale S] [--artifacts DIR] [--seed SEED]
+//! ```
+//!
+//! Tasks: `pi`, `wordcount`, `pagerank`, `kmeans`, `gmm`, `knn`, `all`.
+
+use crate::apps;
+use crate::coordinator::cluster::{Cluster, ClusterConfig, EngineKind};
+use crate::data::{corpus_lines, Graph, PointSet};
+use crate::runtime::Runtime;
+
+/// Parsed CLI options.
+#[derive(Debug, Clone)]
+pub struct Options {
+    /// Task name.
+    pub task: String,
+    /// Virtual node count.
+    pub nodes: usize,
+    /// Workers per node.
+    pub workers: usize,
+    /// Engine selection.
+    pub engine: EngineKind,
+    /// Workload scale multiplier (1 = quick demo sizes).
+    pub scale: usize,
+    /// Artifacts directory (PJRT workloads); empty string disables.
+    pub artifacts: String,
+    /// RNG seed.
+    pub seed: u64,
+}
+
+impl Default for Options {
+    fn default() -> Self {
+        Self {
+            task: String::new(),
+            nodes: 4,
+            workers: 4,
+            engine: EngineKind::Eager,
+            scale: 1,
+            artifacts: "artifacts".into(),
+            seed: 42,
+        }
+    }
+}
+
+const USAGE: &str = "usage: blaze <pi|wordcount|pagerank|kmeans|gmm|knn|all> \
+[--nodes N] [--workers W] [--engine blaze|conventional] [--scale S] \
+[--artifacts DIR|none] [--seed SEED]";
+
+/// Parse argv (without the program name).
+pub fn parse(args: &[String]) -> Result<Options, String> {
+    let mut opts = Options::default();
+    let mut it = args.iter();
+    let Some(task) = it.next() else {
+        return Err(USAGE.to_string());
+    };
+    if task == "--help" || task == "-h" {
+        return Err(USAGE.to_string());
+    }
+    opts.task = task.clone();
+    while let Some(flag) = it.next() {
+        let mut next = |what: &str| {
+            it.next()
+                .cloned()
+                .ok_or_else(|| format!("{flag} needs a {what}"))
+        };
+        match flag.as_str() {
+            "--nodes" => opts.nodes = next("count")?.parse().map_err(|e| format!("{e}"))?,
+            "--workers" => opts.workers = next("count")?.parse().map_err(|e| format!("{e}"))?,
+            "--scale" => opts.scale = next("factor")?.parse().map_err(|e| format!("{e}"))?,
+            "--seed" => opts.seed = next("seed")?.parse().map_err(|e| format!("{e}"))?,
+            "--artifacts" => opts.artifacts = next("dir")?,
+            "--engine" => {
+                opts.engine = match next("name")?.as_str() {
+                    "blaze" | "eager" => EngineKind::Eager,
+                    "conventional" | "spark" => EngineKind::Conventional,
+                    other => return Err(format!("unknown engine {other:?}")),
+                }
+            }
+            other => return Err(format!("unknown flag {other:?}\n{USAGE}")),
+        }
+    }
+    if opts.nodes == 0 || opts.workers == 0 || opts.scale == 0 {
+        return Err("--nodes/--workers/--scale must be positive".into());
+    }
+    Ok(opts)
+}
+
+fn make_cluster(opts: &Options) -> Cluster {
+    Cluster::new(
+        ClusterConfig::sized(opts.nodes, opts.workers)
+            .with_engine(opts.engine)
+            .with_seed(opts.seed),
+    )
+}
+
+fn load_runtime(opts: &Options) -> Option<Runtime> {
+    if opts.artifacts.is_empty() || opts.artifacts == "none" {
+        return None;
+    }
+    match Runtime::load(&opts.artifacts) {
+        Ok(rt) => {
+            eprintln!("loaded PJRT runtime: {rt:?}");
+            Some(rt)
+        }
+        Err(e) => {
+            eprintln!("no PJRT runtime ({e:#}); falling back to scalar mappers");
+            None
+        }
+    }
+}
+
+/// Run the CLI; returns the process exit code.
+pub fn run(args: &[String]) -> i32 {
+    let opts = match parse(args) {
+        Ok(o) => o,
+        Err(msg) => {
+            eprintln!("{msg}");
+            return 2;
+        }
+    };
+    let tasks: Vec<&str> = if opts.task == "all" {
+        vec!["pi", "wordcount", "pagerank", "kmeans", "gmm", "knn"]
+    } else {
+        vec![opts.task.as_str()]
+    };
+    let runtime = load_runtime(&opts);
+    for task in tasks {
+        let cluster = make_cluster(&opts);
+        let report = match task {
+            "pi" => apps::pi::pi_blaze(&cluster, 1_000_000 * opts.scale as u64),
+            "wordcount" => {
+                let lines = corpus_lines(20_000 * opts.scale, 10, opts.seed);
+                let dv = crate::containers::DistVector::from_vec(&cluster, lines);
+                apps::wordcount::wordcount(&cluster, &dv).0
+            }
+            "pagerank" => {
+                let g = Graph::graph500(12 + opts.scale.ilog2(), 16, opts.seed);
+                apps::pagerank::pagerank(&cluster, &g, 1e-5, 100).0
+            }
+            "kmeans" => {
+                let (dim, k) = runtime
+                    .as_ref()
+                    .map_or((4, 5), |rt| (rt.dim(), rt.k()));
+                let ps = PointSet::clustered(50_000 * opts.scale, dim, k, 0.6, opts.seed);
+                let blocks = apps::kmeans::distribute_blocks(
+                    &cluster,
+                    &ps,
+                    runtime.as_ref().map_or(4096, Runtime::batch),
+                );
+                let init = apps::kmeans::init_first_k(&ps, k);
+                apps::kmeans::kmeans(
+                    &cluster, &blocks, ps.n, dim, k, init, 1e-4, 30, runtime.as_ref(),
+                )
+                .0
+            }
+            "gmm" => {
+                let (dim, k) = runtime
+                    .as_ref()
+                    .map_or((4, 5), |rt| (rt.dim(), rt.k()));
+                let ps = PointSet::clustered(10_000 * opts.scale, dim, k, 0.6, opts.seed);
+                apps::gmm::gmm_from_points(&cluster, &ps, k, 1e-6, 30, runtime.as_ref()).0
+            }
+            "knn" => {
+                let dim = runtime.as_ref().map_or(4, Runtime::dim);
+                let ps = PointSet::uniform(100_000 * opts.scale, dim, opts.seed);
+                let query = vec![0.5f32; dim];
+                apps::knn::knn(&cluster, &ps, &query, 100, runtime.as_ref()).0
+            }
+            other => {
+                eprintln!("unknown task {other:?}\n{USAGE}");
+                return 2;
+            }
+        };
+        println!("{}", report.line());
+    }
+    0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(str::to_string).collect()
+    }
+
+    #[test]
+    fn parse_full_flags() {
+        let o = parse(&argv(
+            "kmeans --nodes 8 --workers 2 --engine conventional --scale 3 --seed 9 --artifacts none",
+        ))
+        .unwrap();
+        assert_eq!(o.task, "kmeans");
+        assert_eq!(o.nodes, 8);
+        assert_eq!(o.workers, 2);
+        assert_eq!(o.engine, EngineKind::Conventional);
+        assert_eq!(o.scale, 3);
+        assert_eq!(o.seed, 9);
+        assert_eq!(o.artifacts, "none");
+    }
+
+    #[test]
+    fn parse_rejects_bad_input() {
+        assert!(parse(&argv("")).is_err());
+        assert!(parse(&argv("pi --engine warp")).is_err());
+        assert!(parse(&argv("pi --nodes")).is_err());
+        assert!(parse(&argv("pi --nodes 0")).is_err());
+        assert!(parse(&argv("pi --frobnicate 1")).is_err());
+    }
+
+    #[test]
+    fn run_pi_end_to_end() {
+        // Tiny scale, no artifacts: exercises the whole CLI path.
+        assert_eq!(run(&argv("pi --nodes 2 --workers 2 --scale 1 --artifacts none")), 0);
+    }
+
+    #[test]
+    fn unknown_task_fails() {
+        assert_eq!(run(&argv("sort --artifacts none")), 2);
+    }
+}

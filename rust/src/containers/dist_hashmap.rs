@@ -1,0 +1,353 @@
+//! `DistHashMap` — a hash-slot-partitioned distributed map (paper §2.1).
+//!
+//! Keys route through [`crate::coordinator::rebalance::NUM_SLOTS`] hash
+//! slots; a coordinator-owned slot→node map assigns slots to nodes and can
+//! be rebalanced when key skew piles weight onto a few slots.
+
+use std::collections::HashMap;
+use std::hash::Hash;
+
+use crate::coordinator::cluster::Cluster;
+use crate::coordinator::metrics::RunStats;
+use crate::coordinator::rebalance::{self, MovePlan, SlotMap, NUM_SLOTS};
+use crate::mapreduce::{DistInput, ReduceTarget, Reducer};
+use crate::net::sim::FlowMatrix;
+use crate::ser::fastser::FastSer;
+use crate::util::hash::{fxhash, FxHashMap};
+
+/// Distributed hash map: key/value pairs partitioned by hash slot.
+#[derive(Debug, Clone)]
+pub struct DistHashMap<K, V> {
+    cluster: Cluster,
+    slot_map: SlotMap,
+    shards: Vec<FxHashMap<K, V>>,
+}
+
+impl<K, V> DistHashMap<K, V>
+where
+    K: Hash + Eq + Clone,
+    V: Clone,
+{
+    /// Empty map over `cluster`.
+    pub fn new(cluster: &Cluster) -> Self {
+        Self {
+            cluster: cluster.clone(),
+            slot_map: SlotMap::even(cluster.nodes()),
+            shards: (0..cluster.nodes()).map(|_| FxHashMap::default()).collect(),
+        }
+    }
+
+    /// Hash slot of `key`.
+    #[inline]
+    pub fn slot_of(&self, key: &K) -> usize {
+        (fxhash(key) % NUM_SLOTS as u64) as usize
+    }
+
+    /// Node owning `key` under the current slot map.
+    #[inline]
+    pub fn owner_of(&self, key: &K) -> usize {
+        self.slot_map.node_of(self.slot_of(key))
+    }
+
+    /// Entry count across all shards (paper's `words.size()`).
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(HashMap::len).sum()
+    }
+
+    /// True if no entries.
+    pub fn is_empty(&self) -> bool {
+        self.shards.iter().all(HashMap::is_empty)
+    }
+
+    /// Owning cluster.
+    pub fn cluster(&self) -> &Cluster {
+        &self.cluster
+    }
+
+    /// Look up one key.
+    pub fn get(&self, key: &K) -> Option<V> {
+        self.shards[self.owner_of(key)].get(key).cloned()
+    }
+
+    /// Insert or overwrite one key.
+    pub fn insert(&mut self, key: K, value: V) {
+        let node = self.owner_of(&key);
+        self.shards[node].insert(key, value);
+    }
+
+    /// Insert-or-reduce one key (the map's native merge operation).
+    pub fn merge(&mut self, key: K, value: V, red: &Reducer<V>) {
+        let node = self.owner_of(&key);
+        match self.shards[node].entry(key) {
+            std::collections::hash_map::Entry::Occupied(mut e) => red.apply(e.get_mut(), &value),
+            std::collections::hash_map::Entry::Vacant(e) => {
+                e.insert(value);
+            }
+        }
+    }
+
+    /// Build from a standard `HashMap` (paper's `distribute`).
+    pub fn from_hashmap(cluster: &Cluster, data: HashMap<K, V>) -> Self {
+        let mut out = Self::new(cluster);
+        for (k, v) in data {
+            out.insert(k, v);
+        }
+        out
+    }
+
+    /// Gather into a standard `HashMap` (paper's `collect`).
+    pub fn collect(&self) -> HashMap<K, V> {
+        let mut out = HashMap::with_capacity(self.len());
+        for shard in &self.shards {
+            for (k, v) in shard {
+                out.insert(k.clone(), v.clone());
+            }
+        }
+        out
+    }
+
+    /// Apply `f` to every entry in parallel (paper's `foreach`); values may
+    /// be mutated.
+    pub fn foreach(&mut self, mut f: impl FnMut(&K, &mut V)) {
+        for shard in &mut self.shards {
+            for (k, v) in shard.iter_mut() {
+                f(k, v);
+            }
+        }
+    }
+
+    /// Node-local shard (read).
+    pub fn shard(&self, node: usize) -> &FxHashMap<K, V> {
+        &self.shards[node]
+    }
+
+    /// Per-slot (entry count, serialized bytes) — the rebalancer's input.
+    pub fn slot_weights(&self) -> (Vec<u64>, Vec<u64>)
+    where
+        K: FastSer,
+        V: FastSer,
+    {
+        let mut counts = vec![0u64; NUM_SLOTS];
+        let mut bytes = vec![0u64; NUM_SLOTS];
+        for shard in &self.shards {
+            for (k, v) in shard {
+                let slot = self.slot_of(k);
+                counts[slot] += 1;
+                bytes[slot] += (k.encoded_len() + v.encoded_len()) as u64;
+            }
+        }
+        (counts, bytes)
+    }
+
+    /// Rebalance shards to even out per-node load. Moves are executed for
+    /// real (entries re-home, bytes counted through the flow model) and the
+    /// plan is returned. No-op on a 1-node cluster.
+    pub fn rebalance(&mut self) -> MovePlan
+    where
+        K: FastSer,
+        V: FastSer,
+    {
+        let nodes = self.cluster.nodes();
+        let (counts, bytes) = self.slot_weights();
+        let plan = rebalance::plan(&self.slot_map, &counts, &bytes, nodes);
+        let mut flows = FlowMatrix::new(nodes);
+        for mv in &plan.moves {
+            // Re-home every entry in the moved slot, serializing for real.
+            let moved: Vec<(K, V)> = self.shards[mv.from]
+                .iter()
+                .filter(|(k, _)| self.slot_of(k) == mv.slot)
+                .map(|(k, v)| (k.clone(), v.clone()))
+                .collect();
+            let mut w = crate::ser::fastser::Writer::new();
+            for (k, v) in &moved {
+                k.write(&mut w);
+                v.write(&mut w);
+            }
+            flows.record(mv.from, mv.to, w.len() as u64);
+            for (k, v) in moved {
+                self.shards[mv.from].remove(&k);
+                self.shards[mv.to].insert(k, v);
+            }
+        }
+        self.slot_map = plan.new_map.clone();
+        let transfer = flows.phase_time(&self.cluster.config().network);
+        self.cluster.metrics().record_run(RunStats {
+            label: "disthashmap.rebalance".into(),
+            engine: self.cluster.config().engine.to_string(),
+            nodes,
+            workers_per_node: self.cluster.workers(),
+            makespan_sec: transfer,
+            shuffle_sec: transfer,
+            shuffle_bytes: flows.cross_node_bytes(),
+            ..Default::default()
+        });
+        plan
+    }
+
+    /// Load imbalance (max/mean entries per node).
+    pub fn imbalance(&self) -> f64 {
+        let loads: Vec<usize> = self.shards.iter().map(HashMap::len).collect();
+        let total: usize = loads.iter().sum();
+        if total == 0 {
+            return 1.0;
+        }
+        let mean = total as f64 / loads.len() as f64;
+        *loads.iter().max().unwrap() as f64 / mean
+    }
+}
+
+impl<K, V> DistInput for DistHashMap<K, V>
+where
+    K: Hash + Eq + Clone,
+    V: Clone,
+{
+    type K = K;
+    type V = V;
+
+    fn cluster(&self) -> &Cluster {
+        &self.cluster
+    }
+
+    fn node_len(&self, node: usize) -> usize {
+        self.shards[node].len()
+    }
+
+    fn for_each_worker_item<F: FnMut(usize, &Self::K, &Self::V)>(
+        &self,
+        node: usize,
+        workers: usize,
+        mut f: F,
+    ) {
+        let n = self.shards[node].len();
+        if n == 0 {
+            return;
+        }
+        // One pass; worker assignment by position (block split).
+        let ranges = crate::coordinator::scheduler::block_ranges(n, workers);
+        let mut w = 0usize;
+        for (i, (k, v)) in self.shards[node].iter().enumerate() {
+            while i >= ranges[w].end {
+                w += 1;
+            }
+            f(w, k, v);
+        }
+    }
+}
+
+/// `DistHashMap` as a MapReduce target (the word-count example's `words`).
+impl<K, V> ReduceTarget<K, V> for DistHashMap<K, V>
+where
+    K: Hash + Eq + Clone,
+    V: Clone,
+{
+    fn shard_of(&self, key: &K, _nodes: usize) -> usize {
+        self.owner_of(key)
+    }
+
+    fn absorb(&mut self, node: usize, pairs: Vec<(K, V)>, red: &Reducer<V>) {
+        for (k, v) in pairs {
+            debug_assert_eq!(self.owner_of(&k), node);
+            match self.shards[node].entry(k) {
+                std::collections::hash_map::Entry::Occupied(mut e) => red.apply(e.get_mut(), &v),
+                std::collections::hash_map::Entry::Vacant(e) => {
+                    e.insert(v);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn insert_get_across_nodes() {
+        let c = Cluster::local(4, 1);
+        let mut m: DistHashMap<String, u64> = DistHashMap::new(&c);
+        for i in 0..100 {
+            m.insert(format!("key{i}"), i);
+        }
+        assert_eq!(m.len(), 100);
+        assert_eq!(m.get(&"key42".to_string()), Some(42));
+        assert_eq!(m.get(&"nope".to_string()), None);
+        // Keys actually spread across shards.
+        let occupied = (0..4).filter(|&n| !m.shard(n).is_empty()).count();
+        assert!(occupied >= 3, "only {occupied} shards occupied");
+    }
+
+    #[test]
+    fn merge_reduces() {
+        let c = Cluster::local(2, 1);
+        let mut m: DistHashMap<String, u64> = DistHashMap::new(&c);
+        let red = Reducer::sum();
+        m.merge("a".into(), 1, &red);
+        m.merge("a".into(), 2, &red);
+        assert_eq!(m.get(&"a".to_string()), Some(3));
+    }
+
+    #[test]
+    fn collect_roundtrip() {
+        let c = Cluster::local(3, 1);
+        let mut src = HashMap::new();
+        for i in 0..50u64 {
+            src.insert(format!("k{i}"), i);
+        }
+        let m = DistHashMap::from_hashmap(&c, src.clone());
+        assert_eq!(m.collect(), src);
+    }
+
+    #[test]
+    fn foreach_mutates() {
+        let c = Cluster::local(2, 1);
+        let mut m: DistHashMap<u64, u64> = DistHashMap::new(&c);
+        for i in 0..20 {
+            m.insert(i, i);
+        }
+        m.foreach(|_, v| *v *= 10);
+        assert_eq!(m.get(&7), Some(70));
+    }
+
+    #[test]
+    fn rebalance_no_moves_when_uniform() {
+        let c = Cluster::local(4, 1);
+        let mut m: DistHashMap<u64, u64> = DistHashMap::new(&c);
+        for i in 0..10_000 {
+            m.insert(i, 1);
+        }
+        let before = m.imbalance();
+        assert!(before < 1.2, "uniform keys should balance, got {before}");
+        let plan = m.rebalance();
+        // Near-balanced already: the plan should barely move anything.
+        assert!(
+            plan.cost_bytes() < 10_000 * 2,
+            "moved {} bytes on balanced input",
+            plan.cost_bytes()
+        );
+    }
+
+    #[test]
+    fn lookups_survive_rebalance() {
+        let c = Cluster::local(4, 1);
+        let mut m: DistHashMap<String, u64> = DistHashMap::new(&c);
+        for i in 0..1000 {
+            m.insert(format!("key{i}"), i);
+        }
+        m.rebalance();
+        for i in 0..1000 {
+            assert_eq!(m.get(&format!("key{i}")), Some(i), "key{i} lost");
+        }
+        assert_eq!(m.len(), 1000);
+    }
+
+    #[test]
+    fn target_absorb_reduces_into_shard() {
+        let c = Cluster::local(2, 1);
+        let mut m: DistHashMap<String, u64> = DistHashMap::new(&c);
+        let red = Reducer::sum();
+        let key = "hello".to_string();
+        let node = m.owner_of(&key);
+        m.absorb(node, vec![(key.clone(), 2), (key.clone(), 3)], &red);
+        assert_eq!(m.get(&key), Some(5));
+    }
+}

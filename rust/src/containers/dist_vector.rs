@@ -1,0 +1,392 @@
+//! `DistVector` — a block-partitioned distributed array (paper §2.1).
+
+use std::time::Instant;
+
+use crate::coordinator::cluster::Cluster;
+use crate::coordinator::metrics::RunStats;
+use crate::coordinator::scheduler::block_ranges;
+use crate::mapreduce::{DistInput, ReduceTarget, Reducer};
+use crate::net::sim::FlowMatrix;
+use crate::net::vtime::VirtualTime;
+use crate::ser::fastser::FastSer;
+use crate::util::topk::TopK;
+
+/// Distributed vector: elements block-partitioned across nodes.
+#[derive(Debug, Clone)]
+pub struct DistVector<T> {
+    cluster: Cluster,
+    shards: Vec<Vec<T>>,
+}
+
+impl<T> DistVector<T> {
+    /// Empty distributed vector.
+    pub fn new(cluster: &Cluster) -> Self {
+        Self { cluster: cluster.clone(), shards: (0..cluster.nodes()).map(|_| Vec::new()).collect() }
+    }
+
+    /// Distribute `data` across the cluster in contiguous blocks
+    /// (the paper's `distribute` utility).
+    pub fn from_vec(cluster: &Cluster, mut data: Vec<T>) -> Self {
+        let ranges = block_ranges(data.len(), cluster.nodes());
+        let mut shards: Vec<Vec<T>> = Vec::with_capacity(cluster.nodes());
+        // Split back-to-front so each shard is a cheap tail split.
+        for range in ranges.iter().rev() {
+            shards.push(data.split_off(range.start));
+        }
+        shards.reverse();
+        Self { cluster: cluster.clone(), shards }
+    }
+
+    /// `n` copies of `value` distributed across the cluster.
+    pub fn filled(cluster: &Cluster, n: usize, value: T) -> Self
+    where
+        T: Clone,
+    {
+        let ranges = block_ranges(n, cluster.nodes());
+        Self {
+            cluster: cluster.clone(),
+            shards: ranges.iter().map(|r| vec![value.clone(); r.len()]).collect(),
+        }
+    }
+
+    /// Build directly from per-node shards (data that is *already*
+    /// distributed — e.g. per-node computation outputs).
+    pub fn from_shards(cluster: &Cluster, shards: Vec<Vec<T>>) -> Self {
+        assert_eq!(shards.len(), cluster.nodes(), "one shard per node");
+        Self { cluster: cluster.clone(), shards }
+    }
+
+    /// Element-wise zip of two equally-partitioned vectors (used by the
+    /// paper-structured GMM to pair points with memberships).
+    pub fn zip<B: Clone>(a: &DistVector<T>, b: &DistVector<B>) -> DistVector<(T, B)>
+    where
+        T: Clone,
+    {
+        assert!(a.cluster.same_cluster(&b.cluster), "zip across clusters");
+        assert_eq!(a.len(), b.len(), "zip length mismatch");
+        DistVector {
+            cluster: a.cluster.clone(),
+            shards: a
+                .shards
+                .iter()
+                .zip(&b.shards)
+                .map(|(sa, sb)| sa.iter().cloned().zip(sb.iter().cloned()).collect())
+                .collect(),
+        }
+    }
+
+    /// Build from a generator called with each global index.
+    pub fn from_fn(cluster: &Cluster, n: usize, mut f: impl FnMut(usize) -> T) -> Self {
+        let ranges = block_ranges(n, cluster.nodes());
+        Self {
+            cluster: cluster.clone(),
+            shards: ranges.iter().map(|r| r.clone().map(&mut f).collect()).collect(),
+        }
+    }
+
+    /// Total element count.
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(Vec::len).sum()
+    }
+
+    /// True if no elements.
+    pub fn is_empty(&self) -> bool {
+        self.shards.iter().all(Vec::is_empty)
+    }
+
+    /// Owning cluster.
+    pub fn cluster(&self) -> &Cluster {
+        &self.cluster
+    }
+
+    /// Per-node global start offsets (shard sizes may be uneven after
+    /// [`Self::from_shards`]).
+    pub fn offsets(&self) -> Vec<usize> {
+        let mut out = Vec::with_capacity(self.shards.len());
+        let mut acc = 0;
+        for s in &self.shards {
+            out.push(acc);
+            acc += s.len();
+        }
+        out
+    }
+
+    /// Element at global index `i`.
+    pub fn get(&self, i: usize) -> Option<&T> {
+        let mut rem = i;
+        for shard in &self.shards {
+            if rem < shard.len() {
+                return shard.get(rem);
+            }
+            rem -= shard.len();
+        }
+        None
+    }
+
+    /// Gather all elements to the driver (paper's `collect`).
+    pub fn collect(&self) -> Vec<T>
+    where
+        T: Clone,
+    {
+        let mut out = Vec::with_capacity(self.len());
+        for shard in &self.shards {
+            out.extend(shard.iter().cloned());
+        }
+        out
+    }
+
+    /// Node-local shard (read).
+    pub fn shard(&self, node: usize) -> &[T] {
+        &self.shards[node]
+    }
+
+    /// Apply `f` to every element in parallel (paper's `foreach`); `f` may
+    /// mutate elements in place. Measured and recorded as a compute phase.
+    pub fn foreach(&mut self, mut f: impl FnMut(usize, &mut T)) {
+        let nodes = self.cluster.nodes();
+        let workers = self.cluster.workers();
+        let n = self.len();
+        let ranges = block_ranges(n, nodes);
+        let mut per_node_secs = vec![0.0f64; nodes];
+        for node in 0..nodes {
+            let t0 = Instant::now();
+            let start = ranges[node].start;
+            for (i, item) in self.shards[node].iter_mut().enumerate() {
+                f(start + i, item);
+            }
+            per_node_secs[node] = t0.elapsed().as_secs_f64();
+        }
+        let mut vt = VirtualTime::new();
+        vt.compute_phase("foreach", &per_node_secs, workers);
+        self.record(&vt, "distvector.foreach", 0);
+    }
+
+    /// Top-`k` elements under `cmp` (`Greater` = higher priority), computed
+    /// with per-node bounded heaps and a tree merge — `O(n + k log k)` time,
+    /// `O(k)` space per node (paper §2.1).
+    pub fn topk(&self, k: usize, cmp: impl Fn(&T, &T) -> std::cmp::Ordering + Copy) -> Vec<T>
+    where
+        T: Clone + FastSer,
+    {
+        self.topk_labeled(k, cmp, "distvector.topk")
+    }
+
+    /// [`Self::topk`] with an explicit metrics label.
+    pub fn topk_labeled(
+        &self,
+        k: usize,
+        cmp: impl Fn(&T, &T) -> std::cmp::Ordering + Copy,
+        label: &str,
+    ) -> Vec<T>
+    where
+        T: Clone + FastSer,
+    {
+        let nodes = self.cluster.nodes();
+        let workers = self.cluster.workers();
+        let mut per_node_secs = vec![0.0f64; nodes];
+        let mut partials: Vec<Option<TopK<T, _>>> = Vec::with_capacity(nodes);
+        for node in 0..nodes {
+            let t0 = Instant::now();
+            // Per-worker heaps merged locally — same plan as the map phase.
+            let worker_ranges = block_ranges(self.shards[node].len(), workers);
+            let mut worker_heaps: Vec<TopK<T, _>> =
+                (0..workers).map(|_| TopK::new(k, cmp)).collect();
+            for (w, wr) in worker_ranges.into_iter().enumerate() {
+                for item in &self.shards[node][wr] {
+                    worker_heaps[w].push(item.clone());
+                }
+            }
+            let mut iter = worker_heaps.into_iter();
+            let mut acc = iter.next().expect("at least one worker");
+            for heap in iter {
+                acc.merge(heap);
+            }
+            per_node_secs[node] = t0.elapsed().as_secs_f64();
+            partials.push(Some(acc));
+        }
+        let mut vt = VirtualTime::new();
+        vt.compute_phase("topk-local", &per_node_secs, workers);
+
+        // Binomial tree merge across nodes; candidates serialize for real.
+        let mut shuffle_bytes = 0u64;
+        let mut stride = 1usize;
+        while stride < nodes {
+            let mut flows = FlowMatrix::new(nodes);
+            let mut merge_secs = 0.0f64;
+            for src in (stride..nodes).step_by(stride * 2) {
+                let dst = src - stride;
+                let Some(part) = partials[src].take() else { continue };
+                let candidates = part.into_sorted();
+                let mut w = crate::ser::fastser::Writer::new();
+                candidates.write(&mut w);
+                flows.record(src, dst, w.len() as u64);
+                shuffle_bytes += w.len() as u64;
+                let t0 = Instant::now();
+                let acc = partials[dst].as_mut().expect("merge destination");
+                for item in candidates {
+                    acc.push(item);
+                }
+                merge_secs = merge_secs.max(t0.elapsed().as_secs_f64());
+            }
+            vt.shuffle_overlapped("topk-tree-merge", &flows, &self.cluster.config().network, merge_secs);
+            stride *= 2;
+        }
+        let result = partials[0].take().expect("driver partial").into_sorted();
+        self.record(&vt, label, shuffle_bytes);
+        result
+    }
+
+    fn record(&self, vt: &VirtualTime, label: &str, shuffle_bytes: u64) {
+        self.cluster.metrics().record_run(RunStats {
+            label: label.into(),
+            engine: self.cluster.config().engine.to_string(),
+            nodes: self.cluster.nodes(),
+            workers_per_node: self.cluster.workers(),
+            makespan_sec: vt.makespan(),
+            compute_sec: vt.makespan(),
+            shuffle_sec: 0.0,
+            shuffle_bytes,
+            ..Default::default()
+        });
+    }
+}
+
+impl<T> DistInput for DistVector<T> {
+    type K = usize;
+    type V = T;
+
+    fn cluster(&self) -> &Cluster {
+        &self.cluster
+    }
+
+    fn node_len(&self, node: usize) -> usize {
+        self.shards[node].len()
+    }
+
+    fn for_each_worker_item<F: FnMut(usize, &Self::K, &Self::V)>(
+        &self,
+        node: usize,
+        workers: usize,
+        mut f: F,
+    ) {
+        let start = self.offsets()[node];
+        let worker_ranges = block_ranges(self.shards[node].len(), workers);
+        for (w, wr) in worker_ranges.into_iter().enumerate() {
+            for i in wr {
+                f(w, &(start + i), &self.shards[node][i]);
+            }
+        }
+    }
+}
+
+/// `DistVector` as a MapReduce target: keys are global element indices,
+/// routed to the owning node's shard (PageRank's score vector).
+impl<V: Clone> ReduceTarget<usize, V> for DistVector<V> {
+    fn shard_of(&self, key: &usize, _nodes: usize) -> usize {
+        let mut rem = *key;
+        for (node, shard) in self.shards.iter().enumerate() {
+            if rem < shard.len() {
+                return node;
+            }
+            rem -= shard.len();
+        }
+        panic!("key {key} outside DistVector target of length {}", self.len())
+    }
+
+    fn absorb(&mut self, node: usize, pairs: Vec<(usize, V)>, red: &Reducer<V>) {
+        let start = self.offsets()[node];
+        let shard = &mut self.shards[node];
+        for (k, v) in pairs {
+            let local = k - start;
+            assert!(local < shard.len(), "key {k} not owned by node {node}");
+            red.apply(&mut shard[local], &v);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn distribute_collect_roundtrip() {
+        let c = Cluster::local(3, 2);
+        let data: Vec<u64> = (0..100).collect();
+        let dv = DistVector::from_vec(&c, data.clone());
+        assert_eq!(dv.len(), 100);
+        assert_eq!(dv.collect(), data);
+        // Block partitioning: shards are contiguous and near-even.
+        assert_eq!(dv.shard(0).len(), 34);
+        assert_eq!(dv.shard(1).len(), 33);
+        assert_eq!(dv.shard(2).len(), 33);
+        assert_eq!(dv.shard(1)[0], 34);
+    }
+
+    #[test]
+    fn get_global_index() {
+        let c = Cluster::local(4, 1);
+        let dv = DistVector::from_vec(&c, (0..10u64).collect());
+        for i in 0..10 {
+            assert_eq!(*dv.get(i).unwrap(), i as u64);
+        }
+        assert!(dv.get(10).is_none());
+    }
+
+    #[test]
+    fn foreach_mutates_all() {
+        let c = Cluster::local(2, 2);
+        let mut dv = DistVector::from_vec(&c, vec![1u64; 50]);
+        dv.foreach(|i, v| *v += i as u64);
+        let collected = dv.collect();
+        for (i, v) in collected.iter().enumerate() {
+            assert_eq!(*v, 1 + i as u64);
+        }
+        assert!(c.metrics().last_run().unwrap().label.contains("foreach"));
+    }
+
+    #[test]
+    fn topk_matches_sort_oracle() {
+        let c = Cluster::local(4, 2);
+        let data: Vec<u64> = (0..1000).map(|i| (i * 7919) % 1000).collect();
+        let dv = DistVector::from_vec(&c, data.clone());
+        let top = dv.topk(10, |a, b| a.cmp(b));
+        let mut oracle = data;
+        oracle.sort_unstable_by(|a, b| b.cmp(a));
+        oracle.truncate(10);
+        assert_eq!(top, oracle);
+        // Tree merge must have shuffled candidate bytes.
+        assert!(c.metrics().last_run().unwrap().shuffle_bytes > 0);
+    }
+
+    #[test]
+    fn reduce_target_routes_to_owner() {
+        let c = Cluster::local(2, 1);
+        let mut dv = DistVector::filled(&c, 10, 0u64);
+        let red = Reducer::sum();
+        // Node 0 owns 0..5, node 1 owns 5..10.
+        <DistVector<u64> as ReduceTarget<usize, u64>>::absorb(
+            &mut dv,
+            0,
+            vec![(0, 5), (4, 2)],
+            &red,
+        );
+        <DistVector<u64> as ReduceTarget<usize, u64>>::absorb(
+            &mut dv,
+            1,
+            vec![(9, 7)],
+            &red,
+        );
+        assert_eq!(dv.collect(), vec![5, 0, 0, 0, 2, 0, 0, 0, 0, 7]);
+        assert_eq!(
+            <DistVector<u64> as ReduceTarget<usize, u64>>::shard_of(&dv, &9, 2),
+            1
+        );
+    }
+
+    #[test]
+    fn from_fn_generates_in_order() {
+        let c = Cluster::local(3, 1);
+        let dv = DistVector::from_fn(&c, 10, |i| i * i);
+        assert_eq!(dv.collect(), (0..10).map(|i| i * i).collect::<Vec<_>>());
+    }
+}

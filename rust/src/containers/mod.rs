@@ -1,0 +1,51 @@
+//! Distributed data containers (paper §2.1).
+//!
+//! * [`DistRange`] — start/end/step only; nothing stored.
+//! * [`DistVector`] — block-partitioned element array with `foreach`,
+//!   `topk`, `distribute`/`collect`.
+//! * [`DistHashMap`] — hash-slot-partitioned key/value store with
+//!   `foreach`, `collect`, and coordinator-driven rebalancing.
+//!
+//! Utilities mirror the paper: [`distribute`] / [`collect_vector`] /
+//! [`collect_hashmap`] convert to and from standard containers;
+//! [`load_file`] loads a text file in parallel into a distributed vector of
+//! lines.
+
+pub mod dist_hashmap;
+pub mod dist_range;
+pub mod dist_vector;
+
+pub use dist_hashmap::DistHashMap;
+pub use dist_range::DistRange;
+pub use dist_vector::DistVector;
+
+use crate::coordinator::cluster::Cluster;
+
+/// Convert a standard `Vec` into a [`DistVector`] (paper's `distribute`).
+pub fn distribute<T: Clone>(cluster: &Cluster, data: Vec<T>) -> DistVector<T> {
+    DistVector::from_vec(cluster, data)
+}
+
+/// Gather a [`DistVector`] back into a standard `Vec` (paper's `collect`).
+pub fn collect_vector<T: Clone>(v: &DistVector<T>) -> Vec<T> {
+    v.collect()
+}
+
+/// Gather a [`DistHashMap`] into a standard `HashMap` (paper's `collect`).
+pub fn collect_hashmap<K, V>(m: &DistHashMap<K, V>) -> std::collections::HashMap<K, V>
+where
+    K: std::hash::Hash + Eq + Clone,
+    V: Clone,
+{
+    m.collect()
+}
+
+/// Load a text file in parallel into a distributed vector of lines
+/// (paper's `load_file`).
+pub fn load_file(cluster: &Cluster, path: impl AsRef<std::path::Path>) -> std::io::Result<DistVector<String>> {
+    let content = std::fs::read_to_string(path)?;
+    Ok(DistVector::from_vec(
+        cluster,
+        content.lines().map(str::to_string).collect(),
+    ))
+}

@@ -1,0 +1,226 @@
+//! Virtual cluster handle and configuration.
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use crate::net::model::NetworkModel;
+use crate::util::alloc::{AllocMode, BufferPool};
+
+use super::metrics::MetricsRegistry;
+
+/// Which MapReduce engine executes jobs on this cluster.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum EngineKind {
+    /// Blaze's engine (paper §2.3): eager reduction into thread-local
+    /// caches, fast (tag-less) serialization, asynchronous shuffle-reduce,
+    /// dense small-key-range path.
+    #[default]
+    Eager,
+    /// Conventional MapReduce (the Spark analogue): materialize every
+    /// emitted pair, tagged protobuf-style serialization, barrier shuffle,
+    /// group-then-reduce.
+    Conventional,
+}
+
+impl std::fmt::Display for EngineKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            EngineKind::Eager => write!(f, "blaze"),
+            EngineKind::Conventional => write!(f, "conventional"),
+        }
+    }
+}
+
+/// Cluster shape and engine policy.
+#[derive(Debug, Clone)]
+pub struct ClusterConfig {
+    /// Virtual node (machine) count.
+    pub nodes: usize,
+    /// Worker threads per node (r5.xlarge has 4 logical cores).
+    pub workers_per_node: usize,
+    /// Interconnect model.
+    pub network: NetworkModel,
+    /// Engine selection.
+    pub engine: EngineKind,
+    /// Scratch allocator mode (Blaze vs Blaze-TCM ablation).
+    pub alloc: AllocMode,
+    /// Base RNG seed; all workloads derive per-worker streams from it.
+    pub seed: u64,
+    /// Thread-local eager-combine cache capacity (entries) before overflow
+    /// flushes to the node-local map (paper: "popular keys" stay
+    /// thread-local).
+    pub thread_cache_entries: usize,
+    /// Modeled per-record executor overhead for the conventional engine,
+    /// seconds — stands in for the JVM/Spark task overhead the paper's
+    /// baseline carries (calibrated in DESIGN.md §Substitutions).
+    pub conventional_overhead_sec: f64,
+    /// Modeled per-job task-launch overhead for the conventional engine,
+    /// seconds (Spark job/stage scheduling latency).
+    pub conventional_job_latency_sec: f64,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        Self {
+            nodes: 1,
+            workers_per_node: 4,
+            network: NetworkModel::aws_10gbps(),
+            engine: EngineKind::Eager,
+            alloc: AllocMode::System,
+            seed: 0xB1A2E,
+            thread_cache_entries: 1 << 16,
+            conventional_overhead_sec: 250e-9,
+            conventional_job_latency_sec: 20e-3,
+        }
+    }
+}
+
+impl ClusterConfig {
+    /// `nodes` × `workers` with all other settings default.
+    pub fn sized(nodes: usize, workers_per_node: usize) -> Self {
+        Self { nodes, workers_per_node, ..Self::default() }
+    }
+
+    /// Builder-style engine override.
+    pub fn with_engine(mut self, engine: EngineKind) -> Self {
+        self.engine = engine;
+        self
+    }
+
+    /// Builder-style allocator override.
+    pub fn with_alloc(mut self, alloc: AllocMode) -> Self {
+        self.alloc = alloc;
+        self
+    }
+
+    /// Builder-style network override.
+    pub fn with_network(mut self, network: NetworkModel) -> Self {
+        self.network = network;
+        self
+    }
+
+    /// Builder-style seed override.
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+}
+
+struct ClusterInner {
+    config: ClusterConfig,
+    metrics: RefCell<MetricsRegistry>,
+    pool: BufferPool,
+}
+
+/// Cheap-to-clone handle to a virtual cluster.
+///
+/// The simulation is single-threaded and deterministic (virtual parallelism
+/// is *accounted*, see [`crate::net::vtime`]), so the handle is `Rc`-based
+/// and the whole API is `!Send` by design.
+#[derive(Clone)]
+pub struct Cluster {
+    inner: Rc<ClusterInner>,
+}
+
+impl Cluster {
+    /// Cluster from an explicit config.
+    pub fn new(config: ClusterConfig) -> Self {
+        Self {
+            inner: Rc::new(ClusterInner {
+                config,
+                metrics: RefCell::new(MetricsRegistry::default()),
+                pool: BufferPool::new(),
+            }),
+        }
+    }
+
+    /// `nodes` × `workers` local cluster with defaults (loopback network
+    /// when `nodes == 1`).
+    pub fn local(nodes: usize, workers_per_node: usize) -> Self {
+        let mut config = ClusterConfig::sized(nodes, workers_per_node);
+        if nodes == 1 {
+            config.network = NetworkModel::loopback();
+        }
+        Self::new(config)
+    }
+
+    /// Cluster configuration.
+    pub fn config(&self) -> &ClusterConfig {
+        &self.inner.config
+    }
+
+    /// Node count.
+    pub fn nodes(&self) -> usize {
+        self.inner.config.nodes
+    }
+
+    /// Workers per node.
+    pub fn workers(&self) -> usize {
+        self.inner.config.workers_per_node
+    }
+
+    /// Total virtual worker count.
+    pub fn total_workers(&self) -> usize {
+        self.nodes() * self.workers()
+    }
+
+    /// Mutable access to the metrics registry.
+    pub fn metrics(&self) -> std::cell::RefMut<'_, MetricsRegistry> {
+        self.inner.metrics.borrow_mut()
+    }
+
+    /// Scratch buffer pool (honours the configured [`AllocMode`]).
+    pub fn pool(&self) -> &BufferPool {
+        &self.inner.pool
+    }
+
+    /// True if two handles point at the same cluster.
+    pub fn same_cluster(&self, other: &Cluster) -> bool {
+        Rc::ptr_eq(&self.inner, &other.inner)
+    }
+}
+
+impl std::fmt::Debug for Cluster {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Cluster")
+            .field("nodes", &self.nodes())
+            .field("workers_per_node", &self.workers())
+            .field("engine", &self.config().engine)
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn local_single_node_uses_loopback() {
+        let c = Cluster::local(1, 4);
+        assert_eq!(c.config().network, NetworkModel::loopback());
+        let c8 = Cluster::local(8, 4);
+        assert_eq!(c8.config().network, NetworkModel::aws_10gbps());
+        assert_eq!(c8.total_workers(), 32);
+    }
+
+    #[test]
+    fn builder_chain() {
+        let cfg = ClusterConfig::sized(4, 2)
+            .with_engine(EngineKind::Conventional)
+            .with_alloc(AllocMode::Pool)
+            .with_seed(7);
+        assert_eq!(cfg.nodes, 4);
+        assert_eq!(cfg.engine, EngineKind::Conventional);
+        assert_eq!(cfg.alloc, AllocMode::Pool);
+        assert_eq!(cfg.seed, 7);
+    }
+
+    #[test]
+    fn handles_share_state() {
+        let a = Cluster::local(2, 2);
+        let b = a.clone();
+        assert!(a.same_cluster(&b));
+        a.metrics().record_note("x");
+        assert_eq!(b.metrics().notes().len(), 1);
+    }
+}

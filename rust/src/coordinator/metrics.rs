@@ -1,0 +1,166 @@
+//! Run metrics: virtual timings, byte counts, memory high-water marks.
+//!
+//! Every MapReduce execution records a [`RunStats`]; benches and the
+//! experiment harness read them back to regenerate the paper's tables and
+//! figures (throughput from virtual makespans, Fig 9 from the intermediate
+//! memory accounting).
+
+/// Statistics for one MapReduce (or container-op) execution.
+#[derive(Debug, Clone, Default)]
+pub struct RunStats {
+    /// Operation label ("wordcount.map", "pagerank.iter0.sinks", ...).
+    pub label: String,
+    /// Engine that ran it ("blaze" / "conventional").
+    pub engine: String,
+    /// Cluster shape.
+    pub nodes: usize,
+    /// Workers per node.
+    pub workers_per_node: usize,
+    /// Virtual makespan, seconds (the number the figures are built from).
+    pub makespan_sec: f64,
+    /// Virtual compute portion, seconds.
+    pub compute_sec: f64,
+    /// Virtual shuffle portion, seconds.
+    pub shuffle_sec: f64,
+    /// Cross-node bytes actually serialized and moved.
+    pub shuffle_bytes: u64,
+    /// Pairs emitted by mappers (before any combining).
+    pub pairs_emitted: u64,
+    /// Pairs that crossed the network (after eager combine; == emitted for
+    /// the conventional engine).
+    pub pairs_shuffled: u64,
+    /// Peak bytes held in intermediate state (thread caches + materialized
+    /// pair buffers + in-flight serialized messages), summed over nodes.
+    pub peak_intermediate_bytes: u64,
+    /// Real host wall time spent executing the run, seconds.
+    pub host_wall_sec: f64,
+}
+
+impl RunStats {
+    /// Items/second throughput for `items` processed in this run.
+    pub fn throughput(&self, items: u64) -> f64 {
+        items as f64 / self.makespan_sec
+    }
+}
+
+/// Cluster-wide metrics registry.
+#[derive(Debug, Default)]
+pub struct MetricsRegistry {
+    runs: Vec<RunStats>,
+    notes: Vec<String>,
+}
+
+impl MetricsRegistry {
+    /// Record a completed run.
+    pub fn record_run(&mut self, stats: RunStats) {
+        self.runs.push(stats);
+    }
+
+    /// Most recent run, if any.
+    pub fn last_run(&self) -> Option<&RunStats> {
+        self.runs.last()
+    }
+
+    /// All recorded runs.
+    pub fn runs(&self) -> &[RunStats] {
+        &self.runs
+    }
+
+    /// Drop recorded runs (benches reset between configurations).
+    pub fn clear(&mut self) {
+        self.runs.clear();
+        self.notes.clear();
+    }
+
+    /// Number of runs since the last clear.
+    pub fn len(&self) -> usize {
+        self.runs.len()
+    }
+
+    /// True if no runs recorded.
+    pub fn is_empty(&self) -> bool {
+        self.runs.is_empty()
+    }
+
+    /// Sum of virtual makespans over runs whose label starts with `prefix`
+    /// (a multi-MapReduce job like one PageRank iteration).
+    pub fn job_makespan(&self, prefix: &str) -> f64 {
+        self.runs
+            .iter()
+            .filter(|r| r.label.starts_with(prefix))
+            .map(|r| r.makespan_sec)
+            .sum()
+    }
+
+    /// Max peak intermediate bytes over runs with the given label prefix.
+    pub fn job_peak_bytes(&self, prefix: &str) -> u64 {
+        self.runs
+            .iter()
+            .filter(|r| r.label.starts_with(prefix))
+            .map(|r| r.peak_intermediate_bytes)
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Total shuffle bytes over runs with the given label prefix.
+    pub fn job_shuffle_bytes(&self, prefix: &str) -> u64 {
+        self.runs
+            .iter()
+            .filter(|r| r.label.starts_with(prefix))
+            .map(|r| r.shuffle_bytes)
+            .sum()
+    }
+
+    /// Free-form annotation (experiment provenance).
+    pub fn record_note(&mut self, note: impl Into<String>) {
+        self.notes.push(note.into());
+    }
+
+    /// Recorded annotations.
+    pub fn notes(&self) -> &[String] {
+        &self.notes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stats(label: &str, makespan: f64, peak: u64) -> RunStats {
+        RunStats {
+            label: label.into(),
+            makespan_sec: makespan,
+            peak_intermediate_bytes: peak,
+            shuffle_bytes: 10,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn job_aggregation_by_prefix() {
+        let mut m = MetricsRegistry::default();
+        m.record_run(stats("pr.iter0.sinks", 1.0, 100));
+        m.record_run(stats("pr.iter0.scores", 2.0, 300));
+        m.record_run(stats("pr.iter0.delta", 0.5, 50));
+        m.record_run(stats("other", 9.0, 900));
+        assert!((m.job_makespan("pr.iter0") - 3.5).abs() < 1e-12);
+        assert_eq!(m.job_peak_bytes("pr.iter0"), 300);
+        assert_eq!(m.job_shuffle_bytes("pr.iter0"), 30);
+    }
+
+    #[test]
+    fn throughput() {
+        let s = stats("x", 2.0, 0);
+        assert!((s.throughput(100) - 50.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn clear_resets() {
+        let mut m = MetricsRegistry::default();
+        m.record_run(stats("a", 1.0, 0));
+        m.record_note("n");
+        m.clear();
+        assert!(m.is_empty());
+        assert!(m.notes().is_empty());
+    }
+}

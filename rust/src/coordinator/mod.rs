@@ -1,0 +1,19 @@
+//! Cluster coordination: topology/config, block scheduling, shuffle
+//! orchestration with backpressure, shard rebalancing, metrics.
+//!
+//! The coordinator owns the *virtual* cluster: `N` nodes × `W` workers whose
+//! compute is measured on the host and whose communication runs through the
+//! simulated interconnect ([`crate::net`]). Everything is deterministic:
+//! given a seed and a cluster shape, a run produces identical results and
+//! identical byte counts.
+
+pub mod backpressure;
+pub mod cluster;
+pub mod collectives;
+pub mod metrics;
+pub mod rebalance;
+pub mod scheduler;
+pub mod shuffle;
+
+pub use cluster::{Cluster, ClusterConfig, EngineKind};
+pub use metrics::{MetricsRegistry, RunStats};

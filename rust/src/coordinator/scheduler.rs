@@ -1,0 +1,131 @@
+//! Block scheduling: how a node's items are split across its workers and
+//! how container elements are partitioned across nodes.
+//!
+//! Blaze (like the paper's MPI+OpenMP substrate) block-partitions data:
+//! contiguous ranges, remainder spread one-per-part from the front. The
+//! scheduler also provides a size-weighted partitioner used by shard
+//! rebalancing when key skew makes block partitions uneven.
+
+use std::ops::Range;
+
+/// Split `n_items` into `parts` contiguous ranges, sizes differing by ≤1.
+pub fn block_ranges(n_items: usize, parts: usize) -> Vec<Range<usize>> {
+    assert!(parts > 0, "parts must be > 0");
+    let base = n_items / parts;
+    let extra = n_items % parts;
+    let mut out = Vec::with_capacity(parts);
+    let mut start = 0;
+    for p in 0..parts {
+        let len = base + usize::from(p < extra);
+        out.push(start..start + len);
+        start += len;
+    }
+    out
+}
+
+/// Owner part of item `i` under [`block_ranges`] partitioning — O(1),
+/// no range scan.
+pub fn block_owner(n_items: usize, parts: usize, i: usize) -> usize {
+    debug_assert!(i < n_items);
+    let base = n_items / parts;
+    let extra = n_items % parts;
+    let big = (base + 1) * extra; // items covered by the `extra` bigger parts
+    if base == 0 || i < big {
+        i / (base + 1)
+    } else {
+        extra + (i - big) / base
+    }
+}
+
+/// Split weighted items into `parts` contiguous groups minimizing the max
+/// group weight (greedy longest-processing-time would break contiguity;
+/// rebalancing wants contiguity so shard moves stay cheap). Returns ranges
+/// over the item indices.
+pub fn weighted_contiguous_ranges(weights: &[u64], parts: usize) -> Vec<Range<usize>> {
+    assert!(parts > 0);
+    let total: u64 = weights.iter().sum();
+    let target = total as f64 / parts as f64;
+    let mut out = Vec::with_capacity(parts);
+    let mut start = 0usize;
+    let mut acc = 0u64;
+    let mut budget = target;
+    for (i, &w) in weights.iter().enumerate() {
+        acc += w;
+        // Close the current group once it reaches its cumulative budget,
+        // keeping enough items for the remaining groups.
+        let groups_left = parts - out.len();
+        let items_left = weights.len() - i - 1;
+        if out.len() < parts - 1 && (acc as f64 >= budget || items_left < groups_left - 1) {
+            out.push(start..i + 1);
+            start = i + 1;
+            budget += target;
+        }
+    }
+    out.push(start..weights.len());
+    while out.len() < parts {
+        out.push(weights.len()..weights.len());
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn block_ranges_cover_exactly() {
+        for n in [0usize, 1, 7, 100, 101] {
+            for p in [1usize, 2, 3, 8] {
+                let ranges = block_ranges(n, p);
+                assert_eq!(ranges.len(), p);
+                let mut next = 0;
+                for r in &ranges {
+                    assert_eq!(r.start, next);
+                    next = r.end;
+                }
+                assert_eq!(next, n);
+                let sizes: Vec<usize> = ranges.iter().map(|r| r.len()).collect();
+                let (min, max) =
+                    (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+                assert!(max - min <= 1, "n={n} p={p} sizes={sizes:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn block_owner_agrees_with_ranges() {
+        for n in [1usize, 7, 100, 101] {
+            for p in [1usize, 2, 3, 8] {
+                let ranges = block_ranges(n, p);
+                for i in 0..n {
+                    let owner = block_owner(n, p, i);
+                    assert!(
+                        ranges[owner].contains(&i),
+                        "n={n} p={p} i={i} owner={owner}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn weighted_ranges_balance_skew() {
+        // One huge item at the front; the rest tiny.
+        let mut w = vec![1u64; 100];
+        w[0] = 100;
+        let ranges = weighted_contiguous_ranges(&w, 4);
+        assert_eq!(ranges.len(), 4);
+        assert_eq!(ranges[0], 0..1, "huge item isolated");
+        // Coverage.
+        assert_eq!(ranges.last().unwrap().end, 100);
+        let covered: usize = ranges.iter().map(|r| r.len()).sum();
+        assert_eq!(covered, 100);
+    }
+
+    #[test]
+    fn weighted_ranges_more_parts_than_items() {
+        let ranges = weighted_contiguous_ranges(&[5, 5], 4);
+        assert_eq!(ranges.len(), 4);
+        assert_eq!(ranges.iter().map(|r| r.len()).sum::<usize>(), 2);
+    }
+}

@@ -1,0 +1,127 @@
+//! Graph500 Kronecker (R-MAT) graph generator (PageRank workload).
+//!
+//! Same generator family as the paper's input ("we use the graph500
+//! generator to generate the input graph which contains 10 million links"):
+//! recursive-matrix sampling with the reference parameters A=0.57, B=0.19,
+//! C=0.19, D=0.05, which yields the heavy power-law degree skew that
+//! stresses the shuffle. Scale and edge factor are knobs.
+
+use crate::util::rng::SplitRng;
+
+/// A directed graph as an edge list plus out-degree index.
+#[derive(Debug, Clone)]
+pub struct Graph {
+    /// Number of vertices (2^scale).
+    pub n_vertices: usize,
+    /// Directed edges (src, dst).
+    pub edges: Vec<(u32, u32)>,
+    /// Out-degree per vertex.
+    pub out_degree: Vec<u32>,
+}
+
+/// Graph500 R-MAT parameters.
+const A: f64 = 0.57;
+const B: f64 = 0.19;
+const C: f64 = 0.19;
+// D implied: 0.05
+
+impl Graph {
+    /// Generate a Kronecker graph: `2^scale` vertices, `edge_factor *
+    /// 2^scale` edges (graph500 default edge factor is 16).
+    pub fn graph500(scale: u32, edge_factor: usize, seed: u64) -> Self {
+        let n = 1usize << scale;
+        let m = edge_factor * n;
+        let mut rng = SplitRng::new(seed, 0x64AF4);
+        let mut edges = Vec::with_capacity(m);
+        for _ in 0..m {
+            let (mut src, mut dst) = (0usize, 0usize);
+            for level in 0..scale {
+                let u = rng.uniform();
+                let (si, di) = if u < A {
+                    (0, 0)
+                } else if u < A + B {
+                    (0, 1)
+                } else if u < A + B + C {
+                    (1, 0)
+                } else {
+                    (1, 1)
+                };
+                src |= si << level;
+                dst |= di << level;
+            }
+            edges.push((src as u32, dst as u32));
+        }
+        let mut out_degree = vec![0u32; n];
+        for &(src, _) in &edges {
+            out_degree[src as usize] += 1;
+        }
+        Self { n_vertices: n, edges, out_degree }
+    }
+
+    /// Number of edges.
+    pub fn n_edges(&self) -> usize {
+        self.edges.len()
+    }
+
+    /// Vertices with no outbound links ("sinks" — the paper connects them
+    /// to every page).
+    pub fn sinks(&self) -> Vec<u32> {
+        self.out_degree
+            .iter()
+            .enumerate()
+            .filter(|(_, &d)| d == 0)
+            .map(|(v, _)| v as u32)
+            .collect()
+    }
+
+    /// Max out-degree (skew indicator).
+    pub fn max_out_degree(&self) -> u32 {
+        self.out_degree.iter().copied().max().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sizes_match_scale() {
+        let g = Graph::graph500(10, 16, 1);
+        assert_eq!(g.n_vertices, 1024);
+        assert_eq!(g.n_edges(), 16 * 1024);
+        assert_eq!(g.out_degree.len(), 1024);
+        let total: u32 = g.out_degree.iter().sum();
+        assert_eq!(total as usize, g.n_edges());
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = Graph::graph500(8, 8, 42);
+        let b = Graph::graph500(8, 8, 42);
+        assert_eq!(a.edges, b.edges);
+        let c = Graph::graph500(8, 8, 43);
+        assert_ne!(a.edges, c.edges);
+    }
+
+    #[test]
+    fn degree_distribution_is_skewed() {
+        let g = Graph::graph500(12, 16, 7);
+        // R-MAT concentrates edges: max out-degree far above the mean (16).
+        assert!(
+            g.max_out_degree() > 16 * 8,
+            "max degree {} not skewed",
+            g.max_out_degree()
+        );
+        // And there must be sinks for the PageRank sink handling to matter.
+        assert!(!g.sinks().is_empty(), "expected sink vertices");
+    }
+
+    #[test]
+    fn edges_in_range() {
+        let g = Graph::graph500(6, 4, 3);
+        for &(s, d) in &g.edges {
+            assert!((s as usize) < g.n_vertices);
+            assert!((d as usize) < g.n_vertices);
+        }
+    }
+}

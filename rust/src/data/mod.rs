@@ -1,0 +1,15 @@
+//! Deterministic workload generators for the paper's five tasks.
+//!
+//! The paper's datasets (Bible+Shakespeare ×200, graph500, random clustered
+//! points) are substituted with scale-parameterized generators that preserve
+//! the statistical shape the workloads stress — see DESIGN.md
+//! §Substitutions. Everything is seeded through [`crate::util::SplitRng`],
+//! so every run of every bench sees identical data.
+
+pub mod graph500;
+pub mod points;
+pub mod text_gen;
+
+pub use graph500::Graph;
+pub use points::PointSet;
+pub use text_gen::corpus_lines;

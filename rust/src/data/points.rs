@@ -1,0 +1,128 @@
+//! Gaussian-cluster point generator (k-means / GMM / k-NN workloads).
+//!
+//! Matches the paper's setup: "100 million random points around 5
+//! clustering centers" — points are sampled from an isotropic Gaussian
+//! mixture with configurable cluster count, dimension and spread. Stored
+//! flat (`f32`, row-major) so the PJRT kernels consume them zero-copy.
+
+use crate::util::rng::SplitRng;
+
+/// A flat row-major point set with ground-truth centers.
+#[derive(Debug, Clone)]
+pub struct PointSet {
+    /// Point count.
+    pub n: usize,
+    /// Dimension.
+    pub dim: usize,
+    /// Row-major coordinates, `n * dim` values.
+    pub coords: Vec<f32>,
+    /// The generating mixture centers (`k * dim`, row-major).
+    pub true_centers: Vec<f32>,
+}
+
+impl PointSet {
+    /// `n` points in `dim` dimensions around `k` Gaussian centers with
+    /// standard deviation `sigma`; centers drawn uniformly in `[-10, 10]^d`.
+    pub fn clustered(n: usize, dim: usize, k: usize, sigma: f64, seed: u64) -> Self {
+        assert!(k > 0 && dim > 0);
+        let mut rng = SplitRng::new(seed, 0x90145);
+        let mut true_centers = Vec::with_capacity(k * dim);
+        for _ in 0..k * dim {
+            true_centers.push((rng.uniform() * 20.0 - 10.0) as f32);
+        }
+        let mut coords = Vec::with_capacity(n * dim);
+        for _ in 0..n {
+            let c = rng.below(k as u64) as usize;
+            for d in 0..dim {
+                let center = f64::from(true_centers[c * dim + d]);
+                coords.push((center + sigma * rng.normal()) as f32);
+            }
+        }
+        Self { n, dim, coords, true_centers }
+    }
+
+    /// Uniform points in `[0, 1]^dim` (the k-NN workload's "random points").
+    pub fn uniform(n: usize, dim: usize, seed: u64) -> Self {
+        let mut rng = SplitRng::new(seed, 0xA11CE);
+        let coords = (0..n * dim).map(|_| rng.uniform() as f32).collect();
+        Self { n, dim, coords, true_centers: Vec::new() }
+    }
+
+    /// Point `i` as a slice.
+    #[inline]
+    pub fn point(&self, i: usize) -> &[f32] {
+        &self.coords[i * self.dim..(i + 1) * self.dim]
+    }
+
+    /// Squared Euclidean distance between point `i` and an external vector.
+    #[inline]
+    pub fn dist2(&self, i: usize, other: &[f32]) -> f32 {
+        self.point(i)
+            .iter()
+            .zip(other)
+            .map(|(a, b)| {
+                let d = a - b;
+                d * d
+            })
+            .sum()
+    }
+
+    /// Number of generating clusters (0 for uniform sets).
+    pub fn k(&self) -> usize {
+        if self.true_centers.is_empty() {
+            0
+        } else {
+            self.true_centers.len() / self.dim
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes() {
+        let ps = PointSet::clustered(1000, 3, 5, 0.5, 1);
+        assert_eq!(ps.coords.len(), 3000);
+        assert_eq!(ps.k(), 5);
+        assert_eq!(ps.point(10).len(), 3);
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = PointSet::clustered(100, 2, 3, 1.0, 9);
+        let b = PointSet::clustered(100, 2, 3, 1.0, 9);
+        assert_eq!(a.coords, b.coords);
+    }
+
+    #[test]
+    fn points_cluster_near_centers() {
+        let sigma = 0.3;
+        let ps = PointSet::clustered(2000, 2, 4, sigma, 5);
+        // Each point should be within 5 sigma of *some* center.
+        let mut far = 0;
+        for i in 0..ps.n {
+            let min_d2 = (0..ps.k())
+                .map(|c| ps.dist2(i, &ps.true_centers[c * 2..(c + 1) * 2]))
+                .fold(f32::INFINITY, f32::min);
+            if f64::from(min_d2).sqrt() > 5.0 * sigma {
+                far += 1;
+            }
+        }
+        assert!(far < ps.n / 100, "{far} points far from all centers");
+    }
+
+    #[test]
+    fn uniform_in_unit_cube() {
+        let ps = PointSet::uniform(500, 4, 2);
+        assert!(ps.coords.iter().all(|&v| (0.0..1.0).contains(&v)));
+        assert_eq!(ps.k(), 0);
+    }
+
+    #[test]
+    fn dist2_matches_manual() {
+        let ps = PointSet { n: 1, dim: 2, coords: vec![1.0, 2.0], true_centers: vec![] };
+        assert_eq!(ps.dist2(0, &[4.0, 6.0]), 25.0);
+    }
+}

@@ -1,0 +1,162 @@
+//! Zipf-distributed English-like corpus generator (word-count workload).
+//!
+//! The paper word-counts the Bible + Shakespeare repeated 200× (≈0.4 G
+//! words). Word-count performance is governed by (a) the word-length
+//! distribution (hashing/serialization cost per token) and (b) the key
+//! skew (combining effectiveness). Both are preserved by sampling a
+//! vocabulary under a Zipf(s≈1.07) law — the classic fit for English text —
+//! seeded with real high-frequency English words and padded with
+//! morphologically plausible synthetic words.
+
+use crate::util::rng::SplitRng;
+
+/// The most frequent English words, in rank order (head of the Zipf law —
+/// these carry most of the token mass, exactly as in the Bible corpus).
+const HEAD_WORDS: &[&str] = &[
+    "the", "and", "of", "to", "a", "in", "that", "he", "shall", "unto", "for", "i", "his",
+    "lord", "they", "be", "is", "him", "not", "them", "it", "with", "all", "thou", "was",
+    "god", "which", "my", "me", "said", "but", "ye", "their", "have", "will", "thy", "man",
+    "from", "were", "as", "are", "when", "this", "out", "who", "upon", "so", "you", "by",
+    "up", "there", "hath", "then", "people", "came", "had", "house", "into", "on", "her",
+    "come", "one", "we", "children", "s", "king", "before", "your", "also", "day", "land",
+    "men", "israel", "against", "went", "saying", "no", "made", "if", "even", "do", "now",
+    "us", "down", "great", "may", "what", "son", "our", "o", "thee", "because", "go", "or",
+    "things", "good", "saith", "every", "did", "let",
+];
+
+/// Consonant/vowel fragments for synthetic tail words.
+const ONSETS: &[&str] = &["b", "br", "c", "ch", "d", "f", "g", "gr", "h", "k", "l", "m", "n",
+    "p", "pr", "r", "s", "sh", "st", "t", "th", "tr", "v", "w"];
+const NUCLEI: &[&str] = &["a", "e", "i", "o", "u", "ai", "ea", "ou"];
+const CODAS: &[&str] = &["", "d", "k", "l", "m", "n", "r", "s", "t", "th", "ng", "st"];
+
+/// Vocabulary with Zipf rank weights.
+pub struct Vocabulary {
+    words: Vec<String>,
+    /// Cumulative Zipf weights for O(log V) sampling.
+    cdf: Vec<f64>,
+}
+
+impl Vocabulary {
+    /// `size` words under Zipf exponent `s` (English ≈ 1.07).
+    pub fn new(size: usize, s: f64, seed: u64) -> Self {
+        assert!(size > 0);
+        let mut rng = SplitRng::new(seed, 0xC0595);
+        let mut words: Vec<String> = Vec::with_capacity(size);
+        for w in HEAD_WORDS.iter().take(size) {
+            words.push((*w).to_string());
+        }
+        let mut seen: std::collections::HashSet<String> =
+            words.iter().cloned().collect();
+        while words.len() < size {
+            // 1-3 syllables, longer words further down the rank order.
+            let syllables = 1 + (rng.below(3)) as usize;
+            let mut w = String::new();
+            for _ in 0..=syllables {
+                w.push_str(ONSETS[rng.below(ONSETS.len() as u64) as usize]);
+                w.push_str(NUCLEI[rng.below(NUCLEI.len() as u64) as usize]);
+            }
+            w.push_str(CODAS[rng.below(CODAS.len() as u64) as usize]);
+            if seen.insert(w.clone()) {
+                words.push(w);
+            }
+        }
+        // Zipf CDF over ranks.
+        let mut cdf = Vec::with_capacity(size);
+        let mut acc = 0.0;
+        for rank in 1..=size {
+            acc += 1.0 / (rank as f64).powf(s);
+            cdf.push(acc);
+        }
+        let total = *cdf.last().unwrap();
+        for c in &mut cdf {
+            *c /= total;
+        }
+        Self { words, cdf }
+    }
+
+    /// Vocabulary size.
+    pub fn len(&self) -> usize {
+        self.words.len()
+    }
+
+    /// True if empty (never — constructor asserts).
+    pub fn is_empty(&self) -> bool {
+        self.words.is_empty()
+    }
+
+    /// Sample one word (Zipf-distributed rank).
+    pub fn sample<'a>(&'a self, rng: &mut SplitRng) -> &'a str {
+        let u = rng.uniform();
+        let idx = self.cdf.partition_point(|&c| c < u);
+        &self.words[idx.min(self.words.len() - 1)]
+    }
+}
+
+/// Generate `n_lines` lines of `words_per_line` Zipf-sampled words.
+pub fn corpus_lines(n_lines: usize, words_per_line: usize, seed: u64) -> Vec<String> {
+    let vocab = Vocabulary::new(30_000, 1.07, seed);
+    let mut rng = SplitRng::new(seed, 0x11735);
+    let mut out = Vec::with_capacity(n_lines);
+    for _ in 0..n_lines {
+        let mut line = String::with_capacity(words_per_line * 6);
+        for i in 0..words_per_line {
+            if i > 0 {
+                line.push(' ');
+            }
+            line.push_str(vocab.sample(&mut rng));
+        }
+        out.push(line);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vocabulary_is_unique_and_sized() {
+        let v = Vocabulary::new(5000, 1.07, 1);
+        assert_eq!(v.len(), 5000);
+        let set: std::collections::HashSet<&String> = v.words.iter().collect();
+        assert_eq!(set.len(), 5000, "duplicate words");
+    }
+
+    #[test]
+    fn zipf_head_dominates() {
+        let v = Vocabulary::new(10_000, 1.07, 2);
+        let mut rng = SplitRng::new(3, 0);
+        let mut counts = std::collections::HashMap::new();
+        let n = 200_000;
+        for _ in 0..n {
+            *counts.entry(v.sample(&mut rng).to_string()).or_insert(0u64) += 1;
+        }
+        // "the" (rank 1) should be ~7% of tokens under Zipf(1.07)/H(10k).
+        let the = counts.get("the").copied().unwrap_or(0) as f64 / n as f64;
+        assert!(the > 0.04 && the < 0.18, "P(the)={the}");
+        // Top-100 words should carry the majority of the mass.
+        let mut freqs: Vec<u64> = counts.values().copied().collect();
+        freqs.sort_unstable_by(|a, b| b.cmp(a));
+        let top100: u64 = freqs.iter().take(100).sum();
+        assert!(top100 as f64 / n as f64 > 0.5, "top100 mass {top100}");
+    }
+
+    #[test]
+    fn corpus_deterministic() {
+        let a = corpus_lines(50, 10, 7);
+        let b = corpus_lines(50, 10, 7);
+        assert_eq!(a, b);
+        let c = corpus_lines(50, 10, 8);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn corpus_shape() {
+        let lines = corpus_lines(100, 12, 1);
+        assert_eq!(lines.len(), 100);
+        for line in &lines {
+            assert_eq!(line.split(' ').count(), 12);
+        }
+    }
+}

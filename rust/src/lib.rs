@@ -1,0 +1,82 @@
+//! # Blaze — simplified high performance cluster computing
+//!
+//! Rust reproduction of *"Blaze: Simplified High Performance Cluster
+//! Computing"* (Junhao Li, Hang Zhang, 2019): an in-memory MapReduce library
+//! for compute-intensive workloads whose data fits distributedly in memory.
+//!
+//! The library is organised in layers (bottom-up):
+//!
+//! * [`ser`] — the paper's §2.3.2 *fast serialization*: a protobuf-like
+//!   varint codec **without** field tags / wire types, plus the tagged
+//!   baseline codec used by the conventional engine.
+//! * [`util`] — deterministic splittable RNG, bounded top-k selection,
+//!   pool-allocator toggle (the "Blaze TCM" analogue), cognitive-load
+//!   accounting.
+//! * [`net`] — the simulated cluster interconnect: per-link bandwidth and
+//!   latency, real byte accounting, virtual-time makespan model.
+//! * [`containers`] — §2.1 distributed containers: [`containers::DistRange`],
+//!   [`containers::DistVector`], [`containers::DistHashMap`] and the
+//!   `distribute` / `collect` / `load_file` utilities.
+//! * [`mapreduce`] — §2.2/§2.3 the core contribution: the eager-reduction
+//!   MapReduce engine, the small-fixed-key-range fast path, built-in
+//!   reducers, and the conventional (Spark-analog) baseline engine.
+//! * [`coordinator`] — cluster topology/config, block scheduler, shuffle
+//!   orchestration with backpressure, shard rebalancing, metrics.
+//! * [`runtime`] — PJRT runtime: loads AOT-compiled JAX/Pallas artifacts
+//!   (`artifacts/*.hlo.txt`) and executes them from the map hot path.
+//! * [`apps`] — the paper's five data-mining workloads plus Monte-Carlo π,
+//!   each written against the Blaze API and against the baseline engine.
+//! * [`data`] — deterministic workload generators (Zipf corpus, graph500
+//!   Kronecker graphs, Gaussian point clusters).
+//!
+//! ## Quickstart (word frequency count, paper appendix A.1)
+//!
+//! ```
+//! use blaze::prelude::*;
+//!
+//! let cluster = Cluster::local(2, 2); // 2 virtual nodes x 2 workers
+//! let lines = DistVector::from_vec(
+//!     &cluster,
+//!     vec!["the quick brown fox".to_string(), "the lazy dog".to_string()],
+//! );
+//! let mut words: DistHashMap<String, u64> = DistHashMap::new(&cluster);
+//! blaze::mapreduce::mapreduce(
+//!     &lines,
+//!     |_, line: &String, emit| {
+//!         for w in line.split_whitespace() {
+//!             emit(w.to_string(), 1u64);
+//!         }
+//!     },
+//!     "sum", // built-in reducers by name, like the paper
+//!     &mut words,
+//! );
+//! assert_eq!(words.get(&"the".to_string()), Some(2));
+//! ```
+
+pub mod apps;
+pub mod bench;
+pub mod cli;
+pub mod containers;
+pub mod coordinator;
+pub mod data;
+pub mod mapreduce;
+pub mod net;
+pub mod runtime;
+pub mod ser;
+pub mod util;
+
+/// Convenience re-exports covering the whole public Blaze API surface.
+///
+/// The paper's "cognitive load" claim (Fig. 10) is that Blaze needs only the
+/// `mapreduce` function plus a handful of utilities; this prelude is that
+/// surface.
+pub mod prelude {
+    pub use crate::containers::{
+        collect_hashmap, collect_vector, distribute, load_file, DistHashMap, DistRange,
+        DistVector,
+    };
+    pub use crate::coordinator::cluster::{Cluster, ClusterConfig};
+    pub use crate::mapreduce::{mapreduce, mapreduce_range, Reducer};
+    pub use crate::net::model::NetworkModel;
+    pub use crate::ser::fastser::FastSer;
+}

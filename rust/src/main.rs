@@ -1,0 +1,13 @@
+//! Blaze CLI — launcher for the paper's workloads on the virtual cluster.
+//!
+//! Hand-rolled argument parsing (the build is offline; no clap). See
+//! `blaze --help` for usage. Each subcommand runs one of the paper's five
+//! data-mining tasks (or Monte-Carlo π) on a configurable cluster shape and
+//! prints the paper's metric for that task.
+
+use blaze::cli;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    std::process::exit(cli::run(&args));
+}

@@ -1,0 +1,184 @@
+//! Conventional MapReduce — the Spark-analog baseline.
+//!
+//! What the paper's Figure 3 (left) shows: the map phase **materializes
+//! every emitted pair** (no map-side combining), the shuffle serializes the
+//! raw pair stream with the tagged protobuf-style codec, a barrier separates
+//! transfer from reduce, and the destination groups-then-reduces. On top of
+//! the mechanical costs, a calibrated per-record executor overhead and
+//! per-job scheduling latency model the JVM/Spark task machinery the paper's
+//! baseline carries (constants in [`ClusterConfig`], rationale in DESIGN.md
+//! §Substitutions).
+//!
+//! This engine exists so every workload can run identically under both
+//! engines; the Blaze-vs-conventional gap in the Fig 4–9 benches isolates
+//! exactly the paper's three optimizations.
+
+use std::hash::Hash;
+use std::time::Instant;
+
+use crate::coordinator::metrics::RunStats;
+use crate::coordinator::shuffle::{self, ShufflePayloads};
+use crate::net::vtime::VirtualTime;
+use crate::ser::fastser::FastSer;
+use crate::ser::tagged::{decode_pairs_tagged, encode_pairs_tagged, TaggedSer};
+use crate::util::hash::FxHashMap;
+
+use super::reducers::Reducer;
+use super::{DistInput, Emit, ReduceTarget, RunRecorder};
+
+/// Modeled heap bytes per materialized record on top of its encoded
+/// payload: boxed key + boxed value + tuple + pointer (JVM-analog).
+pub const RECORD_OVERHEAD: u64 = 64;
+
+/// Run one MapReduce with the conventional engine.
+///
+/// Requires `TaggedSer` in addition to the engine-common bounds — the
+/// baseline shuffles protobuf-style messages.
+pub fn run<I, F, K2, V2, T>(label: &str, input: &I, mapper: &F, red: &Reducer<V2>, target: &mut T)
+where
+    I: DistInput,
+    F: Fn(&I::K, &I::V, Emit<'_, K2, V2>),
+    K2: Hash + Eq + Clone + FastSer + TaggedSer,
+    V2: Clone + FastSer + TaggedSer,
+    T: ReduceTarget<K2, V2>,
+{
+    let rec = RunRecorder::new(label);
+    let cluster = input.cluster().clone();
+    let cfg = cluster.config().clone();
+    let (nodes, workers) = (cfg.nodes, cfg.workers_per_node);
+
+    let mut vt = VirtualTime::new();
+    // Spark-analog job launch latency (driver → executors scheduling).
+    vt.fixed_phase("job-launch", cfg.conventional_job_latency_sec);
+
+    // ---- Map: materialize every pair, partitioned by destination --------
+    let mut per_node_map_secs = vec![0.0f64; nodes];
+    let mut node_partitions: Vec<Vec<Vec<(K2, V2)>>> = Vec::with_capacity(nodes);
+    let mut pairs_emitted = 0u64;
+    let mut materialized_bytes = 0u64;
+
+    for node in 0..nodes {
+        let t0 = Instant::now();
+        let mut partitions: Vec<Vec<(K2, V2)>> = (0..nodes).map(|_| Vec::new()).collect();
+        let mut emitted = 0u64;
+        let mut bytes = 0u64;
+        let mut last_worker = usize::MAX;
+        input.for_each_worker_item(node, workers, |w, k, v| {
+            if w != last_worker {
+                last_worker = w;
+                crate::util::random::set_stream(cfg.seed, (node * workers + w) as u64);
+            }
+            let mut emit = |k2: K2, v2: V2| {
+                emitted += 1;
+                bytes += RECORD_OVERHEAD + k2.encoded_len() as u64 + v2.encoded_len() as u64;
+                let dst = target.shard_of(&k2, nodes);
+                partitions[dst].push((k2, v2));
+            };
+            mapper(k, v, &mut emit);
+        });
+        let measured = t0.elapsed().as_secs_f64();
+        // Calibrated per-record executor overhead (JVM analog).
+        per_node_map_secs[node] = measured + emitted as f64 * cfg.conventional_overhead_sec;
+        pairs_emitted += emitted;
+        materialized_bytes += bytes;
+        node_partitions.push(partitions);
+    }
+    vt.compute_phase("map-materialize", &per_node_map_secs, workers);
+
+    // ---- Serialize everything with the tagged codec ---------------------
+    let mut payloads: ShufflePayloads =
+        (0..nodes).map(|_| (0..nodes).map(|_| Vec::new()).collect()).collect();
+    let mut per_node_ser_secs = vec![0.0f64; nodes];
+    let mut serialized_bytes = 0u64;
+    for (node, partitions) in node_partitions.into_iter().enumerate() {
+        let t0 = Instant::now();
+        for (dst, part) in partitions.into_iter().enumerate() {
+            if part.is_empty() {
+                continue;
+            }
+            // Even node-local partitions serialize: conventional shuffle
+            // writes every block (Spark spills local blocks too).
+            let buf = encode_pairs_tagged(&part);
+            serialized_bytes += buf.len() as u64;
+            payloads[node][dst] = buf;
+        }
+        per_node_ser_secs[node] = t0.elapsed().as_secs_f64();
+    }
+    let ser_cpu = per_node_ser_secs
+        .iter()
+        .map(|s| VirtualTime::scaled_compute(*s, workers))
+        .fold(0.0f64, f64::max);
+    vt.fixed_phase("serialize", ser_cpu);
+
+    // ---- Barrier shuffle (no overlap, no backpressure window) -----------
+    // Local payloads are delivered without crossing the network, but unlike
+    // the eager engine they still pay serialization above.
+    let sres = shuffle::execute(payloads, u64::MAX);
+
+    // ---- Group then reduce at destinations ------------------------------
+    let mut per_node_reduce_secs = vec![0.0f64; nodes];
+    let mut grouped_peak = 0u64;
+    for (dst, received) in sres.delivered.into_iter().enumerate() {
+        if received.is_empty() {
+            continue;
+        }
+        let t0 = Instant::now();
+        let mut by_src: FxHashMap<usize, Vec<u8>> = FxHashMap::default();
+        for (src, chunk) in received {
+            by_src.entry(src).or_default().extend_from_slice(&chunk);
+        }
+        let mut grouped: FxHashMap<K2, V2> = FxHashMap::default();
+        let mut grouped_bytes = 0u64;
+        for (_, buf) in by_src {
+            let pairs =
+                decode_pairs_tagged::<K2, V2>(&buf).expect("conventional payload must decode");
+            for (k, v) in pairs {
+                match grouped.entry(k) {
+                    std::collections::hash_map::Entry::Occupied(mut e) => {
+                        red.apply(e.get_mut(), &v);
+                    }
+                    std::collections::hash_map::Entry::Vacant(e) => {
+                        grouped_bytes += RECORD_OVERHEAD
+                            + e.key().encoded_len() as u64
+                            + v.encoded_len() as u64;
+                        e.insert(v);
+                    }
+                }
+            }
+        }
+        grouped_peak += grouped_bytes;
+        target.absorb(dst, grouped.into_iter().collect(), red);
+        per_node_reduce_secs[dst] = t0.elapsed().as_secs_f64();
+    }
+    let reduce_cpu = per_node_reduce_secs
+        .iter()
+        .map(|s| VirtualTime::scaled_compute(*s, workers))
+        .fold(0.0f64, f64::max);
+    let shuffle_bytes = sres.flows.cross_node_bytes();
+    vt.shuffle_barrier("shuffle-barrier+reduce", &sres.flows, &cfg.network, reduce_cpu);
+
+    // ---- Record ----------------------------------------------------------
+    let compute_sec: f64 = vt
+        .phases()
+        .iter()
+        .filter(|p| matches!(p.kind, crate::net::vtime::PhaseKind::Compute))
+        .map(|p| p.seconds)
+        .sum();
+    let makespan = vt.makespan();
+    cluster.metrics().record_run(RunStats {
+        label: rec.label,
+        engine: "conventional".into(),
+        nodes,
+        workers_per_node: workers,
+        makespan_sec: makespan,
+        compute_sec,
+        shuffle_sec: makespan - compute_sec,
+        shuffle_bytes,
+        pairs_emitted,
+        pairs_shuffled: pairs_emitted, // no map-side combine
+        // Everything is resident at once at the barrier: raw materialized
+        // pairs + all serialized blocks + destination grouped map.
+        peak_intermediate_bytes: materialized_bytes + serialized_bytes + grouped_peak,
+        host_wall_sec: rec.started.elapsed().as_secs_f64(),
+    });
+}

@@ -1,0 +1,226 @@
+//! The eager-reduction engine (paper §2.3.1) — Blaze's general path.
+//!
+//! Per node: each worker reduces emitted pairs into a *bounded* thread-local
+//! cache the moment they are emitted; a full cache flushes into the
+//! machine-local map (popular keys effectively never leave their worker
+//! cache). The shuffle then moves only the locally-reduced data, serialized
+//! with the tag-less fast codec, and destination-side reduce runs
+//! overlapped with the transfer (async reduce). Compare
+//! [`super::conventional`], which materializes every raw pair.
+
+use std::collections::hash_map::Entry;
+use std::hash::Hash;
+use std::time::Instant;
+
+use crate::coordinator::backpressure::DEFAULT_WINDOW_BYTES;
+use crate::coordinator::metrics::RunStats;
+use crate::coordinator::shuffle::{self, ShufflePayloads};
+use crate::net::vtime::VirtualTime;
+use crate::ser::fastser::{decode_pairs, encode_pairs_into, FastSer};
+use crate::util::alloc::Scratch;
+use crate::util::hash::FxHashMap;
+
+use super::reducers::Reducer;
+use super::{DistInput, Emit, ReduceTarget, RunRecorder};
+
+/// Modeled heap overhead per hash-map entry (bucket slot, control bytes,
+/// alignment) added on top of encoded payload bytes in the memory
+/// accounting.
+pub const HASH_ENTRY_OVERHEAD: u64 = 32;
+
+/// Run one MapReduce with the eager engine.
+pub fn run<I, F, K2, V2, T>(label: &str, input: &I, mapper: &F, red: &Reducer<V2>, target: &mut T)
+where
+    I: DistInput,
+    F: Fn(&I::K, &I::V, Emit<'_, K2, V2>),
+    K2: Hash + Eq + Clone + FastSer,
+    V2: Clone + FastSer,
+    T: ReduceTarget<K2, V2>,
+{
+    let rec = RunRecorder::new(label);
+    let cluster = input.cluster().clone();
+    let cfg = cluster.config().clone();
+    let (nodes, workers) = (cfg.nodes, cfg.workers_per_node);
+    let cache_cap = cfg.thread_cache_entries.max(1);
+    // Shuffle scratch buffers honour the allocator toggle ("Blaze TCM").
+    let scratch = Scratch::new(cfg.alloc, cluster.pool());
+
+    let mut vt = VirtualTime::new();
+    let mut per_node_map_secs = vec![0.0f64; nodes];
+    let mut node_maps: Vec<FxHashMap<K2, V2>> = Vec::with_capacity(nodes);
+    let mut pairs_emitted = 0u64;
+    let mut map_peak_bytes = 0u64;
+
+    // ---- Map + eager local reduce (measured per node) ------------------
+    for node in 0..nodes {
+        let t0 = Instant::now();
+        // NOTE(perf): pre-sizing these caches to `cache_cap` was measured
+        // 2.1x *slower* on the Fig-4 corpus (16 x 64Ki-slot map zeroing per
+        // run dwarfs the rehash churn) — see EXPERIMENTS.md §Perf; grow
+        // organically instead.
+        let mut caches: Vec<FxHashMap<K2, V2>> =
+            (0..workers).map(|_| FxHashMap::default()).collect();
+        let mut local: FxHashMap<K2, V2> = FxHashMap::default();
+        // Byte accounting: encoded payload + per-entry overhead, tracked
+        // incrementally so the flush high-water mark is visible.
+        let mut worker_bytes = vec![0u64; workers];
+        let mut total_cache_bytes = 0u64;
+        let mut local_bytes = 0u64;
+        let mut node_peak = 0u64;
+        let mut emitted = 0u64;
+        let mut last_worker = usize::MAX;
+
+        input.for_each_worker_item(node, workers, |w, k, v| {
+            if w != last_worker {
+                last_worker = w;
+                crate::util::random::set_stream(cfg.seed, (node * workers + w) as u64);
+            }
+            let cache = &mut caches[w];
+            let wb = &mut worker_bytes[w];
+            let mut emit = |k2: K2, v2: V2| {
+                emitted += 1;
+                match cache.entry(k2) {
+                    Entry::Occupied(mut e) => red.apply(e.get_mut(), &v2),
+                    Entry::Vacant(e) => {
+                        let sz = HASH_ENTRY_OVERHEAD
+                            + e.key().encoded_len() as u64
+                            + v2.encoded_len() as u64;
+                        *wb += sz;
+                        total_cache_bytes += sz;
+                        e.insert(v2);
+                    }
+                }
+                if cache.len() >= cache_cap {
+                    // Overflow: flush the worker cache into the machine-local
+                    // map (popular keys re-enter the cache immediately after).
+                    node_peak = node_peak.max(total_cache_bytes + local_bytes);
+                    for (fk, fv) in cache.drain() {
+                        match local.entry(fk) {
+                            Entry::Occupied(mut e) => red.apply(e.get_mut(), &fv),
+                            Entry::Vacant(e) => {
+                                local_bytes += HASH_ENTRY_OVERHEAD
+                                    + e.key().encoded_len() as u64
+                                    + fv.encoded_len() as u64;
+                                e.insert(fv);
+                            }
+                        }
+                    }
+                    total_cache_bytes -= *wb;
+                    *wb = 0;
+                }
+            };
+            mapper(k, v, &mut emit);
+        });
+
+        // Merge worker caches into the machine-local map.
+        node_peak = node_peak.max(total_cache_bytes + local_bytes);
+        for cache in caches {
+            for (k, v) in cache {
+                match local.entry(k) {
+                    Entry::Occupied(mut e) => red.apply(e.get_mut(), &v),
+                    Entry::Vacant(e) => {
+                        local_bytes += HASH_ENTRY_OVERHEAD
+                            + e.key().encoded_len() as u64
+                            + v.encoded_len() as u64;
+                        e.insert(v);
+                    }
+                }
+            }
+        }
+        node_peak = node_peak.max(local_bytes);
+
+        per_node_map_secs[node] = t0.elapsed().as_secs_f64();
+        pairs_emitted += emitted;
+        map_peak_bytes += node_peak;
+        node_maps.push(local);
+    }
+    vt.compute_phase("map+local-reduce", &per_node_map_secs, workers);
+
+    // ---- Partition, serialize (fast codec), local absorb ---------------
+    let mut payloads: ShufflePayloads =
+        (0..nodes).map(|_| (0..nodes).map(|_| Vec::new()).collect()).collect();
+    let mut per_node_ser_secs = vec![0.0f64; nodes];
+    let mut pairs_shuffled = 0u64;
+
+    for (node, local) in node_maps.into_iter().enumerate() {
+        let t0 = Instant::now();
+        let mut partitions: Vec<Vec<(K2, V2)>> = (0..nodes).map(|_| Vec::new()).collect();
+        for (k, v) in local {
+            let dst = target.shard_of(&k, nodes);
+            partitions[dst].push((k, v));
+        }
+        for (dst, part) in partitions.into_iter().enumerate() {
+            if part.is_empty() {
+                continue;
+            }
+            pairs_shuffled += part.len() as u64;
+            if dst == node {
+                // Machine-local results never serialize: reduce straight in.
+                target.absorb(dst, part, red);
+            } else {
+                payloads[node][dst] = encode_pairs_into(&part, scratch.get(part.len() * 4));
+            }
+        }
+        per_node_ser_secs[node] = t0.elapsed().as_secs_f64();
+    }
+
+    // ---- Shuffle with asynchronous reduce (overlapped) ------------------
+    let sres = shuffle::execute(payloads, DEFAULT_WINDOW_BYTES);
+    let mut per_node_reduce_secs = vec![0.0f64; nodes];
+    let mut absorb_buffer_peak = 0u64;
+    for (dst, received) in sres.delivered.into_iter().enumerate() {
+        if received.is_empty() {
+            continue;
+        }
+        let t0 = Instant::now();
+        // Chunks from one source arrive in order; concatenate per source,
+        // then decode each source's batch.
+        let mut by_src: FxHashMap<usize, Vec<u8>> = FxHashMap::default();
+        for (src, chunk) in received {
+            by_src.entry(src).or_default().extend_from_slice(&chunk);
+        }
+        for (_, buf) in by_src {
+            absorb_buffer_peak = absorb_buffer_peak.max(buf.len() as u64);
+            let pairs =
+                decode_pairs::<K2, V2>(&buf).expect("eager shuffle payload must decode");
+            scratch.put(buf); // recycle under the pool allocator
+            target.absorb(dst, pairs, red);
+        }
+        per_node_reduce_secs[dst] = t0.elapsed().as_secs_f64();
+    }
+
+    // CPU work overlapped with the transfer: sender-side serialization and
+    // receiver-side async reduce, both parallel across workers.
+    let cpu_overlap = per_node_ser_secs
+        .iter()
+        .zip(&per_node_reduce_secs)
+        .map(|(s, r)| VirtualTime::scaled_compute(s + r, workers))
+        .fold(0.0f64, f64::max);
+    let shuffle_bytes = sres.flows.cross_node_bytes();
+    vt.shuffle_overlapped("shuffle+async-reduce", &sres.flows, &cfg.network, cpu_overlap);
+
+    // ---- Record ----------------------------------------------------------
+    let compute_sec: f64 = vt
+        .phases()
+        .iter()
+        .filter(|p| matches!(p.kind, crate::net::vtime::PhaseKind::Compute))
+        .map(|p| p.seconds)
+        .sum();
+    let makespan = vt.makespan();
+    cluster.metrics().record_run(RunStats {
+        label: rec.label,
+        engine: "blaze".into(),
+        nodes,
+        workers_per_node: workers,
+        makespan_sec: makespan,
+        compute_sec,
+        shuffle_sec: makespan - compute_sec,
+        shuffle_bytes,
+        pairs_emitted,
+        pairs_shuffled,
+        peak_intermediate_bytes: map_peak_bytes
+            + sres.peak_in_flight_bytes
+            + absorb_buffer_peak,
+        host_wall_sec: rec.started.elapsed().as_secs_f64(),
+    });
+}

@@ -1,0 +1,256 @@
+//! The Blaze MapReduce function (paper §2.2–2.3).
+//!
+//! ```text
+//! blaze::mapreduce(input, mapper, reducer, target)
+//! ```
+//!
+//! * **input** — a distributed container ([`crate::containers`]).
+//! * **mapper** — `|key, value, emit| { ... emit(k2, v2); ... }`.
+//! * **reducer** — built-in by name (`"sum"`, `"prod"`, `"min"`, `"max"`),
+//!   a [`Reducer`] handle, or a custom closure.
+//! * **target** — a distributed container or a `Vec<V>`; *not cleared*:
+//!   new results are reduced into whatever the target already holds.
+//!
+//! Three execution paths implement the paper's three optimizations:
+//!
+//! * [`eager`] — the general engine: eager reduction into bounded
+//!   thread-local caches, machine-local combine, fast (tag-less)
+//!   serialization, shuffle with the reduce running asynchronously.
+//! * [`smallkey`] — when the target is a `Vec<V>` (small *fixed* key
+//!   range), per-worker dense caches and a binomial tree reduce, matching
+//!   hand-optimized `MPI_Reduce`-style loops.
+//! * [`conventional`] — the Spark-analog baseline: materialize every pair,
+//!   tagged serialization, barrier shuffle, group-then-reduce. Selected via
+//!   [`EngineKind::Conventional`] so every workload can run both ways.
+
+pub mod conventional;
+pub mod eager;
+pub mod reducers;
+pub mod smallkey;
+
+pub use reducers::{Numeric, Reducer};
+
+use crate::containers::DistRange;
+use crate::coordinator::cluster::{Cluster, EngineKind};
+use crate::ser::fastser::FastSer;
+use crate::ser::tagged::TaggedSer;
+use std::hash::Hash;
+
+/// Emit handler handed to mappers.
+pub type Emit<'a, K, V> = &'a mut dyn FnMut(K, V);
+
+/// Distributed MapReduce input: anything that can iterate its per-node
+/// partition with items tagged by worker.
+pub trait DistInput {
+    /// Input key type (element index for vectors, key for hash maps).
+    type K;
+    /// Input value type.
+    type V;
+
+    /// Owning cluster.
+    fn cluster(&self) -> &Cluster;
+
+    /// Item count on `node`.
+    fn node_len(&self, node: usize) -> usize;
+
+    /// Visit every item on `node`, tagged with the worker (0..workers) that
+    /// would process it under block partitioning.
+    fn for_each_worker_item<F: FnMut(usize, &Self::K, &Self::V)>(
+        &self,
+        node: usize,
+        workers: usize,
+        f: F,
+    );
+}
+
+/// Keys that may map onto a dense `[0, n)` index space, enabling the
+/// small-key-range path when the target is a `Vec<V>`.
+pub trait DenseKey {
+    /// Dense index of this key, if it has one.
+    fn dense_index(&self) -> Option<usize>;
+}
+
+macro_rules! impl_dense_int {
+    ($($t:ty),*) => {$(
+        impl DenseKey for $t {
+            #[inline]
+            fn dense_index(&self) -> Option<usize> {
+                usize::try_from(*self).ok()
+            }
+        }
+    )*};
+}
+
+impl_dense_int!(u8, u16, u32, u64, usize);
+
+macro_rules! impl_dense_none {
+    ($($t:ty),*) => {$(
+        impl DenseKey for $t {
+            #[inline]
+            fn dense_index(&self) -> Option<usize> { None }
+        }
+    )*};
+}
+
+impl_dense_none!(i8, i16, i32, i64, isize, String, f32, f64);
+
+impl<A, B> DenseKey for (A, B) {
+    #[inline]
+    fn dense_index(&self) -> Option<usize> {
+        None
+    }
+}
+
+/// Where reduced results land. Targets are *merged into*, never cleared.
+pub trait ReduceTarget<K, V> {
+    /// `Some(n)` when keys are dense indices in `[0, n)` gathered at the
+    /// driver — triggers the small-key-range path on the eager engine.
+    fn dense_len(&self) -> Option<usize> {
+        None
+    }
+
+    /// Destination node for `key` on an `nodes`-node cluster.
+    fn shard_of(&self, key: &K, nodes: usize) -> usize;
+
+    /// Reduce `pairs` (already routed to `node`) into the target.
+    fn absorb(&mut self, node: usize, pairs: Vec<(K, V)>, red: &Reducer<V>);
+
+    /// Reduce a dense per-index value array into the target (small-key path).
+    fn absorb_dense(&mut self, values: Vec<Option<V>>, red: &Reducer<V>) {
+        let _ = (values, red);
+        unimplemented!("dense absorb not supported by this target")
+    }
+}
+
+/// `Vec<V>` target: the paper's π example reduces a `DistRange` into a
+/// plain `std::vector`. Keys are dense indices; results gather to the
+/// driver via a tree reduce.
+impl<V: Clone> ReduceTarget<usize, V> for Vec<V> {
+    fn dense_len(&self) -> Option<usize> {
+        Some(self.len())
+    }
+
+    fn shard_of(&self, _key: &usize, _nodes: usize) -> usize {
+        0 // driver gathers
+    }
+
+    fn absorb(&mut self, _node: usize, pairs: Vec<(usize, V)>, red: &Reducer<V>) {
+        for (k, v) in pairs {
+            assert!(k < self.len(), "key {k} outside fixed key range {}", self.len());
+            red.apply(&mut self[k], &v);
+        }
+    }
+
+    fn absorb_dense(&mut self, values: Vec<Option<V>>, red: &Reducer<V>) {
+        assert!(values.len() <= self.len(), "dense range exceeds target length");
+        for (slot, v) in self.iter_mut().zip(values) {
+            if let Some(v) = v {
+                red.apply(slot, &v);
+            }
+        }
+    }
+}
+
+/// Anything convertible into a [`Reducer`]: a handle, or a built-in's name
+/// (the paper's `"sum"` string interface).
+pub trait IntoReducer<V> {
+    /// Convert into a reducer handle.
+    fn into_reducer(self) -> Reducer<V>;
+}
+
+impl<V> IntoReducer<V> for Reducer<V> {
+    fn into_reducer(self) -> Reducer<V> {
+        self
+    }
+}
+
+impl<V: Numeric> IntoReducer<V> for &str {
+    fn into_reducer(self) -> Reducer<V> {
+        Reducer::by_name(self)
+    }
+}
+
+/// MapReduce over a keyed container (`DistVector`, `DistHashMap`):
+/// the mapper receives `(key, value, emit)` (paper §2.2).
+pub fn mapreduce<I, F, K2, V2, R, T>(input: &I, mapper: F, reducer: R, target: &mut T)
+where
+    I: DistInput,
+    F: Fn(&I::K, &I::V, Emit<'_, K2, V2>),
+    K2: Hash + Eq + Clone + FastSer + TaggedSer + DenseKey,
+    V2: Clone + FastSer + TaggedSer,
+    R: IntoReducer<V2>,
+    T: ReduceTarget<K2, V2>,
+{
+    mapreduce_labeled("mapreduce", input, mapper, reducer, target);
+}
+
+/// [`mapreduce`] with an explicit metrics label (used by apps and benches).
+pub fn mapreduce_labeled<I, F, K2, V2, R, T>(
+    label: &str,
+    input: &I,
+    mapper: F,
+    reducer: R,
+    target: &mut T,
+) where
+    I: DistInput,
+    F: Fn(&I::K, &I::V, Emit<'_, K2, V2>),
+    K2: Hash + Eq + Clone + FastSer + TaggedSer + DenseKey,
+    V2: Clone + FastSer + TaggedSer,
+    R: IntoReducer<V2>,
+    T: ReduceTarget<K2, V2>,
+{
+    let red = reducer.into_reducer();
+    let engine = input.cluster().config().engine;
+    match engine {
+        EngineKind::Eager => {
+            if target.dense_len().is_some() {
+                smallkey::run(label, input, &mapper, &red, target);
+            } else {
+                eager::run(label, input, &mapper, &red, target);
+            }
+        }
+        EngineKind::Conventional => conventional::run(label, input, &mapper, &red, target),
+    }
+}
+
+/// MapReduce over a [`DistRange`]: the mapper receives `(value, emit)`
+/// (paper §2.2 — two-parameter mapper for ranges).
+pub fn mapreduce_range<F, K2, V2, R, T>(input: &DistRange, mapper: F, reducer: R, target: &mut T)
+where
+    F: Fn(u64, Emit<'_, K2, V2>),
+    K2: Hash + Eq + Clone + FastSer + TaggedSer + DenseKey,
+    V2: Clone + FastSer + TaggedSer,
+    R: IntoReducer<V2>,
+    T: ReduceTarget<K2, V2>,
+{
+    mapreduce_range_labeled("mapreduce_range", input, mapper, reducer, target);
+}
+
+/// [`mapreduce_range`] with an explicit metrics label.
+pub fn mapreduce_range_labeled<F, K2, V2, R, T>(
+    label: &str,
+    input: &DistRange,
+    mapper: F,
+    reducer: R,
+    target: &mut T,
+) where
+    F: Fn(u64, Emit<'_, K2, V2>),
+    K2: Hash + Eq + Clone + FastSer + TaggedSer + DenseKey,
+    V2: Clone + FastSer + TaggedSer,
+    R: IntoReducer<V2>,
+    T: ReduceTarget<K2, V2>,
+{
+    mapreduce_labeled(label, input, |_, v: &u64, emit| mapper(*v, emit), reducer, target);
+}
+
+/// Internal: shared per-run bookkeeping for the engines.
+pub(crate) struct RunRecorder {
+    pub label: String,
+    pub started: std::time::Instant,
+}
+
+impl RunRecorder {
+    pub(crate) fn new(label: &str) -> Self {
+        Self { label: label.to_string(), started: std::time::Instant::now() }
+    }
+}

@@ -1,0 +1,199 @@
+//! Reducers (paper §2.2): built-in `sum`/`prod`/`min`/`max` plus custom
+//! reduce functions.
+//!
+//! A reducer folds a new value into an existing one in place:
+//! `fn(&mut existing, &new)` — exactly the paper's custom-reducer signature
+//! ("the first one is a reference to the existing value which needs to be
+//! updated, and the second one is a constant reference to the new value").
+
+/// Values the built-in reducers understand.
+pub trait Numeric: Clone {
+    /// `self += other`.
+    fn add_assign(&mut self, other: &Self);
+    /// `self *= other`.
+    fn mul_assign(&mut self, other: &Self);
+    /// `self = min(self, other)`.
+    fn min_assign(&mut self, other: &Self);
+    /// `self = max(self, other)`.
+    fn max_assign(&mut self, other: &Self);
+}
+
+macro_rules! impl_numeric {
+    ($($t:ty),*) => {$(
+        impl Numeric for $t {
+            #[inline]
+            fn add_assign(&mut self, other: &Self) { *self += *other; }
+            #[inline]
+            fn mul_assign(&mut self, other: &Self) { *self *= *other; }
+            #[inline]
+            fn min_assign(&mut self, other: &Self) {
+                if *other < *self { *self = *other; }
+            }
+            #[inline]
+            fn max_assign(&mut self, other: &Self) {
+                if *other > *self { *self = *other; }
+            }
+        }
+    )*};
+}
+
+impl_numeric!(u8, u16, u32, u64, usize, i8, i16, i32, i64, isize, f32, f64);
+
+/// Element-wise numeric vectors (GMM sufficient statistics are `Vec<f64>`).
+impl<T: Numeric + Default> Numeric for Vec<T> {
+    fn add_assign(&mut self, other: &Self) {
+        self.resize_with(self.len().max(other.len()), T::default);
+        for (a, b) in self.iter_mut().zip(other) {
+            a.add_assign(b);
+        }
+    }
+    fn mul_assign(&mut self, other: &Self) {
+        self.resize_with(self.len().max(other.len()), T::default);
+        for (a, b) in self.iter_mut().zip(other) {
+            a.mul_assign(b);
+        }
+    }
+    fn min_assign(&mut self, other: &Self) {
+        for (a, b) in self.iter_mut().zip(other) {
+            a.min_assign(b);
+        }
+    }
+    fn max_assign(&mut self, other: &Self) {
+        for (a, b) in self.iter_mut().zip(other) {
+            a.max_assign(b);
+        }
+    }
+}
+
+enum ReduceFn<V> {
+    Plain(fn(&mut V, &V)),
+    Boxed(Box<dyn Fn(&mut V, &V)>),
+}
+
+/// A reduce function handle. Built-ins are function pointers (no allocation,
+/// no indirection beyond one call); custom closures are boxed once.
+pub struct Reducer<V> {
+    f: ReduceFn<V>,
+    name: &'static str,
+}
+
+impl<V: Numeric> Reducer<V> {
+    /// `existing += new` — covers "most use cases" per the paper.
+    pub fn sum() -> Self {
+        Self { f: ReduceFn::Plain(|a, b| a.add_assign(b)), name: "sum" }
+    }
+
+    /// `existing *= new`.
+    pub fn prod() -> Self {
+        Self { f: ReduceFn::Plain(|a, b| a.mul_assign(b)), name: "prod" }
+    }
+
+    /// Keep the smaller.
+    pub fn min() -> Self {
+        Self { f: ReduceFn::Plain(|a, b| a.min_assign(b)), name: "min" }
+    }
+
+    /// Keep the larger.
+    pub fn max() -> Self {
+        Self { f: ReduceFn::Plain(|a, b| a.max_assign(b)), name: "max" }
+    }
+
+    /// Reducer by name, mirroring the paper's string interface
+    /// (`blaze::mapreduce(lines, mapper, "sum", words)`).
+    ///
+    /// # Panics
+    /// On an unknown name — the paper's API contract.
+    pub fn by_name(name: &str) -> Self {
+        match name {
+            "sum" => Self::sum(),
+            "prod" => Self::prod(),
+            "min" => Self::min(),
+            "max" => Self::max(),
+            other => panic!("unknown built-in reducer {other:?} (sum|prod|min|max)"),
+        }
+    }
+}
+
+impl<V> Reducer<V> {
+    /// Custom reduce function `f(&mut existing, &new)`.
+    pub fn custom(f: impl Fn(&mut V, &V) + 'static) -> Self {
+        Self { f: ReduceFn::Boxed(Box::new(f)), name: "custom" }
+    }
+
+    /// Custom reducer from a plain function pointer (no allocation).
+    pub fn custom_fn(f: fn(&mut V, &V)) -> Self {
+        Self { f: ReduceFn::Plain(f), name: "custom" }
+    }
+
+    /// Fold `new` into `existing`.
+    #[inline]
+    pub fn apply(&self, existing: &mut V, new: &V) {
+        match &self.f {
+            ReduceFn::Plain(f) => f(existing, new),
+            ReduceFn::Boxed(f) => f(existing, new),
+        }
+    }
+
+    /// Reducer name for reporting.
+    pub fn name(&self) -> &'static str {
+        self.name
+    }
+}
+
+impl<V> std::fmt::Debug for Reducer<V> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Reducer({})", self.name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtins() {
+        let mut v = 10u64;
+        Reducer::sum().apply(&mut v, &5);
+        assert_eq!(v, 15);
+        Reducer::prod().apply(&mut v, &2);
+        assert_eq!(v, 30);
+        Reducer::min().apply(&mut v, &7);
+        assert_eq!(v, 7);
+        Reducer::max().apply(&mut v, &100);
+        assert_eq!(v, 100);
+    }
+
+    #[test]
+    fn by_name_matches_paper_interface() {
+        let mut v = 1.5f64;
+        Reducer::by_name("sum").apply(&mut v, &2.5);
+        assert_eq!(v, 4.0);
+        assert_eq!(Reducer::<f64>::by_name("max").name(), "max");
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown built-in reducer")]
+    fn unknown_name_panics() {
+        let _ = Reducer::<u64>::by_name("avg");
+    }
+
+    #[test]
+    fn custom_closure() {
+        // Keep the lexicographically-smaller string.
+        let red = Reducer::custom(|a: &mut String, b: &String| {
+            if b < a {
+                a.clone_from(b);
+            }
+        });
+        let mut v = "zebra".to_string();
+        red.apply(&mut v, &"apple".to_string());
+        assert_eq!(v, "apple");
+    }
+
+    #[test]
+    fn vec_elementwise_sum_resizes() {
+        let mut a = vec![1.0f64, 2.0];
+        Reducer::sum().apply(&mut a, &vec![10.0, 20.0, 30.0]);
+        assert_eq!(a, vec![11.0, 22.0, 30.0]);
+    }
+}

@@ -1,0 +1,173 @@
+//! Small fixed key range optimization (paper §2.3.3).
+//!
+//! When the target is a `Vec<V>` the key range is small and known up front.
+//! Each worker gets a dense per-key cache (`Vec<Option<V>>`) created *at the
+//! start* and set as the reduce target during the local map/reduce phase —
+//! no hashing, no entry lookups. Afterwards a parallel **binomial tree
+//! reduce** combines partials: first worker caches within a node, then
+//! across machines (`log2 N` rounds), landing at the driver. The execution
+//! plan is identical to a hand-optimized MPI+OpenMP parallel for-loop with
+//! thread-local intermediates — which is why Table 1 shows parity.
+
+use std::hash::Hash;
+use std::time::Instant;
+
+use crate::coordinator::metrics::RunStats;
+use crate::net::sim::FlowMatrix;
+use crate::net::vtime::VirtualTime;
+use crate::ser::fastser::{decode_pairs, encode_pairs, FastSer};
+
+use super::reducers::Reducer;
+use super::{DenseKey, DistInput, Emit, ReduceTarget, RunRecorder};
+
+/// Run one MapReduce through the dense small-key-range path.
+///
+/// # Panics
+/// If a mapper emits a key without a dense index inside the target's fixed
+/// range — the contract of a `Vec<V>` target (paper §2.2: the target defines
+/// the key range).
+pub fn run<I, F, K2, V2, T>(label: &str, input: &I, mapper: &F, red: &Reducer<V2>, target: &mut T)
+where
+    I: DistInput,
+    F: Fn(&I::K, &I::V, Emit<'_, K2, V2>),
+    K2: Hash + Eq + Clone + FastSer + DenseKey,
+    V2: Clone + FastSer,
+    T: ReduceTarget<K2, V2>,
+{
+    let rec = RunRecorder::new(label);
+    let cluster = input.cluster().clone();
+    let cfg = cluster.config().clone();
+    let (nodes, workers) = (cfg.nodes, cfg.workers_per_node);
+    let range = target.dense_len().expect("smallkey path requires a dense target");
+
+    let mut vt = VirtualTime::new();
+    let mut per_node_secs = vec![0.0f64; nodes];
+    let mut node_partials: Vec<Vec<Option<V2>>> = Vec::with_capacity(nodes);
+    let mut pairs_emitted = 0u64;
+
+    // ---- Map with per-worker dense caches + in-node tree reduce ---------
+    for node in 0..nodes {
+        let t0 = Instant::now();
+        let mut caches: Vec<Vec<Option<V2>>> =
+            (0..workers).map(|_| vec![None; range]).collect();
+        let mut emitted = 0u64;
+        let mut last_worker = usize::MAX;
+
+        input.for_each_worker_item(node, workers, |w, k, v| {
+            if w != last_worker {
+                // Publish the worker's random stream (paper's
+                // `blaze::random` is worker-local).
+                last_worker = w;
+                crate::util::random::set_stream(cfg.seed, (node * workers + w) as u64);
+            }
+            let cache = &mut caches[w];
+            let mut emit = |k2: K2, v2: V2| {
+                emitted += 1;
+                let idx = k2
+                    .dense_index()
+                    .unwrap_or_else(|| panic!("key has no dense index for Vec target"));
+                assert!(idx < range, "key {idx} outside fixed key range {range}");
+                match &mut cache[idx] {
+                    Some(acc) => red.apply(acc, &v2),
+                    slot @ None => *slot = Some(v2),
+                }
+            };
+            mapper(k, v, &mut emit);
+        });
+
+        // Local tree reduce over worker caches (log2 W combining steps on a
+        // real machine; serial here, the combine work is identical).
+        let mut iter = caches.into_iter();
+        let mut acc = iter.next().expect("at least one worker");
+        for cache in iter {
+            merge_dense(&mut acc, cache, red);
+        }
+
+        per_node_secs[node] = t0.elapsed().as_secs_f64();
+        pairs_emitted += emitted;
+        node_partials.push(acc);
+    }
+    vt.compute_phase("map+dense-local-reduce", &per_node_secs, workers);
+
+    // ---- Cross-machine binomial tree reduce -----------------------------
+    // Round r: node i with i % 2^(r+1) == 2^r sends its partial to
+    // i - 2^r. After ceil(log2 nodes) rounds node 0 holds the total.
+    let mut shuffle_bytes = 0u64;
+    let mut round_flow_peak = 0u64;
+    let mut partials: Vec<Option<Vec<Option<V2>>>> =
+        node_partials.into_iter().map(Some).collect();
+    let mut stride = 1usize;
+    while stride < nodes {
+        let mut flows = FlowMatrix::new(nodes);
+        let mut reduce_secs = 0.0f64;
+        let mut sends: Vec<(usize, usize)> = Vec::new();
+        for src in (stride..nodes).step_by(stride * 2) {
+            sends.push((src, src - stride));
+        }
+        for (src, dst) in sends {
+            let Some(partial) = partials[src].take() else { continue };
+            // Serialize only present entries (sparse pair encoding).
+            let pairs: Vec<(u32, V2)> = partial
+                .into_iter()
+                .enumerate()
+                .filter_map(|(i, v)| v.map(|v| (i as u32, v)))
+                .collect();
+            let buf = encode_pairs(&pairs);
+            flows.record(src, dst, buf.len() as u64);
+            shuffle_bytes += buf.len() as u64;
+            round_flow_peak = round_flow_peak.max(buf.len() as u64);
+            let t0 = Instant::now();
+            let decoded = decode_pairs::<u32, V2>(&buf).expect("tree-reduce payload");
+            let acc = partials[dst].as_mut().expect("tree reduce destination");
+            for (idx, v) in decoded {
+                match &mut acc[idx as usize] {
+                    Some(a) => red.apply(a, &v),
+                    slot @ None => *slot = Some(v),
+                }
+            }
+            reduce_secs = reduce_secs.max(t0.elapsed().as_secs_f64());
+        }
+        vt.shuffle_overlapped("tree-reduce-round", &flows, &cfg.network, reduce_secs);
+        stride *= 2;
+    }
+
+    // ---- Land at the driver ---------------------------------------------
+    let final_partial = partials[0].take().expect("driver partial");
+    target.absorb_dense(final_partial, red);
+
+    // ---- Record ----------------------------------------------------------
+    let compute_sec: f64 = vt
+        .phases()
+        .iter()
+        .filter(|p| matches!(p.kind, crate::net::vtime::PhaseKind::Compute))
+        .map(|p| p.seconds)
+        .sum();
+    let makespan = vt.makespan();
+    // Dense caches: range slots per worker per node.
+    let slot_bytes = (std::mem::size_of::<Option<V2>>() as u64).max(1);
+    cluster.metrics().record_run(RunStats {
+        label: rec.label,
+        engine: "blaze".into(),
+        nodes,
+        workers_per_node: workers,
+        makespan_sec: makespan,
+        compute_sec,
+        shuffle_sec: makespan - compute_sec,
+        shuffle_bytes,
+        pairs_emitted,
+        pairs_shuffled: (nodes.saturating_sub(1)) as u64 * range as u64,
+        peak_intermediate_bytes: (nodes * workers * range) as u64 * slot_bytes
+            + round_flow_peak,
+        host_wall_sec: rec.started.elapsed().as_secs_f64(),
+    });
+}
+
+fn merge_dense<V: Clone>(acc: &mut [Option<V>], other: Vec<Option<V>>, red: &Reducer<V>) {
+    for (slot, v) in acc.iter_mut().zip(other) {
+        match (slot.as_mut(), v) {
+            (Some(a), Some(b)) => red.apply(a, &b),
+            (None, Some(b)) => *slot = Some(b),
+            _ => {}
+        }
+    }
+}

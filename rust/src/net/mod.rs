@@ -1,0 +1,17 @@
+//! Simulated cluster interconnect.
+//!
+//! The paper benchmarks on 1–16 AWS `r5.xlarge` nodes (up to 10 Gbps NICs)
+//! over MPICH. This host has one core, so cross-node parallelism is
+//! *accounted* rather than executed: every MapReduce run really performs all
+//! the per-node work and really serializes every shuffle message, but
+//! per-virtual-node compute is *measured* and network transfer is *charged*
+//! against a calibrated [`model::NetworkModel`]. The resulting virtual
+//! makespan drives Figs 4–8. See DESIGN.md §Substitutions.
+
+pub mod model;
+pub mod sim;
+pub mod vtime;
+
+pub use model::NetworkModel;
+pub use sim::{FlowMatrix, NetSim};
+pub use vtime::{PhaseKind, VirtualTime};

@@ -1,0 +1,99 @@
+//! Network performance model: bandwidth, latency, cross-rack cap.
+
+/// Analytical model of the cluster interconnect.
+///
+/// Transfer time for a node = serialized bytes over NIC bandwidth plus a
+/// per-message latency; an optional bisection cap throttles the aggregate
+/// when all nodes shuffle at once (the paper's "cross-rack bandwidth becomes
+/// the bottleneck" regime, §2.3.2).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NetworkModel {
+    /// Per-node NIC bandwidth, bytes/second.
+    pub nic_bytes_per_sec: f64,
+    /// One-way per-message latency, seconds.
+    pub latency_sec: f64,
+    /// Aggregate bisection bandwidth cap, bytes/second (None = full).
+    pub bisection_bytes_per_sec: Option<f64>,
+    /// Fixed per-message software overhead (serialization envelope, MPI
+    /// matching), seconds.
+    pub per_message_overhead_sec: f64,
+}
+
+impl NetworkModel {
+    /// AWS `r5.xlarge`-like: "up to 10 Gbps", ~50 µs RTT/2 in-VPC latency.
+    pub fn aws_10gbps() -> Self {
+        Self {
+            nic_bytes_per_sec: 10.0e9 / 8.0,
+            latency_sec: 50e-6,
+            bisection_bytes_per_sec: None,
+            per_message_overhead_sec: 5e-6,
+        }
+    }
+
+    /// Same NIC but with a cross-rack bisection cap (large-cluster regime).
+    pub fn aws_10gbps_cross_rack(bisection_gbps: f64) -> Self {
+        Self {
+            bisection_bytes_per_sec: Some(bisection_gbps * 1e9 / 8.0),
+            ..Self::aws_10gbps()
+        }
+    }
+
+    /// Loopback: effectively infinite bandwidth, used for 1-node runs.
+    pub fn loopback() -> Self {
+        Self {
+            nic_bytes_per_sec: 50.0e9,
+            latency_sec: 1e-6,
+            bisection_bytes_per_sec: None,
+            per_message_overhead_sec: 1e-7,
+        }
+    }
+
+    /// Time for one node to push `bytes` in `messages` messages.
+    pub fn node_send_time(&self, bytes: u64, messages: u64) -> f64 {
+        bytes as f64 / self.nic_bytes_per_sec
+            + messages as f64 * (self.latency_sec + self.per_message_overhead_sec)
+    }
+
+    /// Extra time if the aggregate cross-node traffic exceeds the bisection
+    /// cap: aggregate bytes over bisection bandwidth.
+    pub fn bisection_time(&self, aggregate_bytes: u64) -> f64 {
+        match self.bisection_bytes_per_sec {
+            Some(b) => aggregate_bytes as f64 / b,
+            None => 0.0,
+        }
+    }
+}
+
+impl Default for NetworkModel {
+    fn default() -> Self {
+        Self::aws_10gbps()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ten_gbps_moves_1_25_gb_per_sec() {
+        let m = NetworkModel::aws_10gbps();
+        let t = m.node_send_time(1_250_000_000, 0);
+        assert!((t - 1.0).abs() < 1e-9, "t={t}");
+    }
+
+    #[test]
+    fn latency_dominates_small_messages() {
+        let m = NetworkModel::aws_10gbps();
+        let many_small = m.node_send_time(1000, 1000);
+        let one_big = m.node_send_time(1000, 1);
+        assert!(many_small > 100.0 * one_big);
+    }
+
+    #[test]
+    fn bisection_cap_binds_only_when_set() {
+        let free = NetworkModel::aws_10gbps();
+        assert_eq!(free.bisection_time(1 << 30), 0.0);
+        let capped = NetworkModel::aws_10gbps_cross_rack(10.0);
+        assert!(capped.bisection_time(1 << 30) > 0.0);
+    }
+}

@@ -1,0 +1,202 @@
+//! Virtual-time accounting for the simulated cluster.
+//!
+//! Per-virtual-node compute is measured for real (wall time of that node's
+//! work, executed alone on the host); network transfer is charged by the
+//! model. A run is a sequence of phases:
+//!
+//! * **Compute** — all nodes work concurrently: phase time = max over nodes
+//!   of (node compute / workers-per-node parallel efficiency).
+//! * **Shuffle** — transfer time from the [`super::FlowMatrix`], optionally
+//!   *overlapped* with the destination-side reduce compute (the eager
+//!   engine's asynchronous reduce, paper §2.3.1): overlapped phase time =
+//!   max(transfer, reduce); the conventional engine takes the sum (barrier).
+//!
+//! The virtual makespan is the sum of phase times.
+
+use super::model::NetworkModel;
+use super::sim::FlowMatrix;
+
+/// What a phase represents (for reporting).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PhaseKind {
+    /// Parallel per-node compute (map, local reduce, generation...).
+    Compute,
+    /// Cross-node transfer, reduce overlapped (eager engine).
+    ShuffleOverlapped,
+    /// Cross-node transfer then reduce, barrier between (conventional).
+    ShuffleBarrier,
+}
+
+/// One accounted phase.
+#[derive(Debug, Clone)]
+pub struct Phase {
+    /// Kind of phase.
+    pub kind: PhaseKind,
+    /// Label for reports ("map", "shuffle", ...).
+    pub label: &'static str,
+    /// Virtual duration, seconds.
+    pub seconds: f64,
+    /// Cross-node bytes if this was a shuffle.
+    pub shuffle_bytes: u64,
+}
+
+/// Virtual-time accumulator for one distributed operation.
+#[derive(Debug, Clone, Default)]
+pub struct VirtualTime {
+    phases: Vec<Phase>,
+}
+
+/// Fraction of linear speedup attained by intra-node threading. The paper's
+/// workloads scale near-linearly over 4-core nodes; 0.95 models scheduling
+/// + memory-bandwidth losses.
+pub const INTRA_NODE_EFFICIENCY: f64 = 0.95;
+
+impl VirtualTime {
+    /// Fresh accumulator.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Account a compute phase from measured per-node single-thread seconds.
+    ///
+    /// `per_node_seconds[i]` is the wall time node `i`'s work took executed
+    /// serially; with `workers` threads per node it would take
+    /// `t / (workers * eff)`. Phase time is the slowest node.
+    pub fn compute_phase(
+        &mut self,
+        label: &'static str,
+        per_node_seconds: &[f64],
+        workers_per_node: usize,
+    ) -> f64 {
+        let eff = if workers_per_node > 1 { INTRA_NODE_EFFICIENCY } else { 1.0 };
+        let t = per_node_seconds
+            .iter()
+            .fold(0.0f64, |acc, &s| acc.max(s / (workers_per_node as f64 * eff)));
+        self.phases.push(Phase { kind: PhaseKind::Compute, label, seconds: t, shuffle_bytes: 0 });
+        t
+    }
+
+    /// Account an eager-engine shuffle: transfer overlapped with the
+    /// destination reduce work (`reduce_seconds`, already per-node-max and
+    /// worker-scaled by the caller via [`Self::scaled_compute`]).
+    pub fn shuffle_overlapped(
+        &mut self,
+        label: &'static str,
+        flows: &FlowMatrix,
+        model: &NetworkModel,
+        reduce_seconds: f64,
+    ) -> f64 {
+        let transfer = flows.phase_time(model);
+        let t = transfer.max(reduce_seconds);
+        self.phases.push(Phase {
+            kind: PhaseKind::ShuffleOverlapped,
+            label,
+            seconds: t,
+            shuffle_bytes: flows.cross_node_bytes(),
+        });
+        t
+    }
+
+    /// Account a conventional shuffle: transfer, barrier, then reduce.
+    pub fn shuffle_barrier(
+        &mut self,
+        label: &'static str,
+        flows: &FlowMatrix,
+        model: &NetworkModel,
+        reduce_seconds: f64,
+    ) -> f64 {
+        let t = flows.phase_time(model) + reduce_seconds;
+        self.phases.push(Phase {
+            kind: PhaseKind::ShuffleBarrier,
+            label,
+            seconds: t,
+            shuffle_bytes: flows.cross_node_bytes(),
+        });
+        t
+    }
+
+    /// Worker-scale a measured serial time: `t / (workers * eff)`.
+    pub fn scaled_compute(serial_seconds: f64, workers_per_node: usize) -> f64 {
+        let eff = if workers_per_node > 1 { INTRA_NODE_EFFICIENCY } else { 1.0 };
+        serial_seconds / (workers_per_node as f64 * eff)
+    }
+
+    /// Append an already-computed phase duration (e.g. a fixed barrier
+    /// latency).
+    pub fn fixed_phase(&mut self, label: &'static str, seconds: f64) {
+        self.phases.push(Phase { kind: PhaseKind::Compute, label, seconds, shuffle_bytes: 0 });
+    }
+
+    /// Total virtual makespan.
+    pub fn makespan(&self) -> f64 {
+        self.phases.iter().map(|p| p.seconds).sum()
+    }
+
+    /// Total cross-node shuffle bytes.
+    pub fn total_shuffle_bytes(&self) -> u64 {
+        self.phases.iter().map(|p| p.shuffle_bytes).sum()
+    }
+
+    /// All recorded phases.
+    pub fn phases(&self) -> &[Phase] {
+        &self.phases
+    }
+
+    /// Fold another operation's phases into this one (multi-step jobs).
+    pub fn extend(&mut self, other: VirtualTime) {
+        self.phases.extend(other.phases);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn compute_phase_takes_slowest_node() {
+        let mut vt = VirtualTime::new();
+        let t = vt.compute_phase("map", &[1.0, 4.0, 2.0], 1);
+        assert!((t - 4.0).abs() < 1e-12);
+        assert!((vt.makespan() - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn worker_scaling() {
+        let mut vt = VirtualTime::new();
+        let t = vt.compute_phase("map", &[4.0], 4);
+        assert!((t - 4.0 / (4.0 * INTRA_NODE_EFFICIENCY)).abs() < 1e-12);
+        // Single worker: no efficiency penalty.
+        let t1 = VirtualTime::scaled_compute(4.0, 1);
+        assert!((t1 - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn overlap_vs_barrier() {
+        let model = NetworkModel {
+            nic_bytes_per_sec: 1e6,
+            latency_sec: 0.0,
+            bisection_bytes_per_sec: None,
+            per_message_overhead_sec: 0.0,
+        };
+        let mut flows = FlowMatrix::new(2);
+        flows.record(0, 1, 1_000_000); // 1 s transfer
+        let mut eager = VirtualTime::new();
+        let te = eager.shuffle_overlapped("sh", &flows, &model, 0.6);
+        assert!((te - 1.0).abs() < 1e-12, "overlapped = max(1.0, 0.6)");
+        let mut conv = VirtualTime::new();
+        let tc = conv.shuffle_barrier("sh", &flows, &model, 0.6);
+        assert!((tc - 1.6).abs() < 1e-12, "barrier = 1.0 + 0.6");
+    }
+
+    #[test]
+    fn makespan_sums_phases() {
+        let mut vt = VirtualTime::new();
+        vt.fixed_phase("a", 1.0);
+        vt.fixed_phase("b", 2.5);
+        let mut other = VirtualTime::new();
+        other.fixed_phase("c", 0.5);
+        vt.extend(other);
+        assert!((vt.makespan() - 4.0).abs() < 1e-12);
+        assert_eq!(vt.phases().len(), 3);
+    }
+}

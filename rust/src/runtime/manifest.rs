@@ -1,0 +1,146 @@
+//! Artifact manifest parsing.
+//!
+//! `python/compile/aot.py` writes a small flat JSON manifest next to the
+//! HLO artifacts. The build is offline (no serde), so this is a minimal
+//! hand-rolled parser for exactly that manifest shape — it rejects anything
+//! it does not understand rather than guessing.
+
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+/// Parsed `manifest.json`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    /// AOT batch size (rows per executable invocation).
+    pub batch: usize,
+    /// Point dimension.
+    pub dim: usize,
+    /// Center/component count.
+    pub k: usize,
+    /// k-NN query count per invocation.
+    pub queries: usize,
+    /// Pallas point-tile size (documentation/validation only).
+    pub tile_n: usize,
+    /// Artifact base names (e.g. `kmeans_assign`).
+    names: Vec<String>,
+}
+
+impl Manifest {
+    /// Read and parse `path`.
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading {}", path.as_ref().display()))?;
+        Self::parse(&text)
+    }
+
+    /// Parse manifest JSON text.
+    pub fn parse(text: &str) -> Result<Self> {
+        let batch = json_usize(text, "batch")?;
+        let dim = json_usize(text, "dim")?;
+        let k = json_usize(text, "k")?;
+        let queries = json_usize(text, "queries")?;
+        let tile_n = json_usize(text, "tile_n")?;
+        // Artifact names: keys of the "artifacts" object — find `"name": {`.
+        let artifacts_at = text
+            .find("\"artifacts\"")
+            .ok_or_else(|| anyhow!("manifest missing \"artifacts\""))?;
+        let tail = &text[artifacts_at..];
+        let mut names = Vec::new();
+        let mut search = tail;
+        // Skip the "artifacts" key itself, then collect object-valued keys.
+        if let Some(brace) = search.find('{') {
+            search = &search[brace + 1..];
+        }
+        while let Some(q0) = search.find('"') {
+            let rest = &search[q0 + 1..];
+            let Some(q1) = rest.find('"') else { break };
+            let key = &rest[..q1];
+            let after = rest[q1 + 1..].trim_start();
+            if let Some(after) = after.strip_prefix(':') {
+                if after.trim_start().starts_with('{') && key != "artifacts" {
+                    names.push(key.to_string());
+                }
+            }
+            search = &rest[q1 + 1..];
+        }
+        if names.is_empty() {
+            return Err(anyhow!("manifest lists no artifacts"));
+        }
+        names.sort();
+        Ok(Self { batch, dim, k, queries, tile_n, names })
+    }
+
+    /// Artifact base names, sorted.
+    pub fn artifact_names(&self) -> impl Iterator<Item = &str> {
+        self.names.iter().map(String::as_str)
+    }
+}
+
+fn json_usize(text: &str, key: &str) -> Result<usize> {
+    let pat = format!("\"{key}\"");
+    let at = text
+        .find(&pat)
+        .ok_or_else(|| anyhow!("manifest missing {key:?}"))?;
+    let rest = &text[at + pat.len()..];
+    let rest = rest
+        .trim_start()
+        .strip_prefix(':')
+        .ok_or_else(|| anyhow!("manifest {key:?} not followed by ':'"))?
+        .trim_start();
+    let digits: String = rest.chars().take_while(char::is_ascii_digit).collect();
+    digits
+        .parse()
+        .with_context(|| format!("manifest {key:?} is not an integer"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+  "batch": 4096,
+  "dim": 4,
+  "k": 5,
+  "queries": 1,
+  "tile_n": 512,
+  "artifacts": {
+    "kmeans_assign": { "file": "kmeans_assign.hlo.txt", "hlo_bytes": 9000 },
+    "gmm_estep": { "file": "gmm_estep.hlo.txt", "hlo_bytes": 15000 }
+  }
+}"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.batch, 4096);
+        assert_eq!(m.dim, 4);
+        assert_eq!(m.k, 5);
+        assert_eq!(m.queries, 1);
+        assert_eq!(m.tile_n, 512);
+        let names: Vec<&str> = m.artifact_names().collect();
+        assert_eq!(names, vec!["gmm_estep", "kmeans_assign"]);
+    }
+
+    #[test]
+    fn missing_key_rejected() {
+        assert!(Manifest::parse(r#"{"batch": 1}"#).is_err());
+    }
+
+    #[test]
+    fn no_artifacts_rejected() {
+        let text = r#"{"batch":1,"dim":1,"k":1,"queries":1,"tile_n":1,"artifacts":{}}"#;
+        assert!(Manifest::parse(text).is_err());
+    }
+
+    #[test]
+    fn parses_real_manifest_if_built() {
+        // Integration hook: when `make artifacts` has run, validate the
+        // real manifest too.
+        let path = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts/manifest.json");
+        if let Ok(m) = Manifest::load(path) {
+            assert!(m.batch >= 512);
+            assert_eq!(m.artifact_names().count(), 4);
+        }
+    }
+}

@@ -1,0 +1,585 @@
+//! Fast serialization (paper §2.3.2).
+//!
+//! Varint/zigzag binary codec in a fixed field order, with **no field tags
+//! and no wire types**. Protobuf spends one tag byte per field to support
+//! missing fields and arbitrary field order; MapReduce messages always carry
+//! every field in the same order, so Blaze drops the tags. For a pair of
+//! small integers this halves the message: 2 bytes instead of protobuf's 4.
+//!
+//! The codec is append-only into a caller-owned `Vec<u8>` ([`Writer`]) and
+//! zero-copy on the read side ([`Reader`] borrows the byte slice). Nothing
+//! here allocates on the encode hot path beyond the output buffer itself.
+
+use std::collections::HashMap;
+use std::hash::Hash;
+
+/// Append-only encode buffer.
+///
+/// A thin wrapper over `Vec<u8>` so the encode API mirrors [`Reader`]. The
+/// buffer can be reused across messages via [`Writer::clear`] to keep the
+/// shuffle path allocation-free.
+#[derive(Default, Debug)]
+pub struct Writer {
+    buf: Vec<u8>,
+}
+
+impl Writer {
+    /// New empty writer.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// New writer with `cap` bytes preallocated.
+    pub fn with_capacity(cap: usize) -> Self {
+        Self { buf: Vec::with_capacity(cap) }
+    }
+
+    /// Wrap an existing (possibly pooled) buffer; the buffer is cleared.
+    /// Pairs with [`crate::util::alloc::BufferPool`] for the "Blaze TCM"
+    /// allocator ablation.
+    pub fn from_vec(mut buf: Vec<u8>) -> Self {
+        buf.clear();
+        Self { buf }
+    }
+
+    /// Encoded bytes so far.
+    pub fn as_bytes(&self) -> &[u8] {
+        &self.buf
+    }
+
+    /// Take the underlying buffer, leaving the writer empty.
+    pub fn take(&mut self) -> Vec<u8> {
+        std::mem::take(&mut self.buf)
+    }
+
+    /// Number of encoded bytes.
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// True if nothing has been written.
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Reset for reuse without freeing capacity.
+    pub fn clear(&mut self) {
+        self.buf.clear();
+    }
+
+    /// LEB128 unsigned varint: 7 bits per byte, MSB = continuation.
+    #[inline]
+    pub fn put_varint(&mut self, mut v: u64) {
+        while v >= 0x80 {
+            self.buf.push((v as u8) | 0x80);
+            v >>= 7;
+        }
+        self.buf.push(v as u8);
+    }
+
+    /// Zigzag-mapped signed varint (small magnitudes stay small).
+    #[inline]
+    pub fn put_signed(&mut self, v: i64) {
+        self.put_varint(zigzag_encode(v));
+    }
+
+    /// IEEE-754 little-endian f64 (8 bytes; floats do not varint well).
+    #[inline]
+    pub fn put_f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// IEEE-754 little-endian f32 (4 bytes).
+    #[inline]
+    pub fn put_f32(&mut self, v: f32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Length-prefixed byte string.
+    #[inline]
+    pub fn put_bytes(&mut self, b: &[u8]) {
+        self.put_varint(b.len() as u64);
+        self.buf.extend_from_slice(b);
+    }
+
+    /// Raw bytes with no length prefix (caller knows the length).
+    #[inline]
+    pub fn put_raw(&mut self, b: &[u8]) {
+        self.buf.extend_from_slice(b);
+    }
+}
+
+/// Zero-copy decode cursor over an encoded byte slice.
+#[derive(Debug)]
+pub struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+/// Decode error: message truncated or malformed.
+#[derive(Debug, PartialEq, Eq)]
+pub struct DecodeError {
+    /// Byte offset at which decoding failed.
+    pub at: usize,
+    /// Human-readable cause.
+    pub what: &'static str,
+}
+
+impl std::fmt::Display for DecodeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "decode error at byte {}: {}", self.at, self.what)
+    }
+}
+
+impl std::error::Error for DecodeError {}
+
+impl<'a> Reader<'a> {
+    /// Cursor at the start of `buf`.
+    pub fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    /// Bytes remaining.
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    /// True when the cursor has consumed the whole buffer.
+    pub fn is_at_end(&self) -> bool {
+        self.pos == self.buf.len()
+    }
+
+    /// Current byte offset.
+    pub fn position(&self) -> usize {
+        self.pos
+    }
+
+    /// Decode an unsigned LEB128 varint.
+    #[inline]
+    pub fn get_varint(&mut self) -> Result<u64, DecodeError> {
+        let mut result: u64 = 0;
+        let mut shift = 0u32;
+        loop {
+            let Some(&byte) = self.buf.get(self.pos) else {
+                return Err(DecodeError { at: self.pos, what: "varint truncated" });
+            };
+            self.pos += 1;
+            if shift == 63 && byte > 1 {
+                return Err(DecodeError { at: self.pos, what: "varint overflows u64" });
+            }
+            result |= u64::from(byte & 0x7f) << shift;
+            if byte & 0x80 == 0 {
+                return Ok(result);
+            }
+            shift += 7;
+            if shift > 63 {
+                return Err(DecodeError { at: self.pos, what: "varint too long" });
+            }
+        }
+    }
+
+    /// Decode a zigzag signed varint.
+    #[inline]
+    pub fn get_signed(&mut self) -> Result<i64, DecodeError> {
+        Ok(zigzag_decode(self.get_varint()?))
+    }
+
+    /// Decode a little-endian f64.
+    #[inline]
+    pub fn get_f64(&mut self) -> Result<f64, DecodeError> {
+        let raw = self.get_exact(8)?;
+        Ok(f64::from_le_bytes(raw.try_into().unwrap()))
+    }
+
+    /// Decode a little-endian f32.
+    #[inline]
+    pub fn get_f32(&mut self) -> Result<f32, DecodeError> {
+        let raw = self.get_exact(4)?;
+        Ok(f32::from_le_bytes(raw.try_into().unwrap()))
+    }
+
+    /// Decode a length-prefixed byte string (borrowed).
+    #[inline]
+    pub fn get_bytes(&mut self) -> Result<&'a [u8], DecodeError> {
+        let len = self.get_varint()? as usize;
+        self.get_exact(len)
+    }
+
+    #[inline]
+    fn get_exact(&mut self, n: usize) -> Result<&'a [u8], DecodeError> {
+        if self.remaining() < n {
+            return Err(DecodeError { at: self.pos, what: "buffer truncated" });
+        }
+        let out = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(out)
+    }
+}
+
+/// Map signed to unsigned so small magnitudes encode in one byte.
+#[inline]
+pub fn zigzag_encode(v: i64) -> u64 {
+    ((v << 1) ^ (v >> 63)) as u64
+}
+
+/// Inverse of [`zigzag_encode`].
+#[inline]
+pub fn zigzag_decode(v: u64) -> i64 {
+    ((v >> 1) as i64) ^ -((v & 1) as i64)
+}
+
+/// Types serializable with the Blaze fast codec (paper §2.3.2).
+///
+/// Implemented for all primitive key/value types, strings, tuples and
+/// vectors. Custom key/value types implement `write`/`read` in a fixed field
+/// order — mirroring the paper's "users only need to provide the
+/// corresponding serialize/parse methods".
+pub trait FastSer: Sized {
+    /// Append this value to `w` in the fixed field order.
+    fn write(&self, w: &mut Writer);
+    /// Decode one value from `r`.
+    fn read(r: &mut Reader<'_>) -> Result<Self, DecodeError>;
+
+    /// Encoded size in bytes (exact; used by the network byte accounting).
+    fn encoded_len(&self) -> usize {
+        let mut w = Writer::new();
+        self.write(&mut w);
+        w.len()
+    }
+}
+
+macro_rules! impl_fastser_uint {
+    ($($t:ty),*) => {$(
+        impl FastSer for $t {
+            #[inline]
+            fn write(&self, w: &mut Writer) {
+                w.put_varint(*self as u64);
+            }
+            #[inline]
+            fn read(r: &mut Reader<'_>) -> Result<Self, DecodeError> {
+                let v = r.get_varint()?;
+                <$t>::try_from(v).map_err(|_| DecodeError { at: r.position(), what: "uint out of range" })
+            }
+            #[inline]
+            fn encoded_len(&self) -> usize {
+                varint_len(*self as u64)
+            }
+        }
+    )*};
+}
+
+macro_rules! impl_fastser_sint {
+    ($($t:ty),*) => {$(
+        impl FastSer for $t {
+            #[inline]
+            fn write(&self, w: &mut Writer) {
+                w.put_signed(*self as i64);
+            }
+            #[inline]
+            fn read(r: &mut Reader<'_>) -> Result<Self, DecodeError> {
+                let v = r.get_signed()?;
+                <$t>::try_from(v).map_err(|_| DecodeError { at: r.position(), what: "sint out of range" })
+            }
+            #[inline]
+            fn encoded_len(&self) -> usize {
+                varint_len(zigzag_encode(*self as i64))
+            }
+        }
+    )*};
+}
+
+impl_fastser_uint!(u8, u16, u32, u64, usize);
+impl_fastser_sint!(i8, i16, i32, i64, isize);
+
+/// Exact LEB128 length of `v`.
+#[inline]
+pub fn varint_len(v: u64) -> usize {
+    // 1 + floor(bits/7); bits of 0 treated as 1.
+    let bits = 64 - (v | 1).leading_zeros() as usize;
+    bits.div_ceil(7).max(1)
+}
+
+impl FastSer for bool {
+    #[inline]
+    fn write(&self, w: &mut Writer) {
+        w.put_varint(u64::from(*self));
+    }
+    #[inline]
+    fn read(r: &mut Reader<'_>) -> Result<Self, DecodeError> {
+        Ok(r.get_varint()? != 0)
+    }
+    #[inline]
+    fn encoded_len(&self) -> usize {
+        1
+    }
+}
+
+impl FastSer for f64 {
+    #[inline]
+    fn write(&self, w: &mut Writer) {
+        w.put_f64(*self);
+    }
+    #[inline]
+    fn read(r: &mut Reader<'_>) -> Result<Self, DecodeError> {
+        r.get_f64()
+    }
+    #[inline]
+    fn encoded_len(&self) -> usize {
+        8
+    }
+}
+
+impl FastSer for f32 {
+    #[inline]
+    fn write(&self, w: &mut Writer) {
+        w.put_f32(*self);
+    }
+    #[inline]
+    fn read(r: &mut Reader<'_>) -> Result<Self, DecodeError> {
+        r.get_f32()
+    }
+    #[inline]
+    fn encoded_len(&self) -> usize {
+        4
+    }
+}
+
+impl FastSer for String {
+    #[inline]
+    fn write(&self, w: &mut Writer) {
+        w.put_bytes(self.as_bytes());
+    }
+    #[inline]
+    fn read(r: &mut Reader<'_>) -> Result<Self, DecodeError> {
+        let at = r.position();
+        let bytes = r.get_bytes()?;
+        String::from_utf8(bytes.to_vec())
+            .map_err(|_| DecodeError { at, what: "invalid utf-8" })
+    }
+    #[inline]
+    fn encoded_len(&self) -> usize {
+        varint_len(self.len() as u64) + self.len()
+    }
+}
+
+impl<T: FastSer> FastSer for Vec<T> {
+    fn write(&self, w: &mut Writer) {
+        w.put_varint(self.len() as u64);
+        for item in self {
+            item.write(w);
+        }
+    }
+    fn read(r: &mut Reader<'_>) -> Result<Self, DecodeError> {
+        let len = r.get_varint()? as usize;
+        // Guard against hostile length prefixes: cap the preallocation.
+        let mut out = Vec::with_capacity(len.min(r.remaining().max(1)));
+        for _ in 0..len {
+            out.push(T::read(r)?);
+        }
+        Ok(out)
+    }
+    fn encoded_len(&self) -> usize {
+        varint_len(self.len() as u64) + self.iter().map(FastSer::encoded_len).sum::<usize>()
+    }
+}
+
+impl<A: FastSer, B: FastSer> FastSer for (A, B) {
+    #[inline]
+    fn write(&self, w: &mut Writer) {
+        self.0.write(w);
+        self.1.write(w);
+    }
+    #[inline]
+    fn read(r: &mut Reader<'_>) -> Result<Self, DecodeError> {
+        Ok((A::read(r)?, B::read(r)?))
+    }
+    #[inline]
+    fn encoded_len(&self) -> usize {
+        self.0.encoded_len() + self.1.encoded_len()
+    }
+}
+
+impl<A: FastSer, B: FastSer, C: FastSer> FastSer for (A, B, C) {
+    #[inline]
+    fn write(&self, w: &mut Writer) {
+        self.0.write(w);
+        self.1.write(w);
+        self.2.write(w);
+    }
+    #[inline]
+    fn read(r: &mut Reader<'_>) -> Result<Self, DecodeError> {
+        Ok((A::read(r)?, B::read(r)?, C::read(r)?))
+    }
+    #[inline]
+    fn encoded_len(&self) -> usize {
+        self.0.encoded_len() + self.1.encoded_len() + self.2.encoded_len()
+    }
+}
+
+impl<K, V> FastSer for HashMap<K, V>
+where
+    K: FastSer + Eq + Hash,
+    V: FastSer,
+{
+    fn write(&self, w: &mut Writer) {
+        w.put_varint(self.len() as u64);
+        for (k, v) in self {
+            k.write(w);
+            v.write(w);
+        }
+    }
+    fn read(r: &mut Reader<'_>) -> Result<Self, DecodeError> {
+        let len = r.get_varint()? as usize;
+        let mut out = HashMap::with_capacity(len.min(r.remaining().max(1)));
+        for _ in 0..len {
+            let k = K::read(r)?;
+            let v = V::read(r)?;
+            out.insert(k, v);
+        }
+        Ok(out)
+    }
+    fn encoded_len(&self) -> usize {
+        varint_len(self.len() as u64)
+            + self
+                .iter()
+                .map(|(k, v)| k.encoded_len() + v.encoded_len())
+                .sum::<usize>()
+    }
+}
+
+/// Encode a whole key/value batch into one message (fixed order, no tags).
+pub fn encode_pairs<K: FastSer, V: FastSer>(pairs: &[(K, V)]) -> Vec<u8> {
+    encode_pairs_into(pairs, Vec::with_capacity(pairs.len() * 4))
+}
+
+/// [`encode_pairs`] into a caller-provided (possibly pooled) buffer.
+pub fn encode_pairs_into<K: FastSer, V: FastSer>(pairs: &[(K, V)], buf: Vec<u8>) -> Vec<u8> {
+    let mut w = Writer::from_vec(buf);
+    w.put_varint(pairs.len() as u64);
+    for (k, v) in pairs {
+        k.write(&mut w);
+        v.write(&mut w);
+    }
+    w.take()
+}
+
+/// Decode a batch produced by [`encode_pairs`].
+pub fn decode_pairs<K: FastSer, V: FastSer>(buf: &[u8]) -> Result<Vec<(K, V)>, DecodeError> {
+    let mut r = Reader::new(buf);
+    let n = r.get_varint()? as usize;
+    let mut out = Vec::with_capacity(n.min(r.remaining().max(1)));
+    for _ in 0..n {
+        let k = K::read(&mut r)?;
+        let v = V::read(&mut r)?;
+        out.push((k, v));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn varint_roundtrip_boundaries() {
+        let cases = [0u64, 1, 127, 128, 255, 300, 16383, 16384, u32::MAX as u64, u64::MAX];
+        for &v in &cases {
+            let mut w = Writer::new();
+            w.put_varint(v);
+            assert_eq!(w.len(), varint_len(v), "len mismatch for {v}");
+            let mut r = Reader::new(w.as_bytes());
+            assert_eq!(r.get_varint().unwrap(), v);
+            assert!(r.is_at_end());
+        }
+    }
+
+    #[test]
+    fn zigzag_small_magnitudes_are_small() {
+        assert_eq!(zigzag_encode(0), 0);
+        assert_eq!(zigzag_encode(-1), 1);
+        assert_eq!(zigzag_encode(1), 2);
+        assert_eq!(zigzag_encode(-2), 3);
+        for v in [-1000i64, -1, 0, 1, 1000, i64::MIN, i64::MAX] {
+            assert_eq!(zigzag_decode(zigzag_encode(v)), v);
+        }
+    }
+
+    #[test]
+    fn small_int_pair_is_two_bytes() {
+        // The paper's headline: (small int, small int) = 2 bytes with
+        // fastser vs 4 with protobuf-style tags.
+        let pair = (0u64, 1u64);
+        assert_eq!(pair.encoded_len(), 2);
+        let mut w = Writer::new();
+        pair.write(&mut w);
+        assert_eq!(w.len(), 2);
+    }
+
+    #[test]
+    fn string_roundtrip() {
+        let s = "hello blaze — ünïcode".to_string();
+        let mut w = Writer::new();
+        s.write(&mut w);
+        assert_eq!(w.len(), s.encoded_len());
+        let mut r = Reader::new(w.as_bytes());
+        assert_eq!(String::read(&mut r).unwrap(), s);
+    }
+
+    #[test]
+    fn vec_and_tuple_roundtrip() {
+        let v: Vec<(String, i64)> = vec![("a".into(), -5), ("bb".into(), 700)];
+        let mut w = Writer::new();
+        v.write(&mut w);
+        let mut r = Reader::new(w.as_bytes());
+        assert_eq!(Vec::<(String, i64)>::read(&mut r).unwrap(), v);
+        assert!(r.is_at_end());
+    }
+
+    #[test]
+    fn floats_roundtrip_bitexact() {
+        for v in [0.0f64, -0.0, 1.5, f64::MAX, f64::MIN_POSITIVE, f64::NAN] {
+            let mut w = Writer::new();
+            v.write(&mut w);
+            let mut r = Reader::new(w.as_bytes());
+            let back = f64::read(&mut r).unwrap();
+            assert_eq!(back.to_bits(), v.to_bits());
+        }
+    }
+
+    #[test]
+    fn truncated_buffer_errors() {
+        let mut w = Writer::new();
+        (12345u64, "hello".to_string()).write(&mut w);
+        let bytes = w.as_bytes();
+        for cut in 0..bytes.len() {
+            let mut r = Reader::new(&bytes[..cut]);
+            assert!(<(u64, String)>::read(&mut r).is_err(), "cut at {cut} should fail");
+        }
+    }
+
+    #[test]
+    fn continuation_bit_overflow_rejected() {
+        // 11 continuation bytes: too long for u64.
+        let bad = [0xffu8; 11];
+        let mut r = Reader::new(&bad);
+        assert!(r.get_varint().is_err());
+    }
+
+    #[test]
+    fn encode_decode_pairs_batch() {
+        let pairs: Vec<(u32, u64)> = (0..1000).map(|i| (i % 7, u64::from(i) * 3)).collect();
+        let buf = encode_pairs(&pairs);
+        assert_eq!(decode_pairs::<u32, u64>(&buf).unwrap(), pairs);
+    }
+
+    #[test]
+    fn hashmap_roundtrip() {
+        let mut m = HashMap::new();
+        m.insert("x".to_string(), 1u64);
+        m.insert("yy".to_string(), 2u64);
+        let mut w = Writer::new();
+        m.write(&mut w);
+        let mut r = Reader::new(w.as_bytes());
+        assert_eq!(HashMap::<String, u64>::read(&mut r).unwrap(), m);
+    }
+}

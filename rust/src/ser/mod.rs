@@ -1,0 +1,19 @@
+//! Serialization codecs (paper §2.3.2).
+//!
+//! Blaze ships two wire formats:
+//!
+//! * [`fastser`] — the paper's *fast serialization*: varint/zigzag encoding
+//!   in a **fixed field order with no field tags and no wire types**. A
+//!   `(small int key, small int value)` pair costs 2 bytes. This is the
+//!   codec used by the eager engine's shuffle.
+//! * [`tagged`] — the protobuf-analog baseline: every field is prefixed with
+//!   a `(field_number << 3) | wire_type` tag byte, exactly like Protocol
+//!   Buffers. The same small-int pair costs 4 bytes (2× larger), which is
+//!   the paper's headline serialization comparison. The conventional
+//!   (Spark-analog) engine shuffles with this codec.
+
+pub mod fastser;
+pub mod tagged;
+
+pub use fastser::{FastSer, Reader, Writer};
+pub use tagged::{TaggedReader, TaggedSer, TaggedWriter};

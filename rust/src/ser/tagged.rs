@@ -1,0 +1,443 @@
+//! Tagged (protobuf-analog) codec — the serialization baseline.
+//!
+//! Mirrors Protocol Buffers' wire format: every field is prefixed with a
+//! `(field_number << 3) | wire_type` tag byte. This buys missing-field
+//! tolerance and arbitrary field order — flexibility MapReduce messages never
+//! use — at the cost of one byte per field. For a `(small int, small int)`
+//! pair the message is 4 bytes where the Blaze fast codec needs 2 (§2.3.2).
+//!
+//! The conventional (Spark-analog) engine shuffles with this codec so the
+//! serialization ablation in `benches/ser_codec.rs` isolates exactly the
+//! paper's claimed effect.
+
+use super::fastser::{varint_len, zigzag_decode, zigzag_encode, DecodeError};
+
+/// Protobuf wire types (subset used here).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WireType {
+    /// Varint-encoded integer.
+    Varint = 0,
+    /// 8-byte fixed (f64).
+    Fixed64 = 1,
+    /// Length-delimited (strings, bytes, nested messages).
+    LengthDelimited = 2,
+    /// 4-byte fixed (f32).
+    Fixed32 = 5,
+}
+
+impl WireType {
+    fn from_u8(v: u8) -> Option<Self> {
+        match v {
+            0 => Some(WireType::Varint),
+            1 => Some(WireType::Fixed64),
+            2 => Some(WireType::LengthDelimited),
+            5 => Some(WireType::Fixed32),
+            _ => None,
+        }
+    }
+}
+
+/// Encode buffer that prefixes every field with a protobuf-style tag.
+#[derive(Default, Debug)]
+pub struct TaggedWriter {
+    buf: Vec<u8>,
+    next_field: u32,
+}
+
+impl TaggedWriter {
+    /// New empty writer; field numbers start at 1 like protobuf.
+    pub fn new() -> Self {
+        Self { buf: Vec::new(), next_field: 1 }
+    }
+
+    /// Encoded bytes.
+    pub fn as_bytes(&self) -> &[u8] {
+        &self.buf
+    }
+
+    /// Take the buffer.
+    pub fn take(&mut self) -> Vec<u8> {
+        self.next_field = 1;
+        std::mem::take(&mut self.buf)
+    }
+
+    /// Encoded length.
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// True if empty.
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Reset for reuse.
+    pub fn clear(&mut self) {
+        self.buf.clear();
+        self.next_field = 1;
+    }
+
+    fn put_tag(&mut self, wt: WireType) {
+        let field = self.next_field;
+        self.next_field += 1;
+        self.put_varint_raw((u64::from(field) << 3) | wt as u64);
+    }
+
+    fn put_varint_raw(&mut self, mut v: u64) {
+        while v >= 0x80 {
+            self.buf.push((v as u8) | 0x80);
+            v >>= 7;
+        }
+        self.buf.push(v as u8);
+    }
+
+    /// Tag + unsigned varint.
+    pub fn put_varint(&mut self, v: u64) {
+        self.put_tag(WireType::Varint);
+        self.put_varint_raw(v);
+    }
+
+    /// Tag + zigzag signed varint.
+    pub fn put_signed(&mut self, v: i64) {
+        self.put_tag(WireType::Varint);
+        self.put_varint_raw(zigzag_encode(v));
+    }
+
+    /// Tag + fixed64.
+    pub fn put_f64(&mut self, v: f64) {
+        self.put_tag(WireType::Fixed64);
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Tag + fixed32.
+    pub fn put_f32(&mut self, v: f32) {
+        self.put_tag(WireType::Fixed32);
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Tag + length-delimited bytes.
+    pub fn put_bytes(&mut self, b: &[u8]) {
+        self.put_tag(WireType::LengthDelimited);
+        self.put_varint_raw(b.len() as u64);
+        self.buf.extend_from_slice(b);
+    }
+}
+
+/// Decode cursor for [`TaggedWriter`] output: checks each field's tag.
+#[derive(Debug)]
+pub struct TaggedReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+    next_field: u32,
+}
+
+impl<'a> TaggedReader<'a> {
+    /// Cursor at the start of `buf`.
+    pub fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0, next_field: 1 }
+    }
+
+    /// True when fully consumed.
+    pub fn is_at_end(&self) -> bool {
+        self.pos == self.buf.len()
+    }
+
+    /// Bytes remaining.
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn get_varint_raw(&mut self) -> Result<u64, DecodeError> {
+        let mut result: u64 = 0;
+        let mut shift = 0u32;
+        loop {
+            let Some(&byte) = self.buf.get(self.pos) else {
+                return Err(DecodeError { at: self.pos, what: "varint truncated" });
+            };
+            self.pos += 1;
+            result |= u64::from(byte & 0x7f) << shift;
+            if byte & 0x80 == 0 {
+                return Ok(result);
+            }
+            shift += 7;
+            if shift > 63 {
+                return Err(DecodeError { at: self.pos, what: "varint too long" });
+            }
+        }
+    }
+
+    fn expect_tag(&mut self, want: WireType) -> Result<(), DecodeError> {
+        let at = self.pos;
+        let tag = self.get_varint_raw()?;
+        let field = (tag >> 3) as u32;
+        let wt = WireType::from_u8((tag & 7) as u8)
+            .ok_or(DecodeError { at, what: "unknown wire type" })?;
+        if field != self.next_field {
+            return Err(DecodeError { at, what: "unexpected field number" });
+        }
+        if wt != want {
+            return Err(DecodeError { at, what: "wire type mismatch" });
+        }
+        self.next_field += 1;
+        Ok(())
+    }
+
+    /// Tagged unsigned varint.
+    pub fn get_varint(&mut self) -> Result<u64, DecodeError> {
+        self.expect_tag(WireType::Varint)?;
+        self.get_varint_raw()
+    }
+
+    /// Tagged zigzag signed varint.
+    pub fn get_signed(&mut self) -> Result<i64, DecodeError> {
+        Ok(zigzag_decode(self.get_varint()?))
+    }
+
+    /// Tagged fixed64.
+    pub fn get_f64(&mut self) -> Result<f64, DecodeError> {
+        self.expect_tag(WireType::Fixed64)?;
+        let raw = self.get_exact(8)?;
+        Ok(f64::from_le_bytes(raw.try_into().unwrap()))
+    }
+
+    /// Tagged fixed32.
+    pub fn get_f32(&mut self) -> Result<f32, DecodeError> {
+        self.expect_tag(WireType::Fixed32)?;
+        let raw = self.get_exact(4)?;
+        Ok(f32::from_le_bytes(raw.try_into().unwrap()))
+    }
+
+    /// Tagged length-delimited bytes (borrowed).
+    pub fn get_bytes(&mut self) -> Result<&'a [u8], DecodeError> {
+        self.expect_tag(WireType::LengthDelimited)?;
+        let len = self.get_varint_raw()? as usize;
+        self.get_exact(len)
+    }
+
+    fn get_exact(&mut self, n: usize) -> Result<&'a [u8], DecodeError> {
+        if self.remaining() < n {
+            return Err(DecodeError { at: self.pos, what: "buffer truncated" });
+        }
+        let out = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(out)
+    }
+}
+
+/// Types serializable with the tagged baseline codec.
+///
+/// Deliberately mirrors [`super::fastser::FastSer`] so the two engines can be
+/// swapped under the same workloads for the serialization ablation.
+pub trait TaggedSer: Sized {
+    /// Append as tagged field(s).
+    fn write_tagged(&self, w: &mut TaggedWriter);
+    /// Decode tagged field(s).
+    fn read_tagged(r: &mut TaggedReader<'_>) -> Result<Self, DecodeError>;
+
+    /// Exact encoded size including tags.
+    fn tagged_len(&self) -> usize {
+        let mut w = TaggedWriter::new();
+        self.write_tagged(&mut w);
+        w.len()
+    }
+}
+
+macro_rules! impl_tagged_uint {
+    ($($t:ty),*) => {$(
+        impl TaggedSer for $t {
+            fn write_tagged(&self, w: &mut TaggedWriter) {
+                w.put_varint(*self as u64);
+            }
+            fn read_tagged(r: &mut TaggedReader<'_>) -> Result<Self, DecodeError> {
+                let v = r.get_varint()?;
+                <$t>::try_from(v).map_err(|_| DecodeError { at: 0, what: "uint out of range" })
+            }
+        }
+    )*};
+}
+
+macro_rules! impl_tagged_sint {
+    ($($t:ty),*) => {$(
+        impl TaggedSer for $t {
+            fn write_tagged(&self, w: &mut TaggedWriter) {
+                w.put_signed(*self as i64);
+            }
+            fn read_tagged(r: &mut TaggedReader<'_>) -> Result<Self, DecodeError> {
+                let v = r.get_signed()?;
+                <$t>::try_from(v).map_err(|_| DecodeError { at: 0, what: "sint out of range" })
+            }
+        }
+    )*};
+}
+
+impl_tagged_uint!(u8, u16, u32, u64, usize);
+impl_tagged_sint!(i8, i16, i32, i64, isize);
+
+impl TaggedSer for f64 {
+    fn write_tagged(&self, w: &mut TaggedWriter) {
+        w.put_f64(*self);
+    }
+    fn read_tagged(r: &mut TaggedReader<'_>) -> Result<Self, DecodeError> {
+        r.get_f64()
+    }
+}
+
+impl TaggedSer for f32 {
+    fn write_tagged(&self, w: &mut TaggedWriter) {
+        w.put_f32(*self);
+    }
+    fn read_tagged(r: &mut TaggedReader<'_>) -> Result<Self, DecodeError> {
+        r.get_f32()
+    }
+}
+
+impl TaggedSer for String {
+    fn write_tagged(&self, w: &mut TaggedWriter) {
+        w.put_bytes(self.as_bytes());
+    }
+    fn read_tagged(r: &mut TaggedReader<'_>) -> Result<Self, DecodeError> {
+        let bytes = r.get_bytes()?;
+        String::from_utf8(bytes.to_vec()).map_err(|_| DecodeError { at: 0, what: "invalid utf-8" })
+    }
+}
+
+impl<A: TaggedSer, B: TaggedSer> TaggedSer for (A, B) {
+    fn write_tagged(&self, w: &mut TaggedWriter) {
+        self.0.write_tagged(w);
+        self.1.write_tagged(w);
+    }
+    fn read_tagged(r: &mut TaggedReader<'_>) -> Result<Self, DecodeError> {
+        Ok((A::read_tagged(r)?, B::read_tagged(r)?))
+    }
+}
+
+impl<T: TaggedSer> TaggedSer for Vec<T> {
+    fn write_tagged(&self, w: &mut TaggedWriter) {
+        // Length as its own tagged field, then each element's fields.
+        w.put_varint(self.len() as u64);
+        for item in self {
+            item.write_tagged(w);
+        }
+    }
+    fn read_tagged(r: &mut TaggedReader<'_>) -> Result<Self, DecodeError> {
+        let len = r.get_varint()? as usize;
+        let mut out = Vec::with_capacity(len.min(r.remaining().max(1)));
+        for _ in 0..len {
+            out.push(T::read_tagged(r)?);
+        }
+        Ok(out)
+    }
+}
+
+/// Encode a key/value batch with per-pair tagged messages. Each pair is a
+/// fresh "message" (field numbers restart), as a shuffle file of protobuf
+/// records would be.
+pub fn encode_pairs_tagged<K: TaggedSer, V: TaggedSer>(pairs: &[(K, V)]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(pairs.len() * 6);
+    let mut w = TaggedWriter::new();
+    for (k, v) in pairs {
+        w.clear();
+        k.write_tagged(&mut w);
+        v.write_tagged(&mut w);
+        // Length-prefix each record (protobuf framing).
+        let mut len = w.len() as u64;
+        while len >= 0x80 {
+            out.push((len as u8) | 0x80);
+            len >>= 7;
+        }
+        out.push(len as u8);
+        out.extend_from_slice(w.as_bytes());
+    }
+    out
+}
+
+/// Decode a batch produced by [`encode_pairs_tagged`].
+pub fn decode_pairs_tagged<K: TaggedSer, V: TaggedSer>(
+    buf: &[u8],
+) -> Result<Vec<(K, V)>, DecodeError> {
+    let mut out = Vec::new();
+    let mut pos = 0usize;
+    while pos < buf.len() {
+        // record length varint
+        let mut len: u64 = 0;
+        let mut shift = 0u32;
+        loop {
+            let Some(&byte) = buf.get(pos) else {
+                return Err(DecodeError { at: pos, what: "record length truncated" });
+            };
+            pos += 1;
+            len |= u64::from(byte & 0x7f) << shift;
+            if byte & 0x80 == 0 {
+                break;
+            }
+            shift += 7;
+        }
+        let len = len as usize;
+        if buf.len() - pos < len {
+            return Err(DecodeError { at: pos, what: "record truncated" });
+        }
+        let mut r = TaggedReader::new(&buf[pos..pos + len]);
+        let k = K::read_tagged(&mut r)?;
+        let v = V::read_tagged(&mut r)?;
+        out.push((k, v));
+        pos += len;
+    }
+    Ok(out)
+}
+
+/// Exact tagged size of `v` including the per-field tag byte(s).
+pub fn tagged_varint_field_len(field: u32, v: u64) -> usize {
+    varint_len((u64::from(field) << 3) | WireType::Varint as u64) + varint_len(v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_int_pair_is_four_bytes() {
+        // The paper's §2.3.2 example: protobuf-style message for
+        // (small int, small int) is 4 bytes — 2× the fast codec.
+        let pair = (0u64, 1u64);
+        assert_eq!(pair.tagged_len(), 4);
+    }
+
+    #[test]
+    fn tagged_roundtrip_pair() {
+        let pair = ("word".to_string(), 42u64);
+        let mut w = TaggedWriter::new();
+        pair.write_tagged(&mut w);
+        let mut r = TaggedReader::new(w.as_bytes());
+        assert_eq!(<(String, u64)>::read_tagged(&mut r).unwrap(), pair);
+        assert!(r.is_at_end());
+    }
+
+    #[test]
+    fn wrong_field_order_rejected() {
+        // Encode field 1 as varint, then try to read it as f64 (fixed64 tag
+        // expected) — the tag check must reject it.
+        let mut w = TaggedWriter::new();
+        w.put_varint(7);
+        let mut r = TaggedReader::new(w.as_bytes());
+        assert!(r.get_f64().is_err());
+    }
+
+    #[test]
+    fn batch_roundtrip_and_overhead() {
+        let pairs: Vec<(u64, u64)> = (0..100).map(|i| (i % 5, 1)).collect();
+        let buf = encode_pairs_tagged(&pairs);
+        assert_eq!(decode_pairs_tagged::<u64, u64>(&buf).unwrap(), pairs);
+        // Each record: 1 length byte + 2 tag bytes + 2 value bytes = 5.
+        assert_eq!(buf.len(), pairs.len() * 5);
+        // Fast codec for the same batch: batch-count varint + 2 bytes/pair.
+        let fast = crate::ser::fastser::encode_pairs(&pairs);
+        assert!(fast.len() * 2 < buf.len(), "fast {} vs tagged {}", fast.len(), buf.len());
+    }
+
+    #[test]
+    fn truncated_record_errors() {
+        let pairs = vec![(1u64, 2u64)];
+        let buf = encode_pairs_tagged(&pairs);
+        assert!(decode_pairs_tagged::<u64, u64>(&buf[..buf.len() - 1]).is_err());
+    }
+}

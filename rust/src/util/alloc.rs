@@ -1,0 +1,191 @@
+//! Pool allocator toggle — the paper's "Blaze TCM" (TCMalloc) analogue.
+//!
+//! The paper links Blaze against TCMalloc and finds throughput ≈unchanged
+//! but variance lower (and one case with 40% more memory). TCMalloc's win is
+//! thread-caching of small allocations; the Blaze hot path allocates pair
+//! buffers and serialization scratch. We reproduce the *mechanism* with a
+//! worker-local slab pool for the engines' scratch buffers: `AllocMode::Pool`
+//! recycles buffers through a size-classed free list, `AllocMode::System`
+//! hits the global allocator every time. The Fig-4..9 benches run both.
+
+use std::cell::RefCell;
+
+/// Allocation strategy for engine scratch buffers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum AllocMode {
+    /// Global system allocator on every buffer (paper's plain "Blaze").
+    #[default]
+    System,
+    /// Worker-local size-classed slab pool (paper's "Blaze TCM").
+    Pool,
+}
+
+impl std::fmt::Display for AllocMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            AllocMode::System => write!(f, "blaze"),
+            AllocMode::Pool => write!(f, "blaze-tcm"),
+        }
+    }
+}
+
+/// Size classes: powers of two from 64 B to 1 MiB.
+const MIN_CLASS_SHIFT: u32 = 6; // 64 B
+const MAX_CLASS_SHIFT: u32 = 20; // 1 MiB
+const N_CLASSES: usize = (MAX_CLASS_SHIFT - MIN_CLASS_SHIFT + 1) as usize;
+
+/// Worker-local buffer pool (thread-caching malloc analogue).
+///
+/// Not a global allocator: the engines route their `Vec<u8>` scratch through
+/// this explicitly so both modes are measurable under identical workloads.
+#[derive(Default)]
+pub struct BufferPool {
+    classes: RefCell<[Vec<Vec<u8>>; N_CLASSES]>,
+    hits: RefCell<u64>,
+    misses: RefCell<u64>,
+}
+
+impl BufferPool {
+    /// Empty pool.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn class_for(cap: usize) -> usize {
+        let cap = cap.max(1 << MIN_CLASS_SHIFT);
+        let shift = usize::BITS - (cap - 1).leading_zeros(); // ceil log2
+        (shift.clamp(MIN_CLASS_SHIFT, MAX_CLASS_SHIFT) - MIN_CLASS_SHIFT) as usize
+    }
+
+    /// Get a cleared buffer with at least `cap` capacity.
+    pub fn get(&self, cap: usize) -> Vec<u8> {
+        if cap > 1 << MAX_CLASS_SHIFT {
+            *self.misses.borrow_mut() += 1;
+            return Vec::with_capacity(cap);
+        }
+        let class = Self::class_for(cap);
+        if let Some(mut buf) = self.classes.borrow_mut()[class].pop() {
+            buf.clear();
+            *self.hits.borrow_mut() += 1;
+            buf
+        } else {
+            *self.misses.borrow_mut() += 1;
+            Vec::with_capacity(1 << (class as u32 + MIN_CLASS_SHIFT))
+        }
+    }
+
+    /// Return a buffer to the pool for reuse.
+    pub fn put(&self, buf: Vec<u8>) {
+        let cap = buf.capacity();
+        if cap == 0 || cap > 1 << MAX_CLASS_SHIFT {
+            return; // outside pooled classes; let it drop
+        }
+        // A buffer of capacity c serves class floor(log2 c) requests.
+        let shift = usize::BITS - 1 - cap.leading_zeros(); // floor log2
+        if shift < MIN_CLASS_SHIFT {
+            return;
+        }
+        let class = (shift.min(MAX_CLASS_SHIFT) - MIN_CLASS_SHIFT) as usize;
+        let mut classes = self.classes.borrow_mut();
+        if classes[class].len() < 64 {
+            classes[class].push(buf);
+        }
+    }
+
+    /// (hits, misses) counters — used by the allocator ablation bench.
+    pub fn stats(&self) -> (u64, u64) {
+        (*self.hits.borrow(), *self.misses.borrow())
+    }
+
+    /// Bytes currently parked in the pool.
+    pub fn pooled_bytes(&self) -> usize {
+        self.classes
+            .borrow()
+            .iter()
+            .flat_map(|c| c.iter().map(Vec::capacity))
+            .sum()
+    }
+}
+
+/// Scratch-buffer source honouring an [`AllocMode`].
+pub struct Scratch<'a> {
+    mode: AllocMode,
+    pool: &'a BufferPool,
+}
+
+impl<'a> Scratch<'a> {
+    /// Scratch source over `pool` in `mode`.
+    pub fn new(mode: AllocMode, pool: &'a BufferPool) -> Self {
+        Self { mode, pool }
+    }
+
+    /// Acquire a buffer of at least `cap` bytes.
+    pub fn get(&self, cap: usize) -> Vec<u8> {
+        match self.mode {
+            AllocMode::System => Vec::with_capacity(cap),
+            AllocMode::Pool => self.pool.get(cap),
+        }
+    }
+
+    /// Release a buffer (no-op under `System`).
+    pub fn put(&self, buf: Vec<u8>) {
+        if self.mode == AllocMode::Pool {
+            self.pool.put(buf);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pool_reuses_buffers() {
+        let pool = BufferPool::new();
+        let b = pool.get(100);
+        let cap = b.capacity();
+        assert!(cap >= 100);
+        pool.put(b);
+        let b2 = pool.get(100);
+        assert_eq!(b2.capacity(), cap, "second get should reuse");
+        let (hits, misses) = pool.stats();
+        assert_eq!((hits, misses), (1, 1));
+    }
+
+    #[test]
+    fn class_rounding() {
+        assert_eq!(BufferPool::class_for(1), 0);
+        assert_eq!(BufferPool::class_for(64), 0);
+        assert_eq!(BufferPool::class_for(65), 1);
+        assert_eq!(BufferPool::class_for(128), 1);
+        assert_eq!(BufferPool::class_for(1 << 20), N_CLASSES - 1);
+    }
+
+    #[test]
+    fn oversized_bypasses_pool() {
+        let pool = BufferPool::new();
+        let b = pool.get((1 << 20) + 1);
+        assert!(b.capacity() > 1 << 20);
+        pool.put(b);
+        assert_eq!(pool.pooled_bytes(), 0);
+    }
+
+    #[test]
+    fn returned_buffer_serves_smaller_class() {
+        let pool = BufferPool::new();
+        // Capacity 256 buffer parked in class floor(log2 256)=8 → class 2.
+        pool.put(Vec::with_capacity(256));
+        let b = pool.get(200); // class_for(200)=ceil → 256 → class 2
+        assert!(b.capacity() >= 200);
+        assert_eq!(pool.stats().0, 1);
+    }
+
+    #[test]
+    fn system_mode_never_pools() {
+        let pool = BufferPool::new();
+        let scratch = Scratch::new(AllocMode::System, &pool);
+        let b = scratch.get(128);
+        scratch.put(b);
+        assert_eq!(pool.pooled_bytes(), 0);
+    }
+}

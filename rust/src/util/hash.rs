@@ -1,0 +1,108 @@
+//! Deterministic FxHash-style hasher.
+//!
+//! `std::collections::HashMap`'s default hasher is randomized per process;
+//! Blaze needs key→shard routing to be identical across runs and across the
+//! virtual nodes, so containers and engines hash with this fixed-seed
+//! multiply-rotate hasher (the rustc FxHash construction).
+
+use std::hash::{BuildHasherDefault, Hash, Hasher};
+
+const SEED: u64 = 0x51_7c_c1_b7_27_22_0a_95;
+
+/// FxHash: fold each 8-byte chunk with multiply-rotate.
+#[derive(Default, Clone)]
+pub struct FxHasher {
+    hash: u64,
+}
+
+impl FxHasher {
+    #[inline]
+    fn add_to_hash(&mut self, word: u64) {
+        self.hash = (self.hash.rotate_left(5) ^ word).wrapping_mul(SEED);
+    }
+}
+
+impl Hasher for FxHasher {
+    #[inline]
+    fn finish(&self) -> u64 {
+        self.hash
+    }
+
+    #[inline]
+    fn write(&mut self, bytes: &[u8]) {
+        let mut chunks = bytes.chunks_exact(8);
+        for c in &mut chunks {
+            self.add_to_hash(u64::from_le_bytes(c.try_into().unwrap()));
+        }
+        let rem = chunks.remainder();
+        if !rem.is_empty() {
+            let mut word = [0u8; 8];
+            word[..rem.len()].copy_from_slice(rem);
+            self.add_to_hash(u64::from_le_bytes(word));
+        }
+    }
+
+    #[inline]
+    fn write_u8(&mut self, i: u8) {
+        self.add_to_hash(u64::from(i));
+    }
+
+    #[inline]
+    fn write_u16(&mut self, i: u16) {
+        self.add_to_hash(u64::from(i));
+    }
+
+    #[inline]
+    fn write_u32(&mut self, i: u32) {
+        self.add_to_hash(u64::from(i));
+    }
+
+    #[inline]
+    fn write_u64(&mut self, i: u64) {
+        self.add_to_hash(i);
+    }
+
+    #[inline]
+    fn write_usize(&mut self, i: usize) {
+        self.add_to_hash(i as u64);
+    }
+}
+
+/// `BuildHasher` for [`FxHasher`].
+pub type FxBuildHasher = BuildHasherDefault<FxHasher>;
+
+/// `HashMap` keyed with the deterministic hasher.
+pub type FxHashMap<K, V> = std::collections::HashMap<K, V, FxBuildHasher>;
+
+/// Hash one value deterministically.
+#[inline]
+pub fn fxhash<T: Hash + ?Sized>(value: &T) -> u64 {
+    let mut h = FxHasher::default();
+    value.hash(&mut h);
+    h.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        assert_eq!(fxhash("blaze"), fxhash("blaze"));
+        assert_eq!(fxhash(&42u64), fxhash(&42u64));
+        assert_ne!(fxhash("blaze"), fxhash("spark"));
+    }
+
+    #[test]
+    fn spreads_sequential_keys() {
+        // Sequential u64 keys must land on different slot values.
+        let slots: std::collections::HashSet<u64> =
+            (0..1000u64).map(|k| fxhash(&k) % 256).collect();
+        assert!(slots.len() > 200, "only {} distinct slots", slots.len());
+    }
+
+    #[test]
+    fn string_tail_bytes_matter() {
+        assert_ne!(fxhash("abcdefghi"), fxhash("abcdefghj"));
+    }
+}

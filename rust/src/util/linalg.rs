@@ -1,0 +1,131 @@
+//! Small dense linear algebra for the GMM M-step.
+//!
+//! The GMM covariances are tiny (`D ≤ 16`), so the coordinator inverts them
+//! with an in-tree Cholesky instead of shipping a LAPACK dependency (the
+//! AOT graphs take precisions as *inputs* — `jnp.linalg.inv` would lower to
+//! a LAPACK custom-call the rust PJRT CPU client cannot run).
+
+/// Cholesky factor `L` (lower-triangular, row-major) of SPD `a` (`d × d`).
+/// Returns `None` if `a` is not positive-definite.
+pub fn cholesky(a: &[f64], d: usize) -> Option<Vec<f64>> {
+    assert_eq!(a.len(), d * d);
+    let mut l = vec![0.0f64; d * d];
+    for i in 0..d {
+        for j in 0..=i {
+            let mut sum = a[i * d + j];
+            for k in 0..j {
+                sum -= l[i * d + k] * l[j * d + k];
+            }
+            if i == j {
+                if sum <= 0.0 {
+                    return None;
+                }
+                l[i * d + i] = sum.sqrt();
+            } else {
+                l[i * d + j] = sum / l[j * d + j];
+            }
+        }
+    }
+    Some(l)
+}
+
+/// `log |A|` from a Cholesky factor: `2 Σ log L_ii`.
+pub fn logdet_from_cholesky(l: &[f64], d: usize) -> f64 {
+    (0..d).map(|i| l[i * d + i].ln()).sum::<f64>() * 2.0
+}
+
+/// Inverse of SPD `a` via Cholesky: solve `L Lᵀ X = I` column by column.
+/// Returns `None` if not positive-definite.
+pub fn spd_inverse(a: &[f64], d: usize) -> Option<Vec<f64>> {
+    let l = cholesky(a, d)?;
+    let mut inv = vec![0.0f64; d * d];
+    for col in 0..d {
+        // Forward solve L y = e_col.
+        let mut y = vec![0.0f64; d];
+        for i in 0..d {
+            let mut sum = if i == col { 1.0 } else { 0.0 };
+            for k in 0..i {
+                sum -= l[i * d + k] * y[k];
+            }
+            y[i] = sum / l[i * d + i];
+        }
+        // Back solve Lᵀ x = y.
+        for i in (0..d).rev() {
+            let mut sum = y[i];
+            for k in i + 1..d {
+                sum -= l[k * d + i] * inv[k * d + col];
+            }
+            inv[i * d + col] = sum / l[i * d + i];
+        }
+    }
+    Some(inv)
+}
+
+/// `a @ b` for row-major `(n × m) @ (m × p)`.
+pub fn matmul(a: &[f64], b: &[f64], n: usize, m: usize, p: usize) -> Vec<f64> {
+    let mut out = vec![0.0f64; n * p];
+    for i in 0..n {
+        for k in 0..m {
+            let aik = a[i * m + k];
+            for j in 0..p {
+                out[i * p + j] += aik * b[k * p + j];
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn approx(a: &[f64], b: &[f64], tol: f64) {
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(b) {
+            assert!((x - y).abs() < tol, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn cholesky_of_identity() {
+        let eye = vec![1.0, 0.0, 0.0, 1.0];
+        let l = cholesky(&eye, 2).unwrap();
+        approx(&l, &eye, 1e-12);
+        assert_eq!(logdet_from_cholesky(&l, 2), 0.0);
+    }
+
+    #[test]
+    fn inverse_times_original_is_identity() {
+        // SPD: A = M Mᵀ + I.
+        let m = [1.0, 2.0, 0.5, 3.0, -1.0, 0.25, 0.0, 1.0, 2.0];
+        let d = 3;
+        let mut a = vec![0.0; 9];
+        for i in 0..d {
+            for j in 0..d {
+                for k in 0..d {
+                    a[i * d + j] += m[i * d + k] * m[j * d + k];
+                }
+            }
+            a[i * d + i] += 1.0;
+        }
+        let inv = spd_inverse(&a, d).unwrap();
+        let prod = matmul(&a, &inv, d, d, d);
+        let eye: Vec<f64> =
+            (0..9).map(|i| if i % 4 == 0 { 1.0 } else { 0.0 }).collect();
+        approx(&prod, &eye, 1e-9);
+    }
+
+    #[test]
+    fn logdet_matches_2x2_closed_form() {
+        let a = vec![4.0, 1.0, 1.0, 3.0]; // det = 11
+        let l = cholesky(&a, 2).unwrap();
+        assert!((logdet_from_cholesky(&l, 2) - 11.0f64.ln()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn non_spd_rejected() {
+        let a = vec![1.0, 2.0, 2.0, 1.0]; // indefinite
+        assert!(cholesky(&a, 2).is_none());
+        assert!(spd_inverse(&a, 2).is_none());
+    }
+}

@@ -1,0 +1,14 @@
+//! Utilities: deterministic RNG, bounded top-k, allocator pools,
+//! cognitive-load accounting.
+
+pub mod alloc;
+pub mod cognitive;
+pub mod hash;
+pub mod linalg;
+pub mod random;
+pub mod rng;
+pub mod topk;
+
+pub use hash::{fxhash, FxHashMap};
+pub use rng::SplitRng;
+pub use topk::TopK;

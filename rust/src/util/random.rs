@@ -1,0 +1,84 @@
+//! Worker-stream random numbers — the paper's `blaze::random::uniform()`.
+//!
+//! The paper's π mapper notes "Random function in std is not thread safe"
+//! and calls Blaze's own `random::uniform()`, which is thread-local. Here
+//! the engines publish the *current worker stream* (derived from `(seed,
+//! node, worker)`) before running a worker's items; mappers just call
+//! [`uniform`]. Deterministic: the same sample always sees the same stream
+//! position regardless of engine or cluster shape, which is what lets the
+//! Table-1 test assert bit-identical π against the hand-written loop.
+
+use std::cell::Cell;
+
+use super::rng::SplitRng;
+
+thread_local! {
+    // xoshiro state of the active worker stream (Cell<[u64;4]> copies are
+    // 32 bytes — cheaper than RefCell book-keeping on the hot path).
+    static STATE: Cell<[u64; 4]> = const { Cell::new([0; 4]) };
+}
+
+/// Install the stream for `(seed, stream_id)` as the active one.
+/// Engines call this whenever the executing worker changes.
+pub fn set_stream(seed: u64, stream_id: u64) {
+    let rng = SplitRng::new(seed, stream_id);
+    STATE.with(|s| s.set(rng.state()));
+}
+
+/// Uniform f64 in [0, 1) from the active worker stream.
+#[inline]
+pub fn uniform() -> f64 {
+    STATE.with(|s| {
+        let mut rng = SplitRng::from_state(s.get());
+        let v = rng.uniform();
+        s.set(rng.state());
+        v
+    })
+}
+
+/// Two uniforms in [0, 1) with a single stream-state access — the 2-D
+/// sampling fast path (Monte-Carlo π draws pairs).
+#[inline]
+pub fn uniform2() -> (f64, f64) {
+    STATE.with(|s| {
+        let mut rng = SplitRng::from_state(s.get());
+        let a = rng.uniform();
+        let b = rng.uniform();
+        s.set(rng.state());
+        (a, b)
+    })
+}
+
+/// Raw u64 from the active worker stream.
+#[inline]
+pub fn next_u64() -> u64 {
+    STATE.with(|s| {
+        let mut rng = SplitRng::from_state(s.get());
+        let v = rng.next_u64();
+        s.set(rng.state());
+        v
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stream_matches_splitrng() {
+        set_stream(42, 7);
+        let mut reference = SplitRng::new(42, 7);
+        for _ in 0..100 {
+            assert_eq!(next_u64(), reference.next_u64());
+        }
+    }
+
+    #[test]
+    fn set_stream_resets_position() {
+        set_stream(1, 0);
+        let a = uniform();
+        set_stream(1, 0);
+        let b = uniform();
+        assert_eq!(a, b);
+    }
+}

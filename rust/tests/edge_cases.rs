@@ -1,0 +1,244 @@
+//! Edge cases and failure injection across the stack: empty inputs,
+//! degenerate cluster shapes, cache-boundary behaviour, hostile bytes into
+//! the decoders, and misuse panics.
+
+use blaze::containers::{DistHashMap, DistRange, DistVector};
+use blaze::coordinator::cluster::{Cluster, ClusterConfig, EngineKind};
+use blaze::mapreduce::{mapreduce, mapreduce_range, Reducer};
+use blaze::ser::fastser::{decode_pairs, Reader};
+use blaze::ser::tagged::decode_pairs_tagged;
+use blaze::util::rng::SplitRng;
+
+// ---------- degenerate inputs -------------------------------------------
+
+#[test]
+fn empty_input_all_engines_all_paths() {
+    for engine in [EngineKind::Eager, EngineKind::Conventional] {
+        let c = Cluster::new(ClusterConfig::sized(3, 2).with_engine(engine));
+        // Generic hash path.
+        let dv: DistVector<String> = DistVector::from_vec(&c, vec![]);
+        let mut words: DistHashMap<String, u64> = DistHashMap::new(&c);
+        mapreduce(
+            &dv,
+            |_, l: &String, emit| emit(l.clone(), 1u64),
+            "sum",
+            &mut words,
+        );
+        assert_eq!(words.len(), 0);
+        // Dense path.
+        let range = DistRange::new(&c, 0, 0);
+        let mut count = vec![0u64; 1];
+        mapreduce_range(&range, |_, emit| emit(0usize, 1u64), "sum", &mut count);
+        assert_eq!(count[0], 0);
+    }
+}
+
+#[test]
+fn single_element_single_node_single_worker() {
+    let c = Cluster::local(1, 1);
+    let dv = DistVector::from_vec(&c, vec!["one".to_string()]);
+    let mut out: DistHashMap<String, u64> = DistHashMap::new(&c);
+    mapreduce(&dv, |_, l: &String, emit| emit(l.clone(), 1), "sum", &mut out);
+    assert_eq!(out.get(&"one".to_string()), Some(1));
+}
+
+#[test]
+fn more_nodes_than_items() {
+    let c = Cluster::local(8, 4);
+    let dv = DistVector::from_vec(&c, vec![1u64, 2, 3]);
+    let mut out: DistHashMap<u64, u64> = DistHashMap::new(&c);
+    mapreduce(&dv, |_, v: &u64, emit| emit(*v, *v), "sum", &mut out);
+    assert_eq!(out.len(), 3);
+    assert_eq!(out.get(&2), Some(2));
+}
+
+#[test]
+fn mapper_emitting_nothing_is_fine() {
+    let c = Cluster::local(2, 2);
+    let dv = DistVector::from_vec(&c, (0..100u64).collect::<Vec<u64>>());
+    let mut out: DistHashMap<u64, u64> = DistHashMap::new(&c);
+    mapreduce(&dv, |_, _: &u64, _emit| {}, "sum", &mut out);
+    assert!(out.is_empty());
+    assert_eq!(c.metrics().last_run().unwrap().pairs_emitted, 0);
+}
+
+#[test]
+fn mapper_emitting_many_per_item() {
+    let c = Cluster::local(2, 2);
+    let dv = DistVector::from_vec(&c, vec![1u64; 10]);
+    let mut count = vec![0u64; 4];
+    mapreduce(
+        &dv,
+        |_, _: &u64, emit| {
+            for k in 0..4usize {
+                emit(k, 1u64);
+            }
+        },
+        "sum",
+        &mut count,
+    );
+    assert_eq!(count, vec![10, 10, 10, 10]);
+}
+
+// ---------- cache boundary behaviour -------------------------------------
+
+#[test]
+fn thread_cache_of_one_still_correct() {
+    // Every emit overflows the worker cache immediately — maximal flush
+    // churn, same answer.
+    let mut cfg = ClusterConfig::sized(3, 2);
+    cfg.thread_cache_entries = 1;
+    let c = Cluster::new(cfg);
+    let data: Vec<u64> = (0..2000).map(|i| i % 7).collect();
+    let dv = DistVector::from_vec(&c, data);
+    let mut out: DistHashMap<u64, u64> = DistHashMap::new(&c);
+    mapreduce(&dv, |_, v: &u64, emit| emit(*v, 1u64), "sum", &mut out);
+    let total: u64 = (0..7).map(|k| out.get(&k).unwrap_or(0)).sum();
+    assert_eq!(total, 2000);
+}
+
+#[test]
+fn dense_key_at_range_boundary() {
+    let c = Cluster::local(2, 1);
+    let range = DistRange::new(&c, 0, 100);
+    let mut out = vec![0u64; 10];
+    mapreduce_range(&range, |v, emit| emit((v % 10) as usize, 1u64), "sum", &mut out);
+    assert_eq!(out, vec![10u64; 10]);
+}
+
+#[test]
+#[should_panic(expected = "outside fixed key range")]
+fn dense_key_beyond_range_panics() {
+    let c = Cluster::local(1, 1);
+    let range = DistRange::new(&c, 0, 10);
+    let mut out = vec![0u64; 2];
+    mapreduce_range(&range, |_, emit| emit(5usize, 1u64), "sum", &mut out);
+}
+
+// ---------- hostile bytes into the decoders ------------------------------
+
+#[test]
+fn random_bytes_never_panic_decoders() {
+    let mut rng = SplitRng::new(0xFFFF, 0);
+    for _ in 0..2000 {
+        let len = rng.below(64) as usize;
+        let bytes: Vec<u8> = (0..len).map(|_| rng.next_u64() as u8).collect();
+        // Must return Ok or Err, never panic, never allocate absurdly.
+        let _ = decode_pairs::<String, u64>(&bytes);
+        let _ = decode_pairs::<u64, f64>(&bytes);
+        let _ = decode_pairs_tagged::<String, u64>(&bytes);
+        let _ = decode_pairs_tagged::<u64, u64>(&bytes);
+        let mut r = Reader::new(&bytes);
+        let _ = r.get_varint();
+    }
+}
+
+#[test]
+fn hostile_length_prefix_does_not_oom() {
+    // Claim 2^62 pairs; decoder must fail gracefully, not reserve memory.
+    let mut bytes = vec![0xff, 0xff, 0xff, 0xff, 0xff, 0xff, 0xff, 0xff, 0x3f];
+    bytes.extend_from_slice(&[1, 2, 3]);
+    assert!(decode_pairs::<u64, u64>(&bytes).is_err());
+}
+
+// ---------- misuse panics (documented contracts) --------------------------
+
+#[test]
+#[should_panic(expected = "zip length mismatch")]
+fn zip_length_mismatch_panics() {
+    let c = Cluster::local(2, 1);
+    let a = DistVector::from_vec(&c, vec![1u64, 2]);
+    let b = DistVector::from_vec(&c, vec![1u64]);
+    let _ = DistVector::zip(&a, &b);
+}
+
+#[test]
+#[should_panic(expected = "one shard per node")]
+fn from_shards_wrong_count_panics() {
+    let c = Cluster::local(3, 1);
+    let _ = DistVector::from_shards(&c, vec![vec![1u64]]);
+}
+
+#[test]
+#[should_panic(expected = "unknown built-in reducer")]
+fn unknown_reducer_name_panics() {
+    let c = Cluster::local(1, 1);
+    let dv = DistVector::from_vec(&c, vec![1u64]);
+    let mut out: DistHashMap<u64, u64> = DistHashMap::new(&c);
+    mapreduce(&dv, |_, v: &u64, emit| emit(*v, 1u64), "mean", &mut out);
+}
+
+// ---------- cross-shape determinism ---------------------------------------
+
+#[test]
+fn pagerank_deterministic_across_worker_counts() {
+    use blaze::apps::pagerank::pagerank;
+    use blaze::data::Graph;
+    let g = Graph::graph500(8, 8, 5);
+    let (_, a) = pagerank(&Cluster::local(4, 1), &g, 1e-8, 40);
+    let (_, b) = pagerank(&Cluster::local(4, 8), &g, 1e-8, 40);
+    assert_eq!(a.iterations, b.iterations);
+    for (x, y) in a.scores.iter().zip(&b.scores) {
+        assert!((x - y).abs() < 1e-12);
+    }
+}
+
+#[test]
+fn custom_reducer_with_custom_value_type() {
+    // Paper §2.2: custom types as values need only FastSer (+TaggedSer for
+    // the baseline). Keep the longest string per key.
+    let c = Cluster::local(2, 2);
+    let data = vec![
+        ("a".to_string(), "x".to_string()),
+        ("a".to_string(), "xxx".to_string()),
+        ("b".to_string(), "yy".to_string()),
+        ("a".to_string(), "xx".to_string()),
+    ];
+    let dv = DistVector::from_vec(&c, data);
+    let mut out: DistHashMap<String, String> = DistHashMap::new(&c);
+    mapreduce(
+        &dv,
+        |_, kv: &(String, String), emit| emit(kv.0.clone(), kv.1.clone()),
+        Reducer::custom(|a: &mut String, b: &String| {
+            if b.len() > a.len() {
+                a.clone_from(b);
+            }
+        }),
+        &mut out,
+    );
+    assert_eq!(out.get(&"a".to_string()), Some("xxx".to_string()));
+    assert_eq!(out.get(&"b".to_string()), Some("yy".to_string()));
+}
+
+#[test]
+fn foreach_then_mapreduce_composes() {
+    // Paper §2.1: foreach can mutate elements in place; follow with MR.
+    let c = Cluster::local(3, 2);
+    let mut dv = DistVector::from_vec(&c, (0..90u64).collect::<Vec<u64>>());
+    dv.foreach(|_, v| *v %= 3);
+    let mut hist = vec![0u64; 3];
+    mapreduce(
+        &dv,
+        |_, v: &u64, emit| emit(*v as usize, 1u64),
+        "sum",
+        &mut hist,
+    );
+    assert_eq!(hist, vec![30, 30, 30]);
+}
+
+#[test]
+fn topk_with_ties_returns_k() {
+    let c = Cluster::local(4, 2);
+    let dv = DistVector::from_vec(&c, vec![7u64; 100]);
+    let top = dv.topk(10, |a, b| a.cmp(b));
+    assert_eq!(top, vec![7u64; 10]);
+}
+
+#[test]
+fn distrange_step_mapreduce() {
+    let c = Cluster::local(2, 2);
+    let range = DistRange::with_step(&c, 0, 100, 10); // 0,10,...,90
+    let mut sum = vec![0u64; 1];
+    mapreduce_range(&range, |v, emit| emit(0usize, v), "sum", &mut sum);
+    assert_eq!(sum[0], 450);
+}

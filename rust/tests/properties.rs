@@ -1,0 +1,284 @@
+//! Property-based tests over coordinator invariants (routing, batching,
+//! state) and the serialization codecs.
+//!
+//! The offline build has no proptest, so cases are generated with the
+//! in-tree deterministic [`SplitRng`]: hundreds of random cases per
+//! property, reproducible by seed.
+
+use blaze::containers::{DistHashMap, DistVector};
+use blaze::coordinator::cluster::{Cluster, ClusterConfig, EngineKind};
+use blaze::coordinator::rebalance::{self, SlotMap, NUM_SLOTS};
+use blaze::coordinator::scheduler::{block_owner, block_ranges, weighted_contiguous_ranges};
+use blaze::mapreduce::{mapreduce, Reducer};
+use blaze::ser::fastser::{decode_pairs, encode_pairs, FastSer, Reader, Writer};
+use blaze::ser::tagged::{decode_pairs_tagged, encode_pairs_tagged};
+use blaze::util::rng::SplitRng;
+
+// ---------- serialization properties ------------------------------------
+
+#[test]
+fn prop_fastser_roundtrip_random_pairs() {
+    let mut rng = SplitRng::new(0xF00D, 0);
+    for case in 0..300 {
+        let n = rng.below(64) as usize;
+        let pairs: Vec<(String, i64)> = (0..n)
+            .map(|_| {
+                let len = rng.below(24) as usize;
+                let s: String = (0..len)
+                    .map(|_| char::from(b'a' + rng.below(26) as u8))
+                    .collect();
+                let v = rng.next_u64() as i64;
+                (s, v)
+            })
+            .collect();
+        let buf = encode_pairs(&pairs);
+        let back = decode_pairs::<String, i64>(&buf).unwrap();
+        assert_eq!(back, pairs, "case {case}");
+        // Tagged codec round-trips the same data.
+        let tbuf = encode_pairs_tagged(&pairs);
+        assert_eq!(decode_pairs_tagged::<String, i64>(&tbuf).unwrap(), pairs);
+        // And is never smaller than the fast codec (for non-empty batches;
+        // the fast codec spends one byte on the batch count).
+        if !pairs.is_empty() {
+            assert!(tbuf.len() >= buf.len(), "case {case}: tagged smaller than fast");
+        }
+    }
+}
+
+#[test]
+fn prop_fastser_encoded_len_is_exact() {
+    let mut rng = SplitRng::new(0xBEEF, 1);
+    for _ in 0..500 {
+        let v = (rng.next_u64(), rng.next_u64() as i64, rng.uniform());
+        let mut w = Writer::new();
+        v.write(&mut w);
+        assert_eq!(w.len(), v.encoded_len());
+        let mut r = Reader::new(w.as_bytes());
+        let back = <(u64, i64, f64)>::read(&mut r).unwrap();
+        assert_eq!(back.0, v.0);
+        assert_eq!(back.1, v.1);
+        assert_eq!(back.2.to_bits(), v.2.to_bits());
+        assert!(r.is_at_end());
+    }
+}
+
+// ---------- scheduler / routing properties ------------------------------
+
+#[test]
+fn prop_block_partition_complete_and_owner_consistent() {
+    let mut rng = SplitRng::new(0xCAFE, 2);
+    for _ in 0..200 {
+        let n = rng.below(10_000) as usize;
+        let parts = 1 + rng.below(32) as usize;
+        let ranges = block_ranges(n, parts);
+        assert_eq!(ranges.iter().map(|r| r.len()).sum::<usize>(), n);
+        // Spot-check owner agreement.
+        for _ in 0..20 {
+            if n == 0 {
+                break;
+            }
+            let i = rng.below(n as u64) as usize;
+            let owner = block_owner(n, parts, i);
+            assert!(ranges[owner].contains(&i));
+        }
+    }
+}
+
+#[test]
+fn prop_weighted_ranges_never_worse_than_2x_optimal() {
+    let mut rng = SplitRng::new(0xD1CE, 3);
+    for case in 0..100 {
+        let n = 1 + rng.below(300) as usize;
+        let parts = 1 + rng.below(8) as usize;
+        let weights: Vec<u64> = (0..n).map(|_| 1 + rng.below(1000)).collect();
+        let ranges = weighted_contiguous_ranges(&weights, parts);
+        assert_eq!(ranges.len(), parts);
+        assert_eq!(ranges.iter().map(|r| r.len()).sum::<usize>(), n, "case {case}");
+        let total: u64 = weights.iter().sum();
+        let wmax = *weights.iter().max().unwrap();
+        let optimal_bound = (total as f64 / parts as f64).max(wmax as f64);
+        let worst: u64 = ranges
+            .iter()
+            .map(|r| weights[r.clone()].iter().sum::<u64>())
+            .max()
+            .unwrap();
+        assert!(
+            (worst as f64) <= 2.0 * optimal_bound + 1.0,
+            "case {case}: worst {worst} vs bound {optimal_bound}"
+        );
+    }
+}
+
+#[test]
+fn prop_rebalance_always_covers_all_slots_and_helps() {
+    let mut rng = SplitRng::new(0xF1FE, 4);
+    for case in 0..100 {
+        let nodes = 1 + rng.below(12) as usize;
+        let map = SlotMap::even(nodes);
+        let weights: Vec<u64> = (0..NUM_SLOTS)
+            .map(|_| if rng.uniform() < 0.05 { rng.below(10_000) } else { rng.below(10) })
+            .collect();
+        let bytes: Vec<u64> = weights.iter().map(|w| w * 12).collect();
+        let plan = rebalance::plan(&map, &weights, &bytes, nodes);
+        // Every slot still has exactly one owner in range.
+        for slot in 0..NUM_SLOTS {
+            assert!(plan.new_map.node_of(slot) < nodes, "case {case}");
+        }
+        let before = rebalance::imbalance(&weights, &map, nodes);
+        let after = rebalance::imbalance(&weights, &plan.new_map, nodes);
+        assert!(after <= before * 1.01, "case {case}: {before} -> {after}");
+    }
+}
+
+// ---------- engine state properties --------------------------------------
+
+/// Word count as a model-checked state machine: whatever the cluster shape,
+/// engine, or cache size, the result equals a serial HashMap fold.
+#[test]
+fn prop_mapreduce_equals_serial_fold() {
+    let mut rng = SplitRng::new(0x5EED, 5);
+    for case in 0..25 {
+        let nodes = 1 + rng.below(8) as usize;
+        let workers = 1 + rng.below(4) as usize;
+        let engine = if rng.uniform() < 0.5 { EngineKind::Eager } else { EngineKind::Conventional };
+        let cache = 1 << (2 + rng.below(12)); // 4 .. 32768 entries
+        let n_lines = rng.below(400) as usize;
+        let lines: Vec<String> = (0..n_lines)
+            .map(|_| {
+                let words = rng.below(12) as usize;
+                (0..words)
+                    .map(|_| format!("w{}", rng.below(50)))
+                    .collect::<Vec<_>>()
+                    .join(" ")
+            })
+            .collect();
+
+        // Serial oracle.
+        let mut oracle: std::collections::HashMap<String, u64> =
+            std::collections::HashMap::new();
+        for line in &lines {
+            for w in line.split_whitespace() {
+                *oracle.entry(w.to_string()).or_insert(0) += 1;
+            }
+        }
+
+        let mut config = ClusterConfig::sized(nodes, workers).with_engine(engine);
+        config.thread_cache_entries = cache;
+        let c = Cluster::new(config);
+        let dv = DistVector::from_vec(&c, lines);
+        let mut words: DistHashMap<String, u64> = DistHashMap::new(&c);
+        mapreduce(
+            &dv,
+            |_, line: &String, emit| {
+                for w in line.split_whitespace() {
+                    emit(w.to_string(), 1u64);
+                }
+            },
+            "sum",
+            &mut words,
+        );
+        assert_eq!(
+            words.collect(),
+            oracle,
+            "case {case}: nodes={nodes} workers={workers} engine={engine:?} cache={cache}"
+        );
+    }
+}
+
+/// Dense small-key path equals the generic hash path for any key range.
+#[test]
+fn prop_dense_path_equals_hash_path() {
+    let mut rng = SplitRng::new(0xDE45E, 6);
+    for case in 0..40 {
+        let nodes = 1 + rng.below(6) as usize;
+        let range = 1 + rng.below(64) as usize;
+        let n = 200 + rng.below(2000) as usize;
+        let keys: Vec<usize> = (0..n).map(|_| rng.below(range as u64) as usize).collect();
+        let vals: Vec<u64> = (0..n).map(|_| rng.below(1000)).collect();
+
+        // Dense path: Vec target (eager engine).
+        let c1 = Cluster::local(nodes, 2);
+        let dv1 = DistVector::from_vec(&c1, keys.iter().copied().zip(vals.iter().copied()).collect::<Vec<(usize, u64)>>());
+        let mut dense = vec![0u64; range];
+        mapreduce(
+            &dv1,
+            |_, kv: &(usize, u64), emit| emit(kv.0, kv.1),
+            "sum",
+            &mut dense,
+        );
+
+        // Hash path: DistHashMap target.
+        let c2 = Cluster::local(nodes, 2);
+        let dv2 = DistVector::from_vec(&c2, keys.iter().copied().zip(vals.iter().copied()).collect::<Vec<(usize, u64)>>());
+        let mut hashed: DistHashMap<usize, u64> = DistHashMap::new(&c2);
+        mapreduce(
+            &dv2,
+            |_, kv: &(usize, u64), emit| emit(kv.0, kv.1),
+            "sum",
+            &mut hashed,
+        );
+
+        for (k, want) in dense.iter().enumerate() {
+            let got = hashed.get(&k).unwrap_or(0);
+            assert_eq!(got, *want, "case {case} key {k}");
+        }
+    }
+}
+
+/// Non-sum reducers behave identically across engines.
+#[test]
+fn prop_minmax_reducers_engine_parity() {
+    let mut rng = SplitRng::new(0x313, 7);
+    for _ in 0..20 {
+        let n = 100 + rng.below(500) as usize;
+        let data: Vec<(u64, i64)> = (0..n)
+            .map(|_| (rng.below(20), rng.next_u64() as i64 >> 32))
+            .collect();
+        let run = |engine: EngineKind, red: fn() -> Reducer<i64>| {
+            let c = Cluster::new(ClusterConfig::sized(3, 2).with_engine(engine));
+            let dv = DistVector::from_vec(&c, data.clone());
+            let mut out: DistHashMap<u64, i64> = DistHashMap::new(&c);
+            mapreduce(&dv, |_, kv: &(u64, i64), emit| emit(kv.0, kv.1), red(), &mut out);
+            out.collect()
+        };
+        assert_eq!(
+            run(EngineKind::Eager, Reducer::min),
+            run(EngineKind::Conventional, Reducer::min)
+        );
+        assert_eq!(
+            run(EngineKind::Eager, Reducer::max),
+            run(EngineKind::Conventional, Reducer::max)
+        );
+    }
+}
+
+/// Metrics invariants: pairs_shuffled ≤ pairs_emitted for eager; equal for
+/// conventional. Shuffle bytes zero on one node.
+#[test]
+fn prop_metrics_invariants() {
+    let mut rng = SplitRng::new(0x9999, 8);
+    for _ in 0..20 {
+        let nodes = 1 + rng.below(8) as usize;
+        for engine in [EngineKind::Eager, EngineKind::Conventional] {
+            let c = Cluster::new(ClusterConfig::sized(nodes, 2).with_engine(engine));
+            let dv = DistVector::from_vec(
+                &c,
+                (0..500u64).map(|i| (i % 17, 1u64)).collect::<Vec<(u64, u64)>>(),
+            );
+            let mut out: DistHashMap<u64, u64> = DistHashMap::new(&c);
+            mapreduce(&dv, |_, kv: &(u64, u64), emit| emit(kv.0, kv.1), "sum", &mut out);
+            let m = c.metrics();
+            let run = m.last_run().unwrap();
+            match engine {
+                EngineKind::Eager => assert!(run.pairs_shuffled <= run.pairs_emitted),
+                EngineKind::Conventional => {
+                    assert_eq!(run.pairs_shuffled, run.pairs_emitted)
+                }
+            }
+            if nodes == 1 {
+                assert_eq!(run.shuffle_bytes, 0, "single node must not shuffle");
+            }
+            assert!(run.makespan_sec > 0.0);
+        }
+    }
+}

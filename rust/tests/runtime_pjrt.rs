@@ -1,0 +1,185 @@
+//! PJRT bridge integration tests: the python-AOT artifacts must load,
+//! compile and produce numerics matching the in-rust scalar oracles.
+//!
+//! Requires `make artifacts` to have run; every test is skipped (with a
+//! loud message) when the artifacts directory is absent so `cargo test`
+//! stays green in a fresh checkout.
+
+use blaze::data::points::PointSet;
+use blaze::runtime::Runtime;
+use blaze::util::linalg;
+
+fn runtime() -> Option<Runtime> {
+    match Runtime::load(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts")) {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("SKIP: artifacts not built ({e:#}); run `make artifacts`");
+            None
+        }
+    }
+}
+
+#[test]
+fn runtime_loads_all_artifacts() {
+    let Some(rt) = runtime() else { return };
+    let mut names = rt.artifact_names();
+    names.sort_unstable();
+    assert_eq!(names, vec!["gmm_estep", "kmeans_assign", "knn_dist", "pairwise_dist"]);
+    assert!(rt.batch() >= 512);
+    assert_eq!(rt.platform(), "cpu");
+}
+
+#[test]
+fn pairwise_kernel_matches_scalar_oracle() {
+    let Some(rt) = runtime() else { return };
+    let (b, d, k) = (rt.batch(), rt.dim(), rt.k());
+    let ps = PointSet::clustered(b, d, k, 1.0, 7);
+    let centers = ps.true_centers.clone();
+    let got = rt.pairwise_dist(&ps.coords, &centers).unwrap();
+    assert_eq!(got.len(), b * k);
+    for i in (0..b).step_by(97) {
+        for c in 0..k {
+            let want = ps.dist2(i, &centers[c * d..(c + 1) * d]);
+            let have = got[i * k + c];
+            assert!(
+                (want - have).abs() <= 1e-2 + 1e-3 * want.abs(),
+                "point {i} center {c}: pallas {have} vs scalar {want}"
+            );
+        }
+    }
+}
+
+#[test]
+fn kmeans_assign_matches_scalar_oracle() {
+    let Some(rt) = runtime() else { return };
+    let (b, d, k) = (rt.batch(), rt.dim(), rt.k());
+    let ps = PointSet::clustered(b, d, k, 0.8, 11);
+    let centers = ps.true_centers.clone();
+    let valid = vec![1.0f32; b];
+    let out = rt.kmeans_assign(&ps.coords, &centers, &valid).unwrap();
+
+    // Scalar oracle.
+    let mut counts = vec![0.0f64; k];
+    let mut sums = vec![0.0f64; k * d];
+    let mut inertia = 0.0f64;
+    for i in 0..b {
+        let (mut best, mut best_d2) = (0usize, f32::INFINITY);
+        for c in 0..k {
+            let d2 = ps.dist2(i, &centers[c * d..(c + 1) * d]);
+            if d2 < best_d2 {
+                best_d2 = d2;
+                best = c;
+            }
+        }
+        assert_eq!(out.assign[i] as usize, best, "assignment differs at {i}");
+        counts[best] += 1.0;
+        inertia += f64::from(best_d2);
+        for dd in 0..d {
+            sums[best * d + dd] += f64::from(ps.coords[i * d + dd]);
+        }
+    }
+    for c in 0..k {
+        assert!((f64::from(out.counts[c]) - counts[c]).abs() < 0.5);
+        for dd in 0..d {
+            let have = f64::from(out.sums[c * d + dd]);
+            assert!(
+                (have - sums[c * d + dd]).abs() < 0.05 * sums[c * d + dd].abs().max(10.0),
+                "sum [{c},{dd}]: {have} vs {}",
+                sums[c * d + dd]
+            );
+        }
+    }
+    assert!((f64::from(out.inertia) - inertia).abs() < 0.02 * inertia.max(1.0));
+}
+
+#[test]
+fn kmeans_assign_mask_excludes_padding() {
+    let Some(rt) = runtime() else { return };
+    let (b, d, k) = (rt.batch(), rt.dim(), rt.k());
+    let ps = PointSet::clustered(b, d, k, 0.8, 13);
+    let centers = ps.true_centers.clone();
+    let mut valid = vec![0.0f32; b];
+    for v in valid.iter_mut().take(b / 4) {
+        *v = 1.0;
+    }
+    let out = rt.kmeans_assign(&ps.coords, &centers, &valid).unwrap();
+    let total: f32 = out.counts.iter().sum();
+    assert!((total - (b / 4) as f32).abs() < 0.5, "masked count {total}");
+}
+
+#[test]
+fn gmm_estep_matches_scalar_oracle() {
+    let Some(rt) = runtime() else { return };
+    let (b, d, k) = (rt.batch(), rt.dim(), rt.k());
+    let ps = PointSet::clustered(b, d, k, 0.7, 17);
+
+    // Model: true centers, identity-ish covariances, uniform weights.
+    let means: Vec<f64> = ps.true_centers.iter().map(|&v| f64::from(v)).collect();
+    let mut covs = vec![0.0f64; k * d * d];
+    for c in 0..k {
+        for i in 0..d {
+            covs[c * d * d + i * d + i] = 1.0 + 0.1 * c as f64;
+        }
+    }
+    let mut precs = vec![0.0f64; k * d * d];
+    let mut logdets = vec![0.0f64; k];
+    for c in 0..k {
+        let cov = &covs[c * d * d..(c + 1) * d * d];
+        let l = linalg::cholesky(cov, d).unwrap();
+        logdets[c] = linalg::logdet_from_cholesky(&l, d);
+        precs[c * d * d..(c + 1) * d * d]
+            .copy_from_slice(&linalg::spd_inverse(cov, d).unwrap());
+    }
+    let logw = vec![-(k as f64).ln(); k];
+    let to32 = |v: &[f64]| v.iter().map(|&x| x as f32).collect::<Vec<f32>>();
+    let valid = vec![1.0f32; b];
+    let means32 = to32(&means);
+    let out = rt
+        .gmm_estep(&ps.coords, &means32, &to32(&precs), &to32(&logdets), &to32(&logw), &valid)
+        .unwrap();
+
+    // Masses must sum to the batch and be finite.
+    let total: f32 = out.nk.iter().sum();
+    assert!((total - b as f32).abs() < 0.05 * b as f32, "nk total {total}");
+    assert!(out.loglik.is_finite());
+
+    // Cross-check against the scalar E-step used by the no-runtime path.
+    let model = blaze::apps::gmm::GmmModel {
+        weights: vec![1.0 / k as f64; k],
+        means,
+        covs,
+        dim: d,
+    };
+    let scalar = blaze::apps::gmm::scalar_estep_for_tests(
+        &ps.coords, &model, &precs, &logdets, &logw,
+    );
+    assert!(
+        (f64::from(out.loglik) - scalar[scalar.len() - 1]).abs()
+            < 1e-3 * scalar[scalar.len() - 1].abs(),
+        "loglik pjrt {} vs scalar {}",
+        out.loglik,
+        scalar[scalar.len() - 1]
+    );
+    for c in 0..k {
+        assert!(
+            (f64::from(out.nk[c]) - scalar[c]).abs() < 0.02 * scalar[c].max(1.0),
+            "nk[{c}] {} vs {}",
+            out.nk[c],
+            scalar[c]
+        );
+    }
+}
+
+#[test]
+fn knn_dist_matches_scalar() {
+    let Some(rt) = runtime() else { return };
+    let (b, d) = (rt.batch(), rt.dim());
+    let ps = PointSet::uniform(b, d, 23);
+    let query = vec![0.5f32; d];
+    let got = rt.knn_dist(&ps.coords, &query).unwrap();
+    assert_eq!(got.len(), b);
+    for i in (0..b).step_by(131) {
+        let want = ps.dist2(i, &query);
+        assert!((got[i] - want).abs() < 1e-4 + 1e-4 * want, "{} vs {want}", got[i]);
+    }
+}
