@@ -3,13 +3,18 @@
 //! ```text
 //! blaze <task> [--nodes N] [--workers W] [--engine blaze|conventional]
 //!              [--scale S] [--artifacts DIR] [--seed SEED]
+//!              [--fail-at NODE@BLOCK ...] [--checkpoint-every BLOCKS]
 //! ```
 //!
 //! Tasks: `pi`, `wordcount`, `pagerank`, `kmeans`, `gmm`, `knn`, `all`.
+//! `--fail-at 2@5` kills virtual node 2 after 5 map blocks commit
+//! (repeatable); either fault flag routes the job through the recoverable
+//! engine ([`crate::fault`]).
 
 use crate::apps;
 use crate::coordinator::cluster::{Cluster, ClusterConfig, EngineKind};
 use crate::data::{corpus_lines, Graph, PointSet};
+use crate::fault::{FailurePlan, FaultConfig};
 use crate::runtime::Runtime;
 
 /// Parsed CLI options.
@@ -29,6 +34,10 @@ pub struct Options {
     pub artifacts: String,
     /// RNG seed.
     pub seed: u64,
+    /// Injected failures as `(node, block)` pairs (`--fail-at NODE@BLOCK`).
+    pub fail_at: Vec<(usize, usize)>,
+    /// Checkpoint cadence in committed blocks (`--checkpoint-every N`).
+    pub checkpoint_every: Option<usize>,
 }
 
 impl Default for Options {
@@ -41,13 +50,31 @@ impl Default for Options {
             scale: 1,
             artifacts: "artifacts".into(),
             seed: 42,
+            fail_at: Vec::new(),
+            checkpoint_every: None,
         }
+    }
+}
+
+impl Options {
+    /// Fault policy assembled from the fault flags.
+    pub fn fault_config(&self) -> FaultConfig {
+        let mut plan = FailurePlan::none();
+        for &(node, block) in &self.fail_at {
+            plan = plan.and_kill_at_block(node, block);
+        }
+        let mut fault = FaultConfig::disabled().with_plan(plan);
+        if let Some(every) = self.checkpoint_every {
+            fault = fault.with_checkpoint_every(every);
+        }
+        fault
     }
 }
 
 const USAGE: &str = "usage: blaze <pi|wordcount|pagerank|kmeans|gmm|knn|all> \
 [--nodes N] [--workers W] [--engine blaze|conventional] [--scale S] \
-[--artifacts DIR|none] [--seed SEED]";
+[--artifacts DIR|none] [--seed SEED] [--fail-at NODE@BLOCK ...] \
+[--checkpoint-every BLOCKS]";
 
 /// Parse argv (without the program name).
 pub fn parse(args: &[String]) -> Result<Options, String> {
@@ -72,6 +99,20 @@ pub fn parse(args: &[String]) -> Result<Options, String> {
             "--scale" => opts.scale = next("factor")?.parse().map_err(|e| format!("{e}"))?,
             "--seed" => opts.seed = next("seed")?.parse().map_err(|e| format!("{e}"))?,
             "--artifacts" => opts.artifacts = next("dir")?,
+            "--checkpoint-every" => {
+                opts.checkpoint_every =
+                    Some(next("block count")?.parse().map_err(|e| format!("{e}"))?)
+            }
+            "--fail-at" => {
+                let spec = next("NODE@BLOCK spec")?;
+                let Some((node, block)) = spec.split_once('@') else {
+                    return Err(format!("--fail-at wants NODE@BLOCK, got {spec:?}"));
+                };
+                opts.fail_at.push((
+                    node.parse().map_err(|e| format!("--fail-at node: {e}"))?,
+                    block.parse().map_err(|e| format!("--fail-at block: {e}"))?,
+                ));
+            }
             "--engine" => {
                 opts.engine = match next("name")?.as_str() {
                     "blaze" | "eager" => EngineKind::Eager,
@@ -92,7 +133,8 @@ fn make_cluster(opts: &Options) -> Cluster {
     Cluster::new(
         ClusterConfig::sized(opts.nodes, opts.workers)
             .with_engine(opts.engine)
-            .with_seed(opts.seed),
+            .with_seed(opts.seed)
+            .with_fault(opts.fault_config()),
     )
 }
 
@@ -209,6 +251,34 @@ mod tests {
         assert!(parse(&argv("pi --nodes")).is_err());
         assert!(parse(&argv("pi --nodes 0")).is_err());
         assert!(parse(&argv("pi --frobnicate 1")).is_err());
+        assert!(parse(&argv("pi --fail-at 2")).is_err());
+        assert!(parse(&argv("pi --fail-at two@1")).is_err());
+        assert!(parse(&argv("pi --checkpoint-every x")).is_err());
+    }
+
+    #[test]
+    fn parse_fault_flags() {
+        let o = parse(&argv("wordcount --fail-at 1@3 --fail-at 2@7 --checkpoint-every 4"))
+            .unwrap();
+        assert_eq!(o.fail_at, vec![(1, 3), (2, 7)]);
+        assert_eq!(o.checkpoint_every, Some(4));
+        let fault = o.fault_config();
+        assert!(fault.enabled());
+        assert_eq!(fault.plan.events().len(), 2);
+        assert_eq!(fault.checkpoint_every_blocks, Some(4));
+        // No fault flags → the ordinary engines run.
+        assert!(!parse(&argv("wordcount")).unwrap().fault_config().enabled());
+    }
+
+    #[test]
+    fn run_wordcount_with_failure_end_to_end() {
+        assert_eq!(
+            run(&argv(
+                "wordcount --nodes 3 --workers 2 --scale 1 --artifacts none \
+                 --fail-at 1@2 --checkpoint-every 3"
+            )),
+            0
+        );
     }
 
     #[test]

@@ -150,6 +150,33 @@ where
         let nodes = self.cluster.nodes();
         let (counts, bytes) = self.slot_weights();
         let plan = rebalance::plan(&self.slot_map, &counts, &bytes, nodes);
+        self.apply_plan(plan, "disthashmap.rebalance")
+    }
+
+    /// Evacuate `dead` nodes: recompute the slot map over the survivors
+    /// ([`rebalance::plan_with_dead`]) and re-home every affected entry,
+    /// with the moved bytes counted through the flow model. After this no
+    /// key routes to a dead node. No-op when `dead` is empty and the load
+    /// is already balanced.
+    pub fn evacuate(&mut self, dead: &[usize]) -> MovePlan
+    where
+        K: FastSer,
+        V: FastSer,
+    {
+        let nodes = self.cluster.nodes();
+        let (counts, bytes) = self.slot_weights();
+        let plan = rebalance::plan_with_dead(&self.slot_map, &counts, &bytes, nodes, dead);
+        self.apply_plan(plan, "disthashmap.evacuate")
+    }
+
+    /// Execute a rebalance plan: move entries, adopt the new map, record
+    /// the transfer.
+    fn apply_plan(&mut self, plan: MovePlan, label: &str) -> MovePlan
+    where
+        K: FastSer,
+        V: FastSer,
+    {
+        let nodes = self.cluster.nodes();
         let mut flows = FlowMatrix::new(nodes);
         for mv in &plan.moves {
             // Re-home every entry in the moved slot, serializing for real.
@@ -172,7 +199,7 @@ where
         self.slot_map = plan.new_map.clone();
         let transfer = flows.phase_time(&self.cluster.config().network);
         self.cluster.metrics().record_run(RunStats {
-            label: "disthashmap.rebalance".into(),
+            label: label.into(),
             engine: self.cluster.config().engine.to_string(),
             nodes,
             workers_per_node: self.cluster.workers(),
@@ -231,6 +258,37 @@ where
             }
             f(w, k, v);
         }
+    }
+}
+
+/// Checkpoint support: a shard snapshots as one fast-codec pair batch and
+/// restores by *replacing* the shard (the snapshot already contains any
+/// merged-into history).
+impl<K, V> crate::fault::Recover for DistHashMap<K, V>
+where
+    K: Hash + Eq + Clone + FastSer,
+    V: Clone + FastSer,
+{
+    fn snapshot_shard(&self, node: usize) -> Option<Vec<u8>> {
+        let pairs: Vec<(K, V)> =
+            self.shards[node].iter().map(|(k, v)| (k.clone(), v.clone())).collect();
+        Some(crate::ser::fastser::encode_pairs(&pairs))
+    }
+
+    fn restore_shard(
+        &mut self,
+        node: usize,
+        bytes: &[u8],
+    ) -> Result<(), crate::ser::fastser::DecodeError> {
+        let pairs = crate::ser::fastser::decode_pairs_exact::<K, V>(bytes)?;
+        let mut shard = FxHashMap::default();
+        shard.extend(pairs);
+        self.shards[node] = shard;
+        Ok(())
+    }
+
+    fn lose_shard(&mut self, node: usize) {
+        self.shards[node] = FxHashMap::default();
     }
 }
 
@@ -338,6 +396,28 @@ mod tests {
             assert_eq!(m.get(&format!("key{i}")), Some(i), "key{i} lost");
         }
         assert_eq!(m.len(), 1000);
+    }
+
+    #[test]
+    fn evacuate_empties_dead_nodes_and_keeps_lookups() {
+        let c = Cluster::local(4, 1);
+        let mut m: DistHashMap<String, u64> = DistHashMap::new(&c);
+        for i in 0..1000 {
+            m.insert(format!("key{i}"), i);
+        }
+        let plan = m.evacuate(&[1, 3]);
+        assert!(plan.cost_bytes() > 0, "dead-node entries must move");
+        // Dead shards drained; no key routes to them anymore.
+        assert!(m.shard(1).is_empty());
+        assert!(m.shard(3).is_empty());
+        for i in 0..1000 {
+            let key = format!("key{i}");
+            let owner = m.owner_of(&key);
+            assert!(owner == 0 || owner == 2, "key{i} routed to dead node {owner}");
+            assert_eq!(m.get(&key), Some(i), "key{i} lost in evacuation");
+        }
+        assert_eq!(m.len(), 1000);
+        assert!(c.metrics().last_run().unwrap().label.contains("evacuate"));
     }
 
     #[test]

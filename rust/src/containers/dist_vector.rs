@@ -279,6 +279,33 @@ impl<T> DistInput for DistVector<T> {
     }
 }
 
+/// Checkpoint support: a shard snapshots as its element vector (fast
+/// codec) and restores by replacement, preserving the shard's length and
+/// block boundaries.
+impl<V: Clone + FastSer> crate::fault::Recover for DistVector<V> {
+    fn snapshot_shard(&self, node: usize) -> Option<Vec<u8>> {
+        let mut w = crate::ser::fastser::Writer::new();
+        self.shards[node].write(&mut w);
+        Some(w.take())
+    }
+
+    fn restore_shard(
+        &mut self,
+        node: usize,
+        bytes: &[u8],
+    ) -> Result<(), crate::ser::fastser::DecodeError> {
+        let mut r = crate::ser::fastser::Reader::new(bytes);
+        let shard = Vec::<V>::read(&mut r)?;
+        r.expect_end()?;
+        self.shards[node] = shard;
+        Ok(())
+    }
+
+    fn lose_shard(&mut self, node: usize) {
+        self.shards[node] = Vec::new();
+    }
+}
+
 /// `DistVector` as a MapReduce target: keys are global element indices,
 /// routed to the owning node's shard (PageRank's score vector).
 impl<V: Clone> ReduceTarget<usize, V> for DistVector<V> {

@@ -3,6 +3,7 @@
 use std::cell::RefCell;
 use std::rc::Rc;
 
+use crate::fault::FaultConfig;
 use crate::net::model::NetworkModel;
 use crate::util::alloc::{AllocMode, BufferPool};
 
@@ -57,6 +58,10 @@ pub struct ClusterConfig {
     /// Modeled per-job task-launch overhead for the conventional engine,
     /// seconds (Spark job/stage scheduling latency).
     pub conventional_job_latency_sec: f64,
+    /// Fault-tolerance policy: failure injection plan plus checkpoint
+    /// cadence. When enabled, jobs run through the recoverable engine
+    /// ([`crate::fault::engine`]).
+    pub fault: FaultConfig,
 }
 
 impl Default for ClusterConfig {
@@ -71,6 +76,7 @@ impl Default for ClusterConfig {
             thread_cache_entries: 1 << 16,
             conventional_overhead_sec: 250e-9,
             conventional_job_latency_sec: 20e-3,
+            fault: FaultConfig::disabled(),
         }
     }
 }
@@ -102,6 +108,12 @@ impl ClusterConfig {
     /// Builder-style seed override.
     pub fn with_seed(mut self, seed: u64) -> Self {
         self.seed = seed;
+        self
+    }
+
+    /// Builder-style fault-tolerance policy override.
+    pub fn with_fault(mut self, fault: FaultConfig) -> Self {
+        self.fault = fault;
         self
     }
 }

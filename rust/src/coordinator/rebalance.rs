@@ -133,6 +133,55 @@ pub fn plan(
     MovePlan { new_map, moves }
 }
 
+/// Plan a rebalance when some nodes are dead: every slot a dead node owns
+/// must move, and no slot may be assigned to a dead node. Used after a
+/// failure to evacuate a lost worker's key range onto the survivors.
+///
+/// Unlike [`plan`], this never keeps the incumbent map while any dead node
+/// still owns slots — evacuation is mandatory even when it worsens the
+/// imbalance metric.
+pub fn plan_with_dead(
+    current: &SlotMap,
+    slot_weights: &[u64],
+    slot_bytes: &[u64],
+    nodes: usize,
+    dead: &[usize],
+) -> MovePlan {
+    assert_eq!(slot_weights.len(), NUM_SLOTS);
+    assert_eq!(slot_bytes.len(), NUM_SLOTS);
+    if dead.is_empty() {
+        return plan(current, slot_weights, slot_bytes, nodes);
+    }
+    let live: Vec<usize> = (0..nodes).filter(|n| !dead.contains(n)).collect();
+    assert!(!live.is_empty(), "cannot rebalance with every node dead");
+    let ranges = weighted_contiguous_ranges(slot_weights, live.len());
+    let mut owner = vec![0usize; NUM_SLOTS];
+    for (group, range) in ranges.iter().enumerate() {
+        for slot in range.clone() {
+            owner[slot] = live[group];
+        }
+    }
+    let new_map = SlotMap { owner };
+    let incumbent_clean = !current.owner.iter().any(|n| dead.contains(n));
+    if incumbent_clean
+        && imbalance(slot_weights, &new_map, nodes) >= imbalance(slot_weights, current, nodes)
+    {
+        // Nothing to evacuate and the contiguous heuristic lost: keep what
+        // we have.
+        return MovePlan { new_map: current.clone(), moves: Vec::new() };
+    }
+    let moves = (0..NUM_SLOTS)
+        .filter(|&s| current.node_of(s) != new_map.node_of(s))
+        .map(|s| SlotMove {
+            slot: s,
+            from: current.node_of(s),
+            to: new_map.node_of(s),
+            bytes: slot_bytes[s],
+        })
+        .collect();
+    MovePlan { new_map, moves }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -171,6 +220,67 @@ mod tests {
         let bytes = vec![100u64; NUM_SLOTS];
         let plan = plan(&map, &weights, &bytes, nodes);
         assert_eq!(plan.cost_bytes(), 0, "balanced load should not move slots");
+    }
+
+    #[test]
+    fn dead_node_slots_all_evacuated() {
+        let nodes = 4;
+        let map = SlotMap::even(nodes);
+        let weights = vec![10u64; NUM_SLOTS];
+        let bytes = vec![16u64; NUM_SLOTS];
+        let dead = [2usize];
+        let p = plan_with_dead(&map, &weights, &bytes, nodes, &dead);
+        // No slot may stay on (or move to) the dead node.
+        for slot in 0..NUM_SLOTS {
+            assert_ne!(p.new_map.node_of(slot), 2, "slot {slot} assigned to dead node");
+        }
+        // Every slot the dead node owned moves, and its bytes are charged.
+        let owned: Vec<usize> = (0..NUM_SLOTS).filter(|&s| map.node_of(s) == 2).collect();
+        assert!(!owned.is_empty());
+        for s in &owned {
+            assert!(
+                p.moves.iter().any(|m| m.slot == *s && m.from == 2),
+                "dead slot {s} not moved"
+            );
+        }
+        assert!(p.cost_bytes() >= owned.len() as u64 * 16);
+        // Survivors stay balanced.
+        let counts = p.new_map.slots_per_node(nodes);
+        assert_eq!(counts[2], 0);
+        for n in [0usize, 1, 3] {
+            assert!(counts[n] >= NUM_SLOTS / 4, "survivor {n} underloaded: {counts:?}");
+        }
+    }
+
+    #[test]
+    fn plan_with_dead_skews_by_weight_among_survivors() {
+        let nodes = 3;
+        let map = SlotMap::even(nodes);
+        let mut weights = vec![1u64; NUM_SLOTS];
+        weights[0] = 500; // heavy head slot
+        let bytes = vec![8u64; NUM_SLOTS];
+        let p = plan_with_dead(&map, &weights, &bytes, nodes, &[1]);
+        let after = imbalance(&weights, &p.new_map, nodes);
+        // Heavy slot isolated on one survivor; dead node owns nothing.
+        assert_eq!(p.new_map.slots_per_node(nodes)[1], 0);
+        assert!(after < 2.0, "imbalance {after}");
+    }
+
+    #[test]
+    fn plan_with_dead_no_dead_delegates() {
+        let nodes = 2;
+        let map = SlotMap::even(nodes);
+        let weights = vec![5u64; NUM_SLOTS];
+        let bytes = vec![4u64; NUM_SLOTS];
+        let p = plan_with_dead(&map, &weights, &bytes, nodes, &[]);
+        assert_eq!(p.cost_bytes(), 0, "balanced + no deaths = no moves");
+    }
+
+    #[test]
+    #[should_panic(expected = "every node dead")]
+    fn all_dead_panics() {
+        let map = SlotMap::even(2);
+        let _ = plan_with_dead(&map, &[1; NUM_SLOTS], &[1; NUM_SLOTS], 2, &[0, 1]);
     }
 
     #[test]

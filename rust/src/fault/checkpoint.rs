@@ -1,0 +1,191 @@
+//! Target checkpointing: per-shard snapshots with a manifest.
+//!
+//! A [`Checkpoint`] captures a reduce target's per-node shards as
+//! [`crate::ser::fastser`]-encoded buffers plus a [`CheckpointManifest`]
+//! describing when it was taken and which `(block, shard)` partials it
+//! already contains (the commit ledger). The recoverable engine
+//! ([`super::engine`]) replicates each shard's bytes to the driver
+//! (node 0, the stable store — never killed) through the flow model, so
+//! checkpoint cost shows up in the virtual makespan and a replica cannot
+//! be lost to a later failure; a dead node's shard restores driver→node
+//! from the latest snapshot.
+//!
+//! Targets opt in through [`Recover`]: `snapshot_shard` / `restore_shard`
+//! / `lose_shard`. Driver-resident targets (`Vec<V>`, gathered at node 0)
+//! return `None` from `snapshot_shard` — the driver is durable and node 0
+//! is never killed, so there is nothing to snapshot.
+
+use std::collections::BTreeSet;
+
+use crate::ser::fastser::DecodeError;
+
+/// How a reduce target participates in checkpointing and recovery.
+///
+/// Implemented by [`crate::containers::DistHashMap`] (hash shards),
+/// [`crate::containers::DistVector`] (block shards) and `Vec<V>`
+/// (driver-resident, durable).
+pub trait Recover {
+    /// Serialized content of `node`'s shard, or `None` when the shard is
+    /// driver-resident and never lost.
+    fn snapshot_shard(&self, node: usize) -> Option<Vec<u8>>;
+
+    /// Replace `node`'s shard with a buffer from [`Recover::snapshot_shard`].
+    /// Must reject truncated or corrupt buffers rather than panicking.
+    fn restore_shard(&mut self, node: usize, bytes: &[u8]) -> Result<(), DecodeError>;
+
+    /// Drop `node`'s shard content (simulates losing the worker's memory).
+    fn lose_shard(&mut self, node: usize);
+}
+
+/// `Vec<V>` targets gather at the driver (node 0, never killed): durable,
+/// nothing to snapshot or lose.
+impl<V> Recover for Vec<V> {
+    fn snapshot_shard(&self, _node: usize) -> Option<Vec<u8>> {
+        None
+    }
+
+    fn restore_shard(&mut self, _node: usize, _bytes: &[u8]) -> Result<(), DecodeError> {
+        Err(DecodeError { at: 0, what: "driver-resident target has no shards to restore" })
+    }
+
+    fn lose_shard(&mut self, _node: usize) {}
+}
+
+/// Commit ledger: the set of `(block, shard)` partials already reduced
+/// into the target. A `BTreeSet` so iteration (and therefore recovery
+/// replay order) is deterministic.
+pub type Ledger = BTreeSet<(usize, usize)>;
+
+/// Descriptive header of one checkpoint.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CheckpointManifest {
+    /// Globally committed block count when the snapshot was taken
+    /// (0 = the mandatory job-start checkpoint).
+    pub at_commit: usize,
+    /// Encoded size of each node's shard (`None` = driver-resident).
+    pub shard_bytes: Vec<Option<u64>>,
+}
+
+/// One captured checkpoint: manifest + shard buffers + ledger state.
+#[derive(Debug, Clone)]
+pub struct Checkpoint {
+    /// Snapshot header.
+    pub manifest: CheckpointManifest,
+    /// Per-node encoded shard content.
+    pub shards: Vec<Option<Vec<u8>>>,
+    /// Ledger state at snapshot time — partials the snapshot contains.
+    pub ledger: Ledger,
+}
+
+impl Checkpoint {
+    /// Capture every shard of `target` on an `nodes`-node cluster.
+    pub fn capture<T: Recover + ?Sized>(
+        target: &T,
+        nodes: usize,
+        at_commit: usize,
+        ledger: &Ledger,
+    ) -> Self {
+        let shards: Vec<Option<Vec<u8>>> =
+            (0..nodes).map(|n| target.snapshot_shard(n)).collect();
+        let manifest = CheckpointManifest {
+            at_commit,
+            shard_bytes: shards.iter().map(|s| s.as_ref().map(|b| b.len() as u64)).collect(),
+        };
+        Self { manifest, shards, ledger: ledger.clone() }
+    }
+
+    /// Total bytes across all captured shards.
+    pub fn total_bytes(&self) -> u64 {
+        self.manifest.shard_bytes.iter().flatten().sum()
+    }
+
+    /// Restore `node`'s shard into `target`; returns the bytes moved, or 0
+    /// when the shard is driver-resident (nothing to restore).
+    pub fn restore_shard_into<T: Recover + ?Sized>(
+        &self,
+        target: &mut T,
+        node: usize,
+    ) -> Result<u64, DecodeError> {
+        match &self.shards[node] {
+            Some(bytes) => {
+                target.restore_shard(node, bytes)?;
+                Ok(bytes.len() as u64)
+            }
+            None => Ok(0),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::containers::DistHashMap;
+    use crate::coordinator::cluster::Cluster;
+
+    fn populated_map(c: &Cluster) -> DistHashMap<String, u64> {
+        let mut m = DistHashMap::new(c);
+        for i in 0..200u64 {
+            m.insert(format!("key{i}"), i);
+        }
+        m
+    }
+
+    #[test]
+    fn capture_restore_roundtrip() {
+        let c = Cluster::local(3, 2);
+        let mut m = populated_map(&c);
+        let before = m.collect();
+        let ckpt = Checkpoint::capture(&m, 3, 0, &Ledger::new());
+        assert!(ckpt.total_bytes() > 0);
+        assert_eq!(ckpt.manifest.at_commit, 0);
+        // Lose and restore every shard; content must be identical.
+        for node in 0..3 {
+            m.lose_shard(node);
+        }
+        assert!(m.is_empty());
+        for node in 0..3 {
+            ckpt.restore_shard_into(&mut m, node).unwrap();
+        }
+        assert_eq!(m.collect(), before);
+    }
+
+    #[test]
+    fn manifest_sizes_match_shards() {
+        let c = Cluster::local(4, 1);
+        let m = populated_map(&c);
+        let ckpt = Checkpoint::capture(&m, 4, 7, &Ledger::new());
+        for (size, shard) in ckpt.manifest.shard_bytes.iter().zip(&ckpt.shards) {
+            assert_eq!(*size, shard.as_ref().map(|b| b.len() as u64));
+        }
+        assert_eq!(ckpt.manifest.at_commit, 7);
+    }
+
+    #[test]
+    fn truncated_shard_rejected_not_panicking() {
+        let c = Cluster::local(2, 1);
+        let mut m = populated_map(&c);
+        let ckpt = Checkpoint::capture(&m, 2, 0, &Ledger::new());
+        let bytes = ckpt.shards[0].as_ref().unwrap();
+        // Every truncation of a non-empty shard must surface as Err.
+        assert!(!bytes.is_empty());
+        for cut in 0..bytes.len().min(32) {
+            assert!(m.restore_shard(0, &bytes[..cut]).is_err(), "cut {cut} accepted");
+        }
+        // Trailing garbage is corruption too.
+        let mut noisy = bytes.clone();
+        noisy.extend_from_slice(&[0x7f, 0x7f]);
+        assert!(m.restore_shard(0, &noisy).is_err());
+    }
+
+    #[test]
+    fn driver_resident_target_has_no_shards() {
+        let v: Vec<u64> = vec![1, 2, 3];
+        assert!(v.snapshot_shard(0).is_none());
+        let ckpt = Checkpoint::capture(&v, 2, 0, &Ledger::new());
+        assert_eq!(ckpt.total_bytes(), 0);
+        let mut v = v;
+        assert_eq!(ckpt.restore_shard_into(&mut v, 1).unwrap(), 0);
+        v.lose_shard(1); // no-op
+        assert_eq!(v, vec![1, 2, 3]);
+    }
+}

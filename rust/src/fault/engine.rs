@@ -1,0 +1,438 @@
+//! The recoverable MapReduce engine: block-granular execution with
+//! checkpoints, failure injection, and deterministic re-execution.
+//!
+//! Selected by [`crate::mapreduce::mapreduce`] whenever the cluster's
+//! [`FaultConfig`](super::FaultConfig) is enabled. The job is decomposed
+//! into `nodes × workers` *map blocks* (the same per-worker item ranges
+//! the ordinary engines use, with the same `(seed, block)` RNG streams, so
+//! a block's output is identical no matter which node executes it or how
+//! many times). Blocks commit **in block-id order**; a commit eagerly
+//! reduces the block's locally-combined partials into the target, shard by
+//! shard, and records `(block, shard)` in the commit ledger. Because every
+//! shard therefore absorbs partials in the same ascending block order in
+//! every run, final results are *byte-identical* with and without
+//! failures — even for non-associative float reductions.
+//!
+//! **Checkpointing.** A mandatory checkpoint at job start (epoch 0) plus
+//! one every `checkpoint_every_blocks` commits captures all target shards
+//! ([`Checkpoint`]) and the ledger. Shard bytes replicate to the *driver*
+//! (node 0 — the stable store, never killed) through the flow model, so
+//! checkpoint cost is visible in the virtual makespan and a replica can
+//! never be lost to a later failure.
+//!
+//! **Recovery.** When the [`FailurePlan`](super::FailurePlan) kills a node
+//! at a commit boundary: (1) its still-pending map blocks are reassigned
+//! round-robin to survivors and re-executed from the (durable) input; (2)
+//! its reduce shard is dropped and restored from the latest checkpoint,
+//! with restore bytes charged driver→node — the restored shard lives on a
+//! hot-standby *replacement* that adopts the dead node's identity, so key
+//! routing is unchanged and the dead node executes no further map blocks
+//! (jobs that prefer re-homing keys onto survivors instead can call
+//! [`crate::containers::DistHashMap::evacuate`] between jobs); (3) ledger
+//! entries for that shard
+//! newer than the checkpoint are rolled back and their blocks re-executed
+//! as *replays* that re-reduce **only** the lost shard's partial — the
+//! ledger dedupes every other shard's already-absorbed partials, which is
+//! what preserves the paper's "targets are merged into, never cleared"
+//! semantics without double counting.
+
+use std::collections::hash_map::Entry;
+use std::collections::{BTreeMap, BTreeSet};
+use std::hash::Hash;
+use std::time::Instant;
+
+use crate::coordinator::cluster::EngineKind;
+use crate::coordinator::metrics::RunStats;
+use crate::mapreduce::reducers::Reducer;
+use crate::mapreduce::{DistInput, Emit, ReduceTarget, RunRecorder};
+use crate::net::sim::FlowMatrix;
+use crate::net::vtime::VirtualTime;
+use crate::ser::fastser::{decode_pairs_exact, encode_pairs, FastSer};
+use crate::ser::tagged::{decode_pairs_tagged, encode_pairs_tagged, TaggedSer};
+use crate::util::hash::FxHashMap;
+
+use super::checkpoint::{Checkpoint, Ledger, Recover};
+use super::plan::FailureTrigger;
+
+/// Recovery bookkeeping for one job, surfaced as the `fault[<label>]`
+/// metrics note (no public accessor yet — promote to a returned value if
+/// callers outgrow the note).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub(crate) struct FtStats {
+    /// Checkpoints taken (including the mandatory epoch-0 one).
+    pub checkpoints: usize,
+    /// Total bytes captured across all checkpoints.
+    pub checkpoint_bytes: u64,
+    /// Failures actually injected (in-range, live, non-driver victims).
+    pub failures: usize,
+    /// Planned failures ignored (driver, out of range, already dead).
+    pub failures_ignored: usize,
+    /// Pending map blocks reassigned from dead nodes to survivors.
+    pub blocks_reassigned: usize,
+    /// Committed blocks re-executed to rebuild a lost shard.
+    pub blocks_replayed: usize,
+    /// Bytes moved restoring shards from checkpoints.
+    pub restore_bytes: u64,
+}
+
+/// A block waiting to execute (or re-execute).
+#[derive(Debug, Clone)]
+struct PendingBlock {
+    /// Node whose compute budget the execution is charged to.
+    exec_node: usize,
+    /// `None` = commit every shard's partial; `Some(shards)` = a replay
+    /// that re-reduces only the listed (restored) shards.
+    only: Option<BTreeSet<usize>>,
+}
+
+/// Deterministic round-robin pick over live nodes.
+fn next_alive_rr(alive: &[bool], rr: &mut usize) -> usize {
+    let n = alive.len();
+    for _ in 0..n {
+        let cand = *rr % n;
+        *rr += 1;
+        if alive[cand] {
+            return cand;
+        }
+    }
+    0 // node 0 is never killed
+}
+
+/// Run one MapReduce through the recoverable engine.
+#[allow(clippy::too_many_lines)]
+pub fn run<I, F, K2, V2, T>(label: &str, input: &I, mapper: &F, red: &Reducer<V2>, target: &mut T)
+where
+    I: DistInput,
+    F: Fn(&I::K, &I::V, Emit<'_, K2, V2>),
+    K2: Hash + Eq + Clone + FastSer + TaggedSer,
+    V2: Clone + FastSer + TaggedSer,
+    T: ReduceTarget<K2, V2> + Recover,
+{
+    let rec = RunRecorder::new(label);
+    let cluster = input.cluster().clone();
+    let cfg = cluster.config().clone();
+    let (nodes, workers) = (cfg.nodes, cfg.workers_per_node);
+    let fault = cfg.fault.clone();
+    let conventional = cfg.engine == EngineKind::Conventional;
+    let n_blocks = nodes * workers;
+
+    let mut vt = VirtualTime::new();
+    if conventional {
+        vt.fixed_phase("job-launch", cfg.conventional_job_latency_sec);
+    }
+
+    let mut alive = vec![true; nodes];
+    let mut ledger = Ledger::new();
+    let mut ckpt_flows = FlowMatrix::new(nodes);
+    let mut shuffle_flows = FlowMatrix::new(nodes);
+    let mut restore_flows = FlowMatrix::new(nodes);
+    let mut stats = FtStats::default();
+    let mut peak_ckpt_bytes = 0u64;
+
+    // Mandatory epoch-0 checkpoint: guarantees any pre-existing
+    // (merged-into) target state is restorable.
+    let mut latest = Checkpoint::capture(&*target, nodes, 0, &ledger);
+    account_checkpoint(&latest, &mut ckpt_flows, &mut stats, &mut peak_ckpt_bytes);
+
+    let mut pending: BTreeMap<usize, PendingBlock> = (0..n_blocks)
+        .map(|b| (b, PendingBlock { exec_node: b / workers, only: None }))
+        .collect();
+    let mut exec_epoch = vec![0u32; n_blocks];
+    let mut fired = vec![false; fault.plan.events().len()];
+    let mut rr = 0usize;
+
+    let mut per_node_secs = vec![0.0f64; nodes];
+    let mut per_node_reduce_secs = vec![0.0f64; nodes];
+    let mut pairs_emitted = 0u64;
+    let mut pairs_shuffled = 0u64;
+    let mut peak_staged_bytes = 0u64;
+    let mut committed = 0usize;
+
+    loop {
+        let Some(b) = pending.keys().next().copied() else { break };
+        let p = pending.remove(&b).expect("pending block present");
+        let (home, w) = (b / workers, b % workers);
+        exec_epoch[b] += 1;
+
+        // ---- Execute block `b` on `p.exec_node` -------------------------
+        // The RNG stream is keyed by the block's *home* identity, matching
+        // the ordinary engines, so re-execution elsewhere is identical.
+        let t0 = Instant::now();
+        crate::util::random::set_stream(cfg.seed, b as u64);
+        let mut parts: Vec<Vec<(K2, V2)>> = (0..nodes).map(|_| Vec::new()).collect();
+        let mut emitted_here = 0u64;
+        if conventional {
+            let t_ref: &T = &*target;
+            input.for_each_worker_item(home, workers, |iw, k, v| {
+                if iw != w {
+                    return;
+                }
+                let mut emit = |k2: K2, v2: V2| {
+                    emitted_here += 1;
+                    parts[t_ref.shard_of(&k2, nodes)].push((k2, v2));
+                };
+                mapper(k, v, &mut emit);
+            });
+        } else {
+            let mut cache: FxHashMap<K2, V2> = FxHashMap::default();
+            input.for_each_worker_item(home, workers, |iw, k, v| {
+                if iw != w {
+                    return;
+                }
+                let mut emit = |k2: K2, v2: V2| {
+                    emitted_here += 1;
+                    match cache.entry(k2) {
+                        Entry::Occupied(mut e) => red.apply(e.get_mut(), &v2),
+                        Entry::Vacant(e) => {
+                            e.insert(v2);
+                        }
+                    }
+                };
+                mapper(k, v, &mut emit);
+            });
+            for (k, v) in cache.drain() {
+                parts[target.shard_of(&k, nodes)].push((k, v));
+            }
+        }
+        let mut exec_secs = t0.elapsed().as_secs_f64();
+        if conventional {
+            exec_secs += emitted_here as f64 * cfg.conventional_overhead_sec;
+        }
+        per_node_secs[p.exec_node] += exec_secs;
+        pairs_emitted += emitted_here;
+
+        // ---- Commit: eager-reduce each shard's partial once -------------
+        let mut staged_bytes = 0u64;
+        for (dst, part) in parts.into_iter().enumerate() {
+            if part.is_empty() {
+                continue;
+            }
+            if let Some(only) = &p.only {
+                if !only.contains(&dst) {
+                    continue;
+                }
+            }
+            if ledger.contains(&(b, dst)) {
+                continue; // dedupe re-emitted partials
+            }
+            pairs_shuffled += part.len() as u64;
+            let t1 = Instant::now();
+            if dst == p.exec_node {
+                // Node-local partials never serialize (eager semantics).
+                target.absorb(dst, part, red);
+            } else {
+                // Cross-node: really serialize, count, and decode — eager
+                // uses the tag-less fast codec, conventional the tagged one.
+                let decoded = if conventional {
+                    let buf = encode_pairs_tagged(&part);
+                    staged_bytes += buf.len() as u64;
+                    shuffle_flows.record(p.exec_node, dst, buf.len() as u64);
+                    decode_pairs_tagged::<K2, V2>(&buf).expect("ft shuffle payload must decode")
+                } else {
+                    let buf = encode_pairs(&part);
+                    staged_bytes += buf.len() as u64;
+                    shuffle_flows.record(p.exec_node, dst, buf.len() as u64);
+                    decode_pairs_exact::<K2, V2>(&buf).expect("ft shuffle payload must decode")
+                };
+                target.absorb(dst, decoded, red);
+            }
+            per_node_reduce_secs[dst] += t1.elapsed().as_secs_f64();
+            ledger.insert((b, dst));
+        }
+        peak_staged_bytes = peak_staged_bytes.max(staged_bytes);
+        committed += 1;
+
+        // ---- Periodic checkpoint ----------------------------------------
+        if let Some(every) = fault.checkpoint_every_blocks {
+            if every > 0 && committed % every == 0 && !pending.is_empty() {
+                latest = Checkpoint::capture(&*target, nodes, committed, &ledger);
+                account_checkpoint(&latest, &mut ckpt_flows, &mut stats, &mut peak_ckpt_bytes);
+            }
+        }
+
+        // ---- Failure triggers (block boundaries only) -------------------
+        let elapsed = per_node_secs
+            .iter()
+            .map(|&s| VirtualTime::scaled_compute(s, workers))
+            .fold(0.0f64, f64::max);
+        for (i, ev) in fault.plan.events().iter().enumerate() {
+            if fired[i] {
+                continue;
+            }
+            let due = match ev.trigger {
+                FailureTrigger::AtBlock(n) => committed >= n,
+                FailureTrigger::AtTime(secs) => elapsed >= secs,
+            };
+            if !due {
+                continue;
+            }
+            fired[i] = true;
+            let d = ev.node;
+            if d == 0 || d >= nodes || !alive[d] {
+                stats.failures_ignored += 1;
+                cluster
+                    .metrics()
+                    .record_note(format!("fault[{label}]: ignored kill of node {d}"));
+                continue;
+            }
+            alive[d] = false;
+            stats.failures += 1;
+
+            // (1) Reassign the dead node's pending map blocks to survivors.
+            let orphaned: Vec<usize> = pending
+                .iter()
+                .filter(|(_, pb)| pb.exec_node == d)
+                .map(|(&b2, _)| b2)
+                .collect();
+            for b2 in orphaned {
+                let s = next_alive_rr(&alive, &mut rr);
+                pending.get_mut(&b2).expect("orphaned block pending").exec_node = s;
+                stats.blocks_reassigned += 1;
+            }
+
+            // (2) Lose the shard, restore it from the latest checkpoint —
+            // fetched from the driver replica (node 0 holds every shard's
+            // checkpoint and is never killed, so the source always exists).
+            target.lose_shard(d);
+            let restored = latest
+                .restore_shard_into(target, d)
+                .expect("checkpoint shard must decode");
+            if restored > 0 {
+                restore_flows.record(0, d, restored);
+                stats.restore_bytes += restored;
+            }
+
+            // (3) Roll back post-checkpoint commits into that shard and
+            // replay their blocks on survivors (only the lost shard's
+            // partial re-reduces; the ledger keeps every other shard's).
+            let rollback: Vec<usize> = ledger
+                .iter()
+                .filter(|&&(b2, dst)| dst == d && !latest.ledger.contains(&(b2, dst)))
+                .map(|&(b2, _)| b2)
+                .collect();
+            for b2 in rollback {
+                ledger.remove(&(b2, d));
+                stats.blocks_replayed += 1;
+                let s = next_alive_rr(&alive, &mut rr);
+                pending
+                    .entry(b2)
+                    .and_modify(|pb| {
+                        if let Some(set) = pb.only.as_mut() {
+                            set.insert(d);
+                        }
+                    })
+                    .or_insert_with(|| PendingBlock {
+                        exec_node: s,
+                        only: Some(BTreeSet::from([d])),
+                    });
+            }
+        }
+    }
+
+    // Planned failures whose trigger never came due (e.g. a block count
+    // past the job's last commit) would otherwise vanish silently — note
+    // them so overhead measurements can't mistake a dropped kill for a
+    // survived one.
+    for (i, ev) in fault.plan.events().iter().enumerate() {
+        if !fired[i] {
+            stats.failures_ignored += 1;
+            cluster.metrics().record_note(format!(
+                "fault[{label}]: kill of node {} never fired ({:?})",
+                ev.node, ev.trigger
+            ));
+        }
+    }
+
+    // ---- Virtual-time phases --------------------------------------------
+    vt.compute_phase("map+block-reduce", &per_node_secs, workers);
+    let reduce_cpu = per_node_reduce_secs
+        .iter()
+        .map(|&s| VirtualTime::scaled_compute(s, workers))
+        .fold(0.0f64, f64::max);
+    if conventional {
+        vt.shuffle_barrier("shuffle-barrier+reduce", &shuffle_flows, &cfg.network, reduce_cpu);
+    } else {
+        vt.shuffle_overlapped("shuffle+async-reduce", &shuffle_flows, &cfg.network, reduce_cpu);
+    }
+    let ckpt_secs = ckpt_flows.phase_time(&cfg.network);
+    if ckpt_secs > 0.0 {
+        vt.fixed_phase("checkpoint", ckpt_secs);
+    }
+    let restore_secs = restore_flows.phase_time(&cfg.network);
+    if restore_secs > 0.0 {
+        vt.fixed_phase("restore", restore_secs);
+    }
+
+    // ---- Record -----------------------------------------------------------
+    let compute_sec: f64 = vt
+        .phases()
+        .iter()
+        .filter(|p| matches!(p.kind, crate::net::vtime::PhaseKind::Compute))
+        .map(|p| p.seconds)
+        .sum();
+    let makespan = vt.makespan();
+    let shuffle_bytes = shuffle_flows.cross_node_bytes()
+        + ckpt_flows.cross_node_bytes()
+        + restore_flows.cross_node_bytes();
+    let max_epoch = exec_epoch.iter().copied().max().unwrap_or(0);
+    cluster.metrics().record_run(RunStats {
+        label: rec.label,
+        engine: format!("{}+ft", cfg.engine),
+        nodes,
+        workers_per_node: workers,
+        makespan_sec: makespan,
+        compute_sec,
+        shuffle_sec: makespan - compute_sec,
+        shuffle_bytes,
+        pairs_emitted,
+        pairs_shuffled,
+        peak_intermediate_bytes: peak_staged_bytes + peak_ckpt_bytes,
+        host_wall_sec: rec.started.elapsed().as_secs_f64(),
+    });
+    cluster.metrics().record_note(format!(
+        "fault[{label}]: checkpoints={} ckpt_bytes={} failures={} ignored={} \
+         reassigned={} replayed={} restore_bytes={} max_epoch={}",
+        stats.checkpoints,
+        stats.checkpoint_bytes,
+        stats.failures,
+        stats.failures_ignored,
+        stats.blocks_reassigned,
+        stats.blocks_replayed,
+        stats.restore_bytes,
+        max_epoch,
+    ));
+}
+
+/// Replicate a fresh checkpoint's shards to the driver (node 0, the
+/// stable store) and fold the cost into the running stats. Node 0's own
+/// shard is driver-local and free.
+fn account_checkpoint(
+    ckpt: &Checkpoint,
+    ckpt_flows: &mut FlowMatrix,
+    stats: &mut FtStats,
+    peak_ckpt_bytes: &mut u64,
+) {
+    stats.checkpoints += 1;
+    stats.checkpoint_bytes += ckpt.total_bytes();
+    *peak_ckpt_bytes = (*peak_ckpt_bytes).max(ckpt.total_bytes());
+    for (node, size) in ckpt.manifest.shard_bytes.iter().enumerate() {
+        if let Some(bytes) = size {
+            if node != 0 {
+                ckpt_flows.record(node, 0, *bytes);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_robin_skips_dead_nodes() {
+        let alive = [true, false, false, true];
+        let mut rr = 0usize;
+        let picks: Vec<usize> = (0..4).map(|_| next_alive_rr(&alive, &mut rr)).collect();
+        assert_eq!(picks, vec![0, 3, 0, 3]);
+    }
+}

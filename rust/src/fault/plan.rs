@@ -1,0 +1,198 @@
+//! Deterministic failure injection plans.
+//!
+//! A [`FailurePlan`] declares, ahead of a job, which virtual nodes die and
+//! when. Triggers fire at *map-block commit boundaries* — the only points
+//! where the simulated cluster's state is well defined — either after a
+//! chosen number of globally committed blocks ([`FailureTrigger::AtBlock`])
+//! or once the job's virtual makespan passes a chosen time
+//! ([`FailureTrigger::AtTime`]). Plans can also be drawn from a
+//! [`SplitRng`] stream ([`FailurePlan::random`]) so failure benchmarks are
+//! reproducible from a single seed.
+//!
+//! Reproducibility caveat: `AtBlock` triggers (including every event in a
+//! [`FailurePlan::random`] plan) fire at the same boundary in every run.
+//! `AtTime` compares against *measured* per-node compute scaled into
+//! virtual time, so the boundary it lands on can shift with host load
+//! between runs — final results stay byte-identical either way (any
+//! boundary recovers exactly), but recovery-overhead measurements should
+//! use `AtBlock`.
+//!
+//! Node 0 hosts the driver and is never killed; events naming it (or a
+//! node outside the cluster) are ignored with a metrics note rather than
+//! panicking, so one plan can be reused across cluster shapes.
+
+use crate::util::rng::SplitRng;
+
+/// When a planned failure fires.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FailureTrigger {
+    /// Fire once `n` map blocks have committed globally (0 and 1 both mean
+    /// "after the first block commits").
+    AtBlock(usize),
+    /// Fire at the first block boundary where the job's virtual elapsed
+    /// time reaches `secs`.
+    AtTime(f64),
+}
+
+/// One planned node death.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FailureEvent {
+    /// Virtual node to kill.
+    pub node: usize,
+    /// When to kill it.
+    pub trigger: FailureTrigger,
+}
+
+/// An ordered set of planned failures for one job.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FailurePlan {
+    events: Vec<FailureEvent>,
+}
+
+impl FailurePlan {
+    /// No failures (checkpointing may still be on).
+    pub fn none() -> Self {
+        Self::default()
+    }
+
+    /// Kill `node` after `block` blocks have committed.
+    pub fn kill_at_block(node: usize, block: usize) -> Self {
+        Self::none().and_kill_at_block(node, block)
+    }
+
+    /// Kill `node` at virtual time `secs`.
+    pub fn kill_at_time(node: usize, secs: f64) -> Self {
+        Self::none().and_kill_at_time(node, secs)
+    }
+
+    /// Add a block-boundary kill (builder style).
+    pub fn and_kill_at_block(mut self, node: usize, block: usize) -> Self {
+        self.events.push(FailureEvent { node, trigger: FailureTrigger::AtBlock(block) });
+        self
+    }
+
+    /// Add a virtual-time kill (builder style).
+    pub fn and_kill_at_time(mut self, node: usize, secs: f64) -> Self {
+        self.events.push(FailureEvent { node, trigger: FailureTrigger::AtTime(secs) });
+        self
+    }
+
+    /// `failures` block-boundary kills drawn deterministically from
+    /// `(seed)`: victims uniform over nodes `1..nodes` (the driver
+    /// survives), boundaries uniform over `1..=max_block`.
+    pub fn random(seed: u64, nodes: usize, failures: usize, max_block: usize) -> Self {
+        let mut rng = SplitRng::new(seed, 0xFA_17);
+        let mut plan = Self::none();
+        if nodes < 2 || max_block == 0 {
+            return plan;
+        }
+        for _ in 0..failures {
+            let node = 1 + rng.below(nodes as u64 - 1) as usize;
+            let block = 1 + rng.below(max_block as u64) as usize;
+            plan = plan.and_kill_at_block(node, block);
+        }
+        plan
+    }
+
+    /// Planned events, in declaration order.
+    pub fn events(&self) -> &[FailureEvent] {
+        &self.events
+    }
+
+    /// True when no failures are planned.
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+}
+
+/// Cluster-level fault-tolerance policy, carried in
+/// [`crate::coordinator::cluster::ClusterConfig`].
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultConfig {
+    /// Failures to inject.
+    pub plan: FailurePlan,
+    /// Checkpoint the reduce target every this many committed map blocks
+    /// (`None` = only the mandatory job-start checkpoint when the fault
+    /// engine is active).
+    ///
+    /// Note: setting a cadence *alone* (no failure plan) already routes
+    /// jobs through the recoverable engine — the intended failure-free
+    /// baseline for recovery-overhead ablations. Integer reductions are
+    /// unaffected, but float reductions there run in block-id order, which
+    /// can differ in low bits from the ordinary engines' combine order.
+    pub checkpoint_every_blocks: Option<usize>,
+}
+
+impl FaultConfig {
+    /// Fault tolerance off: jobs run on the ordinary engines.
+    pub fn disabled() -> Self {
+        Self::default()
+    }
+
+    /// True when jobs must run through the recoverable engine.
+    pub fn enabled(&self) -> bool {
+        !self.plan.is_empty() || self.checkpoint_every_blocks.is_some()
+    }
+
+    /// Builder-style failure-plan override.
+    pub fn with_plan(mut self, plan: FailurePlan) -> Self {
+        self.plan = plan;
+        self
+    }
+
+    /// Builder-style checkpoint cadence override.
+    pub fn with_checkpoint_every(mut self, blocks: usize) -> Self {
+        self.checkpoint_every_blocks = Some(blocks.max(1));
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_accumulates_events() {
+        let plan = FailurePlan::kill_at_block(1, 3).and_kill_at_time(2, 0.5);
+        assert_eq!(plan.events().len(), 2);
+        assert_eq!(plan.events()[0].node, 1);
+        assert_eq!(plan.events()[0].trigger, FailureTrigger::AtBlock(3));
+        assert_eq!(plan.events()[1].trigger, FailureTrigger::AtTime(0.5));
+    }
+
+    #[test]
+    fn random_is_deterministic_and_spares_driver() {
+        let a = FailurePlan::random(42, 8, 5, 100);
+        let b = FailurePlan::random(42, 8, 5, 100);
+        assert_eq!(a, b);
+        assert_eq!(a.events().len(), 5);
+        for ev in a.events() {
+            assert!(ev.node >= 1 && ev.node < 8, "victim {}", ev.node);
+            match ev.trigger {
+                FailureTrigger::AtBlock(b) => assert!((1..=100).contains(&b)),
+                FailureTrigger::AtTime(_) => panic!("random plans are block-based"),
+            }
+        }
+        assert_ne!(a, FailurePlan::random(43, 8, 5, 100));
+    }
+
+    #[test]
+    fn random_degenerate_shapes_are_empty() {
+        assert!(FailurePlan::random(1, 1, 3, 10).is_empty());
+        assert!(FailurePlan::random(1, 4, 3, 0).is_empty());
+    }
+
+    #[test]
+    fn config_enablement() {
+        assert!(!FaultConfig::disabled().enabled());
+        assert!(FaultConfig::disabled().with_checkpoint_every(8).enabled());
+        assert!(FaultConfig::disabled()
+            .with_plan(FailurePlan::kill_at_block(1, 1))
+            .enabled());
+        // Cadence of 0 clamps to 1 (checkpoint after every block).
+        assert_eq!(
+            FaultConfig::disabled().with_checkpoint_every(0).checkpoint_every_blocks,
+            Some(1)
+        );
+    }
+}

@@ -22,6 +22,12 @@
 //!   reducers, and the conventional (Spark-analog) baseline engine.
 //! * [`coordinator`] — cluster topology/config, block scheduler, shuffle
 //!   orchestration with backpressure, shard rebalancing, metrics.
+//! * [`fault`] — fault tolerance: deterministic failure injection
+//!   ([`fault::FailurePlan`]), per-shard target checkpoints replicated
+//!   through the network model, and a recoverable engine that re-executes
+//!   a dead node's map blocks on survivors and restores its reduce shard
+//!   from the last snapshot — failure and failure-free runs produce
+//!   byte-identical results.
 //! * [`runtime`] — PJRT runtime: loads AOT-compiled JAX/Pallas artifacts
 //!   (`artifacts/*.hlo.txt`) and executes them from the map hot path.
 //! * [`apps`] — the paper's five data-mining workloads plus Monte-Carlo π,
@@ -52,6 +58,32 @@
 //! );
 //! assert_eq!(words.get(&"the".to_string()), Some(2));
 //! ```
+//!
+//! ## Checkpoint and recover (fault tolerance)
+//!
+//! Flip on the [`fault`] layer and the same job survives a worker dying
+//! mid-run, with identical results:
+//!
+//! ```
+//! use blaze::prelude::*;
+//!
+//! let cluster = Cluster::new(ClusterConfig::sized(2, 2).with_fault(
+//!     FaultConfig::default().with_checkpoint_every(2).with_plan(FailurePlan::kill_at_block(1, 1)),
+//! ));
+//! let lines = DistVector::from_vec(&cluster, vec!["the quick brown fox".to_string(); 8]);
+//! let mut words: DistHashMap<String, u64> = DistHashMap::new(&cluster);
+//! blaze::mapreduce::mapreduce(
+//!     &lines,
+//!     |_, line: &String, emit| {
+//!         for w in line.split_whitespace() {
+//!             emit(w.to_string(), 1u64);
+//!         }
+//!     },
+//!     "sum",
+//!     &mut words,
+//! );
+//! assert_eq!(words.get(&"the".to_string()), Some(8)); // node 1 died; counts exact
+//! ```
 
 pub mod apps;
 pub mod bench;
@@ -59,6 +91,7 @@ pub mod cli;
 pub mod containers;
 pub mod coordinator;
 pub mod data;
+pub mod fault;
 pub mod mapreduce;
 pub mod net;
 pub mod runtime;
@@ -76,6 +109,7 @@ pub mod prelude {
         DistVector,
     };
     pub use crate::coordinator::cluster::{Cluster, ClusterConfig};
+    pub use crate::fault::{FailurePlan, FaultConfig};
     pub use crate::mapreduce::{mapreduce, mapreduce_range, Reducer};
     pub use crate::net::model::NetworkModel;
     pub use crate::ser::fastser::FastSer;

@@ -172,6 +172,10 @@ impl<V: Numeric> IntoReducer<V> for &str {
 
 /// MapReduce over a keyed container (`DistVector`, `DistHashMap`):
 /// the mapper receives `(key, value, emit)` (paper §2.2).
+///
+/// Targets additionally implement [`crate::fault::Recover`] so any job can
+/// run through the recoverable engine when the cluster's
+/// [`crate::fault::FaultConfig`] is enabled.
 pub fn mapreduce<I, F, K2, V2, R, T>(input: &I, mapper: F, reducer: R, target: &mut T)
 where
     I: DistInput,
@@ -179,7 +183,7 @@ where
     K2: Hash + Eq + Clone + FastSer + TaggedSer + DenseKey,
     V2: Clone + FastSer + TaggedSer,
     R: IntoReducer<V2>,
-    T: ReduceTarget<K2, V2>,
+    T: ReduceTarget<K2, V2> + crate::fault::Recover,
 {
     mapreduce_labeled("mapreduce", input, mapper, reducer, target);
 }
@@ -197,11 +201,17 @@ pub fn mapreduce_labeled<I, F, K2, V2, R, T>(
     K2: Hash + Eq + Clone + FastSer + TaggedSer + DenseKey,
     V2: Clone + FastSer + TaggedSer,
     R: IntoReducer<V2>,
-    T: ReduceTarget<K2, V2>,
+    T: ReduceTarget<K2, V2> + crate::fault::Recover,
 {
     let red = reducer.into_reducer();
-    let engine = input.cluster().config().engine;
-    match engine {
+    let cfg = input.cluster().config();
+    if cfg.fault.enabled() {
+        // Fault tolerance on: block-granular recoverable execution
+        // (respects the engine kind for codec and cost modeling).
+        crate::fault::engine::run(label, input, &mapper, &red, target);
+        return;
+    }
+    match cfg.engine {
         EngineKind::Eager => {
             if target.dense_len().is_some() {
                 smallkey::run(label, input, &mapper, &red, target);
@@ -221,7 +231,7 @@ where
     K2: Hash + Eq + Clone + FastSer + TaggedSer + DenseKey,
     V2: Clone + FastSer + TaggedSer,
     R: IntoReducer<V2>,
-    T: ReduceTarget<K2, V2>,
+    T: ReduceTarget<K2, V2> + crate::fault::Recover,
 {
     mapreduce_range_labeled("mapreduce_range", input, mapper, reducer, target);
 }
@@ -238,7 +248,7 @@ pub fn mapreduce_range_labeled<F, K2, V2, R, T>(
     K2: Hash + Eq + Clone + FastSer + TaggedSer + DenseKey,
     V2: Clone + FastSer + TaggedSer,
     R: IntoReducer<V2>,
-    T: ReduceTarget<K2, V2>,
+    T: ReduceTarget<K2, V2> + crate::fault::Recover,
 {
     mapreduce_labeled(label, input, |_, v: &u64, emit| mapper(*v, emit), reducer, target);
 }

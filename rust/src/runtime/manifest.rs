@@ -7,7 +7,7 @@
 
 use std::path::Path;
 
-use anyhow::{anyhow, Context, Result};
+use crate::util::error::{anyhow, Context, Result};
 
 /// Parsed `manifest.json`.
 #[derive(Debug, Clone)]

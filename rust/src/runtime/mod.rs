@@ -6,22 +6,26 @@
 //! id-safe interchange format, see DESIGN.md), compiles it on the PJRT CPU
 //! client once, and exposes typed entry points the map hot path calls per
 //! batch. Python never runs at request time.
+//!
+//! The PJRT bridge needs the `xla` crate, which the offline build does not
+//! vendor; it compiles only under the `pjrt` cargo feature. Without the
+//! feature a [`Runtime`] stub with the same API is built whose `load`
+//! always errs, so every caller falls back to the scalar mappers and the
+//! PJRT tests skip.
 
 pub mod manifest;
 
-use std::collections::HashMap;
-use std::path::Path;
+#[cfg(feature = "pjrt")]
+mod pjrt;
+#[cfg(feature = "pjrt")]
+pub use pjrt::Runtime;
 
-use anyhow::{anyhow, bail, Context, Result};
+#[cfg(not(feature = "pjrt"))]
+mod stub;
+#[cfg(not(feature = "pjrt"))]
+pub use stub::Runtime;
 
 pub use manifest::Manifest;
-
-/// Compiled-executable registry over one PJRT client.
-pub struct Runtime {
-    client: xla::PjRtClient,
-    manifest: Manifest,
-    executables: HashMap<String, xla::PjRtLoadedExecutable>,
-}
 
 /// Result of one k-means assignment batch (sufficient statistics).
 #[derive(Debug, Clone)]
@@ -47,188 +51,4 @@ pub struct GmmBatch {
     pub cov_sums: Vec<f32>,
     /// Masked log-likelihood.
     pub loglik: f32,
-}
-
-impl Runtime {
-    /// Load every artifact listed in `dir/manifest.json` and compile it on
-    /// a fresh PJRT CPU client.
-    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
-        let dir = dir.as_ref();
-        let manifest = Manifest::load(dir.join("manifest.json"))
-            .with_context(|| format!("loading manifest from {}", dir.display()))?;
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
-        let mut executables = HashMap::new();
-        for name in manifest.artifact_names() {
-            let path = dir.join(format!("{name}.hlo.txt"));
-            let proto = xla::HloModuleProto::from_text_file(&path)
-                .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = client
-                .compile(&comp)
-                .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
-            executables.insert(name.to_string(), exe);
-        }
-        Ok(Self { client, manifest, executables })
-    }
-
-    /// AOT batch size — callers pad the last batch up to this.
-    pub fn batch(&self) -> usize {
-        self.manifest.batch
-    }
-
-    /// AOT point dimension.
-    pub fn dim(&self) -> usize {
-        self.manifest.dim
-    }
-
-    /// AOT component/center count.
-    pub fn k(&self) -> usize {
-        self.manifest.k
-    }
-
-    /// PJRT platform name (diagnostics).
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Artifact names available.
-    pub fn artifact_names(&self) -> Vec<&str> {
-        self.executables.keys().map(String::as_str).collect()
-    }
-
-    fn exe(&self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
-        self.executables
-            .get(name)
-            .ok_or_else(|| anyhow!("artifact {name:?} not in manifest"))
-    }
-
-    fn run(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
-        let exe = self.exe(name)?;
-        let result = exe
-            .execute::<xla::Literal>(inputs)
-            .map_err(|e| anyhow!("executing {name}: {e:?}"))?;
-        let literal = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("fetching {name} result: {e:?}"))?;
-        // Lowered with return_tuple=True: always a tuple.
-        literal.to_tuple().map_err(|e| anyhow!("untupling {name}: {e:?}"))
-    }
-
-    fn f32_input(&self, data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
-        let expect: i64 = dims.iter().product();
-        if expect as usize != data.len() {
-            bail!("input has {} elements, shape {:?} wants {}", data.len(), dims, expect);
-        }
-        xla::Literal::vec1(data)
-            .reshape(dims)
-            .map_err(|e| anyhow!("reshape {dims:?}: {e:?}"))
-    }
-
-    /// One k-means assignment batch.
-    ///
-    /// `points` is `(batch, dim)` row-major and must be padded to the AOT
-    /// batch size; `valid` marks real rows with 1.0.
-    pub fn kmeans_assign(
-        &self,
-        points: &[f32],
-        centers: &[f32],
-        valid: &[f32],
-    ) -> Result<KmeansBatch> {
-        let (b, d, k) = (self.batch() as i64, self.dim() as i64, self.k() as i64);
-        let outs = self.run(
-            "kmeans_assign",
-            &[
-                self.f32_input(points, &[b, d])?,
-                self.f32_input(centers, &[k, d])?,
-                self.f32_input(valid, &[b])?,
-            ],
-        )?;
-        let [assign, counts, sums, inertia]: [xla::Literal; 4] = outs
-            .try_into()
-            .map_err(|v: Vec<_>| anyhow!("kmeans_assign returned {} outputs", v.len()))?;
-        Ok(KmeansBatch {
-            assign: assign.to_vec::<i32>().map_err(|e| anyhow!("{e:?}"))?,
-            counts: counts.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?,
-            sums: sums.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?,
-            inertia: inertia.get_first_element::<f32>().map_err(|e| anyhow!("{e:?}"))?,
-        })
-    }
-
-    /// One GMM E-step batch. `precisions` is `(K, D, D)`, `logdets`/
-    /// `logweights` are `(K,)`.
-    pub fn gmm_estep(
-        &self,
-        points: &[f32],
-        means: &[f32],
-        precisions: &[f32],
-        logdets: &[f32],
-        logweights: &[f32],
-        valid: &[f32],
-    ) -> Result<GmmBatch> {
-        let (b, d, k) = (self.batch() as i64, self.dim() as i64, self.k() as i64);
-        let outs = self.run(
-            "gmm_estep",
-            &[
-                self.f32_input(points, &[b, d])?,
-                self.f32_input(means, &[k, d])?,
-                self.f32_input(precisions, &[k, d, d])?,
-                self.f32_input(logdets, &[k])?,
-                self.f32_input(logweights, &[k])?,
-                self.f32_input(valid, &[b])?,
-            ],
-        )?;
-        let [nk, mu_sums, cov_sums, loglik]: [xla::Literal; 4] = outs
-            .try_into()
-            .map_err(|v: Vec<_>| anyhow!("gmm_estep returned {} outputs", v.len()))?;
-        Ok(GmmBatch {
-            nk: nk.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?,
-            mu_sums: mu_sums.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?,
-            cov_sums: cov_sums.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?,
-            loglik: loglik.get_first_element::<f32>().map_err(|e| anyhow!("{e:?}"))?,
-        })
-    }
-
-    /// Squared distances from a padded point batch to `queries`
-    /// (`(Q, dim)`, Q fixed at AOT time). Returns `(batch, Q)` row-major.
-    pub fn knn_dist(&self, points: &[f32], queries: &[f32]) -> Result<Vec<f32>> {
-        let (b, d, q) = (
-            self.batch() as i64,
-            self.dim() as i64,
-            self.manifest.queries as i64,
-        );
-        let outs = self.run(
-            "knn_dist",
-            &[self.f32_input(points, &[b, d])?, self.f32_input(queries, &[q, d])?],
-        )?;
-        let [d2]: [xla::Literal; 1] = outs
-            .try_into()
-            .map_err(|v: Vec<_>| anyhow!("knn_dist returned {} outputs", v.len()))?;
-        d2.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))
-    }
-
-    /// Raw pairwise distances `(batch, K)` — the bare L1 kernel, used by
-    /// tests to validate the full python→rust numerics bridge.
-    pub fn pairwise_dist(&self, points: &[f32], centers: &[f32]) -> Result<Vec<f32>> {
-        let (b, d, k) = (self.batch() as i64, self.dim() as i64, self.k() as i64);
-        let outs = self.run(
-            "pairwise_dist",
-            &[self.f32_input(points, &[b, d])?, self.f32_input(centers, &[k, d])?],
-        )?;
-        let [d2]: [xla::Literal; 1] = outs
-            .try_into()
-            .map_err(|v: Vec<_>| anyhow!("pairwise_dist returned {} outputs", v.len()))?;
-        d2.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))
-    }
-}
-
-impl std::fmt::Debug for Runtime {
-    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        f.debug_struct("Runtime")
-            .field("platform", &self.platform())
-            .field("batch", &self.batch())
-            .field("dim", &self.dim())
-            .field("k", &self.k())
-            .field("artifacts", &self.executables.len())
-            .finish()
-    }
 }

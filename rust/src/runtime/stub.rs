@@ -1,0 +1,103 @@
+//! Offline stub for the PJRT runtime (built without the `pjrt` feature).
+//!
+//! Same public surface as the real [`super::pjrt`] runtime, but `load`
+//! always fails, so a stub `Runtime` can never be constructed. Callers
+//! treat a failed load as "no runtime" and fall back to the scalar mapper
+//! paths; the PJRT integration tests print a SKIP line and pass.
+
+use std::path::Path;
+
+use crate::util::error::{anyhow, Result};
+
+use super::{GmmBatch, KmeansBatch};
+
+/// Uninhabitable stand-in for the compiled-executable registry.
+pub struct Runtime {
+    never: std::convert::Infallible,
+}
+
+impl Runtime {
+    /// Always errs: PJRT support is not compiled in.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        Err(anyhow!(
+            "PJRT runtime unavailable for {}: built without the `pjrt` cargo feature \
+             (requires the `xla` crate; see Cargo.toml)",
+            dir.as_ref().display()
+        ))
+    }
+
+    /// AOT batch size — callers pad the last batch up to this.
+    pub fn batch(&self) -> usize {
+        match self.never {}
+    }
+
+    /// AOT point dimension.
+    pub fn dim(&self) -> usize {
+        match self.never {}
+    }
+
+    /// AOT component/center count.
+    pub fn k(&self) -> usize {
+        match self.never {}
+    }
+
+    /// PJRT platform name (diagnostics).
+    pub fn platform(&self) -> String {
+        match self.never {}
+    }
+
+    /// Artifact names available.
+    pub fn artifact_names(&self) -> Vec<&str> {
+        match self.never {}
+    }
+
+    /// One k-means assignment batch.
+    pub fn kmeans_assign(
+        &self,
+        _points: &[f32],
+        _centers: &[f32],
+        _valid: &[f32],
+    ) -> Result<KmeansBatch> {
+        match self.never {}
+    }
+
+    /// One GMM E-step batch.
+    pub fn gmm_estep(
+        &self,
+        _points: &[f32],
+        _means: &[f32],
+        _precisions: &[f32],
+        _logdets: &[f32],
+        _logweights: &[f32],
+        _valid: &[f32],
+    ) -> Result<GmmBatch> {
+        match self.never {}
+    }
+
+    /// Squared distances from a padded point batch to the AOT queries.
+    pub fn knn_dist(&self, _points: &[f32], _queries: &[f32]) -> Result<Vec<f32>> {
+        match self.never {}
+    }
+
+    /// Raw pairwise distances `(batch, K)`.
+    pub fn pairwise_dist(&self, _points: &[f32], _centers: &[f32]) -> Result<Vec<f32>> {
+        match self.never {}
+    }
+}
+
+impl std::fmt::Debug for Runtime {
+    fn fmt(&self, _f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self.never {}
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn load_always_errs_offline() {
+        let err = Runtime::load("artifacts").unwrap_err();
+        assert!(err.to_string().contains("pjrt"), "{err}");
+    }
+}

@@ -154,6 +154,17 @@ impl<'a> Reader<'a> {
         self.pos
     }
 
+    /// Error unless the whole buffer has been consumed — for buffers that
+    /// must hold exactly one message (checkpoint shards, single payloads),
+    /// where leftover bytes mean corruption or splicing.
+    pub fn expect_end(&self) -> Result<(), DecodeError> {
+        if self.is_at_end() {
+            Ok(())
+        } else {
+            Err(DecodeError { at: self.pos, what: "trailing bytes after message" })
+        }
+    }
+
     /// Decode an unsigned LEB128 varint.
     #[inline]
     pub fn get_varint(&mut self) -> Result<u64, DecodeError> {
@@ -463,14 +474,37 @@ pub fn encode_pairs_into<K: FastSer, V: FastSer>(pairs: &[(K, V)], buf: Vec<u8>)
     w.take()
 }
 
-/// Decode a batch produced by [`encode_pairs`].
+/// Decode a batch produced by [`encode_pairs`]. Trailing bytes after the
+/// batch are ignored (streams may concatenate further messages); use
+/// [`decode_pairs_exact`] when the buffer must hold exactly one batch.
 pub fn decode_pairs<K: FastSer, V: FastSer>(buf: &[u8]) -> Result<Vec<(K, V)>, DecodeError> {
     let mut r = Reader::new(buf);
+    decode_pairs_from(&mut r)
+}
+
+/// Decode one batch and require the buffer be fully consumed.
+///
+/// Checkpoint shards and single-message payloads are exactly one batch
+/// long; leftover bytes there mean the buffer was corrupted or spliced, so
+/// this variant rejects them instead of silently dropping data.
+pub fn decode_pairs_exact<K: FastSer, V: FastSer>(
+    buf: &[u8],
+) -> Result<Vec<(K, V)>, DecodeError> {
+    let mut r = Reader::new(buf);
+    let out = decode_pairs_from(&mut r)?;
+    r.expect_end()?;
+    Ok(out)
+}
+
+/// Decode one batch from an open cursor, leaving it just past the batch.
+fn decode_pairs_from<K: FastSer, V: FastSer>(
+    r: &mut Reader<'_>,
+) -> Result<Vec<(K, V)>, DecodeError> {
     let n = r.get_varint()? as usize;
     let mut out = Vec::with_capacity(n.min(r.remaining().max(1)));
     for _ in 0..n {
-        let k = K::read(&mut r)?;
-        let v = V::read(&mut r)?;
+        let k = K::read(r)?;
+        let v = V::read(r)?;
         out.push((k, v));
     }
     Ok(out)
@@ -570,6 +604,39 @@ mod tests {
         let pairs: Vec<(u32, u64)> = (0..1000).map(|i| (i % 7, u64::from(i) * 3)).collect();
         let buf = encode_pairs(&pairs);
         assert_eq!(decode_pairs::<u32, u64>(&buf).unwrap(), pairs);
+    }
+
+    #[test]
+    fn exact_decode_rejects_trailing_bytes() {
+        let pairs: Vec<(u64, u64)> = vec![(1, 2), (3, 4)];
+        let mut buf = encode_pairs(&pairs);
+        assert_eq!(decode_pairs_exact::<u64, u64>(&buf).unwrap(), pairs);
+        buf.push(0x00); // spliced/corrupt tail
+        assert_eq!(decode_pairs::<u64, u64>(&buf).unwrap(), pairs, "lenient keeps working");
+        let err = decode_pairs_exact::<u64, u64>(&buf).unwrap_err();
+        assert_eq!(err.what, "trailing bytes after message");
+    }
+
+    #[test]
+    fn exact_decode_rejects_every_truncation() {
+        let pairs: Vec<(String, u64)> = vec![("alpha".into(), 1), ("beta".into(), 300)];
+        let buf = encode_pairs(&pairs);
+        for cut in 0..buf.len() {
+            assert!(
+                decode_pairs_exact::<String, u64>(&buf[..cut]).is_err(),
+                "cut at {cut} must fail"
+            );
+        }
+    }
+
+    #[test]
+    fn exact_decode_rejects_corrupt_count() {
+        // Count claims 5 pairs but only 2 follow: must err, not panic.
+        let pairs: Vec<(u64, u64)> = vec![(1, 2), (3, 4)];
+        let mut buf = encode_pairs(&pairs);
+        buf[0] = 5;
+        assert!(decode_pairs_exact::<u64, u64>(&buf).is_err());
+        assert!(decode_pairs::<u64, u64>(&buf).is_err());
     }
 
     #[test]

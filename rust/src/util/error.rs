@@ -1,0 +1,112 @@
+//! Minimal offline stand-in for the `anyhow` crate.
+//!
+//! The build vendors no external crates; the runtime layer still wants
+//! ergonomic string-context errors. This module provides the small subset
+//! the codebase uses: a message-carrying [`Error`], a [`Result`] alias, the
+//! [`anyhow!`]/[`bail!`] macros, and a [`Context`] extension trait with
+//! `context`/`with_context`. Context is prepended `"context: cause"` so
+//! messages read like `anyhow`'s single-line `{:#}` rendering.
+
+/// String-backed error with accumulated context.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Error from a preformatted message.
+    pub fn msg(msg: impl Into<String>) -> Self {
+        Self { msg: msg.into() }
+    }
+
+    /// Wrap with an outer context layer.
+    pub fn context(self, ctx: impl Into<String>) -> Self {
+        Self { msg: format!("{}: {}", ctx.into(), self.msg) }
+    }
+}
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        // `{:#}` (anyhow's chain rendering) and `{}` both print the full
+        // accumulated message.
+        write!(f, "{}", self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// `Result` defaulting to [`Error`], mirroring `anyhow::Result`.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Format an [`Error`] in place: `anyhow!("parsing {path}: {e}")`.
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::util::error::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Early-return an [`Error`]: `bail!("manifest lists no artifacts")`.
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::util::error::Error::msg(format!($($arg)*)))
+    };
+}
+
+pub(crate) use {anyhow, bail};
+
+/// Attach context to any displayable error, like `anyhow::Context`.
+pub trait Context<T> {
+    /// Wrap the error with a fixed context message.
+    fn context(self, ctx: impl Into<String>) -> Result<T>;
+    /// Wrap the error with a lazily-built context message.
+    fn with_context<S: Into<String>>(self, f: impl FnOnce() -> S) -> Result<T>;
+}
+
+impl<T, E: std::fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context(self, ctx: impl Into<String>) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", ctx.into())))
+    }
+
+    fn with_context<S: Into<String>>(self, f: impl FnOnce() -> S) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f().into())))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn macro_formats() {
+        let e = anyhow!("bad {} at {}", "value", 7);
+        assert_eq!(e.to_string(), "bad value at 7");
+    }
+
+    #[test]
+    fn context_prepends() {
+        let r: std::result::Result<(), std::io::Error> =
+            Err(std::io::Error::new(std::io::ErrorKind::NotFound, "gone"));
+        let e = r.context("reading manifest").unwrap_err();
+        assert!(e.to_string().starts_with("reading manifest: "));
+        let layered = e.context("loading runtime");
+        assert!(layered.to_string().starts_with("loading runtime: reading manifest:"));
+    }
+
+    #[test]
+    fn bail_returns_early() {
+        fn f(x: u32) -> Result<u32> {
+            if x == 0 {
+                bail!("zero not allowed");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(3).unwrap(), 3);
+        assert_eq!(f(0).unwrap_err().to_string(), "zero not allowed");
+    }
+
+    #[test]
+    fn alternate_format_matches_plain() {
+        let e = anyhow!("oops");
+        assert_eq!(format!("{e:#}"), format!("{e}"));
+    }
+}

@@ -3,6 +3,7 @@
 
 pub mod alloc;
 pub mod cognitive;
+pub mod error;
 pub mod hash;
 pub mod linalg;
 pub mod random;
