@@ -3,8 +3,11 @@
 //! For wordcount and k-means, under both engines, compares the virtual
 //! makespan of a checkpointed failure-free run against the same seeded run
 //! with one injected node death, and reports the recovery overhead as a
-//! fraction of the failure-free makespan. Results are asserted identical
-//! between the two runs — recovery may cost time, never correctness.
+//! fraction of the failure-free makespan. Wordcount additionally compares
+//! the two recovery policies — hot-standby restore vs `--evacuate` slot
+//! re-homing (k-means reduces into a driver-resident `Vec`, which cannot
+//! re-home keys). Results are asserted identical between all runs —
+//! recovery may cost time, never correctness.
 
 use blaze::apps::{kmeans, wordcount::wordcount};
 use blaze::bench;
@@ -16,9 +19,12 @@ const NODES: usize = 4;
 const WORKERS: usize = 4;
 const CKPT_EVERY: usize = 4;
 
-fn cluster(engine: EngineKind, plan: FailurePlan) -> Cluster {
+fn cluster(engine: EngineKind, plan: FailurePlan, evacuate: bool) -> Cluster {
     Cluster::new(ClusterConfig::sized(NODES, WORKERS).with_engine(engine).with_fault(
-        FaultConfig::default().with_checkpoint_every(CKPT_EVERY).with_plan(plan),
+        FaultConfig::default()
+            .with_checkpoint_every(CKPT_EVERY)
+            .with_plan(plan)
+            .with_evacuation(evacuate),
     ))
 }
 
@@ -41,38 +47,52 @@ fn main() {
     let scale = bench::scale();
 
     println!(
-        "{:<10} {:<13} {:>14} {:>14} {:>10}",
-        "task", "engine", "no-fail (s)", "failure (s)", "overhead"
+        "{:<10} {:<13} {:<12} {:>14} {:>14} {:>10}",
+        "task", "engine", "policy", "no-fail (s)", "failure (s)", "overhead"
     );
 
-    // ---- Wordcount ------------------------------------------------------
+    // ---- Wordcount (both recovery policies) ------------------------------
     let lines = blaze::data::corpus_lines(20_000 * scale, 10, 42);
     for engine in [EngineKind::Eager, EngineKind::Conventional] {
-        let run = |plan: FailurePlan| {
-            let c = cluster(engine, plan);
+        let run = |plan: FailurePlan, evacuate: bool| {
+            let c = cluster(engine, plan, evacuate);
             let dv = DistVector::from_vec(&c, lines.clone());
             let (report, words) = wordcount(&c, &dv);
-            (report.makespan_sec, words.collect())
+            let evac_bytes = c
+                .metrics()
+                .runs()
+                .iter()
+                .find(|r| r.label == "wordcount.mr")
+                .map_or(0, |r| r.evac_bytes);
+            (report.makespan_sec, words.collect(), evac_bytes)
         };
-        let (base_s, base_counts) = run(FailurePlan::none());
-        let (fail_s, fail_counts) = run(midjob_failure());
-        assert_eq!(base_counts, fail_counts, "wordcount counts must survive failure");
-        println!(
-            "{:<10} {:<13} {:>14.4} {:>14.4} {:>9.1}%",
-            "wordcount",
-            engine,
-            base_s,
-            fail_s,
-            (fail_s / base_s - 1.0) * 100.0
-        );
+        let (base_s, base_counts, _) = run(FailurePlan::none(), false);
+        for (policy, evacuate) in [("hot-standby", false), ("evacuate", true)] {
+            let (fail_s, fail_counts, evac_bytes) = run(midjob_failure(), evacuate);
+            assert_eq!(base_counts, fail_counts, "wordcount counts must survive failure");
+            assert_eq!(
+                evacuate,
+                evac_bytes > 0,
+                "evacuation traffic must be charged iff the policy is on"
+            );
+            println!(
+                "{:<10} {:<13} {:<12} {:>14.4} {:>14.4} {:>9.1}%",
+                "wordcount",
+                engine,
+                policy,
+                base_s,
+                fail_s,
+                (fail_s / base_s - 1.0) * 100.0
+            );
+        }
     }
 
-    // ---- K-means --------------------------------------------------------
+    // ---- K-means (driver-resident target: hot-standby only) --------------
     let ps = PointSet::clustered(20_000 * scale, 4, 5, 0.6, 42);
     let init = kmeans::init_first_k(&ps, 5);
     for engine in [EngineKind::Eager, EngineKind::Conventional] {
         let run = |plan: FailurePlan| {
-            let c = cluster(engine, plan);
+            let c = cluster(engine, plan, false);
             let blocks = kmeans::distribute_blocks(&c, &ps, 512);
             let (report, result) =
                 kmeans::kmeans(&c, &blocks, ps.n, 4, 5, init.clone(), 1e-4, 10, None);
@@ -82,14 +102,15 @@ fn main() {
         let (fail_s, fail_centers) = run(midjob_failure());
         assert_eq!(base_centers, fail_centers, "centroids must be byte-identical");
         println!(
-            "{:<10} {:<13} {:>14.4} {:>14.4} {:>9.1}%",
+            "{:<10} {:<13} {:<12} {:>14.4} {:>14.4} {:>9.1}%",
             "kmeans",
             engine,
+            "hot-standby",
             base_s,
             fail_s,
             (fail_s / base_s - 1.0) * 100.0
         );
     }
 
-    println!("\nresults byte-identical across failure and failure-free runs");
+    println!("\nresults byte-identical across failure, failure-free, and policy runs");
 }

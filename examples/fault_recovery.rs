@@ -4,11 +4,12 @@
 //! cargo run --release --example fault_recovery
 //! ```
 //!
-//! Runs the same seeded wordcount three ways — ordinary eager engine,
+//! Runs the same seeded wordcount four ways — ordinary eager engine,
 //! recoverable engine without failures, recoverable engine with node 2
-//! dying mid-job — and shows that all three produce identical counts while
-//! the failure run pays a visible recovery overhead in the virtual
-//! makespan.
+//! dying mid-job (hot-standby restore), and the same death recovered with
+//! `--evacuate`-style slot re-homing — and shows that all four produce
+//! identical counts while the failure runs pay a visible recovery overhead
+//! in the virtual makespan.
 
 use blaze::apps::wordcount::wordcount;
 use blaze::prelude::*;
@@ -29,23 +30,37 @@ fn main() {
     let (fail, counts_fail, notes) = run(FaultConfig::default()
         .with_checkpoint_every(4)
         .with_plan(FailurePlan::kill_at_block(2, 3)));
+    let (evac, counts_evac, evac_notes) = run(FaultConfig::default()
+        .with_checkpoint_every(4)
+        .with_plan(FailurePlan::kill_at_block(2, 3))
+        .with_evacuation(true));
 
     println!("corpus: {} lines", lines.len());
     println!("plain eager     : makespan {:>9.4}s  unique {}", base.makespan_sec, counts_base.len());
     println!("ckpt, no failure: makespan {:>9.4}s  unique {}", ckpt.makespan_sec, counts_ckpt.len());
     println!("ckpt + failure  : makespan {:>9.4}s  unique {}", fail.makespan_sec, counts_fail.len());
+    println!("  (hot-standby restore: routing unchanged)");
     for note in notes.iter().filter(|n| n.starts_with("fault[")) {
+        println!("  {note}");
+    }
+    println!("ckpt + evacuate : makespan {:>9.4}s  unique {}", evac.makespan_sec, counts_evac.len());
+    println!("  (dead node's keys re-homed onto survivors, migration charged)");
+    for note in evac_notes.iter().filter(|n| n.starts_with("fault[")) {
         println!("  {note}");
     }
 
     // u64 counts are exact under any reduce order, so the recoverable
-    // engine must agree with the plain eager engine bit-for-bit.
+    // engine must agree with the plain eager engine bit-for-bit — under
+    // either recovery policy.
     assert_eq!(counts_base, counts_ckpt, "checkpointing must not change results");
     assert_eq!(counts_base, counts_fail, "recovery must reproduce results exactly");
+    assert_eq!(counts_base, counts_evac, "evacuation must reproduce results exactly");
     let overhead = fail.makespan_sec / ckpt.makespan_sec - 1.0;
+    let evac_overhead = evac.makespan_sec / ckpt.makespan_sec - 1.0;
     println!(
-        "recovery overhead vs failure-free checkpointed run: {:.1}%",
-        overhead * 100.0
+        "recovery overhead vs failure-free checkpointed run: hot-standby {:.1}%, evacuate {:.1}%",
+        overhead * 100.0,
+        evac_overhead * 100.0
     );
-    println!("all three runs produced byte-identical counts");
+    println!("all four runs produced byte-identical counts");
 }

@@ -4,12 +4,16 @@
 //! blaze <task> [--nodes N] [--workers W] [--engine blaze|conventional]
 //!              [--scale S] [--artifacts DIR] [--seed SEED]
 //!              [--fail-at NODE@BLOCK ...] [--checkpoint-every BLOCKS]
+//!              [--evacuate]
 //! ```
 //!
 //! Tasks: `pi`, `wordcount`, `pagerank`, `kmeans`, `gmm`, `knn`, `all`.
 //! `--fail-at 2@5` kills virtual node 2 after 5 map blocks commit
 //! (repeatable); either fault flag routes the job through the recoverable
-//! engine ([`crate::fault`]).
+//! engine ([`crate::fault`]). `--evacuate` re-homes a dead node's keys onto
+//! the survivors (slot evacuation) instead of the default hot-standby
+//! restore — both policies produce identical results, so each stays
+//! benchmarkable against the other.
 
 use crate::apps;
 use crate::coordinator::cluster::{Cluster, ClusterConfig, EngineKind};
@@ -38,6 +42,9 @@ pub struct Options {
     pub fail_at: Vec<(usize, usize)>,
     /// Checkpoint cadence in committed blocks (`--checkpoint-every N`).
     pub checkpoint_every: Option<usize>,
+    /// Recovery policy: re-home a dead node's keys onto survivors instead
+    /// of the hot-standby restore (`--evacuate`).
+    pub evacuate: bool,
 }
 
 impl Default for Options {
@@ -52,6 +59,7 @@ impl Default for Options {
             seed: 42,
             fail_at: Vec::new(),
             checkpoint_every: None,
+            evacuate: false,
         }
     }
 }
@@ -63,7 +71,7 @@ impl Options {
         for &(node, block) in &self.fail_at {
             plan = plan.and_kill_at_block(node, block);
         }
-        let mut fault = FaultConfig::disabled().with_plan(plan);
+        let mut fault = FaultConfig::disabled().with_plan(plan).with_evacuation(self.evacuate);
         if let Some(every) = self.checkpoint_every {
             fault = fault.with_checkpoint_every(every);
         }
@@ -74,7 +82,7 @@ impl Options {
 const USAGE: &str = "usage: blaze <pi|wordcount|pagerank|kmeans|gmm|knn|all> \
 [--nodes N] [--workers W] [--engine blaze|conventional] [--scale S] \
 [--artifacts DIR|none] [--seed SEED] [--fail-at NODE@BLOCK ...] \
-[--checkpoint-every BLOCKS]";
+[--checkpoint-every BLOCKS] [--evacuate]";
 
 /// Parse argv (without the program name).
 pub fn parse(args: &[String]) -> Result<Options, String> {
@@ -103,6 +111,7 @@ pub fn parse(args: &[String]) -> Result<Options, String> {
                 opts.checkpoint_every =
                     Some(next("block count")?.parse().map_err(|e| format!("{e}"))?)
             }
+            "--evacuate" => opts.evacuate = true,
             "--fail-at" => {
                 let spec = next("NODE@BLOCK spec")?;
                 let Some((node, block)) = spec.split_once('@') else {
@@ -258,16 +267,22 @@ mod tests {
 
     #[test]
     fn parse_fault_flags() {
-        let o = parse(&argv("wordcount --fail-at 1@3 --fail-at 2@7 --checkpoint-every 4"))
-            .unwrap();
+        let o = parse(&argv(
+            "wordcount --fail-at 1@3 --fail-at 2@7 --checkpoint-every 4 --evacuate",
+        ))
+        .unwrap();
         assert_eq!(o.fail_at, vec![(1, 3), (2, 7)]);
         assert_eq!(o.checkpoint_every, Some(4));
+        assert!(o.evacuate);
         let fault = o.fault_config();
         assert!(fault.enabled());
+        assert!(fault.evacuate);
         assert_eq!(fault.plan.events().len(), 2);
         assert_eq!(fault.checkpoint_every_blocks, Some(4));
-        // No fault flags → the ordinary engines run.
-        assert!(!parse(&argv("wordcount")).unwrap().fault_config().enabled());
+        // No fault flags → the ordinary engines run, hot-standby default.
+        let plain = parse(&argv("wordcount")).unwrap().fault_config();
+        assert!(!plain.enabled());
+        assert!(!plain.evacuate);
     }
 
     #[test]
@@ -276,6 +291,17 @@ mod tests {
             run(&argv(
                 "wordcount --nodes 3 --workers 2 --scale 1 --artifacts none \
                  --fail-at 1@2 --checkpoint-every 3"
+            )),
+            0
+        );
+    }
+
+    #[test]
+    fn run_wordcount_with_evacuation_end_to_end() {
+        assert_eq!(
+            run(&argv(
+                "wordcount --nodes 3 --workers 2 --scale 1 --artifacts none \
+                 --fail-at 1@2 --checkpoint-every 3 --evacuate"
             )),
             0
         );

@@ -10,7 +10,7 @@ use std::hash::Hash;
 use crate::coordinator::cluster::Cluster;
 use crate::coordinator::metrics::RunStats;
 use crate::coordinator::rebalance::{self, MovePlan, SlotMap, NUM_SLOTS};
-use crate::mapreduce::{DistInput, ReduceTarget, Reducer};
+use crate::mapreduce::{BlockCursor, DistInput, ReduceTarget, Reducer};
 use crate::net::sim::FlowMatrix;
 use crate::ser::fastser::FastSer;
 use crate::util::hash::{fxhash, FxHashMap};
@@ -153,6 +153,18 @@ where
         self.apply_plan(plan, "disthashmap.rebalance")
     }
 
+    /// Plan an evacuation of `dead` nodes from measured slot weights —
+    /// the shared planning step behind [`Self::evacuate`] and the recovery
+    /// engine's [`crate::fault::Recover::evacuate_dead`] hook.
+    fn evacuation_plan(&self, dead: &[usize]) -> MovePlan
+    where
+        K: FastSer,
+        V: FastSer,
+    {
+        let (counts, bytes) = self.slot_weights();
+        rebalance::plan_with_dead(&self.slot_map, &counts, &bytes, self.cluster.nodes(), dead)
+    }
+
     /// Evacuate `dead` nodes: recompute the slot map over the survivors
     /// ([`rebalance::plan_with_dead`]) and re-home every affected entry,
     /// with the moved bytes counted through the flow model. After this no
@@ -163,21 +175,21 @@ where
         K: FastSer,
         V: FastSer,
     {
-        let nodes = self.cluster.nodes();
-        let (counts, bytes) = self.slot_weights();
-        let plan = rebalance::plan_with_dead(&self.slot_map, &counts, &bytes, nodes, dead);
+        let plan = self.evacuation_plan(dead);
         self.apply_plan(plan, "disthashmap.evacuate")
     }
 
-    /// Execute a rebalance plan: move entries, adopt the new map, record
-    /// the transfer.
-    fn apply_plan(&mut self, plan: MovePlan, label: &str) -> MovePlan
+    /// Execute a rebalance plan: move entries between shards (serializing
+    /// for real) and adopt the new slot map. Returns one `(from, to,
+    /// bytes)` flow per executed move; no metrics are recorded — callers
+    /// charge the transfer themselves ([`Self::apply_plan`] as a
+    /// standalone run, the recovery engine into its job's virtual time).
+    pub(crate) fn execute_plan(&mut self, plan: &MovePlan) -> Vec<(usize, usize, u64)>
     where
         K: FastSer,
         V: FastSer,
     {
-        let nodes = self.cluster.nodes();
-        let mut flows = FlowMatrix::new(nodes);
+        let mut flows = Vec::with_capacity(plan.moves.len());
         for mv in &plan.moves {
             // Re-home every entry in the moved slot, serializing for real.
             let moved: Vec<(K, V)> = self.shards[mv.from]
@@ -190,13 +202,28 @@ where
                 k.write(&mut w);
                 v.write(&mut w);
             }
-            flows.record(mv.from, mv.to, w.len() as u64);
+            flows.push((mv.from, mv.to, w.len() as u64));
             for (k, v) in moved {
                 self.shards[mv.from].remove(&k);
                 self.shards[mv.to].insert(k, v);
             }
         }
         self.slot_map = plan.new_map.clone();
+        flows
+    }
+
+    /// Execute a rebalance plan as a standalone operation: move entries,
+    /// adopt the new map, record the transfer as its own run.
+    fn apply_plan(&mut self, plan: MovePlan, label: &str) -> MovePlan
+    where
+        K: FastSer,
+        V: FastSer,
+    {
+        let nodes = self.cluster.nodes();
+        let mut flows = FlowMatrix::new(nodes);
+        for (from, to, bytes) in self.execute_plan(&plan) {
+            flows.record(from, to, bytes);
+        }
         let transfer = flows.phase_time(&self.cluster.config().network);
         self.cluster.metrics().record_run(RunStats {
             label: label.into(),
@@ -223,6 +250,25 @@ where
     }
 }
 
+/// Block cursor over one hash shard: a single persistent shard iterator
+/// sliced into per-worker blocks by position, so walking all blocks in
+/// order touches every entry exactly once (no per-block skip rescans).
+pub struct HashBlockCursor<'a, K, V> {
+    iter: std::collections::hash_map::Iter<'a, K, V>,
+    sizes: std::vec::IntoIter<usize>,
+}
+
+impl<K, V> BlockCursor<K, V> for HashBlockCursor<'_, K, V> {
+    fn next_block<F: FnMut(&K, &V)>(&mut self, mut f: F) -> bool {
+        let Some(len) = self.sizes.next() else { return false };
+        for _ in 0..len {
+            let (k, v) = self.iter.next().expect("block sizes cover the shard");
+            f(k, v);
+        }
+        true
+    }
+}
+
 impl<K, V> DistInput for DistHashMap<K, V>
 where
     K: Hash + Eq + Clone,
@@ -230,6 +276,10 @@ where
 {
     type K = K;
     type V = V;
+    type Cursor<'a>
+        = HashBlockCursor<'a, K, V>
+    where
+        Self: 'a;
 
     fn cluster(&self) -> &Cluster {
         &self.cluster
@@ -239,25 +289,14 @@ where
         self.shards[node].len()
     }
 
-    fn for_each_worker_item<F: FnMut(usize, &Self::K, &Self::V)>(
-        &self,
-        node: usize,
-        workers: usize,
-        mut f: F,
-    ) {
-        let n = self.shards[node].len();
-        if n == 0 {
-            return;
-        }
-        // One pass; worker assignment by position (block split).
-        let ranges = crate::coordinator::scheduler::block_ranges(n, workers);
-        let mut w = 0usize;
-        for (i, (k, v)) in self.shards[node].iter().enumerate() {
-            while i >= ranges[w].end {
-                w += 1;
-            }
-            f(w, k, v);
-        }
+    fn block_cursor(&self, node: usize, workers: usize) -> HashBlockCursor<'_, K, V> {
+        // Worker assignment by position in iteration order (block split).
+        let sizes: Vec<usize> =
+            crate::coordinator::scheduler::block_ranges(self.shards[node].len(), workers)
+                .into_iter()
+                .map(|r| r.len())
+                .collect();
+        HashBlockCursor { iter: self.shards[node].iter(), sizes: sizes.into_iter() }
     }
 }
 
@@ -270,9 +309,13 @@ where
     V: Clone + FastSer,
 {
     fn snapshot_shard(&self, node: usize) -> Option<Vec<u8>> {
-        let pairs: Vec<(K, V)> =
-            self.shards[node].iter().map(|(k, v)| (k.clone(), v.clone())).collect();
-        Some(crate::ser::fastser::encode_pairs(&pairs))
+        // The shared `encode_pairs` batch frame, written straight from the
+        // shard iterator — no clone of the entries on the checkpoint hot
+        // path.
+        let shard = &self.shards[node];
+        let mut w = crate::ser::fastser::Writer::new();
+        crate::ser::fastser::write_pairs(&mut w, shard.len(), shard.iter());
+        Some(w.take())
     }
 
     fn restore_shard(
@@ -289,6 +332,15 @@ where
 
     fn lose_shard(&mut self, node: usize) {
         self.shards[node] = FxHashMap::default();
+    }
+
+    /// Recovery-time evacuation: recompute the slot map over the survivors
+    /// and relocate every affected entry, returning the real serialized
+    /// bytes per move for the recovery engine to charge. Entries are moved,
+    /// never re-reduced, so results are unchanged.
+    fn evacuate_dead(&mut self, dead: &[usize]) -> Option<Vec<(usize, usize, u64)>> {
+        let plan = self.evacuation_plan(dead);
+        Some(self.execute_plan(&plan))
     }
 }
 
@@ -429,5 +481,57 @@ mod tests {
         let node = m.owner_of(&key);
         m.absorb(node, vec![(key.clone(), 2), (key.clone(), 3)], &red);
         assert_eq!(m.get(&key), Some(5));
+    }
+
+    #[test]
+    fn block_cursor_single_pass_covers_every_entry_once() {
+        let c = Cluster::local(3, 4);
+        let mut m: DistHashMap<u64, u64> = DistHashMap::new(&c);
+        for i in 0..100 {
+            m.insert(i, i * 2);
+        }
+        for node in 0..3 {
+            let mut seen: Vec<u64> = Vec::new();
+            let mut cur = m.block_cursor(node, 4);
+            let mut blocks = 0usize;
+            while cur.next_block(|k, v| {
+                assert_eq!(*v, *k * 2);
+                seen.push(*k);
+            }) {
+                blocks += 1;
+            }
+            assert_eq!(blocks, 4, "one block per worker even when the shard is small");
+            assert_eq!(seen.len(), m.node_len(node), "every entry exactly once");
+            let mut dedup = seen.clone();
+            dedup.sort_unstable();
+            dedup.dedup();
+            assert_eq!(dedup.len(), seen.len(), "no entry visited twice");
+        }
+    }
+
+    #[test]
+    fn evacuate_dead_moves_entries_and_reports_flows() {
+        use crate::fault::Recover;
+        let c = Cluster::local(4, 1);
+        let mut m: DistHashMap<String, u64> = DistHashMap::new(&c);
+        for i in 0..500 {
+            m.insert(format!("key{i}"), i);
+        }
+        let before = m.collect();
+        let flows = m.evacuate_dead(&[2]).expect("hash maps support re-homing");
+        let from_dead: u64 =
+            flows.iter().filter(|(src, _, _)| *src == 2).map(|(_, _, b)| b).sum();
+        assert!(from_dead > 0, "dead node's entries must be charged as moved bytes");
+        for (_, dst, _) in &flows {
+            assert_ne!(*dst, 2, "no slot may move onto the dead node");
+        }
+        assert!(m.shard(2).is_empty());
+        for i in 0..500 {
+            assert_ne!(m.owner_of(&format!("key{i}")), 2, "key{i} still routed to dead node");
+        }
+        assert_eq!(m.collect(), before, "evacuation relocates, never changes entries");
+        // Unlike `evacuate`, the recovery hook records no standalone run —
+        // the engine charges the flows into its own job.
+        assert!(c.metrics().runs().iter().all(|r| !r.label.contains("evacuate")));
     }
 }

@@ -6,7 +6,7 @@
 
 use crate::coordinator::cluster::Cluster;
 use crate::coordinator::scheduler::block_ranges;
-use crate::mapreduce::DistInput;
+use crate::mapreduce::{BlockCursor, DistInput};
 
 /// Distributed `[start, end)` range with a step.
 #[derive(Debug, Clone)]
@@ -58,9 +58,36 @@ impl DistRange {
     }
 }
 
+/// Block cursor over one node's sub-range: elements are generated on the
+/// fly, one block per call — nothing is ever stored or rescanned.
+pub struct RangeBlockCursor {
+    /// Range start and step (copied; the cursor owns everything it needs).
+    start: u64,
+    step: u64,
+    /// Global index of the node's first element.
+    node_start: usize,
+    ranges: std::vec::IntoIter<std::ops::Range<usize>>,
+}
+
+impl BlockCursor<u64, u64> for RangeBlockCursor {
+    fn next_block<F: FnMut(&u64, &u64)>(&mut self, mut f: F) -> bool {
+        let Some(r) = self.ranges.next() else { return false };
+        for i in r {
+            let global = (self.node_start + i) as u64;
+            let value = self.start + global * self.step;
+            f(&global, &value);
+        }
+        true
+    }
+}
+
 impl DistInput for DistRange {
     type K = u64;
     type V = u64;
+    type Cursor<'a>
+        = RangeBlockCursor
+    where
+        Self: 'a;
 
     fn cluster(&self) -> &Cluster {
         &self.cluster
@@ -71,21 +98,14 @@ impl DistInput for DistRange {
         ranges[node].len()
     }
 
-    fn for_each_worker_item<F: FnMut(usize, &Self::K, &Self::V)>(
-        &self,
-        node: usize,
-        workers: usize,
-        mut f: F,
-    ) {
+    fn block_cursor(&self, node: usize, workers: usize) -> RangeBlockCursor {
         let node_ranges = block_ranges(self.len() as usize, self.cluster.nodes());
         let node_range = node_ranges[node].clone();
-        let worker_ranges = block_ranges(node_range.len(), workers);
-        for (w, wr) in worker_ranges.into_iter().enumerate() {
-            for i in wr {
-                let global = (node_range.start + i) as u64;
-                let value = self.nth(global);
-                f(w, &global, &value);
-            }
+        RangeBlockCursor {
+            start: self.start,
+            step: self.step,
+            node_start: node_range.start,
+            ranges: block_ranges(node_range.len(), workers).into_iter(),
         }
     }
 }
@@ -132,5 +152,37 @@ mod tests {
         let mut seen = Vec::new();
         r.foreach(|v| seen.push(v));
         assert_eq!(seen, vec![100, 102, 104, 106, 108]);
+    }
+
+    #[test]
+    fn block_cursor_generates_blocks_on_the_fly() {
+        let c = Cluster::local(2, 3);
+        let r = DistRange::with_step(&c, 10, 50, 2); // 20 elements
+        let mut all: Vec<u64> = Vec::new();
+        for node in 0..2 {
+            let mut cur = r.block_cursor(node, 3);
+            let mut blocks = 0usize;
+            while cur.next_block(|k, v| {
+                assert_eq!(*v, 10 + *k * 2, "value derives from global index");
+                all.push(*v);
+            }) {
+                blocks += 1;
+            }
+            assert_eq!(blocks, 3);
+        }
+        assert_eq!(all.len(), 20);
+        assert_eq!(all, (0..20u64).map(|i| 10 + i * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn block_cursor_empty_range_yields_empty_blocks() {
+        let c = Cluster::local(2, 2);
+        let r = DistRange::new(&c, 5, 5);
+        let mut cur = r.block_cursor(0, 2);
+        let mut blocks = 0usize;
+        while cur.next_block(|_, _| panic!("empty range has no items")) {
+            blocks += 1;
+        }
+        assert_eq!(blocks, 2, "empty blocks still count");
     }
 }

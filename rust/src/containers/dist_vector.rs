@@ -5,7 +5,7 @@ use std::time::Instant;
 use crate::coordinator::cluster::Cluster;
 use crate::coordinator::metrics::RunStats;
 use crate::coordinator::scheduler::block_ranges;
-use crate::mapreduce::{DistInput, ReduceTarget, Reducer};
+use crate::mapreduce::{BlockCursor, DistInput, ReduceTarget, Reducer};
 use crate::net::sim::FlowMatrix;
 use crate::net::vtime::VirtualTime;
 use crate::ser::fastser::FastSer;
@@ -251,9 +251,32 @@ impl<T> DistVector<T> {
     }
 }
 
+/// Block cursor over one shard: worker blocks are contiguous slices, so
+/// each block is yielded in O(its length) with no rescans.
+pub struct VectorBlockCursor<'a, T> {
+    shard: &'a [T],
+    /// Global index of the shard's first element.
+    start: usize,
+    ranges: std::vec::IntoIter<std::ops::Range<usize>>,
+}
+
+impl<T> BlockCursor<usize, T> for VectorBlockCursor<'_, T> {
+    fn next_block<F: FnMut(&usize, &T)>(&mut self, mut f: F) -> bool {
+        let Some(r) = self.ranges.next() else { return false };
+        for i in r {
+            f(&(self.start + i), &self.shard[i]);
+        }
+        true
+    }
+}
+
 impl<T> DistInput for DistVector<T> {
     type K = usize;
     type V = T;
+    type Cursor<'a>
+        = VectorBlockCursor<'a, T>
+    where
+        Self: 'a;
 
     fn cluster(&self) -> &Cluster {
         &self.cluster
@@ -263,18 +286,11 @@ impl<T> DistInput for DistVector<T> {
         self.shards[node].len()
     }
 
-    fn for_each_worker_item<F: FnMut(usize, &Self::K, &Self::V)>(
-        &self,
-        node: usize,
-        workers: usize,
-        mut f: F,
-    ) {
-        let start = self.offsets()[node];
-        let worker_ranges = block_ranges(self.shards[node].len(), workers);
-        for (w, wr) in worker_ranges.into_iter().enumerate() {
-            for i in wr {
-                f(w, &(start + i), &self.shards[node][i]);
-            }
+    fn block_cursor(&self, node: usize, workers: usize) -> VectorBlockCursor<'_, T> {
+        VectorBlockCursor {
+            shard: &self.shards[node],
+            start: self.offsets()[node],
+            ranges: block_ranges(self.shards[node].len(), workers).into_iter(),
         }
     }
 }
@@ -415,5 +431,25 @@ mod tests {
         let c = Cluster::local(3, 1);
         let dv = DistVector::from_fn(&c, 10, |i| i * i);
         assert_eq!(dv.collect(), (0..10).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn block_cursor_yields_worker_blocks_in_order() {
+        let c = Cluster::local(3, 4);
+        let dv = DistVector::from_vec(&c, (0..50u64).collect());
+        for node in 0..3 {
+            let mut via_cursor: Vec<(usize, usize, u64)> = Vec::new();
+            let mut cur = dv.block_cursor(node, 4);
+            let mut w = 0usize;
+            while cur.next_block(|k, v| via_cursor.push((w, *k, *v))) {
+                w += 1;
+            }
+            assert_eq!(w, 4, "one block per worker, empty blocks included");
+            assert!(!cur.next_block(|_, _| panic!("exhausted cursor must not visit")));
+            let mut via_items: Vec<(usize, usize, u64)> = Vec::new();
+            dv.for_each_worker_item(node, 4, |w, k, v| via_items.push((w, *k, *v)));
+            assert_eq!(via_cursor, via_items, "cursor and tagged walk agree");
+            assert_eq!(via_cursor.len(), dv.node_len(node));
+        }
     }
 }

@@ -24,6 +24,14 @@ pub struct RunStats {
     pub shuffle_sec: f64,
     /// Cross-node bytes actually serialized and moved.
     pub shuffle_bytes: u64,
+    /// Map-output bytes produced by the engine's serializer, including
+    /// node-local blocks when its policy spills them (the conventional
+    /// engine serializes every block; eager never serializes locally).
+    /// Excludes checkpoint/restore/evacuation traffic.
+    pub ser_bytes: u64,
+    /// Bytes migrated by recovery-time slot evacuation (0 unless a failure
+    /// was recovered with the evacuation policy).
+    pub evac_bytes: u64,
     /// Pairs emitted by mappers (before any combining).
     pub pairs_emitted: u64,
     /// Pairs that crossed the network (after eager combine; == emitted for

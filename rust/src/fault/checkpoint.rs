@@ -35,6 +35,21 @@ pub trait Recover {
 
     /// Drop `node`'s shard content (simulates losing the worker's memory).
     fn lose_shard(&mut self, node: usize);
+
+    /// Re-home every key owned by a `dead` node onto the survivors, so no
+    /// key routes to a dead node afterwards. Returns the executed moves as
+    /// `(src, dst, serialized_bytes)` flows for the caller to charge
+    /// through its network model, or `None` when the target cannot re-home
+    /// keys (block-addressed or driver-resident targets) and recovery must
+    /// keep the hot-standby restore policy instead.
+    ///
+    /// Implementations must not re-reduce values — evacuation relocates
+    /// entries, it never changes them — so results stay byte-identical
+    /// under either recovery policy.
+    fn evacuate_dead(&mut self, dead: &[usize]) -> Option<Vec<(usize, usize, u64)>> {
+        let _ = dead;
+        None
+    }
 }
 
 /// `Vec<V>` targets gather at the driver (node 0, never killed): durable,

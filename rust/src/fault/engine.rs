@@ -20,21 +20,40 @@
 //! checkpoint cost is visible in the virtual makespan and a replica can
 //! never be lost to a later failure.
 //!
+//! **Input iteration.** Blocks pull their items through the
+//! [`DistInput::block_cursor`] API: one cached cursor per home node,
+//! advanced one block at a time as blocks execute in id order, so the
+//! failure-free path walks each node's partition **exactly once per job**
+//! (the old scheme re-walked it once per worker block — O(workers · items)
+//! host overhead). Only recovery replays, which revisit lower-id blocks out
+//! of order, rebuild a cursor and skip to their block.
+//!
 //! **Recovery.** When the [`FailurePlan`](super::FailurePlan) kills a node
 //! at a commit boundary: (1) its still-pending map blocks are reassigned
 //! round-robin to survivors and re-executed from the (durable) input; (2)
 //! its reduce shard is dropped and restored from the latest checkpoint,
 //! with restore bytes charged driver→node — the restored shard lives on a
 //! hot-standby *replacement* that adopts the dead node's identity, so key
-//! routing is unchanged and the dead node executes no further map blocks
-//! (jobs that prefer re-homing keys onto survivors instead can call
-//! [`crate::containers::DistHashMap::evacuate`] between jobs); (3) ledger
-//! entries for that shard
+//! routing is unchanged and the dead node executes no further map blocks;
+//! (3) ledger entries for that shard
 //! newer than the checkpoint are rolled back and their blocks re-executed
 //! as *replays* that re-reduce **only** the lost shard's partial — the
 //! ledger dedupes every other shard's already-absorbed partials, which is
 //! what preserves the paper's "targets are merged into, never cleared"
 //! semantics without double counting.
+//!
+//! **Evacuation policy.** With [`FaultConfig::evacuate`](super::FaultConfig)
+//! set (CLI `--evacuate`), step (2)'s hot standby is only transitional:
+//! once the dead node's rollback replays drain, the engine re-homes its
+//! key space onto the survivors ([`Recover::evacuate_dead`], backed by
+//! [`crate::coordinator::rebalance::plan_with_dead`] for hash targets),
+//! charges the migrated bytes through the flow model, and takes a
+//! re-stabilization checkpoint so any later failure rolls back against the
+//! post-evacuation routing. All subsequent reduce traffic routes to the
+//! survivors. Targets that cannot re-home keys (block-addressed
+//! `DistVector`, driver-resident `Vec`) fall back to hot-standby with a
+//! metrics note. Both policies produce byte-identical results — evacuation
+//! relocates entries without re-reducing them.
 
 use std::collections::hash_map::Entry;
 use std::collections::{BTreeMap, BTreeSet};
@@ -44,7 +63,7 @@ use std::time::Instant;
 use crate::coordinator::cluster::EngineKind;
 use crate::coordinator::metrics::RunStats;
 use crate::mapreduce::reducers::Reducer;
-use crate::mapreduce::{DistInput, Emit, ReduceTarget, RunRecorder};
+use crate::mapreduce::{BlockCursor, DistInput, Emit, ReduceTarget, RunRecorder};
 use crate::net::sim::FlowMatrix;
 use crate::net::vtime::VirtualTime;
 use crate::ser::fastser::{decode_pairs_exact, encode_pairs, FastSer};
@@ -73,6 +92,10 @@ pub(crate) struct FtStats {
     pub blocks_replayed: usize,
     /// Bytes moved restoring shards from checkpoints.
     pub restore_bytes: u64,
+    /// Dead nodes whose key space was re-homed onto survivors.
+    pub evacuations: usize,
+    /// Bytes migrated by recovery-time evacuation.
+    pub evacuation_bytes: u64,
 }
 
 /// A block waiting to execute (or re-execute).
@@ -141,12 +164,31 @@ where
     let mut fired = vec![false; fault.plan.events().len()];
     let mut rr = 0usize;
 
+    // Evacuation policy state: victims queued until their rollback replays
+    // drain, plus the migration flows once they are re-homed.
+    let evacuate_on = fault.evacuate;
+    let mut evac_queue: Vec<usize> = Vec::new();
+    let mut evac_flows = FlowMatrix::new(nodes);
+
+    // Per-home cached block cursor `(cursor, next_block_in_node)`. Blocks
+    // execute in id order, so the failure-free pass advances each node's
+    // cursor one block at a time — a single walk of the partition per job.
+    // Recovery replays revisit lower-id blocks out of order; only those
+    // rebuild the cursor and skip forward.
+    let mut cursors: Vec<Option<(I::Cursor<'_>, usize)>> = (0..nodes).map(|_| None).collect();
+
     let mut per_node_secs = vec![0.0f64; nodes];
     let mut per_node_reduce_secs = vec![0.0f64; nodes];
     let mut pairs_emitted = 0u64;
     let mut pairs_shuffled = 0u64;
+    let mut ser_bytes = 0u64;
     let mut peak_staged_bytes = 0u64;
+    // Total block executions (replays included) vs *distinct* blocks
+    // committed at least once. Triggers and the checkpoint cadence count
+    // fresh commits only, so `AtBlock(n)` means "after n map blocks" even
+    // when an earlier recovery inflated the execution count with replays.
     let mut committed = 0usize;
+    let mut fresh_committed = 0usize;
 
     loop {
         let Some(b) = pending.keys().next().copied() else { break };
@@ -161,12 +203,20 @@ where
         crate::util::random::set_stream(cfg.seed, b as u64);
         let mut parts: Vec<Vec<(K2, V2)>> = (0..nodes).map(|_| Vec::new()).collect();
         let mut emitted_here = 0u64;
+        let in_order = matches!(&cursors[home], Some((_, next)) if *next == w);
+        if !in_order {
+            // Out-of-order (a recovery replay, or the first block after
+            // one): rebuild the node's cursor and skip to block `w`.
+            let mut cur = input.block_cursor(home, workers);
+            for _ in 0..w {
+                cur.next_block(|_, _| {});
+            }
+            cursors[home] = Some((cur, w));
+        }
+        let (cur, next) = cursors[home].as_mut().expect("cursor installed");
         if conventional {
             let t_ref: &T = &*target;
-            input.for_each_worker_item(home, workers, |iw, k, v| {
-                if iw != w {
-                    return;
-                }
+            cur.next_block(|k, v| {
                 let mut emit = |k2: K2, v2: V2| {
                     emitted_here += 1;
                     parts[t_ref.shard_of(&k2, nodes)].push((k2, v2));
@@ -175,10 +225,7 @@ where
             });
         } else {
             let mut cache: FxHashMap<K2, V2> = FxHashMap::default();
-            input.for_each_worker_item(home, workers, |iw, k, v| {
-                if iw != w {
-                    return;
-                }
+            cur.next_block(|k, v| {
                 let mut emit = |k2: K2, v2: V2| {
                     emitted_here += 1;
                     match cache.entry(k2) {
@@ -194,6 +241,7 @@ where
                 parts[target.shard_of(&k, nodes)].push((k, v));
             }
         }
+        *next = w + 1;
         let mut exec_secs = t0.elapsed().as_secs_f64();
         if conventional {
             exec_secs += emitted_here as f64 * cfg.conventional_overhead_sec;
@@ -217,23 +265,32 @@ where
             }
             pairs_shuffled += part.len() as u64;
             let t1 = Instant::now();
-            if dst == p.exec_node {
+            if conventional {
+                // Conventional spills every block — node-local ones
+                // included, like the ordinary conventional engine — with
+                // the tagged codec; only cross-node bytes enter the flow
+                // model.
+                let buf = encode_pairs_tagged(&part);
+                staged_bytes += buf.len() as u64;
+                ser_bytes += buf.len() as u64;
+                if dst != p.exec_node {
+                    shuffle_flows.record(p.exec_node, dst, buf.len() as u64);
+                }
+                let decoded =
+                    decode_pairs_tagged::<K2, V2>(&buf).expect("ft shuffle payload must decode");
+                target.absorb(dst, decoded, red);
+            } else if dst == p.exec_node {
                 // Node-local partials never serialize (eager semantics).
                 target.absorb(dst, part, red);
             } else {
-                // Cross-node: really serialize, count, and decode — eager
-                // uses the tag-less fast codec, conventional the tagged one.
-                let decoded = if conventional {
-                    let buf = encode_pairs_tagged(&part);
-                    staged_bytes += buf.len() as u64;
-                    shuffle_flows.record(p.exec_node, dst, buf.len() as u64);
-                    decode_pairs_tagged::<K2, V2>(&buf).expect("ft shuffle payload must decode")
-                } else {
-                    let buf = encode_pairs(&part);
-                    staged_bytes += buf.len() as u64;
-                    shuffle_flows.record(p.exec_node, dst, buf.len() as u64);
-                    decode_pairs_exact::<K2, V2>(&buf).expect("ft shuffle payload must decode")
-                };
+                // Cross-node eager: really serialize, count, and decode
+                // with the tag-less fast codec.
+                let buf = encode_pairs(&part);
+                staged_bytes += buf.len() as u64;
+                ser_bytes += buf.len() as u64;
+                shuffle_flows.record(p.exec_node, dst, buf.len() as u64);
+                let decoded =
+                    decode_pairs_exact::<K2, V2>(&buf).expect("ft shuffle payload must decode");
                 target.absorb(dst, decoded, red);
             }
             per_node_reduce_secs[dst] += t1.elapsed().as_secs_f64();
@@ -241,10 +298,14 @@ where
         }
         peak_staged_bytes = peak_staged_bytes.max(staged_bytes);
         committed += 1;
+        let was_fresh = exec_epoch[b] == 1;
+        if was_fresh {
+            fresh_committed += 1;
+        }
 
-        // ---- Periodic checkpoint ----------------------------------------
+        // ---- Periodic checkpoint (fresh-commit cadence) -----------------
         if let Some(every) = fault.checkpoint_every_blocks {
-            if every > 0 && committed % every == 0 && !pending.is_empty() {
+            if every > 0 && was_fresh && fresh_committed % every == 0 && !pending.is_empty() {
                 latest = Checkpoint::capture(&*target, nodes, committed, &ledger);
                 account_checkpoint(&latest, &mut ckpt_flows, &mut stats, &mut peak_ckpt_bytes);
             }
@@ -260,7 +321,8 @@ where
                 continue;
             }
             let due = match ev.trigger {
-                FailureTrigger::AtBlock(n) => committed >= n,
+                // Fresh commits only: replays never advance the boundary.
+                FailureTrigger::AtBlock(n) => fresh_committed >= n,
                 FailureTrigger::AtTime(secs) => elapsed >= secs,
             };
             if !due {
@@ -326,6 +388,55 @@ where
                         only: Some(BTreeSet::from([d])),
                     });
             }
+
+            // (4) Under the evacuation policy the hot standby is only
+            // transitional: queue the victim for re-homing once its
+            // rollback replays drain.
+            if evacuate_on {
+                evac_queue.push(d);
+            }
+        }
+
+        // ---- Deferred evacuation (the `--evacuate` recovery policy) -----
+        // Runs once no replay is pending: replay ids all precede
+        // unexecuted fresh blocks, so from here on no partial is routed
+        // under the pre-failure map. The *full* dead set is passed so a
+        // prior evacuation's victims can never be re-assigned slots.
+        if !evac_queue.is_empty() && pending.values().all(|pb| pb.only.is_none()) {
+            let dead_all: Vec<usize> = (0..nodes).filter(|&n| !alive[n]).collect();
+            match target.evacuate_dead(&dead_all) {
+                Some(moves) => {
+                    for (src, dst, bytes) in moves {
+                        if bytes > 0 {
+                            evac_flows.record(src, dst, bytes);
+                            stats.evacuation_bytes += bytes;
+                        }
+                    }
+                    stats.evacuations += evac_queue.len();
+                    // Re-stabilization checkpoint: a later failure must
+                    // roll back against post-evacuation routing, and a
+                    // survivor's restore must include the keys it adopted.
+                    // Pointless (and not charged) when no blocks remain —
+                    // failures only fire at commit boundaries, so nothing
+                    // can be lost after the last commit.
+                    if !pending.is_empty() {
+                        latest = Checkpoint::capture(&*target, nodes, committed, &ledger);
+                        account_checkpoint(
+                            &latest,
+                            &mut ckpt_flows,
+                            &mut stats,
+                            &mut peak_ckpt_bytes,
+                        );
+                    }
+                }
+                None => {
+                    cluster.metrics().record_note(format!(
+                        "fault[{label}]: target cannot re-home keys; \
+                         hot-standby restore kept for nodes {evac_queue:?}"
+                    ));
+                }
+            }
+            evac_queue.clear();
         }
     }
 
@@ -362,6 +473,10 @@ where
     if restore_secs > 0.0 {
         vt.fixed_phase("restore", restore_secs);
     }
+    let evac_secs = evac_flows.phase_time(&cfg.network);
+    if evac_secs > 0.0 {
+        vt.fixed_phase("evacuate", evac_secs);
+    }
 
     // ---- Record -----------------------------------------------------------
     let compute_sec: f64 = vt
@@ -371,9 +486,11 @@ where
         .map(|p| p.seconds)
         .sum();
     let makespan = vt.makespan();
+    let evac_bytes = evac_flows.cross_node_bytes();
     let shuffle_bytes = shuffle_flows.cross_node_bytes()
         + ckpt_flows.cross_node_bytes()
-        + restore_flows.cross_node_bytes();
+        + restore_flows.cross_node_bytes()
+        + evac_bytes;
     let max_epoch = exec_epoch.iter().copied().max().unwrap_or(0);
     cluster.metrics().record_run(RunStats {
         label: rec.label,
@@ -384,6 +501,8 @@ where
         compute_sec,
         shuffle_sec: makespan - compute_sec,
         shuffle_bytes,
+        ser_bytes,
+        evac_bytes,
         pairs_emitted,
         pairs_shuffled,
         peak_intermediate_bytes: peak_staged_bytes + peak_ckpt_bytes,
@@ -391,7 +510,7 @@ where
     });
     cluster.metrics().record_note(format!(
         "fault[{label}]: checkpoints={} ckpt_bytes={} failures={} ignored={} \
-         reassigned={} replayed={} restore_bytes={} max_epoch={}",
+         reassigned={} replayed={} restore_bytes={} evacuations={} evac_bytes={} max_epoch={}",
         stats.checkpoints,
         stats.checkpoint_bytes,
         stats.failures,
@@ -399,6 +518,8 @@ where
         stats.blocks_reassigned,
         stats.blocks_replayed,
         stats.restore_bytes,
+        stats.evacuations,
+        stats.evacuation_bytes,
         max_epoch,
     ));
 }

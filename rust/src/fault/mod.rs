@@ -16,12 +16,16 @@
 //!   cost shows up in the virtual makespan. Targets opt in via the
 //!   [`Recover`] trait.
 //! * [`engine`] — the recoverable MapReduce engine: block-granular
-//!   execution committed in block-id order, re-assignment of a dead
-//!   node's unfinished map blocks to survivors, shard restoration from
-//!   the last snapshot, and per-block-epoch dedupe of re-emitted
+//!   execution committed in block-id order (pulling input through the
+//!   single-pass [`crate::mapreduce::DistInput::block_cursor`] API — each
+//!   node's partition is walked exactly once per failure-free job),
+//!   re-assignment of a dead node's unfinished map blocks to survivors,
+//!   shard recovery under either the hot-standby restore policy or
+//!   [`FaultConfig::evacuate`] slot re-homing (with migration charged
+//!   through the flow model), and per-block-epoch dedupe of re-emitted
 //!   partials — preserving the paper's "targets are merged into, never
 //!   cleared" semantics while keeping failure and failure-free runs
-//!   byte-identical.
+//!   byte-identical under every policy.
 //!
 //! Enable it per cluster:
 //!

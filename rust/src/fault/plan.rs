@@ -26,8 +26,10 @@ use crate::util::rng::SplitRng;
 /// When a planned failure fires.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum FailureTrigger {
-    /// Fire once `n` map blocks have committed globally (0 and 1 both mean
-    /// "after the first block commits").
+    /// Fire once `n` *distinct* map blocks have committed globally (0 and
+    /// 1 both mean "after the first block commits"). Recovery replays
+    /// re-commit already-counted blocks and do not advance the boundary,
+    /// so `n` keeps its meaning in multi-failure runs.
     AtBlock(usize),
     /// Fire at the first block boundary where the job's virtual elapsed
     /// time reaches `secs`.
@@ -121,6 +123,18 @@ pub struct FaultConfig {
     /// unaffected, but float reductions there run in block-id order, which
     /// can differ in low bits from the ordinary engines' combine order.
     pub checkpoint_every_blocks: Option<usize>,
+    /// Recovery policy for a dead node's reduce shard. `false` (default):
+    /// hot-standby — the restored shard keeps the dead node's identity and
+    /// routing is unchanged. `true`: after the dead node's rollback replays
+    /// drain, its key space is re-homed onto the survivors
+    /// ([`crate::fault::Recover::evacuate_dead`], backed by
+    /// [`crate::coordinator::rebalance::plan_with_dead`]) with the migrated
+    /// bytes charged through the flow model; all subsequent reduce traffic
+    /// routes to the survivors. Targets that cannot re-home keys
+    /// (block-addressed `DistVector`, driver-resident `Vec`) fall back to
+    /// hot-standby with a metrics note. Results are byte-identical under
+    /// either policy.
+    pub evacuate: bool,
 }
 
 impl FaultConfig {
@@ -143,6 +157,13 @@ impl FaultConfig {
     /// Builder-style checkpoint cadence override.
     pub fn with_checkpoint_every(mut self, blocks: usize) -> Self {
         self.checkpoint_every_blocks = Some(blocks.max(1));
+        self
+    }
+
+    /// Builder-style recovery-policy override: `true` re-homes a dead
+    /// node's keys onto survivors instead of the hot-standby restore.
+    pub fn with_evacuation(mut self, evacuate: bool) -> Self {
+        self.evacuate = evacuate;
         self
     }
 }
@@ -194,5 +215,11 @@ mod tests {
             FaultConfig::disabled().with_checkpoint_every(0).checkpoint_every_blocks,
             Some(1)
         );
+        // Evacuation is a policy toggle, not an enabler: it only matters
+        // once a plan or cadence routes jobs through the recoverable engine.
+        let evac = FaultConfig::disabled().with_evacuation(true);
+        assert!(evac.evacuate);
+        assert!(!evac.enabled());
+        assert!(!FaultConfig::default().evacuate, "hot-standby is the default");
     }
 }

@@ -19,15 +19,25 @@
 //!   `distribute` / `collect` / `load_file` utilities.
 //! * [`mapreduce`] — §2.2/§2.3 the core contribution: the eager-reduction
 //!   MapReduce engine, the small-fixed-key-range fast path, built-in
-//!   reducers, and the conventional (Spark-analog) baseline engine.
+//!   reducers, and the conventional (Spark-analog) baseline engine. Inputs
+//!   feed every engine through the single-pass block-cursor API
+//!   ([`mapreduce::DistInput::block_cursor`]): one cursor per node walks
+//!   the partition exactly once per job, yielding one block per worker.
 //! * [`coordinator`] — cluster topology/config, block scheduler, shuffle
 //!   orchestration with backpressure, shard rebalancing, metrics.
 //! * [`fault`] — fault tolerance: deterministic failure injection
 //!   ([`fault::FailurePlan`]), per-shard target checkpoints replicated
 //!   through the network model, and a recoverable engine that re-executes
-//!   a dead node's map blocks on survivors and restores its reduce shard
-//!   from the last snapshot — failure and failure-free runs produce
-//!   byte-identical results.
+//!   a dead node's map blocks on survivors and recovers its reduce shard
+//!   under one of two policies — the default *hot-standby* restore (the
+//!   replacement keeps the dead node's identity; routing unchanged) or
+//!   `--evacuate` *slot evacuation* (the dead node's key space is re-homed
+//!   onto the survivors via [`coordinator::rebalance::plan_with_dead`],
+//!   with migration bytes charged through the flow model, and subsequent
+//!   reduce traffic routes to the survivors). Failure and failure-free
+//!   runs produce byte-identical results under either policy; the
+//!   cross-engine equivalence harness (`rust/tests/equivalence.rs`) gates
+//!   this for every engine × fault × policy combination.
 //! * [`runtime`] — PJRT runtime: loads AOT-compiled JAX/Pallas artifacts
 //!   (`artifacts/*.hlo.txt`) and executes them from the map hot path.
 //! * [`apps`] — the paper's five data-mining workloads plus Monte-Carlo π,

@@ -24,7 +24,7 @@ use crate::ser::tagged::{decode_pairs_tagged, encode_pairs_tagged, TaggedSer};
 use crate::util::hash::FxHashMap;
 
 use super::reducers::Reducer;
-use super::{DistInput, Emit, ReduceTarget, RunRecorder};
+use super::{BlockCursor, DistInput, Emit, ReduceTarget, RunRecorder};
 
 /// Modeled heap bytes per materialized record on top of its encoded
 /// payload: boxed key + boxed value + tuple + pointer (JVM-analog).
@@ -62,20 +62,21 @@ where
         let mut partitions: Vec<Vec<(K2, V2)>> = (0..nodes).map(|_| Vec::new()).collect();
         let mut emitted = 0u64;
         let mut bytes = 0u64;
-        let mut last_worker = usize::MAX;
-        input.for_each_worker_item(node, workers, |w, k, v| {
-            if w != last_worker {
-                last_worker = w;
-                crate::util::random::set_stream(cfg.seed, (node * workers + w) as u64);
-            }
-            let mut emit = |k2: K2, v2: V2| {
-                emitted += 1;
-                bytes += RECORD_OVERHEAD + k2.encoded_len() as u64 + v2.encoded_len() as u64;
-                let dst = target.shard_of(&k2, nodes);
-                partitions[dst].push((k2, v2));
-            };
-            mapper(k, v, &mut emit);
-        });
+        // Single pass over the node's partition, one cursor block per worker.
+        let mut cur = input.block_cursor(node, workers);
+        for w in 0..workers {
+            crate::util::random::set_stream(cfg.seed, (node * workers + w) as u64);
+            let advanced = cur.next_block(|k, v| {
+                let mut emit = |k2: K2, v2: V2| {
+                    emitted += 1;
+                    bytes += RECORD_OVERHEAD + k2.encoded_len() as u64 + v2.encoded_len() as u64;
+                    let dst = target.shard_of(&k2, nodes);
+                    partitions[dst].push((k2, v2));
+                };
+                mapper(k, v, &mut emit);
+            });
+            debug_assert!(advanced, "cursor yields one block per worker");
+        }
         let measured = t0.elapsed().as_secs_f64();
         // Calibrated per-record executor overhead (JVM analog).
         per_node_map_secs[node] = measured + emitted as f64 * cfg.conventional_overhead_sec;
@@ -174,11 +175,14 @@ where
         compute_sec,
         shuffle_sec: makespan - compute_sec,
         shuffle_bytes,
+        // Conventional spills every block, node-local ones included.
+        ser_bytes: serialized_bytes,
         pairs_emitted,
         pairs_shuffled: pairs_emitted, // no map-side combine
         // Everything is resident at once at the barrier: raw materialized
         // pairs + all serialized blocks + destination grouped map.
         peak_intermediate_bytes: materialized_bytes + serialized_bytes + grouped_peak,
         host_wall_sec: rec.started.elapsed().as_secs_f64(),
+        ..Default::default()
     });
 }

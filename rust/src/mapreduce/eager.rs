@@ -21,7 +21,7 @@ use crate::util::alloc::Scratch;
 use crate::util::hash::FxHashMap;
 
 use super::reducers::Reducer;
-use super::{DistInput, Emit, ReduceTarget, RunRecorder};
+use super::{BlockCursor, DistInput, Emit, ReduceTarget, RunRecorder};
 
 /// Modeled heap overhead per hash-map entry (bucket slot, control bytes,
 /// alignment) added on top of encoded payload bytes in the memory
@@ -68,49 +68,52 @@ where
         let mut local_bytes = 0u64;
         let mut node_peak = 0u64;
         let mut emitted = 0u64;
-        let mut last_worker = usize::MAX;
 
-        input.for_each_worker_item(node, workers, |w, k, v| {
-            if w != last_worker {
-                last_worker = w;
-                crate::util::random::set_stream(cfg.seed, (node * workers + w) as u64);
-            }
-            let cache = &mut caches[w];
+        // Single pass over the node's partition: one cursor, one block per
+        // worker, in block order.
+        let mut cur = input.block_cursor(node, workers);
+        for (w, cache) in caches.iter_mut().enumerate() {
+            // Publish the worker's random stream (paper's `blaze::random`
+            // is worker-local) before its block runs.
+            crate::util::random::set_stream(cfg.seed, (node * workers + w) as u64);
             let wb = &mut worker_bytes[w];
-            let mut emit = |k2: K2, v2: V2| {
-                emitted += 1;
-                match cache.entry(k2) {
-                    Entry::Occupied(mut e) => red.apply(e.get_mut(), &v2),
-                    Entry::Vacant(e) => {
-                        let sz = HASH_ENTRY_OVERHEAD
-                            + e.key().encoded_len() as u64
-                            + v2.encoded_len() as u64;
-                        *wb += sz;
-                        total_cache_bytes += sz;
-                        e.insert(v2);
-                    }
-                }
-                if cache.len() >= cache_cap {
-                    // Overflow: flush the worker cache into the machine-local
-                    // map (popular keys re-enter the cache immediately after).
-                    node_peak = node_peak.max(total_cache_bytes + local_bytes);
-                    for (fk, fv) in cache.drain() {
-                        match local.entry(fk) {
-                            Entry::Occupied(mut e) => red.apply(e.get_mut(), &fv),
-                            Entry::Vacant(e) => {
-                                local_bytes += HASH_ENTRY_OVERHEAD
-                                    + e.key().encoded_len() as u64
-                                    + fv.encoded_len() as u64;
-                                e.insert(fv);
-                            }
+            let advanced = cur.next_block(|k, v| {
+                let mut emit = |k2: K2, v2: V2| {
+                    emitted += 1;
+                    match cache.entry(k2) {
+                        Entry::Occupied(mut e) => red.apply(e.get_mut(), &v2),
+                        Entry::Vacant(e) => {
+                            let sz = HASH_ENTRY_OVERHEAD
+                                + e.key().encoded_len() as u64
+                                + v2.encoded_len() as u64;
+                            *wb += sz;
+                            total_cache_bytes += sz;
+                            e.insert(v2);
                         }
                     }
-                    total_cache_bytes -= *wb;
-                    *wb = 0;
-                }
-            };
-            mapper(k, v, &mut emit);
-        });
+                    if cache.len() >= cache_cap {
+                        // Overflow: flush the worker cache into the machine-local
+                        // map (popular keys re-enter the cache immediately after).
+                        node_peak = node_peak.max(total_cache_bytes + local_bytes);
+                        for (fk, fv) in cache.drain() {
+                            match local.entry(fk) {
+                                Entry::Occupied(mut e) => red.apply(e.get_mut(), &fv),
+                                Entry::Vacant(e) => {
+                                    local_bytes += HASH_ENTRY_OVERHEAD
+                                        + e.key().encoded_len() as u64
+                                        + fv.encoded_len() as u64;
+                                    e.insert(fv);
+                                }
+                            }
+                        }
+                        total_cache_bytes -= *wb;
+                        *wb = 0;
+                    }
+                };
+                mapper(k, v, &mut emit);
+            });
+            debug_assert!(advanced, "cursor yields one block per worker");
+        }
 
         // Merge worker caches into the machine-local map.
         node_peak = node_peak.max(total_cache_bytes + local_bytes);
@@ -216,11 +219,14 @@ where
         compute_sec,
         shuffle_sec: makespan - compute_sec,
         shuffle_bytes,
+        // Eager semantics: only cross-node partials ever serialize.
+        ser_bytes: shuffle_bytes,
         pairs_emitted,
         pairs_shuffled,
         peak_intermediate_bytes: map_peak_bytes
             + sres.peak_in_flight_bytes
             + absorb_buffer_peak,
         host_wall_sec: rec.started.elapsed().as_secs_f64(),
+        ..Default::default()
     });
 }

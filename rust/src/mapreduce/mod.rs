@@ -39,13 +39,36 @@ use std::hash::Hash;
 /// Emit handler handed to mappers.
 pub type Emit<'a, K, V> = &'a mut dyn FnMut(K, V);
 
+/// Single-pass cursor over one node's partition, split into worker blocks.
+///
+/// Created by [`DistInput::block_cursor`] with a fixed `workers` count; each
+/// [`BlockCursor::next_block`] call visits the *next* worker block's items
+/// (block 0, then 1, … then `workers - 1`) and advances the cursor, walking
+/// the underlying partition exactly once across all calls. Empty blocks
+/// still count: `next_block` returns `true` without visiting anything until
+/// all `workers` blocks have been yielded, then `false`.
+///
+/// Engines that execute blocks in order (all of them, on the failure-free
+/// path) therefore touch every input item exactly once per job; the
+/// recoverable engine only rebuilds a cursor (re-walking a prefix) when a
+/// recovery replay revisits an already-executed block out of order.
+pub trait BlockCursor<K, V> {
+    /// Visit every item of the next worker block in partition order.
+    /// Returns `false` (calling `f` on nothing) once all blocks are done.
+    fn next_block<F: FnMut(&K, &V)>(&mut self, f: F) -> bool;
+}
+
 /// Distributed MapReduce input: anything that can iterate its per-node
-/// partition with items tagged by worker.
+/// partition as a sequence of per-worker blocks.
 pub trait DistInput {
     /// Input key type (element index for vectors, key for hash maps).
     type K;
     /// Input value type.
     type V;
+    /// Cursor over one node's partition (borrows the input).
+    type Cursor<'a>: BlockCursor<Self::K, Self::V>
+    where
+        Self: 'a;
 
     /// Owning cluster.
     fn cluster(&self) -> &Cluster;
@@ -53,14 +76,25 @@ pub trait DistInput {
     /// Item count on `node`.
     fn node_len(&self, node: usize) -> usize;
 
+    /// Single-pass cursor over `node`'s partition split into `workers`
+    /// contiguous blocks (the same block partitioning every engine uses).
+    fn block_cursor(&self, node: usize, workers: usize) -> Self::Cursor<'_>;
+
     /// Visit every item on `node`, tagged with the worker (0..workers) that
-    /// would process it under block partitioning.
+    /// would process it under block partitioning. One pass, built on
+    /// [`Self::block_cursor`].
     fn for_each_worker_item<F: FnMut(usize, &Self::K, &Self::V)>(
         &self,
         node: usize,
         workers: usize,
-        f: F,
-    );
+        mut f: F,
+    ) {
+        let mut cur = self.block_cursor(node, workers);
+        let mut w = 0usize;
+        while cur.next_block(|k, v| f(w, k, v)) {
+            w += 1;
+        }
+    }
 }
 
 /// Keys that may map onto a dense `[0, n)` index space, enabling the

@@ -18,7 +18,7 @@ use crate::net::vtime::VirtualTime;
 use crate::ser::fastser::{decode_pairs, encode_pairs, FastSer};
 
 use super::reducers::Reducer;
-use super::{DenseKey, DistInput, Emit, ReduceTarget, RunRecorder};
+use super::{BlockCursor, DenseKey, DistInput, Emit, ReduceTarget, RunRecorder};
 
 /// Run one MapReduce through the dense small-key-range path.
 ///
@@ -51,29 +51,29 @@ where
         let mut caches: Vec<Vec<Option<V2>>> =
             (0..workers).map(|_| vec![None; range]).collect();
         let mut emitted = 0u64;
-        let mut last_worker = usize::MAX;
 
-        input.for_each_worker_item(node, workers, |w, k, v| {
-            if w != last_worker {
-                // Publish the worker's random stream (paper's
-                // `blaze::random` is worker-local).
-                last_worker = w;
-                crate::util::random::set_stream(cfg.seed, (node * workers + w) as u64);
-            }
-            let cache = &mut caches[w];
-            let mut emit = |k2: K2, v2: V2| {
-                emitted += 1;
-                let idx = k2
-                    .dense_index()
-                    .unwrap_or_else(|| panic!("key has no dense index for Vec target"));
-                assert!(idx < range, "key {idx} outside fixed key range {range}");
-                match &mut cache[idx] {
-                    Some(acc) => red.apply(acc, &v2),
-                    slot @ None => *slot = Some(v2),
-                }
-            };
-            mapper(k, v, &mut emit);
-        });
+        // Single pass over the node's partition, one cursor block per worker.
+        let mut cur = input.block_cursor(node, workers);
+        for (w, cache) in caches.iter_mut().enumerate() {
+            // Publish the worker's random stream (paper's `blaze::random`
+            // is worker-local).
+            crate::util::random::set_stream(cfg.seed, (node * workers + w) as u64);
+            let advanced = cur.next_block(|k, v| {
+                let mut emit = |k2: K2, v2: V2| {
+                    emitted += 1;
+                    let idx = k2
+                        .dense_index()
+                        .unwrap_or_else(|| panic!("key has no dense index for Vec target"));
+                    assert!(idx < range, "key {idx} outside fixed key range {range}");
+                    match &mut cache[idx] {
+                        Some(acc) => red.apply(acc, &v2),
+                        slot @ None => *slot = Some(v2),
+                    }
+                };
+                mapper(k, v, &mut emit);
+            });
+            debug_assert!(advanced, "cursor yields one block per worker");
+        }
 
         // Local tree reduce over worker caches (log2 W combining steps on a
         // real machine; serial here, the combine work is identical).
@@ -154,11 +154,14 @@ where
         compute_sec,
         shuffle_sec: makespan - compute_sec,
         shuffle_bytes,
+        // Tree-reduce candidate buffers are the only serialized payloads.
+        ser_bytes: shuffle_bytes,
         pairs_emitted,
         pairs_shuffled: (nodes.saturating_sub(1)) as u64 * range as u64,
         peak_intermediate_bytes: (nodes * workers * range) as u64 * slot_bytes
             + round_flow_peak,
         host_wall_sec: rec.started.elapsed().as_secs_f64(),
+        ..Default::default()
     });
 }
 

@@ -466,12 +466,27 @@ pub fn encode_pairs<K: FastSer, V: FastSer>(pairs: &[(K, V)]) -> Vec<u8> {
 /// [`encode_pairs`] into a caller-provided (possibly pooled) buffer.
 pub fn encode_pairs_into<K: FastSer, V: FastSer>(pairs: &[(K, V)], buf: Vec<u8>) -> Vec<u8> {
     let mut w = Writer::from_vec(buf);
-    w.put_varint(pairs.len() as u64);
-    for (k, v) in pairs {
-        k.write(&mut w);
-        v.write(&mut w);
-    }
+    write_pairs(&mut w, pairs.len(), pairs.iter().map(|(k, v)| (k, v)));
     w.take()
+}
+
+/// Append one batch frame — count varint, then each pair in fixed order —
+/// from any pair iterator. The single definition of the batch wire framing
+/// shared by [`encode_pairs`]/[`decode_pairs`] and clone-free producers
+/// (e.g. checkpointing a hash shard straight from its iterator).
+pub fn write_pairs<'a, K, V>(
+    w: &mut Writer,
+    len: usize,
+    pairs: impl Iterator<Item = (&'a K, &'a V)>,
+) where
+    K: FastSer + 'a,
+    V: FastSer + 'a,
+{
+    w.put_varint(len as u64);
+    for (k, v) in pairs {
+        k.write(w);
+        v.write(w);
+    }
 }
 
 /// Decode a batch produced by [`encode_pairs`]. Trailing bytes after the
@@ -607,6 +622,15 @@ mod tests {
     }
 
     #[test]
+    fn write_pairs_matches_encode_pairs_framing() {
+        let pairs: Vec<(String, u64)> = vec![("a".into(), 1), ("bb".into(), 300)];
+        let mut w = Writer::new();
+        write_pairs(&mut w, pairs.len(), pairs.iter().map(|(k, v)| (k, v)));
+        assert_eq!(w.as_bytes(), encode_pairs(&pairs).as_slice());
+        assert_eq!(decode_pairs_exact::<String, u64>(w.as_bytes()).unwrap(), pairs);
+    }
+
+    #[test]
     fn exact_decode_rejects_trailing_bytes() {
         let pairs: Vec<(u64, u64)> = vec![(1, 2), (3, 4)];
         let mut buf = encode_pairs(&pairs);
@@ -648,5 +672,94 @@ mod tests {
         m.write(&mut w);
         let mut r = Reader::new(w.as_bytes());
         assert_eq!(HashMap::<String, u64>::read(&mut r).unwrap(), m);
+    }
+
+    // ---- SplitRng-driven roundtrip fuzzing -----------------------------
+
+    use crate::util::rng::SplitRng;
+
+    fn random_string(rng: &mut SplitRng, max_len: u64) -> String {
+        let len = rng.below(max_len + 1) as usize; // empty strings included
+        (0..len)
+            .map(|_| char::from(b'a' + (rng.below(26) as u8)))
+            .collect()
+    }
+
+    #[test]
+    fn fuzz_pair_batches_roundtrip_and_reject_corruption() {
+        let mut rng = SplitRng::new(0xF0_55ED, 0);
+        for case in 0..200 {
+            let n = rng.below(40) as usize; // empty batches included
+            let pairs: Vec<(String, i64)> = (0..n)
+                .map(|_| {
+                    let k = random_string(&mut rng, 12);
+                    // Full signed range, zigzag boundaries included.
+                    let v = rng.next_u64() as i64;
+                    (k, v)
+                })
+                .collect();
+            let buf = encode_pairs(&pairs);
+            // Exact length accounting: the encoded batch is the count
+            // varint plus each pair's own encoded_len.
+            let expect_len = varint_len(pairs.len() as u64)
+                + pairs.iter().map(FastSer::encoded_len).sum::<usize>();
+            assert_eq!(buf.len(), expect_len, "case {case}: encoded_len drifted");
+            assert_eq!(
+                decode_pairs_exact::<String, i64>(&buf).unwrap(),
+                pairs,
+                "case {case}: roundtrip"
+            );
+            // Truncation at a random cut must error, never panic or
+            // silently succeed (a shorter buffer cannot hold the batch).
+            if !buf.is_empty() {
+                let cut = rng.below(buf.len() as u64) as usize;
+                assert!(
+                    decode_pairs_exact::<String, i64>(&buf[..cut]).is_err(),
+                    "case {case}: cut {cut}/{} accepted",
+                    buf.len()
+                );
+            }
+            // Overlong buffers: exact decode rejects, lenient ignores.
+            let mut noisy = buf.clone();
+            noisy.extend_from_slice(&[0u8; 3]);
+            assert!(decode_pairs_exact::<String, i64>(&noisy).is_err(), "case {case}");
+            assert_eq!(decode_pairs::<String, i64>(&noisy).unwrap(), pairs, "case {case}");
+        }
+    }
+
+    #[test]
+    fn fuzz_empty_payload_shapes() {
+        // A zero-pair batch is one byte (count 0) and decodes exactly.
+        let empty: Vec<(String, u64)> = Vec::new();
+        let buf = encode_pairs(&empty);
+        assert_eq!(buf, vec![0u8]);
+        assert_eq!(decode_pairs_exact::<String, u64>(&buf).unwrap(), empty);
+        // A zero-length buffer is a truncated count, not an empty batch.
+        assert!(decode_pairs_exact::<String, u64>(&[]).is_err());
+        // Pairs of empty payloads (empty keys, zero values) roundtrip.
+        let hollow: Vec<(String, u64)> = vec![(String::new(), 0); 17];
+        let buf = encode_pairs(&hollow);
+        assert_eq!(buf.len(), 1 + 2 * 17, "1 count byte + 2 bytes per hollow pair");
+        assert_eq!(decode_pairs_exact::<String, u64>(&buf).unwrap(), hollow);
+    }
+
+    #[test]
+    fn fuzz_single_giant_value() {
+        // One pair whose value dwarfs the frame: length prefixes must hold
+        // up and truncation anywhere inside the payload must error.
+        let mut rng = SplitRng::new(0xB16, 1);
+        let giant: String = (0..256 * 1024)
+            .map(|_| char::from(b'a' + (rng.below(26) as u8)))
+            .collect();
+        let pairs = vec![(42u64, giant)];
+        let buf = encode_pairs(&pairs);
+        assert!(buf.len() > 256 * 1024);
+        assert_eq!(decode_pairs_exact::<u64, String>(&buf).unwrap(), pairs);
+        for cut in [1usize, 5, 1024, buf.len() / 2, buf.len() - 1] {
+            assert!(
+                decode_pairs_exact::<u64, String>(&buf[..cut]).is_err(),
+                "giant-value cut {cut} accepted"
+            );
+        }
     }
 }

@@ -1,0 +1,186 @@
+//! Block-cursor regression tests.
+//!
+//! A counting [`DistInput`] test double wraps a real container and counts,
+//! per node, how many cursors are created and how many item visits happen.
+//! Every engine — eager, small-key-range, conventional, and the
+//! recoverable fault engine on its failure-free path — must walk each
+//! node's partition **exactly once per job**, locking in the block-cursor
+//! win over the old once-per-worker-block rescan (O(workers · items) host
+//! overhead). Only recovery replays may re-walk, and only their own
+//! blocks.
+
+use std::cell::RefCell;
+
+use blaze::containers::{DistHashMap, DistVector};
+use blaze::coordinator::cluster::{Cluster, ClusterConfig, EngineKind};
+use blaze::fault::{FailurePlan, FaultConfig};
+use blaze::mapreduce::{mapreduce, BlockCursor, DistInput};
+
+/// Transparent `DistInput` wrapper counting cursor creations and item
+/// visits per node (skip-walk visits included — they are real work).
+struct CountingInput<I> {
+    inner: I,
+    cursors_created: RefCell<Vec<usize>>,
+    items_visited: RefCell<Vec<usize>>,
+}
+
+impl<I: DistInput> CountingInput<I> {
+    fn new(inner: I) -> Self {
+        let nodes = inner.cluster().nodes();
+        Self {
+            inner,
+            cursors_created: RefCell::new(vec![0; nodes]),
+            items_visited: RefCell::new(vec![0; nodes]),
+        }
+    }
+
+    fn visits(&self, node: usize) -> usize {
+        self.items_visited.borrow()[node]
+    }
+
+    fn total_visits(&self) -> usize {
+        self.items_visited.borrow().iter().sum()
+    }
+
+    fn cursors(&self, node: usize) -> usize {
+        self.cursors_created.borrow()[node]
+    }
+}
+
+struct CountingCursor<'a, I: DistInput + 'a> {
+    inner: I::Cursor<'a>,
+    node: usize,
+    visited: &'a RefCell<Vec<usize>>,
+}
+
+impl<'a, I: DistInput> BlockCursor<I::K, I::V> for CountingCursor<'a, I> {
+    fn next_block<F: FnMut(&I::K, &I::V)>(&mut self, mut f: F) -> bool {
+        let node = self.node;
+        let visited = self.visited;
+        self.inner.next_block(|k, v| {
+            visited.borrow_mut()[node] += 1;
+            f(k, v);
+        })
+    }
+}
+
+impl<I: DistInput> DistInput for CountingInput<I> {
+    type K = I::K;
+    type V = I::V;
+    type Cursor<'a>
+        = CountingCursor<'a, I>
+    where
+        Self: 'a;
+
+    fn cluster(&self) -> &Cluster {
+        self.inner.cluster()
+    }
+
+    fn node_len(&self, node: usize) -> usize {
+        self.inner.node_len(node)
+    }
+
+    fn block_cursor(&self, node: usize, workers: usize) -> CountingCursor<'_, I> {
+        self.cursors_created.borrow_mut()[node] += 1;
+        CountingCursor {
+            inner: self.inner.block_cursor(node, workers),
+            node,
+            visited: &self.items_visited,
+        }
+    }
+}
+
+const NODES: usize = 3;
+const WORKERS: usize = 2;
+
+fn engine_configs() -> Vec<(&'static str, ClusterConfig)> {
+    let base = ClusterConfig::sized(NODES, WORKERS);
+    let ft = FaultConfig::default().with_checkpoint_every(3);
+    vec![
+        ("eager", base.clone()),
+        ("conventional", base.clone().with_engine(EngineKind::Conventional)),
+        ("eager+ft", base.clone().with_fault(ft.clone())),
+        (
+            "conventional+ft",
+            base.with_engine(EngineKind::Conventional).with_fault(ft),
+        ),
+    ]
+}
+
+#[test]
+fn every_engine_walks_each_partition_exactly_once() {
+    for (name, cfg) in engine_configs() {
+        let c = Cluster::new(cfg);
+        let input = CountingInput::new(DistVector::from_vec(&c, (0..60u64).collect()));
+        let mut target: DistHashMap<u64, u64> = DistHashMap::new(&c);
+        mapreduce(&input, |_, v: &u64, emit| emit(*v % 13, 1u64), "sum", &mut target);
+        for node in 0..NODES {
+            assert_eq!(
+                input.visits(node),
+                input.node_len(node),
+                "{name}: node {node} items not visited exactly once"
+            );
+            assert_eq!(input.cursors(node), 1, "{name}: node {node} partition re-scanned");
+        }
+        assert_eq!(target.collect().values().sum::<u64>(), 60);
+    }
+}
+
+#[test]
+fn smallkey_path_walks_each_partition_exactly_once() {
+    // Dense Vec target selects the small-key-range engine under eager.
+    let c = Cluster::new(ClusterConfig::sized(NODES, WORKERS));
+    let input = CountingInput::new(DistVector::from_vec(&c, (0..60u64).collect()));
+    let mut hits = vec![0u64; 8];
+    mapreduce(&input, |_, v: &u64, emit| emit((*v % 8) as usize, 1u64), "sum", &mut hits);
+    assert_eq!(hits.iter().sum::<u64>(), 60);
+    for node in 0..NODES {
+        assert_eq!(input.visits(node), input.node_len(node), "smallkey re-walked node {node}");
+        assert_eq!(input.cursors(node), 1);
+    }
+}
+
+#[test]
+fn hash_map_input_walks_each_partition_exactly_once() {
+    let c = Cluster::new(ClusterConfig::sized(NODES, WORKERS));
+    let mut m: DistHashMap<u64, u64> = DistHashMap::new(&c);
+    for i in 0..50 {
+        m.insert(i, i);
+    }
+    let input = CountingInput::new(m);
+    let mut target: DistHashMap<u64, u64> = DistHashMap::new(&c);
+    mapreduce(&input, |k: &u64, v: &u64, emit| emit(*k % 7, *v), "sum", &mut target);
+    for node in 0..NODES {
+        assert_eq!(input.visits(node), input.node_len(node), "hash input re-walked node {node}");
+        assert_eq!(input.cursors(node), 1);
+    }
+}
+
+#[test]
+fn recovery_replays_rewalk_only_their_blocks() {
+    // 60 items over 3 nodes × 2 workers → 6 blocks of 10. The DistVector
+    // target (6 slots, 2 per node) guarantees every block emits a partial
+    // for every shard (10 consecutive values mod 6 cover all residues), so
+    // killing node 1 after block 2 commits — with no periodic checkpoint —
+    // must roll back and replay exactly blocks {0, 1, 2}: 30 extra visits,
+    // with no skip-walk overhead (replays start at each home's block 0).
+    let run = |fault: FaultConfig| {
+        let c = Cluster::new(ClusterConfig::sized(NODES, WORKERS).with_fault(fault));
+        let input = CountingInput::new(DistVector::from_vec(&c, (0..60u64).collect()));
+        let mut target: DistVector<u64> = DistVector::filled(&c, 6, 0u64);
+        mapreduce(&input, |_, v: &u64, emit| emit((*v % 6) as usize, 1u64), "sum", &mut target);
+        (target.collect(), input.total_visits())
+    };
+    let (base, base_visits) = run(FaultConfig::default().with_checkpoint_every(1000));
+    assert_eq!(base_visits, 60, "failure-free recoverable run must be single-pass");
+    let (failed, fail_visits) = run(
+        FaultConfig::default()
+            .with_checkpoint_every(1000)
+            .with_plan(FailurePlan::kill_at_block(1, 3)),
+    );
+    assert_eq!(base, failed, "recovery diverged");
+    assert_eq!(
+        fail_visits, 90,
+        "exactly the three rolled-back blocks re-walk (30 extra visits)"
+    );
+}

@@ -1,0 +1,277 @@
+//! Cross-engine equivalence harness.
+//!
+//! The paper's core claim — one highly-optimized in-memory `mapreduce` can
+//! match hand-optimized parallel code — only holds if every engine computes
+//! the same answer while the hot paths keep getting faster. This harness
+//! generates SplitRng-seeded workloads in the paper's three shapes
+//! (wordcount over duplicate-heavy string keys, Monte-Carlo π over a
+//! `DistRange` with worker-stream RNG, a k-means assignment step over
+//! fixed-point points) across varying cluster shapes — including empty
+//! partitions and a 1×1 degenerate cluster — and asserts **byte-identical**
+//! targets across:
+//!
+//! * eager × small-key-range (dense `Vec` target) × conventional, and
+//! * each engine under the recoverable fault layer: checkpoint-only,
+//!   injected failures with hot-standby recovery, and injected failures
+//!   with `--evacuate`-style slot re-homing.
+//!
+//! Values are integers (exact under any reduce order), so equality is
+//! required bit-for-bit, with no float tolerance. Every future engine
+//! change is gated by this file.
+
+use blaze::containers::{DistHashMap, DistRange, DistVector};
+use blaze::coordinator::cluster::{Cluster, ClusterConfig, EngineKind};
+use blaze::fault::{FailurePlan, FaultConfig};
+use blaze::mapreduce::{mapreduce, mapreduce_range, Reducer};
+use blaze::util::SplitRng;
+
+/// Cluster shapes: degenerate 1×1, more nodes than some inputs (empty
+/// partitions), and mixed node/worker counts.
+const SHAPES: &[(usize, usize)] = &[(1, 1), (2, 3), (3, 2), (5, 4)];
+
+/// Engine × fault × recovery-policy grid for one cluster shape. The
+/// failure plan is drawn deterministically from the workload seed; on a
+/// 1-node shape it is empty (the driver is never killed), which still
+/// routes the job through the recoverable engine.
+fn configs(seed: u64, nodes: usize, workers: usize) -> Vec<(String, ClusterConfig)> {
+    let mut out = Vec::new();
+    for engine in [EngineKind::Eager, EngineKind::Conventional] {
+        let base = ClusterConfig::sized(nodes, workers).with_engine(engine).with_seed(seed);
+        let plan = FailurePlan::random(seed ^ 0x5EED, nodes, 2, nodes * workers);
+        out.push((format!("{engine}/plain"), base.clone()));
+        out.push((
+            format!("{engine}/ckpt"),
+            base.clone().with_fault(FaultConfig::default().with_checkpoint_every(3)),
+        ));
+        out.push((
+            format!("{engine}/fail"),
+            base.clone().with_fault(
+                FaultConfig::default().with_checkpoint_every(3).with_plan(plan.clone()),
+            ),
+        ));
+        out.push((
+            format!("{engine}/fail+evac"),
+            base.with_fault(
+                FaultConfig::default()
+                    .with_checkpoint_every(3)
+                    .with_plan(plan)
+                    .with_evacuation(true),
+            ),
+        ));
+    }
+    out
+}
+
+/// Assert every config produces the same result for one generated case.
+fn assert_equivalent<R, F>(label: &str, seed: u64, run: F)
+where
+    R: PartialEq + std::fmt::Debug,
+    F: Fn(&ClusterConfig) -> R,
+{
+    for &(nodes, workers) in SHAPES {
+        let mut reference: Option<(String, R)> = None;
+        for (name, cfg) in configs(seed, nodes, workers) {
+            let got = run(&cfg);
+            match &reference {
+                None => reference = Some((name, got)),
+                Some((ref_name, want)) => assert_eq!(
+                    want, &got,
+                    "{label}: {name} diverged from {ref_name} \
+                     (shape {nodes}x{workers}, seed {seed:#x})"
+                ),
+            }
+        }
+    }
+}
+
+// ---- Wordcount shape ---------------------------------------------------
+
+/// Duplicate-heavy lines over a small vocabulary; empty lines included.
+fn gen_lines(seed: u64, n_lines: usize) -> Vec<String> {
+    const VOCAB: &[&str] = &[
+        "alpha", "beta", "gamma", "delta", "epsilon", "the", "a", "of", "and", "x", "yy",
+        "zzz", "blaze",
+    ];
+    let mut rng = SplitRng::new(seed, 0x11E5);
+    (0..n_lines)
+        .map(|_| {
+            let words = rng.below(9) as usize; // 0..=8 — empty lines included
+            (0..words)
+                .map(|_| VOCAB[rng.below(VOCAB.len() as u64) as usize])
+                .collect::<Vec<_>>()
+                .join(" ")
+        })
+        .collect()
+}
+
+/// Two chained MapReduces: lines → word counts (vector input, hash
+/// target), then the hash map itself as input (hash-cursor coverage) →
+/// a histogram keyed by (word length class, count residue).
+fn run_wordcount(
+    cfg: &ClusterConfig,
+    lines: &[String],
+) -> (Vec<(String, u64)>, Vec<(u64, u64)>) {
+    let c = Cluster::new(cfg.clone());
+    let dv = DistVector::from_vec(&c, lines.to_vec());
+    let mut words: DistHashMap<String, u64> = DistHashMap::new(&c);
+    mapreduce(
+        &dv,
+        |_, line: &String, emit| {
+            for w in line.split_whitespace() {
+                emit(w.to_string(), 1u64);
+            }
+        },
+        "sum",
+        &mut words,
+    );
+    let mut hist: DistHashMap<u64, u64> = DistHashMap::new(&c);
+    mapreduce(
+        &words,
+        |w: &String, n: &u64, emit| emit((w.len() as u64 % 5) * 100 + n % 7, *n),
+        "sum",
+        &mut hist,
+    );
+    let mut counts: Vec<(String, u64)> = words.collect().into_iter().collect();
+    counts.sort_unstable();
+    let mut classes: Vec<(u64, u64)> = hist.collect().into_iter().collect();
+    classes.sort_unstable();
+    (counts, classes)
+}
+
+#[test]
+fn wordcount_byte_identical_across_engines_and_policies() {
+    for (i, n_lines) in [0usize, 3, 90].into_iter().enumerate() {
+        let seed = 0xE0_0001 + i as u64;
+        let lines = gen_lines(seed, n_lines);
+        assert_equivalent("wordcount", seed, |cfg| run_wordcount(cfg, &lines));
+    }
+}
+
+// ---- Monte-Carlo π shape (DistRange input, dense Vec target) -----------
+
+/// π-style sampling: the mapper draws from the worker's published random
+/// stream, so this also locks in cross-engine stream alignment. The dense
+/// `Vec` target selects the small-key-range path on the eager engine.
+fn run_pi(cfg: &ClusterConfig, n: u64, buckets: usize) -> Vec<u64> {
+    let c = Cluster::new(cfg.clone());
+    let r = DistRange::new(&c, 0, n);
+    let mut hits = vec![0u64; buckets];
+    mapreduce_range(
+        &r,
+        |v, emit| {
+            let (x, y) = blaze::util::random::uniform2();
+            let inside = u64::from(x * x + y * y <= 1.0);
+            emit((v % buckets as u64) as usize, inside);
+        },
+        "sum",
+        &mut hits,
+    );
+    hits
+}
+
+#[test]
+fn pi_byte_identical_across_engines_and_policies() {
+    for (i, n) in [0u64, 5, 400].into_iter().enumerate() {
+        let seed = 0xF1_0001 + i as u64;
+        assert_equivalent("pi", seed, |cfg| run_pi(cfg, n, 6));
+    }
+}
+
+// ---- K-means assignment step (fixed-point, custom reducer) -------------
+
+/// Per-cluster sufficient statistics: (count, (Σx, Σy)) in fixed point.
+type Stat = (u64, (i64, i64));
+
+fn add_stat(a: &mut Stat, b: &Stat) {
+    a.0 += b.0;
+    a.1 .0 += b.1 .0;
+    a.1 .1 += b.1 .1;
+}
+
+fn gen_points(seed: u64, n: usize) -> Vec<(i64, i64)> {
+    let mut rng = SplitRng::new(seed, 0x4A11);
+    (0..n)
+        .map(|_| (rng.below(2001) as i64 - 1000, rng.below(2001) as i64 - 1000))
+        .collect()
+}
+
+fn run_kmeans_step(cfg: &ClusterConfig, points: &[(i64, i64)]) -> Vec<(u64, Stat)> {
+    const CENTERS: &[(i64, i64)] = &[(-500, -500), (0, 0), (400, 300), (-200, 800)];
+    let c = Cluster::new(cfg.clone());
+    let dv = DistVector::from_vec(&c, points.to_vec());
+    let mut stats: DistHashMap<u64, Stat> = DistHashMap::new(&c);
+    mapreduce(
+        &dv,
+        |_, p: &(i64, i64), emit| {
+            let mut best = 0u64;
+            let mut best_d = i64::MAX;
+            for (i, ctr) in CENTERS.iter().enumerate() {
+                let (dx, dy) = (p.0 - ctr.0, p.1 - ctr.1);
+                let d = dx * dx + dy * dy;
+                if d < best_d {
+                    best_d = d;
+                    best = i as u64;
+                }
+            }
+            emit(best, (1u64, (p.0, p.1)));
+        },
+        Reducer::custom_fn(add_stat),
+        &mut stats,
+    );
+    let mut out: Vec<(u64, Stat)> = stats.collect().into_iter().collect();
+    out.sort_unstable();
+    out
+}
+
+#[test]
+fn kmeans_step_byte_identical_across_engines_and_policies() {
+    for (i, n) in [0usize, 4, 150].into_iter().enumerate() {
+        let seed = 0xCA_0001 + i as u64;
+        let points = gen_points(seed, n);
+        assert_equivalent("kmeans-step", seed, |cfg| run_kmeans_step(cfg, &points));
+    }
+}
+
+// ---- Harness self-check ------------------------------------------------
+
+#[test]
+fn failure_configs_actually_inject_failures() {
+    // Guard against the harness silently testing nothing: on a multi-node
+    // shape the random plan must fire real kills, and the evacuation
+    // config must charge migration traffic.
+    let seed = 0xE0_0003; // the 90-line wordcount case
+    let lines = gen_lines(seed, 90);
+    let (nodes, workers) = (3usize, 2usize);
+    let plan = FailurePlan::random(seed ^ 0x5EED, nodes, 2, nodes * workers);
+    assert!(!plan.is_empty());
+    let cfg = ClusterConfig::sized(nodes, workers).with_seed(seed).with_fault(
+        FaultConfig::default()
+            .with_checkpoint_every(3)
+            .with_plan(plan)
+            .with_evacuation(true),
+    );
+    let c = Cluster::new(cfg.clone());
+    let dv = DistVector::from_vec(&c, lines.clone());
+    let mut words: DistHashMap<String, u64> = DistHashMap::new(&c);
+    mapreduce(
+        &dv,
+        |_, line: &String, emit| {
+            for w in line.split_whitespace() {
+                emit(w.to_string(), 1u64);
+            }
+        },
+        "sum",
+        &mut words,
+    );
+    let m = c.metrics();
+    let note = m
+        .notes()
+        .iter()
+        .find(|n| n.starts_with("fault["))
+        .expect("fault note recorded");
+    assert!(!note.contains("failures=0"), "plan must kill someone: {note}");
+    assert!(
+        !note.contains("evacuations=0"),
+        "hash targets must evacuate under the policy: {note}"
+    );
+}

@@ -185,3 +185,145 @@ fn seeded_random_plan_is_reproducible_end_to_end() {
     assert_eq!(a, b);
     assert_eq!(a, base);
 }
+
+// ---- Recovery-time slot evacuation ------------------------------------
+
+#[test]
+fn evacuation_is_byte_identical_both_engines() {
+    for engine in [EngineKind::Eager, EngineKind::Conventional] {
+        let (base, _) = run_wordcount(engine, ckpt());
+        let (evac, _) = run_wordcount(
+            engine,
+            ckpt().with_plan(FailurePlan::kill_at_block(1, 3)).with_evacuation(true),
+        );
+        assert_eq!(base, evac, "{engine}: evacuation changed results");
+        // And identical to the hot-standby recovery policy.
+        let (standby, _) =
+            run_wordcount(engine, ckpt().with_plan(FailurePlan::kill_at_block(1, 3)));
+        assert_eq!(evac, standby, "{engine}: the two recovery policies diverged");
+    }
+}
+
+#[test]
+fn evacuation_reroutes_dead_shard_and_charges_migration() {
+    let fault = ckpt().with_plan(FailurePlan::kill_at_block(1, 3)).with_evacuation(true);
+    let c = cluster(EngineKind::Eager, fault);
+    let lines = blaze::data::corpus_lines(600, 8, 7);
+    let dv = DistVector::from_vec(&c, lines);
+    let (_, words) = wordcount(&c, &dv);
+    // The dead node's shard was drained and no key routes to it anymore.
+    assert!(words.shard(1).is_empty(), "dead shard must be evacuated");
+    for node in 0..NODES {
+        for (k, _) in words.shard(node) {
+            assert_ne!(words.owner_of(k), 1, "key {k:?} still routed to dead node 1");
+        }
+    }
+    // Migration bytes are visible in RunStats and the fault note.
+    let m = c.metrics();
+    let run = m.runs().iter().find(|r| r.label == "wordcount.mr").expect("run recorded");
+    assert!(run.evac_bytes > 0, "migration traffic must be charged");
+    assert!(run.shuffle_bytes >= run.evac_bytes, "evac bytes fold into shuffle bytes");
+    let note = m
+        .notes()
+        .iter()
+        .find(|n| n.starts_with("fault[wordcount.mr]"))
+        .expect("fault note recorded");
+    assert!(note.contains("evacuations=1"), "{note}");
+    assert!(!note.contains("evac_bytes=0 "), "{note}");
+}
+
+#[test]
+fn evacuation_without_plan_changes_nothing() {
+    // The policy toggle alone (no failure) must be a no-op: same results,
+    // no evacuation recorded.
+    let (base, _) = run_wordcount(EngineKind::Eager, ckpt());
+    let c = cluster(EngineKind::Eager, ckpt().with_evacuation(true));
+    let lines = blaze::data::corpus_lines(600, 8, 7);
+    let dv = DistVector::from_vec(&c, lines);
+    let (_, words) = wordcount(&c, &dv);
+    assert_eq!(base, words.collect());
+    let m = c.metrics();
+    let run = m.runs().iter().find(|r| r.label == "wordcount.mr").expect("run recorded");
+    assert_eq!(run.evac_bytes, 0, "no failure → no evacuation traffic");
+    let note = m
+        .notes()
+        .iter()
+        .find(|n| n.starts_with("fault[wordcount.mr]"))
+        .expect("fault note recorded");
+    assert!(note.contains("evacuations=0"), "{note}");
+}
+
+#[test]
+fn evacuation_survives_multiple_failures() {
+    // A second failure after an evacuation must roll back against the
+    // post-evacuation routing (re-stabilization checkpoint) and still be
+    // byte-identical — including when the second victim adopted keys.
+    let plan = FailurePlan::kill_at_block(1, 2).and_kill_at_block(3, 5);
+    let (base, _) = run_wordcount(EngineKind::Eager, ckpt());
+    let (evac, _) = run_wordcount(EngineKind::Eager, ckpt().with_plan(plan).with_evacuation(true));
+    assert_eq!(base, evac, "two evacuations diverged from failure-free run");
+}
+
+#[test]
+fn evacuation_falls_back_for_block_addressed_targets() {
+    // DistVector targets cannot re-home keys: the engine keeps hot-standby
+    // recovery, notes the fallback, and results stay exact.
+    let run = |fault: FaultConfig| {
+        let c = cluster(EngineKind::Eager, fault);
+        let input = DistVector::from_vec(&c, (0..64u64).collect::<Vec<u64>>());
+        let mut scores: DistVector<u64> = DistVector::filled(&c, 16, 1u64);
+        mapreduce(
+            &input,
+            |_, v: &u64, emit| emit((*v % 16) as usize, *v),
+            "sum",
+            &mut scores,
+        );
+        let notes: Vec<String> = c.metrics().notes().to_vec();
+        (scores.collect(), notes)
+    };
+    let (base, _) = run(ckpt());
+    let (evac, notes) =
+        run(ckpt().with_plan(FailurePlan::kill_at_block(2, 3)).with_evacuation(true));
+    assert_eq!(base, evac, "fallback recovery diverged");
+    assert!(
+        notes.iter().any(|n| n.contains("cannot re-home keys")),
+        "fallback must be noted: {notes:?}"
+    );
+}
+
+// ---- Conventional-mode serialization parity ---------------------------
+
+#[test]
+fn conventional_ft_charges_local_serialization_like_ordinary_engine() {
+    // ROADMAP divergence (PR 1): the recoverable conventional engine
+    // skipped node-local serialization. Both engines materialize the same
+    // raw pair multiset and tag-encode each record independently, so on a
+    // no-failure run their serialized byte totals must now match exactly.
+    let lines = blaze::data::corpus_lines(400, 8, 7);
+    let run = |fault: FaultConfig| {
+        let c = cluster(EngineKind::Conventional, fault);
+        let dv = DistVector::from_vec(&c, lines.clone());
+        let (_, words) = wordcount(&c, &dv);
+        let stats = c
+            .metrics()
+            .runs()
+            .iter()
+            .find(|r| r.label == "wordcount.mr")
+            .expect("run recorded")
+            .clone();
+        (words.collect(), stats)
+    };
+    let (base, plain) = run(FaultConfig::disabled());
+    // Cadence beyond the job's block count: recoverable engine, epoch-0
+    // checkpoint only, no failures.
+    let (ft_res, ft) = run(FaultConfig::default().with_checkpoint_every(1000));
+    assert_eq!(base, ft_res);
+    assert_eq!(plain.pairs_emitted, ft.pairs_emitted);
+    assert_eq!(plain.pairs_shuffled, ft.pairs_shuffled, "conventional never combines");
+    assert!(plain.ser_bytes > plain.shuffle_bytes, "local spills must be charged");
+    assert_eq!(
+        plain.ser_bytes, ft.ser_bytes,
+        "recoverable conventional engine must charge node-local serialization \
+         exactly like the ordinary conventional engine"
+    );
+}
