@@ -4,6 +4,12 @@
 //! (TCMalloc) ≈ Blaze. Series here: blaze, blaze-tcm (pool allocator),
 //! conventional (Spark analog). Throughput is computed from the virtual
 //! makespan (measured per-node compute + modeled 10 Gbps interconnect).
+//!
+//! `--backend threaded:N` (or `BLAZE_BACKEND`) runs the blaze series'
+//! map+combine on N real OS threads; the conventional baseline always
+//! runs simulated. Besides the printed table, every run appends the
+//! datapoints — virtual makespan *and* real wall-clock fields — to
+//! `BENCH_fig4_wordcount.json` via [`bench::report`].
 
 use blaze::apps::wordcount::wordcount;
 use blaze::bench;
@@ -11,38 +17,78 @@ use blaze::coordinator::cluster::{Cluster, ClusterConfig, EngineKind};
 use blaze::prelude::*;
 use blaze::util::alloc::AllocMode;
 
+struct Point {
+    throughput: f64,
+    makespan_sec: f64,
+    host_wall_sec: f64,
+    wall_ns: u64,
+}
+
 fn main() {
     bench::figure_header(
         "Figure 4: Word Frequency Count (words/second)",
         "Blaze ~10x Spark; Blaze TCM ~= Blaze; near-linear node scaling",
     );
+    let backend = bench::backend();
     let scale = bench::scale();
     let lines = blaze::data::corpus_lines(40_000 * scale, 10, 42);
     let n_words: u64 = lines.iter().map(|l| l.split_whitespace().count() as u64).sum();
-    println!("corpus: {} lines, {} words\n", lines.len(), n_words);
+    println!("corpus: {} lines, {} words, backend {backend}\n", lines.len(), n_words);
+
+    let mut rep = bench::report::Report::new("fig4_wordcount");
+    rep.meta("backend", backend);
+    rep.meta("scale", scale);
+    rep.meta("corpus_words", n_words);
 
     println!(
         "{:<6} {:>16} {:>16} {:>16} {:>9}",
         "nodes", "blaze (w/s)", "blaze-tcm (w/s)", "conv (w/s)", "speedup"
     );
     for nodes in bench::node_sweep() {
-        let run = |engine: EngineKind, alloc: AllocMode| {
+        let run = |engine: EngineKind, alloc: AllocMode, backend: Backend| {
             let c = Cluster::new(
-                ClusterConfig::sized(nodes, 4).with_engine(engine).with_alloc(alloc),
+                ClusterConfig::sized(nodes, 4)
+                    .with_engine(engine)
+                    .with_alloc(alloc)
+                    .with_backend(backend),
             );
             let dv = DistVector::from_vec(&c, lines.clone());
-            wordcount(&c, &dv).0.throughput
+            let report = wordcount(&c, &dv).0;
+            let metrics = c.metrics();
+            let last = metrics.last_run().expect("wordcount records a run");
+            Point {
+                throughput: report.throughput,
+                makespan_sec: report.makespan_sec,
+                host_wall_sec: last.host_wall_sec,
+                wall_ns: last.wall_ns_total(),
+            }
         };
-        let blaze = run(EngineKind::Eager, AllocMode::System);
-        let tcm = run(EngineKind::Eager, AllocMode::Pool);
-        let conv = run(EngineKind::Conventional, AllocMode::System);
+        let blaze = run(EngineKind::Eager, AllocMode::System, backend);
+        let tcm = run(EngineKind::Eager, AllocMode::Pool, backend);
+        // The conventional baseline models Spark; always simulated.
+        let conv = run(EngineKind::Conventional, AllocMode::System, Backend::Simulated);
+        for (series, p) in [("blaze", &blaze), ("blaze-tcm", &tcm), ("conventional", &conv)] {
+            rep.push(
+                bench::report::Row::new(series)
+                    .tag("nodes", nodes)
+                    .num("words_per_sec", p.throughput)
+                    .num("virtual_makespan_sec", p.makespan_sec)
+                    .num("host_wall_sec", p.host_wall_sec)
+                    .num("wall_ns", p.wall_ns as f64),
+            );
+        }
         println!(
             "{:<6} {:>16.0} {:>16.0} {:>16.0} {:>8.1}x",
             nodes,
-            blaze,
-            tcm,
-            conv,
-            blaze / conv
+            blaze.throughput,
+            tcm.throughput,
+            conv.throughput,
+            blaze.throughput / conv.throughput
         );
+    }
+
+    match rep.write() {
+        Ok(path) => println!("\nwrote {}", path.display()),
+        Err(e) => eprintln!("\ncould not write bench json: {e}"),
     }
 }

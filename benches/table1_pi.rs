@@ -6,35 +6,79 @@
 //! plan as the hand-written loop, so the ratio must stay ≈1 at every scale.
 //! (Absolute times differ from the paper's testbed; the ratio is the
 //! reproduced quantity.)
+//!
+//! `--backend threaded:N` (or `BLAZE_BACKEND`) runs the Blaze MapReduce
+//! side on N real OS threads — the closest this reproduction gets to the
+//! paper's actual Table-1 measurement. Datapoints (host wall mean/std,
+//! virtual makespan) append to `BENCH_table1_pi.json`.
 
 use blaze::apps::pi::{pi_blaze, pi_hand_optimized, SLOC_BLAZE, SLOC_MPI_OPENMP};
 use blaze::bench;
+use blaze::coordinator::cluster::ClusterConfig;
+use blaze::net::model::NetworkModel;
 use blaze::prelude::*;
+
+fn pi_cluster(backend: Backend) -> Cluster {
+    Cluster::new(
+        ClusterConfig::sized(1, 4)
+            .with_network(NetworkModel::loopback())
+            .with_backend(backend),
+    )
+}
 
 fn main() {
     bench::figure_header(
         "Table 1: Monte Carlo Pi Estimation Performance",
         "Blaze MapReduce ~= hand-optimized MPI+OpenMP at every sample count; SLOC 8 vs 24",
     );
+    let backend = bench::backend();
     let reps = bench::reps();
     // Paper scales 1e7..1e9; default here 1e6..1e8 (single host core),
     // override with BLAZE_BENCH_SCALE=10 for the paper's sizes.
     let scale = bench::scale() as u64;
     let sample_counts = [1_000_000 * scale, 10_000_000 * scale, 100_000_000 * scale];
+    println!("backend: {backend}\n");
+
+    let mut rep = bench::report::Report::new("table1_pi");
+    rep.meta("backend", backend);
+    rep.meta("scale", scale);
+    rep.meta("reps", reps);
 
     println!(
         "{:<12} {:>22} {:>22} {:>9}",
         "samples", "Blaze MapReduce (s)", "MPI+OpenMP (s)", "ratio"
     );
     for &n in &sample_counts {
+        let mut makespans: Vec<f64> = Vec::new();
         let blaze = bench::time_host(reps, || {
-            let c = Cluster::local(1, 4);
-            pi_blaze(&c, n)
+            let c = pi_cluster(backend);
+            let report = pi_blaze(&c, n);
+            makespans.push(report.makespan_sec);
+            report
         });
         let hand = bench::time_host(reps, || {
-            let c = Cluster::local(1, 4);
+            let c = pi_cluster(Backend::Simulated);
             pi_hand_optimized(&c, n)
         });
+        // time_host runs one discarded warmup before the timed reps; drop
+        // its makespan too so the virtual figure is the mean over the
+        // same reps the wall statistics cover.
+        let timed = &makespans[makespans.len().min(1)..];
+        let makespan = bench::summarize(timed).mean;
+        rep.push(
+            bench::report::Row::new("blaze-mapreduce")
+                .tag("samples", n)
+                .num("host_wall_mean_sec", blaze.mean)
+                .num("host_wall_std_sec", blaze.std)
+                .num("virtual_makespan_mean_sec", makespan)
+                .num("ratio_vs_hand", blaze.mean / hand.mean),
+        );
+        rep.push(
+            bench::report::Row::new("hand-optimized")
+                .tag("samples", n)
+                .num("host_wall_mean_sec", hand.mean)
+                .num("host_wall_std_sec", hand.std),
+        );
         println!(
             "{:<12} {:>22} {:>22} {:>8.3}x",
             format!("{:.0e}", n as f64),
@@ -44,4 +88,9 @@ fn main() {
         );
     }
     println!("\nSLOC: Blaze {SLOC_BLAZE} vs MPI+OpenMP {SLOC_MPI_OPENMP} (paper: 8 vs 24)");
+
+    match rep.write() {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write bench json: {e}"),
+    }
 }

@@ -49,6 +49,27 @@ pub fn time_host<T>(reps: usize, mut f: impl FnMut() -> T) -> Sample {
     summarize(&xs)
 }
 
+/// Execution backend for a bench run: the `--backend <spec>` argv flag
+/// (usable after `cargo bench --bench <name> -- --backend threaded:4`)
+/// wins, else the `BLAZE_BACKEND` environment variable, else simulated.
+pub fn backend() -> crate::coordinator::cluster::Backend {
+    use crate::coordinator::cluster::Backend;
+    let args: Vec<String> = std::env::args().collect();
+    for pair in args.windows(2) {
+        if pair[0] == "--backend" {
+            return Backend::parse(&pair[1])
+                .unwrap_or_else(|e| panic!("--backend: {e}"));
+        }
+    }
+    // A dangling trailing `--backend` would otherwise silently run
+    // simulated — the misconfiguration Backend::from_env panics to avoid.
+    assert!(
+        args.last().map(String::as_str) != Some("--backend"),
+        "--backend needs a spec (simulated|threaded[:N])"
+    );
+    Backend::from_env()
+}
+
 /// Repetition count from `BLAZE_BENCH_REPS` (default 3).
 pub fn reps() -> usize {
     std::env::var("BLAZE_BENCH_REPS")
@@ -96,6 +117,187 @@ pub fn fmt_bytes(b: u64) -> String {
         format!("{:.2} KiB", b as f64 / (1u64 << 10) as f64)
     } else {
         format!("{b} B")
+    }
+}
+
+/// Machine-readable bench artifacts: each bench accumulates rows and
+/// writes `BENCH_<name>.json` next to the working directory (or under
+/// `BLAZE_BENCH_DIR`), so the perf trajectory — virtual makespans *and*
+/// the threaded backend's real wall-clock fields — accumulates across
+/// runs instead of scrolling away in stdout.
+///
+/// The JSON is hand-rolled (the build is offline, no serde): one object
+/// with `name`, `created_unix_ms`, a string-valued `meta` map (backend,
+/// scale, …), and `rows` — flat objects of one `series` string, string
+/// tags, and numeric fields. Non-finite numbers serialize as `null`.
+pub mod report {
+    use std::io::Write;
+    use std::path::PathBuf;
+
+    /// One datapoint: a series label plus tags and numeric fields.
+    #[derive(Debug, Clone)]
+    pub struct Row {
+        series: String,
+        tags: Vec<(String, String)>,
+        nums: Vec<(String, f64)>,
+    }
+
+    impl Row {
+        /// Row in `series` (e.g. `"blaze"`, `"conventional"`).
+        pub fn new(series: impl Into<String>) -> Self {
+            Self { series: series.into(), tags: Vec::new(), nums: Vec::new() }
+        }
+
+        /// Attach a string tag (builder style).
+        pub fn tag(mut self, key: &str, value: impl std::fmt::Display) -> Self {
+            self.tags.push((key.to_string(), value.to_string()));
+            self
+        }
+
+        /// Attach a numeric field (builder style).
+        pub fn num(mut self, key: &str, value: f64) -> Self {
+            self.nums.push((key.to_string(), value));
+            self
+        }
+    }
+
+    /// Accumulates rows for one bench and writes `BENCH_<name>.json`.
+    #[derive(Debug, Clone)]
+    pub struct Report {
+        name: String,
+        meta: Vec<(String, String)>,
+        rows: Vec<Row>,
+    }
+
+    impl Report {
+        /// Report for the bench called `name` (`fig4_wordcount`, …).
+        pub fn new(name: &str) -> Self {
+            Self { name: name.to_string(), meta: Vec::new(), rows: Vec::new() }
+        }
+
+        /// Record run-level provenance (backend, scale, …).
+        pub fn meta(&mut self, key: &str, value: impl std::fmt::Display) {
+            self.meta.push((key.to_string(), value.to_string()));
+        }
+
+        /// Append one datapoint.
+        pub fn push(&mut self, row: Row) {
+            self.rows.push(row);
+        }
+
+        /// Serialize to a JSON string.
+        pub fn to_json(&self) -> String {
+            let created_ms = std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .map(|d| d.as_millis())
+                .unwrap_or(0);
+            let mut out = String::from("{");
+            out.push_str(&format!("\"name\":{}", json_str(&self.name)));
+            out.push_str(&format!(",\"created_unix_ms\":{created_ms}"));
+            out.push_str(",\"meta\":{");
+            for (i, (k, v)) in self.meta.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                out.push_str(&format!("{}:{}", json_str(k), json_str(v)));
+            }
+            out.push_str("},\"rows\":[");
+            for (i, row) in self.rows.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                out.push_str(&format!("{{\"series\":{}", json_str(&row.series)));
+                for (k, v) in &row.tags {
+                    out.push_str(&format!(",{}:{}", json_str(k), json_str(v)));
+                }
+                for (k, v) in &row.nums {
+                    out.push_str(&format!(",{}:{}", json_str(k), json_num(*v)));
+                }
+                out.push('}');
+            }
+            out.push_str("]}");
+            out
+        }
+
+        /// Write `BENCH_<name>.json` into `dir`; returns the path.
+        pub fn write_to(&self, dir: impl AsRef<std::path::Path>) -> std::io::Result<PathBuf> {
+            let path = dir.as_ref().join(format!("BENCH_{}.json", self.name));
+            let mut f = std::fs::File::create(&path)?;
+            f.write_all(self.to_json().as_bytes())?;
+            f.write_all(b"\n")?;
+            Ok(path)
+        }
+
+        /// Write into `BLAZE_BENCH_DIR` (default: current directory).
+        pub fn write(&self) -> std::io::Result<PathBuf> {
+            let dir = std::env::var("BLAZE_BENCH_DIR").unwrap_or_else(|_| ".".into());
+            self.write_to(dir)
+        }
+    }
+
+    fn json_str(s: &str) -> String {
+        let mut out = String::with_capacity(s.len() + 2);
+        out.push('"');
+        for c in s.chars() {
+            match c {
+                '"' => out.push_str("\\\""),
+                '\\' => out.push_str("\\\\"),
+                '\n' => out.push_str("\\n"),
+                '\r' => out.push_str("\\r"),
+                '\t' => out.push_str("\\t"),
+                c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+                c => out.push(c),
+            }
+        }
+        out.push('"');
+        out
+    }
+
+    fn json_num(v: f64) -> String {
+        if v.is_finite() {
+            // Rust's shortest-roundtrip Display is valid JSON for finite
+            // values (including exponent forms like 1e-6).
+            format!("{v}")
+        } else {
+            "null".into()
+        }
+    }
+
+    #[cfg(test)]
+    mod tests {
+        use super::*;
+
+        #[test]
+        fn json_shape_and_escaping() {
+            let mut rep = Report::new("unit_test");
+            rep.meta("backend", "threaded:2");
+            rep.push(
+                Row::new("bla\"ze")
+                    .tag("nodes", 4)
+                    .num("throughput", 1.5)
+                    .num("broken", f64::NAN),
+            );
+            let js = rep.to_json();
+            assert!(js.starts_with("{\"name\":\"unit_test\""), "{js}");
+            assert!(js.contains("\"meta\":{\"backend\":\"threaded:2\"}"), "{js}");
+            assert!(js.contains("\"series\":\"bla\\\"ze\""), "{js}");
+            assert!(js.contains("\"nodes\":\"4\""), "{js}");
+            assert!(js.contains("\"throughput\":1.5"), "{js}");
+            assert!(js.contains("\"broken\":null"), "{js}");
+            assert!(js.ends_with("]}"), "{js}");
+        }
+
+        #[test]
+        fn write_to_creates_bench_file() {
+            let dir = std::env::temp_dir();
+            let mut rep = Report::new("write_roundtrip");
+            rep.push(Row::new("s").num("x", 2.0));
+            let path = rep.write_to(&dir).expect("write bench json");
+            assert!(path.ends_with("BENCH_write_roundtrip.json"));
+            let body = std::fs::read_to_string(&path).expect("read back");
+            assert!(body.contains("\"x\":2"));
+            std::fs::remove_file(path).ok();
+        }
     }
 }
 

@@ -2,7 +2,8 @@
 //!
 //! ```text
 //! blaze <task> [--nodes N] [--workers W] [--engine blaze|conventional]
-//!              [--scale S] [--artifacts DIR] [--seed SEED]
+//!              [--backend simulated|threaded[:N]] [--scale S]
+//!              [--artifacts DIR] [--seed SEED]
 //!              [--fail-at NODE@BLOCK ...] [--checkpoint-every BLOCKS]
 //!              [--evacuate]
 //! ```
@@ -13,10 +14,13 @@
 //! engine ([`crate::fault`]). `--evacuate` re-homes a dead node's keys onto
 //! the survivors (slot evacuation) instead of the default hot-standby
 //! restore — both policies produce identical results, so each stays
-//! benchmarkable against the other.
+//! benchmarkable against the other. `--backend threaded:N` executes the
+//! eager/small-key map+combine on N real OS threads ([`crate::exec`])
+//! with byte-identical results; the default (overridable via the
+//! `BLAZE_BACKEND` environment variable) is the simulated backend.
 
 use crate::apps;
-use crate::coordinator::cluster::{Cluster, ClusterConfig, EngineKind};
+use crate::coordinator::cluster::{Backend, Cluster, ClusterConfig, EngineKind};
 use crate::data::{corpus_lines, Graph, PointSet};
 use crate::fault::{FailurePlan, FaultConfig};
 use crate::runtime::Runtime;
@@ -32,6 +36,8 @@ pub struct Options {
     pub workers: usize,
     /// Engine selection.
     pub engine: EngineKind,
+    /// Execution backend (simulated vs real threads).
+    pub backend: Backend,
     /// Workload scale multiplier (1 = quick demo sizes).
     pub scale: usize,
     /// Artifacts directory (PJRT workloads); empty string disables.
@@ -54,6 +60,7 @@ impl Default for Options {
             nodes: 4,
             workers: 4,
             engine: EngineKind::Eager,
+            backend: Backend::from_env(),
             scale: 1,
             artifacts: "artifacts".into(),
             seed: 42,
@@ -80,7 +87,8 @@ impl Options {
 }
 
 const USAGE: &str = "usage: blaze <pi|wordcount|pagerank|kmeans|gmm|knn|all> \
-[--nodes N] [--workers W] [--engine blaze|conventional] [--scale S] \
+[--nodes N] [--workers W] [--engine blaze|conventional] \
+[--backend simulated|threaded[:N]] [--scale S] \
 [--artifacts DIR|none] [--seed SEED] [--fail-at NODE@BLOCK ...] \
 [--checkpoint-every BLOCKS] [--evacuate]";
 
@@ -129,6 +137,7 @@ pub fn parse(args: &[String]) -> Result<Options, String> {
                     other => return Err(format!("unknown engine {other:?}")),
                 }
             }
+            "--backend" => opts.backend = Backend::parse(&next("spec")?)?,
             other => return Err(format!("unknown flag {other:?}\n{USAGE}")),
         }
     }
@@ -142,6 +151,7 @@ fn make_cluster(opts: &Options) -> Cluster {
     Cluster::new(
         ClusterConfig::sized(opts.nodes, opts.workers)
             .with_engine(opts.engine)
+            .with_backend(opts.backend)
             .with_seed(opts.seed)
             .with_fault(opts.fault_config()),
     )
@@ -251,6 +261,29 @@ mod tests {
         assert_eq!(o.scale, 3);
         assert_eq!(o.seed, 9);
         assert_eq!(o.artifacts, "none");
+    }
+
+    #[test]
+    fn parse_backend_flag() {
+        let o = parse(&argv("pi --backend threaded:3")).unwrap();
+        assert_eq!(o.backend, Backend::Threaded(3));
+        let o = parse(&argv("pi --backend threaded")).unwrap();
+        assert_eq!(o.backend, Backend::Threaded(2));
+        let o = parse(&argv("pi --backend simulated")).unwrap();
+        assert_eq!(o.backend, Backend::Simulated);
+        assert!(parse(&argv("pi --backend warp")).is_err());
+        assert!(parse(&argv("pi --backend")).is_err());
+    }
+
+    #[test]
+    fn run_wordcount_threaded_end_to_end() {
+        assert_eq!(
+            run(&argv(
+                "wordcount --nodes 2 --workers 2 --scale 1 --artifacts none \
+                 --backend threaded:2"
+            )),
+            0
+        );
     }
 
     #[test]

@@ -10,6 +10,15 @@
 //! [`collect_hashmap`] convert to and from standard containers;
 //! [`load_file`] loads a text file in parallel into a distributed vector of
 //! lines.
+//!
+//! Threaded-backend handoff ([`crate::exec`]): containers themselves stay
+//! `!Send` (they hold the `Rc`-based [`Cluster`] handle) and are only
+//! touched by the feeder on the calling thread — the engine drains each
+//! node's block cursor once and clones items into owned per-block buffers
+//! for the worker pool. That is why MapReduce input item types need
+//! `Clone + Send` (`usize`/`u64` indices, `String` lines, point tuples —
+//! every paper workload qualifies); reduce *targets* never cross threads,
+//! so they carry no extra bounds.
 
 pub mod dist_hashmap;
 pub mod dist_range;

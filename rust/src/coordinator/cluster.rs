@@ -32,6 +32,82 @@ impl std::fmt::Display for EngineKind {
     }
 }
 
+/// How the map+combine phase of a job executes (orthogonal to
+/// [`EngineKind`], which selects the *algorithm*).
+///
+/// * `Simulated` — the historical mode: one host thread walks every
+///   virtual worker's block serially and parallelism is *accounted* in
+///   virtual time ([`crate::net::vtime`]).
+/// * `Threaded(n)` — the [`crate::exec`] backend: one virtual node's map
+///   blocks execute for real on `n` OS threads (work-stealing block queue,
+///   bounded per-thread eager caches, lock-striped machine-local shard
+///   map), while the shuffle/network stays on the calibrated flow model.
+///   Results are byte-identical to `Simulated` for the eager and
+///   small-key paths; fault-tolerant jobs (and the conventional engine,
+///   which models a baseline rather than Blaze) fall back to the
+///   simulated engines regardless of backend.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backend {
+    /// Serial execution with virtual-time accounting (the default).
+    Simulated,
+    /// Real shared-memory execution on this many OS threads per node.
+    Threaded(usize),
+}
+
+impl Default for Backend {
+    fn default() -> Self {
+        Backend::Simulated
+    }
+}
+
+impl std::fmt::Display for Backend {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Backend::Simulated => write!(f, "simulated"),
+            Backend::Threaded(n) => write!(f, "threaded:{n}"),
+        }
+    }
+}
+
+impl Backend {
+    /// Parse a backend spec: `simulated`, `threaded` (2 threads), or
+    /// `threaded:N`.
+    pub fn parse(spec: &str) -> Result<Self, String> {
+        match spec {
+            "simulated" | "sim" => Ok(Self::Simulated),
+            "threaded" => Ok(Self::Threaded(2)),
+            other => match other.strip_prefix("threaded:") {
+                Some(n) => n
+                    .parse::<usize>()
+                    .map_err(|e| format!("backend threaded:N: {e}"))
+                    .map(|n| Self::Threaded(n.max(1))),
+                None => Err(format!("unknown backend {other:?} (simulated|threaded[:N])")),
+            },
+        }
+    }
+
+    /// Session default from the `BLAZE_BACKEND` environment variable
+    /// (unset/empty = `Simulated`). Panics on an unparseable value: a
+    /// silently ignored spec would invalidate a CI matrix leg that thinks
+    /// it is running threaded.
+    pub fn from_env() -> Self {
+        match std::env::var("BLAZE_BACKEND") {
+            Ok(s) if !s.is_empty() => {
+                Self::parse(&s).unwrap_or_else(|e| panic!("BLAZE_BACKEND: {e}"))
+            }
+            _ => Self::Simulated,
+        }
+    }
+
+    /// Worker-thread count when threaded.
+    pub fn threads(&self) -> Option<usize> {
+        match self {
+            Backend::Simulated => None,
+            Backend::Threaded(n) => Some(*n),
+        }
+    }
+}
+
 /// Cluster shape and engine policy.
 #[derive(Debug, Clone)]
 pub struct ClusterConfig {
@@ -43,6 +119,10 @@ pub struct ClusterConfig {
     pub network: NetworkModel,
     /// Engine selection.
     pub engine: EngineKind,
+    /// Execution backend for the map+combine phase (simulated vs real
+    /// threads). Defaults from `BLAZE_BACKEND` so a CI leg can run the
+    /// whole suite threaded without touching test code.
+    pub backend: Backend,
     /// Scratch allocator mode (Blaze vs Blaze-TCM ablation).
     pub alloc: AllocMode,
     /// Base RNG seed; all workloads derive per-worker streams from it.
@@ -71,6 +151,7 @@ impl Default for ClusterConfig {
             workers_per_node: 4,
             network: NetworkModel::aws_10gbps(),
             engine: EngineKind::Eager,
+            backend: Backend::from_env(),
             alloc: AllocMode::System,
             seed: 0xB1A2E,
             thread_cache_entries: 1 << 16,
@@ -90,6 +171,12 @@ impl ClusterConfig {
     /// Builder-style engine override.
     pub fn with_engine(mut self, engine: EngineKind) -> Self {
         self.engine = engine;
+        self
+    }
+
+    /// Builder-style backend override.
+    pub fn with_backend(mut self, backend: Backend) -> Self {
+        self.backend = backend;
         self
     }
 
@@ -122,6 +209,12 @@ struct ClusterInner {
     config: ClusterConfig,
     metrics: RefCell<MetricsRegistry>,
     pool: BufferPool,
+    /// Fired-event flags (by event position in the failure plan) that
+    /// persist across jobs on this cluster, consulted only by
+    /// [`crate::fault::FailurePlan::once_per_sequence`] plans so an
+    /// iterative job sequence (k-means, PageRank) injects each planned
+    /// kill once instead of once per MapReduce job.
+    fault_fired: RefCell<Vec<bool>>,
 }
 
 /// Cheap-to-clone handle to a virtual cluster.
@@ -142,6 +235,7 @@ impl Cluster {
                 config,
                 metrics: RefCell::new(MetricsRegistry::default()),
                 pool: BufferPool::new(),
+                fault_fired: RefCell::new(Vec::new()),
             }),
         }
     }
@@ -190,6 +284,19 @@ impl Cluster {
     pub fn same_cluster(&self, other: &Cluster) -> bool {
         Rc::ptr_eq(&self.inner, &other.inner)
     }
+
+    /// Failure-plan events already fired in earlier jobs on this cluster
+    /// (indexed by event position; empty until a
+    /// [`crate::fault::FailurePlan::once_per_sequence`] job records some).
+    pub fn fault_fired(&self) -> Vec<bool> {
+        self.inner.fault_fired.borrow().clone()
+    }
+
+    /// Persist fired-event flags for subsequent jobs (the recoverable
+    /// engine calls this at job end for `once_per_sequence` plans).
+    pub fn set_fault_fired(&self, fired: &[bool]) {
+        *self.inner.fault_fired.borrow_mut() = fired.to_vec();
+    }
 }
 
 impl std::fmt::Debug for Cluster {
@@ -225,6 +332,30 @@ mod tests {
         assert_eq!(cfg.engine, EngineKind::Conventional);
         assert_eq!(cfg.alloc, AllocMode::Pool);
         assert_eq!(cfg.seed, 7);
+    }
+
+    #[test]
+    fn backend_parse_display_roundtrip() {
+        assert_eq!(Backend::parse("simulated"), Ok(Backend::Simulated));
+        assert_eq!(Backend::parse("sim"), Ok(Backend::Simulated));
+        assert_eq!(Backend::parse("threaded"), Ok(Backend::Threaded(2)));
+        assert_eq!(Backend::parse("threaded:4"), Ok(Backend::Threaded(4)));
+        // 0 clamps to 1 thread; garbage is a loud error.
+        assert_eq!(Backend::parse("threaded:0"), Ok(Backend::Threaded(1)));
+        assert!(Backend::parse("warp").is_err());
+        assert!(Backend::parse("threaded:x").is_err());
+        assert_eq!(Backend::Threaded(4).to_string(), "threaded:4");
+        assert_eq!(Backend::Simulated.to_string(), "simulated");
+        assert_eq!(Backend::Threaded(3).threads(), Some(3));
+        assert_eq!(Backend::Simulated.threads(), None);
+    }
+
+    #[test]
+    fn fault_fired_state_persists_on_cluster() {
+        let c = Cluster::local(2, 2);
+        assert!(c.fault_fired().is_empty());
+        c.set_fault_fired(&[true, false]);
+        assert_eq!(c.clone().fault_fired(), vec![true, false]);
     }
 
     #[test]

@@ -42,12 +42,30 @@ pub struct RunStats {
     pub peak_intermediate_bytes: u64,
     /// Real host wall time spent executing the run, seconds.
     pub host_wall_sec: f64,
+    /// Execution backend ("simulated", "threaded:N"; empty = simulated in
+    /// runs recorded by code that predates the field).
+    pub backend: String,
+    /// Real wall-clock nanoseconds per engine phase, in phase order.
+    /// Under `Backend::Threaded` the compute phases here are *parallel*
+    /// wall time (the hybrid accounting's hardware-speed half); the
+    /// virtual `makespan_sec` remains the modeled figure.
+    pub phase_wall_ns: Vec<(String, u64)>,
 }
 
 impl RunStats {
     /// Items/second throughput for `items` processed in this run.
     pub fn throughput(&self, items: u64) -> f64 {
         items as f64 / self.makespan_sec
+    }
+
+    /// Total real wall nanoseconds across all recorded phases.
+    pub fn wall_ns_total(&self) -> u64 {
+        self.phase_wall_ns.iter().map(|(_, ns)| ns).sum()
+    }
+
+    /// Wall nanoseconds of one named phase, if recorded.
+    pub fn wall_ns(&self, phase: &str) -> Option<u64> {
+        self.phase_wall_ns.iter().find(|(p, _)| p == phase).map(|&(_, ns)| ns)
     }
 }
 
@@ -160,6 +178,15 @@ mod tests {
     fn throughput() {
         let s = stats("x", 2.0, 0);
         assert!((s.throughput(100) - 50.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn wall_ns_helpers() {
+        let mut s = stats("x", 1.0, 0);
+        s.phase_wall_ns = vec![("map".into(), 100), ("shuffle".into(), 50)];
+        assert_eq!(s.wall_ns_total(), 150);
+        assert_eq!(s.wall_ns("map"), Some(100));
+        assert_eq!(s.wall_ns("none"), None);
     }
 
     #[test]

@@ -1,0 +1,150 @@
+//! Bounded per-thread eager-reduction caches (paper §2.3.1) for the
+//! threaded backend.
+//!
+//! Replicates the simulated eager engine's per-worker cache semantics
+//! *exactly* — same entry/apply behavior, same capacity check after every
+//! emit, same whole-cache drain on overflow — so a block's sequence of
+//! locally-reduced partials is bit-identical no matter which backend runs
+//! it. The difference is where drains go: the simulated engine merges them
+//! straight into a node-local map; here each drain becomes a
+//! [`FlushBatch`] tagged with its canonical position
+//! ([`super::shard::partial_order`]) and lands in the lock-striped
+//! [`super::shard::ShardedMap`], which restores the simulated merge order
+//! at canonical-merge time regardless of thread interleaving.
+
+use std::collections::hash_map::Entry;
+use std::hash::Hash;
+
+use crate::mapreduce::eager::HASH_ENTRY_OVERHEAD;
+use crate::mapreduce::reducers::Reducer;
+use crate::ser::fastser::FastSer;
+use crate::util::hash::FxHashMap;
+
+use super::shard::partial_order;
+
+/// One drained batch of locally-reduced pairs (each key at most once),
+/// tagged with its canonical merge position.
+pub struct FlushBatch<K, V> {
+    /// Canonical order key ([`partial_order`]).
+    pub order: u64,
+    /// The drained pairs.
+    pub pairs: Vec<(K, V)>,
+}
+
+/// A bounded eager-combine cache for one map block (= one virtual worker).
+pub struct EagerCache<K, V> {
+    worker: usize,
+    cap: usize,
+    next_seq: u32,
+    map: FxHashMap<K, V>,
+    /// Encoded-payload byte accounting (same formula as the simulated
+    /// engine: payload + per-entry overhead), high-water tracked.
+    bytes: u64,
+    peak_bytes: u64,
+}
+
+impl<K: Hash + Eq + FastSer, V: FastSer> EagerCache<K, V> {
+    /// Cache for virtual worker `worker` holding at most `cap` entries.
+    pub fn new(worker: usize, cap: usize) -> Self {
+        Self {
+            worker,
+            cap: cap.max(1),
+            next_seq: 0,
+            map: FxHashMap::default(),
+            bytes: 0,
+            peak_bytes: 0,
+        }
+    }
+
+    /// Eagerly reduce one emitted pair into the cache. Returns the drained
+    /// overflow batch when this emit filled the cache (the simulated
+    /// engine's flush-into-node-map moment); popular keys re-enter the
+    /// empty cache on their next emission, exactly as in the paper.
+    pub fn reduce(&mut self, key: K, value: V, red: &Reducer<V>) -> Option<FlushBatch<K, V>> {
+        match self.map.entry(key) {
+            Entry::Occupied(mut e) => red.apply(e.get_mut(), &value),
+            Entry::Vacant(e) => {
+                self.bytes += HASH_ENTRY_OVERHEAD
+                    + e.key().encoded_len() as u64
+                    + value.encoded_len() as u64;
+                e.insert(value);
+            }
+        }
+        self.peak_bytes = self.peak_bytes.max(self.bytes);
+        (self.map.len() >= self.cap).then(|| self.drain(false))
+    }
+
+    /// Drain whatever remains at block end as the worker's *final* partial
+    /// (canonically merged after every worker's overflow flushes, like the
+    /// simulated engine's end-of-map cache merge). May be empty.
+    pub fn finish(mut self) -> FlushBatch<K, V> {
+        self.drain(true)
+    }
+
+    /// High-water cache bytes (memory accounting).
+    pub fn peak_bytes(&self) -> u64 {
+        self.peak_bytes
+    }
+
+    fn drain(&mut self, final_drain: bool) -> FlushBatch<K, V> {
+        // A worker has exactly one final drain, so finals always carry
+        // sequence 0 — only overflow flushes consume the counter.
+        let seq = if final_drain { 0 } else { self.next_seq };
+        let order = partial_order(final_drain, self.worker, seq);
+        if !final_drain {
+            self.next_seq += 1;
+        }
+        self.bytes = 0;
+        FlushBatch { order, pairs: self.map.drain().collect() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn overflow_drains_whole_cache_after_capacity_insert() {
+        let red = Reducer::sum();
+        let mut cache: EagerCache<u64, u64> = EagerCache::new(0, 2);
+        assert!(cache.reduce(1, 10, &red).is_none());
+        // Occupied apply: no growth, no flush.
+        assert!(cache.reduce(1, 5, &red).is_none());
+        // Second distinct key hits the cap: whole cache drains.
+        let batch = cache.reduce(2, 7, &red).expect("overflow flush");
+        let mut pairs = batch.pairs;
+        pairs.sort_unstable();
+        assert_eq!(pairs, vec![(1, 15), (2, 7)]);
+        assert_eq!(batch.order, partial_order(false, 0, 0));
+        // Cache is empty again; the next overflow gets the next sequence.
+        assert!(cache.reduce(3, 1, &red).is_none());
+        let batch2 = cache.reduce(4, 1, &red).expect("second flush");
+        assert_eq!(batch2.order, partial_order(false, 0, 1));
+        let fin = cache.finish();
+        assert!(fin.pairs.is_empty());
+        assert_eq!(fin.order, partial_order(true, 0, 0));
+    }
+
+    #[test]
+    fn capacity_one_flushes_every_emit() {
+        let red = Reducer::sum();
+        let mut cache: EagerCache<u64, u64> = EagerCache::new(3, 1);
+        for i in 0..5u64 {
+            let batch = cache.reduce(i % 2, 1, &red).expect("cap-1 always flushes");
+            assert_eq!(batch.pairs.len(), 1);
+            assert_eq!(batch.order, partial_order(false, 3, i as u32));
+        }
+    }
+
+    #[test]
+    fn byte_accounting_tracks_high_water() {
+        let red = Reducer::sum();
+        let mut cache: EagerCache<u64, u64> = EagerCache::new(0, 8);
+        assert_eq!(cache.peak_bytes(), 0);
+        cache.reduce(1, 1, &red);
+        let one = cache.peak_bytes();
+        assert!(one > HASH_ENTRY_OVERHEAD);
+        cache.reduce(2, 1, &red);
+        assert!(cache.peak_bytes() > one);
+    }
+}

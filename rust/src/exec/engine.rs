@@ -1,0 +1,380 @@
+//! The threaded execution engine: `Backend::Threaded(n)`.
+//!
+//! Hybrid execution — one virtual node's map+combine runs *for real* on
+//! `n` OS threads while the shuffle/network stays on the calibrated flow
+//! model:
+//!
+//! 1. The calling thread drains each node's
+//!    [`DistInput::block_cursor`] once, materializing every virtual
+//!    worker's block as an owned `Vec<(K, V)>` (the `Send` handoff — the
+//!    only clone the backend adds), and feeds the blocks into the
+//!    work-stealing queue ([`super::pool`]).
+//! 2. Worker threads execute blocks: publish the block's worker RNG
+//!    stream, run the mapper, and eagerly reduce into a bounded per-thread
+//!    cache ([`super::cache::EagerCache`]) whose overflow flushes land in
+//!    the node's lock-striped shard map ([`super::shard::ShardedMap`]).
+//! 3. The canonical merge folds each key's partials in simulated-engine
+//!    order, and from there the *same* partition/serialize/shuffle/absorb
+//!    code as the simulated engines runs ([`eager::shuffle_and_absorb`],
+//!    [`smallkey::tree_reduce_into_target`]).
+//!
+//! Determinism: block boundaries, RNG streams, cache capacity, flush
+//! policy, and per-key reducer application order are all identical to the
+//! simulated engines, so results are byte-identical at any thread count —
+//! including non-associative float reductions (gated by
+//! `rust/tests/equivalence.rs` and `rust/tests/exec.rs`).
+//!
+//! Accounting is hybrid: virtual time is still charged from measured
+//! per-block seconds (summed per node, i.e. the serial-equivalent work),
+//! while the real parallel wall clock of each phase is recorded in
+//! [`RunStats::phase_wall_ns`]. Fault-tolerant jobs run on the simulated
+//! recoverable engine regardless of backend (threaded recovery is future
+//! work); the conventional engine models a baseline and is never
+//! threaded.
+
+use std::hash::Hash;
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::coordinator::metrics::RunStats;
+use crate::mapreduce::eager::{self, HASH_ENTRY_OVERHEAD};
+use crate::mapreduce::reducers::Reducer;
+use crate::mapreduce::smallkey;
+use crate::mapreduce::{BlockCursor, DenseKey, DistInput, Emit, ReduceTarget, RunRecorder};
+use crate::net::vtime::VirtualTime;
+use crate::ser::fastser::FastSer;
+use crate::util::hash::FxHashMap;
+
+use super::cache::EagerCache;
+use super::pool;
+use super::shard::ShardedMap;
+
+/// One materialized map block: virtual worker `worker` of `node`'s
+/// partition, with its items cloned out of the input for the `Send`
+/// handoff.
+struct BlockTask<K, V> {
+    node: usize,
+    worker: usize,
+    items: Vec<(K, V)>,
+}
+
+/// Per-run accumulators shared by the pool workers (locked once per
+/// block, not per item).
+struct MapAcc {
+    /// Serial-equivalent seconds per node: each block's wall time summed
+    /// into its home node's bucket (feeds the virtual-time model).
+    per_node_secs: Vec<f64>,
+    emitted: u64,
+    /// Largest single block cache high-water mark. At most `threads`
+    /// caches are live at once, so `max × min(threads, blocks)` bounds
+    /// the live cache bytes — comparable to the simulated engine's
+    /// high-water accounting, unlike a sum over all blocks (which would
+    /// overstate peak memory by the block count).
+    max_cache_peak_bytes: u64,
+}
+
+/// Feeder closure over every node's cursor: walks each partition exactly
+/// once, yielding `workers` owned blocks per node — empty blocks
+/// included, so every virtual worker exists at any thread count.
+fn feed_blocks<I: DistInput>(
+    input: &I,
+    nodes: usize,
+    workers: usize,
+) -> impl FnMut() -> Option<BlockTask<I::K, I::V>> + '_
+where
+    I::K: Clone,
+    I::V: Clone,
+{
+    let mut node = 0usize;
+    let mut w = 0usize;
+    let mut cur: Option<I::Cursor<'_>> = None;
+    move || loop {
+        if node >= nodes {
+            return None;
+        }
+        if w >= workers {
+            node += 1;
+            w = 0;
+            cur = None;
+            continue;
+        }
+        let c = cur.get_or_insert_with(|| input.block_cursor(node, workers));
+        let mut items = Vec::new();
+        let advanced = c.next_block(|k, v| items.push((k.clone(), v.clone())));
+        debug_assert!(advanced, "cursor yields one block per worker");
+        let task = BlockTask { node, worker: w, items };
+        w += 1;
+        return Some(task);
+    }
+}
+
+/// Threaded general path: eager reduction into per-thread caches, flushes
+/// into the lock-striped node shard maps, canonical merge, then the
+/// shared shuffle pipeline.
+pub fn run_eager<I, F, K2, V2, T>(
+    label: &str,
+    input: &I,
+    mapper: &F,
+    red: &Reducer<V2>,
+    target: &mut T,
+    threads: usize,
+) where
+    I: DistInput,
+    I::K: Clone + Send,
+    I::V: Clone + Send,
+    F: Fn(&I::K, &I::V, Emit<'_, K2, V2>) + Sync,
+    K2: Hash + Eq + Clone + FastSer + Send,
+    V2: Clone + FastSer + Send,
+    T: ReduceTarget<K2, V2>,
+{
+    let rec = RunRecorder::new(label);
+    let cluster = input.cluster().clone();
+    let cfg = cluster.config().clone();
+    let (nodes, workers) = (cfg.nodes, cfg.workers_per_node);
+    let threads = threads.max(1);
+    let cache_cap = cfg.thread_cache_entries.max(1);
+    let stripes = (threads * 4).next_power_of_two().min(256);
+
+    let mut vt = VirtualTime::new();
+
+    // ---- Map + eager local reduce, on real threads ----------------------
+    let t_map = Instant::now();
+    let shard_maps: Vec<ShardedMap<K2, V2>> =
+        (0..nodes).map(|_| ShardedMap::new(stripes)).collect();
+    let acc = Mutex::new(MapAcc {
+        per_node_secs: vec![0.0f64; nodes],
+        emitted: 0,
+        max_cache_peak_bytes: 0,
+    });
+    {
+        let work = |task: BlockTask<I::K, I::V>| {
+            let t0 = Instant::now();
+            // The worker's random stream is keyed by its *virtual* worker
+            // identity, not the OS thread — same streams as the simulated
+            // engines no matter which thread steals the block.
+            crate::util::random::set_stream(cfg.seed, (task.node * workers + task.worker) as u64);
+            let mut cache: EagerCache<K2, V2> = EagerCache::new(task.worker, cache_cap);
+            let mut emitted = 0u64;
+            let shard = &shard_maps[task.node];
+            for (k, v) in &task.items {
+                let mut emit = |k2: K2, v2: V2| {
+                    emitted += 1;
+                    if let Some(batch) = cache.reduce(k2, v2, red) {
+                        shard.absorb(batch.order, batch.pairs);
+                    }
+                };
+                mapper(k, v, &mut emit);
+            }
+            let peak = cache.peak_bytes();
+            let fin = cache.finish();
+            shard.absorb(fin.order, fin.pairs);
+            let secs = t0.elapsed().as_secs_f64();
+            let mut a = acc.lock().expect("map accumulator poisoned");
+            a.per_node_secs[task.node] += secs;
+            a.emitted += emitted;
+            a.max_cache_peak_bytes = a.max_cache_peak_bytes.max(peak);
+        };
+        pool::execute(threads, threads * 2, feed_blocks(input, nodes, workers), work);
+    }
+    let map_wall_ns = t_map.elapsed().as_nanos() as u64;
+    let MapAcc { mut per_node_secs, emitted: pairs_emitted, max_cache_peak_bytes } =
+        acc.into_inner().expect("map accumulator poisoned");
+    // Live worker caches are bounded by the pool width (see MapAcc docs).
+    let live_cache_bytes = max_cache_peak_bytes * threads.min(nodes * workers) as u64;
+
+    // ---- Canonical merge (restores simulated application order) ---------
+    let t_merge = Instant::now();
+    let mut node_maps: Vec<FxHashMap<K2, V2>> = Vec::with_capacity(nodes);
+    let mut local_bytes = 0u64;
+    for (node, sm) in shard_maps.into_iter().enumerate() {
+        let t0 = Instant::now();
+        let local = sm.into_canonical(red);
+        // Node-local map bytes, same per-entry formula as the simulated
+        // engine's accounting.
+        local_bytes += local
+            .iter()
+            .map(|(k, v)| {
+                HASH_ENTRY_OVERHEAD + k.encoded_len() as u64 + v.encoded_len() as u64
+            })
+            .sum::<u64>();
+        node_maps.push(local);
+        // The machine-local combine is node work: fold it into the node's
+        // serial-equivalent budget.
+        per_node_secs[node] += t0.elapsed().as_secs_f64();
+    }
+    let merge_wall_ns = t_merge.elapsed().as_nanos() as u64;
+    vt.compute_phase("map+local-reduce", &per_node_secs, workers);
+
+    // ---- Shared shuffle pipeline ----------------------------------------
+    let out = eager::shuffle_and_absorb(&cluster, node_maps, red, target, &mut vt);
+
+    // ---- Record ----------------------------------------------------------
+    let compute_sec = vt.compute_sec();
+    let makespan = vt.makespan();
+    cluster.metrics().record_run(RunStats {
+        label: rec.label,
+        engine: "blaze".into(),
+        backend: format!("threaded:{threads}"),
+        nodes,
+        workers_per_node: workers,
+        makespan_sec: makespan,
+        compute_sec,
+        shuffle_sec: makespan - compute_sec,
+        shuffle_bytes: out.shuffle_bytes,
+        ser_bytes: out.shuffle_bytes,
+        pairs_emitted,
+        pairs_shuffled: out.pairs_shuffled,
+        peak_intermediate_bytes: live_cache_bytes + local_bytes + out.peak_bytes,
+        host_wall_sec: rec.started.elapsed().as_secs_f64(),
+        phase_wall_ns: vec![
+            ("map+local-reduce".into(), map_wall_ns),
+            ("canonical-merge".into(), merge_wall_ns),
+            ("shuffle+absorb".into(), out.wall_ns),
+        ],
+        ..Default::default()
+    });
+}
+
+/// Threaded small-fixed-key-range path: per-block dense caches on real
+/// threads, canonical per-node worker-order merge, then the shared
+/// binomial tree reduce.
+pub fn run_smallkey<I, F, K2, V2, T>(
+    label: &str,
+    input: &I,
+    mapper: &F,
+    red: &Reducer<V2>,
+    target: &mut T,
+    threads: usize,
+) where
+    I: DistInput,
+    I::K: Clone + Send,
+    I::V: Clone + Send,
+    F: Fn(&I::K, &I::V, Emit<'_, K2, V2>) + Sync,
+    K2: Hash + Eq + Clone + FastSer + DenseKey + Send,
+    V2: Clone + FastSer + Send,
+    T: ReduceTarget<K2, V2>,
+{
+    let rec = RunRecorder::new(label);
+    let cluster = input.cluster().clone();
+    let cfg = cluster.config().clone();
+    let (nodes, workers) = (cfg.nodes, cfg.workers_per_node);
+    let threads = threads.max(1);
+    let range = target.dense_len().expect("smallkey path requires a dense target");
+
+    let mut vt = VirtualTime::new();
+
+    // ---- Map with per-block dense caches, on real threads ---------------
+    // Each finished block merges into its node's accumulator *as soon as
+    // worker order allows* (canonical order: worker 0, 1, …), under a
+    // per-node lock. Retained memory is one accumulator per node plus
+    // only the out-of-order caches still pending — not all
+    // `nodes × workers` caches until a barrier.
+    let t_map = Instant::now();
+    struct NodeDense<V> {
+        /// Next worker index the accumulator may merge (canonical order).
+        next_worker: usize,
+        /// Worker-order fold so far (`None` until worker 0 lands).
+        acc: Option<Vec<Option<V>>>,
+        /// Finished caches waiting for their worker-order turn.
+        pending: std::collections::BTreeMap<usize, Vec<Option<V>>>,
+    }
+    struct DenseStats {
+        per_node_secs: Vec<f64>,
+        emitted: u64,
+    }
+    let dense: Vec<Mutex<NodeDense<V2>>> = (0..nodes)
+        .map(|_| {
+            Mutex::new(NodeDense {
+                next_worker: 0,
+                acc: None,
+                pending: std::collections::BTreeMap::new(),
+            })
+        })
+        .collect();
+    let stats = Mutex::new(DenseStats { per_node_secs: vec![0.0f64; nodes], emitted: 0 });
+    {
+        let work = |task: BlockTask<I::K, I::V>| {
+            let t0 = Instant::now();
+            crate::util::random::set_stream(cfg.seed, (task.node * workers + task.worker) as u64);
+            let mut cache: Vec<Option<V2>> = vec![None; range];
+            let mut emitted = 0u64;
+            for (k, v) in &task.items {
+                let mut emit = |k2: K2, v2: V2| {
+                    emitted += 1;
+                    smallkey::dense_reduce(&mut cache, range, &k2, v2, red);
+                };
+                mapper(k, v, &mut emit);
+            }
+            // In-node combine, strictly in worker order (the simulated
+            // engine's serial fold — byte-identity depends on it).
+            {
+                let mut guard = dense[task.node].lock().expect("dense node state poisoned");
+                // Reborrow through the guard once so the field borrows
+                // below are disjoint.
+                let nd = &mut *guard;
+                nd.pending.insert(task.worker, cache);
+                while let Some(entry) = nd.pending.first_entry() {
+                    if *entry.key() != nd.next_worker {
+                        break;
+                    }
+                    let cache = entry.remove();
+                    match nd.acc.as_mut() {
+                        None => nd.acc = Some(cache),
+                        Some(acc) => smallkey::merge_dense(acc, cache, red),
+                    }
+                    nd.next_worker += 1;
+                }
+            }
+            let secs = t0.elapsed().as_secs_f64();
+            let mut st = stats.lock().expect("dense stats poisoned");
+            st.per_node_secs[task.node] += secs;
+            st.emitted += emitted;
+        };
+        pool::execute(threads, threads * 2, feed_blocks(input, nodes, workers), work);
+    }
+    let map_wall_ns = t_map.elapsed().as_nanos() as u64;
+    let DenseStats { per_node_secs, emitted: pairs_emitted } =
+        stats.into_inner().expect("dense stats poisoned");
+
+    // ---- Collect the per-node worker-order folds ------------------------
+    let t_merge = Instant::now();
+    let mut node_partials: Vec<Vec<Option<V2>>> = Vec::with_capacity(nodes);
+    for (node, nd) in dense.into_iter().enumerate() {
+        let nd = nd.into_inner().expect("dense node state poisoned");
+        debug_assert!(nd.pending.is_empty(), "node {node} has unmerged caches");
+        debug_assert_eq!(nd.next_worker, workers, "node {node} missing worker caches");
+        node_partials.push(nd.acc.expect("at least one worker per node"));
+    }
+    let merge_wall_ns = t_merge.elapsed().as_nanos() as u64;
+    vt.compute_phase("map+dense-local-reduce", &per_node_secs, workers);
+
+    // ---- Shared binomial tree reduce ------------------------------------
+    let out = smallkey::tree_reduce_into_target(&cluster, node_partials, red, target, &mut vt);
+
+    // ---- Record ----------------------------------------------------------
+    let compute_sec = vt.compute_sec();
+    let makespan = vt.makespan();
+    let (pairs_shuffled, dense_cache_bytes) = smallkey::dense_stats::<V2>(nodes, workers, range);
+    cluster.metrics().record_run(RunStats {
+        label: rec.label,
+        engine: "blaze".into(),
+        backend: format!("threaded:{threads}"),
+        nodes,
+        workers_per_node: workers,
+        makespan_sec: makespan,
+        compute_sec,
+        shuffle_sec: makespan - compute_sec,
+        shuffle_bytes: out.shuffle_bytes,
+        ser_bytes: out.shuffle_bytes,
+        pairs_emitted,
+        pairs_shuffled,
+        peak_intermediate_bytes: dense_cache_bytes + out.round_flow_peak,
+        host_wall_sec: rec.started.elapsed().as_secs_f64(),
+        phase_wall_ns: vec![
+            ("map+dense-local-reduce".into(), map_wall_ns),
+            ("canonical-merge".into(), merge_wall_ns),
+            ("tree-reduce".into(), out.wall_ns),
+        ],
+        ..Default::default()
+    });
+}

@@ -1,0 +1,40 @@
+//! Real threaded execution backend (`Backend::Threaded(n)`).
+//!
+//! Everything else in this reproduction *models* workers: engines walk
+//! blocks serially and charge virtual time. This subsystem is the first
+//! that **executes** — one virtual node's map+combine runs on actual OS
+//! threads, validating that the paper's §2.3.1 design (eager reduction
+//! into bounded per-worker caches + a machine-local combine) is
+//! implementable at hardware speed, not just accountable.
+//!
+//! * [`pool`] — scoped worker pool: a bounded work-stealing block queue
+//!   fed by the engine's single cursor walk; idle threads steal whole
+//!   blocks (a block is never split, preserving per-worker item order and
+//!   RNG streams).
+//! * [`cache`] — bounded per-thread eager-reduction caches with the exact
+//!   flush semantics of the simulated eager engine.
+//! * [`shard`] — the lock-striped sharded machine-local map. Flushes only
+//!   *append* order-tagged partials (no reduction under a lock), and the
+//!   single-threaded canonical merge folds each key's partials in
+//!   simulated-engine order — confluence by construction, so results are
+//!   byte-identical at any thread count, floats included.
+//! * [`engine`] — the hybrid engine: threaded map+combine, then the same
+//!   partition/serialize/shuffle/absorb pipeline as the simulated engines
+//!   on the calibrated flow model. Real per-phase wall clock lands in
+//!   `RunStats::phase_wall_ns`; the virtual makespan stays the modeled
+//!   figure (see DESIGN.md §Execution backends for when each number is
+//!   comparable to the paper's).
+//!
+//! Select with `ClusterConfig::backend`, CLI `--backend threaded:N`, or
+//! the `BLAZE_BACKEND` environment variable (used by the CI matrix leg
+//! that runs the whole suite threaded). Gated by
+//! `rust/tests/equivalence.rs` (threaded{1,2,4} eager + small-key paths
+//! vs the simulated reference, plus the checkpointed-job fallback row —
+//! fault-enabled jobs run the simulated recoverable engine regardless of
+//! backend) and the `rust/tests/exec.rs` stress suite (hostile key skew,
+//! flush storms, 1/2/4 threads).
+
+pub mod cache;
+pub mod engine;
+pub mod pool;
+pub mod shard;

@@ -1,0 +1,218 @@
+//! Scoped worker pool with a work-stealing block queue.
+//!
+//! The threaded backend's execution substrate: the calling thread *feeds*
+//! map blocks (drained one at a time from the engine's
+//! [`crate::mapreduce::DistInput::block_cursor`]) into a bounded shared
+//! queue, while `n` scoped OS threads self-schedule — each idle worker
+//! steals the next block from the queue head. Blocks are the work unit;
+//! they are never split, so a block's items run in partition order on one
+//! thread with that virtual worker's RNG stream, which is what keeps
+//! threaded runs byte-identical to the simulated engines.
+//!
+//! The queue is bounded (backpressure: the feeder blocks while `cap`
+//! blocks are in flight), so the materialized handoff memory is
+//! `O(threads)` blocks, not `O(nodes × workers)`.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+
+/// Bounded MPMC queue of pending blocks.
+pub struct BlockQueue<T> {
+    state: Mutex<State<T>>,
+    not_full: Condvar,
+    not_empty: Condvar,
+    cap: usize,
+}
+
+struct State<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+impl<T> BlockQueue<T> {
+    /// Queue admitting at most `cap` (≥ 1) in-flight blocks.
+    pub fn bounded(cap: usize) -> Self {
+        Self {
+            state: Mutex::new(State { items: VecDeque::new(), closed: false }),
+            not_full: Condvar::new(),
+            not_empty: Condvar::new(),
+            cap: cap.max(1),
+        }
+    }
+
+    /// Enqueue a block, blocking while the queue is full. Returns `false`
+    /// (dropping `item`) if the queue was closed underneath the feeder —
+    /// that only happens when a worker died.
+    pub fn push(&self, item: T) -> bool {
+        let mut st = self.state.lock().expect("block queue poisoned");
+        while st.items.len() >= self.cap && !st.closed {
+            st = self.not_full.wait(st).expect("block queue poisoned");
+        }
+        if st.closed {
+            return false;
+        }
+        st.items.push_back(item);
+        drop(st);
+        self.not_empty.notify_one();
+        true
+    }
+
+    /// Steal the next block, blocking while the queue is empty and still
+    /// open. `None` once the queue is closed and drained.
+    pub fn pop(&self) -> Option<T> {
+        let mut st = self.state.lock().expect("block queue poisoned");
+        loop {
+            if let Some(item) = st.items.pop_front() {
+                drop(st);
+                self.not_full.notify_one();
+                return Some(item);
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.not_empty.wait(st).expect("block queue poisoned");
+        }
+    }
+
+    /// Close the queue: queued blocks still drain, pushes stop succeeding,
+    /// and every blocked thread wakes.
+    pub fn close(&self) {
+        self.state.lock().expect("block queue poisoned").closed = true;
+        self.not_full.notify_all();
+        self.not_empty.notify_all();
+    }
+}
+
+/// Close the queue when a worker unwinds, so a feeder blocked on a full
+/// queue wakes up and the panic propagates instead of deadlocking.
+struct CloseOnDrop<'a, T> {
+    queue: &'a BlockQueue<T>,
+}
+
+impl<T> Drop for CloseOnDrop<'_, T> {
+    fn drop(&mut self) {
+        // Harmless on the normal exit path: workers only return after the
+        // queue is already closed and drained.
+        self.queue.close();
+    }
+}
+
+/// Run every block yielded by `produce` (called on *this* thread until it
+/// returns `None`) through `work` on `threads` scoped worker threads.
+///
+/// Worker panics propagate to the caller with their original payload, so
+/// mapper contract violations (e.g. a dense key outside the target range)
+/// fail the same way they do on the simulated engines.
+pub fn execute<T, P, W>(threads: usize, queue_cap: usize, mut produce: P, work: W)
+where
+    T: Send,
+    P: FnMut() -> Option<T>,
+    W: Fn(T) + Sync,
+{
+    let threads = threads.max(1);
+    let queue = BlockQueue::bounded(queue_cap);
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..threads)
+            .map(|_| {
+                s.spawn(|| {
+                    let _guard = CloseOnDrop { queue: &queue };
+                    while let Some(block) = queue.pop() {
+                        work(block);
+                    }
+                })
+            })
+            .collect();
+        {
+            // Guard the feeder as well: if `produce` panics, the queue
+            // still closes so workers drain out and the scope can join
+            // them before propagating the panic.
+            let _feed_guard = CloseOnDrop { queue: &queue };
+            while let Some(block) = produce() {
+                if !queue.push(block) {
+                    break; // a worker died; fall through to the joins below
+                }
+            }
+        }
+        for h in handles {
+            if let Err(payload) = h.join() {
+                std::panic::resume_unwind(payload);
+            }
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    #[test]
+    fn all_blocks_processed_exactly_once() {
+        let sum = AtomicU64::new(0);
+        let mut next = 0u64;
+        execute(
+            4,
+            2,
+            || {
+                if next < 1000 {
+                    next += 1;
+                    Some(next)
+                } else {
+                    None
+                }
+            },
+            |v| {
+                sum.fetch_add(v, Ordering::Relaxed);
+            },
+        );
+        assert_eq!(sum.load(Ordering::Relaxed), 1000 * 1001 / 2);
+    }
+
+    #[test]
+    fn zero_blocks_is_fine() {
+        execute(3, 1, || None::<u64>, |_| panic!("no work expected"));
+    }
+
+    #[test]
+    fn single_thread_still_drains() {
+        let sum = AtomicU64::new(0);
+        let mut it = (1..=10u64).collect::<Vec<_>>().into_iter();
+        execute(1, 1, || it.next(), |v| {
+            sum.fetch_add(v, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 55);
+    }
+
+    #[test]
+    #[should_panic(expected = "worker exploded")]
+    fn worker_panic_propagates_with_payload_and_unblocks_feeder() {
+        // More blocks than queue capacity: without the close-on-unwind
+        // guard the feeder would deadlock on the full queue.
+        let mut next = 0u64;
+        execute(
+            2,
+            1,
+            || {
+                next += 1;
+                (next <= 100).then_some(next)
+            },
+            |v| {
+                if v == 3 {
+                    panic!("worker exploded");
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn closed_queue_rejects_push_and_drains_pop() {
+        let q = BlockQueue::bounded(4);
+        assert!(q.push(1u64));
+        assert!(q.push(2));
+        q.close();
+        assert!(!q.push(3));
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.pop(), None);
+    }
+}

@@ -1,0 +1,222 @@
+//! Lock-striped sharded machine-local map with a canonical merge order.
+//!
+//! The threaded backend's answer to the determinism problem: worker
+//! threads flush locally-reduced partials concurrently, but **reducers
+//! never run under a stripe lock**. A flush only *appends* each pair to
+//! its key's partial list, tagged with the batch's canonical position
+//! ([`partial_order`]) — appends to disjoint keys commute, and appends to
+//! the same key carry their order with them. The single-threaded
+//! [`ShardedMap::into_canonical`] drain then sorts each key's partials by
+//! that order and folds them with the reducer, reproducing byte-for-byte
+//! the application order of the simulated eager engine (every worker's
+//! overflow flushes in worker-then-sequence order, then every worker's
+//! final cache in worker order). Confluence by construction, not by luck —
+//! bit-identical even for non-associative float reductions.
+
+use std::hash::Hash;
+use std::sync::Mutex;
+
+use crate::mapreduce::reducers::Reducer;
+use crate::util::hash::{fxhash, FxHashMap};
+
+/// Canonical order key for one locally-reduced partial.
+///
+/// Matches the simulated eager engine, where workers run in index order:
+/// every overflow flush lands in the node-local map before any worker's
+/// final cache merges, flushes sort by `(worker, seq)`, finals by
+/// `worker`. Orders are unique per key — a key appears at most once per
+/// drained batch, and every batch has a distinct `(final, worker, seq)`.
+#[inline]
+pub fn partial_order(final_drain: bool, worker: usize, seq: u32) -> u64 {
+    assert!(worker < (1 << 31), "worker id overflows the order key");
+    ((final_drain as u64) << 63) | ((worker as u64) << 32) | u64::from(seq)
+}
+
+/// Machine-local reduce map for one virtual node, striped over `S`
+/// mutexes so concurrent flushes from different workers rarely contend.
+pub struct ShardedMap<K, V> {
+    stripes: Vec<Mutex<FxHashMap<K, Vec<(u64, V)>>>>,
+    mask: usize,
+}
+
+impl<K: Hash + Eq, V> ShardedMap<K, V> {
+    /// Map with `stripes` lock stripes (rounded up to a power of two).
+    pub fn new(stripes: usize) -> Self {
+        let n = stripes.next_power_of_two().max(1);
+        Self {
+            stripes: (0..n).map(|_| Mutex::new(FxHashMap::default())).collect(),
+            mask: n - 1,
+        }
+    }
+
+    /// Absorb one flush batch: sort the pairs by stripe so each touched
+    /// stripe locks exactly once, then append. No reduction happens here,
+    /// so the outcome is independent of flush interleaving. (The unstable
+    /// sort cannot reorder anything observable: a key appears at most
+    /// once per batch and every pair carries the same `order` tag.)
+    pub fn absorb(&self, order: u64, mut pairs: Vec<(K, V)>) {
+        // Fast path for the flush-storm shape (tiny caches drain one pair
+        // per emit): one hash, one lock, no scratch allocation.
+        if pairs.len() <= 1 {
+            let Some((k, v)) = pairs.pop() else { return };
+            let s = (fxhash(&k) as usize) & self.mask;
+            let mut stripe = self.stripes[s].lock().expect("shard stripe poisoned");
+            stripe.entry(k).or_default().push((order, v));
+            return;
+        }
+        let mut tagged: Vec<(usize, K, V)> = pairs
+            .into_iter()
+            .map(|(k, v)| ((fxhash(&k) as usize) & self.mask, k, v))
+            .collect();
+        tagged.sort_unstable_by_key(|t| t.0);
+        let mut it = tagged.into_iter().peekable();
+        while let Some((s, k, v)) = it.next() {
+            let mut stripe = self.stripes[s].lock().expect("shard stripe poisoned");
+            stripe.entry(k).or_default().push((order, v));
+            while it.peek().is_some_and(|t| t.0 == s) {
+                let (_, k, v) = it.next().expect("peeked same-stripe pair");
+                stripe.entry(k).or_default().push((order, v));
+            }
+        }
+    }
+
+    /// Total distinct keys across stripes (diagnostics/tests).
+    pub fn len(&self) -> usize {
+        self.stripes
+            .iter()
+            .map(|s| s.lock().expect("shard stripe poisoned").len())
+            .sum()
+    }
+
+    /// True when no key holds any partial.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Drain into the node-local reduced map: per key, sort partials by
+    /// canonical order and fold front-to-back (first partial is the
+    /// initial value, like the simulated engine's vacant insert).
+    /// Single-threaded and deterministic regardless of how flushes
+    /// interleaved.
+    pub fn into_canonical(self, red: &Reducer<V>) -> FxHashMap<K, V> {
+        let mut out = FxHashMap::default();
+        for stripe in self.stripes {
+            let stripe = stripe.into_inner().expect("shard stripe poisoned");
+            for (k, mut partials) in stripe {
+                partials.sort_unstable_by_key(|&(order, _)| order);
+                let mut it = partials.into_iter();
+                let (_, mut acc) = it.next().expect("partial lists are never empty");
+                for (_, v) in it {
+                    red.apply(&mut acc, &v);
+                }
+                out.insert(k, acc);
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn order_key_sorts_flushes_before_finals() {
+        let mut keys = vec![
+            partial_order(true, 0, 0),
+            partial_order(false, 1, 0),
+            partial_order(false, 0, 2),
+            partial_order(true, 1, 0),
+            partial_order(false, 0, 0),
+        ];
+        keys.sort_unstable();
+        assert_eq!(
+            keys,
+            vec![
+                partial_order(false, 0, 0),
+                partial_order(false, 0, 2),
+                partial_order(false, 1, 0),
+                partial_order(true, 0, 0),
+                partial_order(true, 1, 0),
+            ]
+        );
+    }
+
+    #[test]
+    fn canonical_fold_is_insertion_order_independent() {
+        // Non-associative floats: the fold order must come from the order
+        // keys, not from absorb order.
+        let batches: Vec<(u64, Vec<(u64, f64)>)> = vec![
+            (partial_order(false, 0, 0), vec![(7, 0.1), (8, 1.0)]),
+            (partial_order(false, 1, 0), vec![(7, 0.2)]),
+            (partial_order(true, 0, 0), vec![(7, 0.3), (8, 2.0)]),
+            (partial_order(true, 1, 0), vec![(7, 1e-17)]),
+        ];
+        let red = Reducer::sum();
+        let oracle = ((0.1f64 + 0.2) + 0.3) + 1e-17;
+
+        // Absorb in canonical order and in reverse: identical bits.
+        for reversed in [false, true] {
+            let map: ShardedMap<u64, f64> = ShardedMap::new(8);
+            let mut order: Vec<usize> = (0..batches.len()).collect();
+            if reversed {
+                order.reverse();
+            }
+            for i in order {
+                map.absorb(batches[i].0, batches[i].1.clone());
+            }
+            let merged = map.into_canonical(&red);
+            assert_eq!(merged[&7].to_bits(), oracle.to_bits());
+            assert_eq!(merged[&8].to_bits(), 3.0f64.to_bits());
+        }
+    }
+
+    #[test]
+    fn concurrent_flushes_fold_canonically() {
+        // 4 threads racing per-worker flush streams at one hot key; the
+        // canonical fold must equal the serial worker-order oracle.
+        let map: ShardedMap<u64, f64> = ShardedMap::new(4);
+        let red = Reducer::sum();
+        std::thread::scope(|s| {
+            for w in 0..4usize {
+                let map = &map;
+                s.spawn(move || {
+                    for seq in 0..50u32 {
+                        let v = (w as f64 + 1.0) / f64::from(seq + 1);
+                        map.absorb(partial_order(false, w, seq), vec![(42, v)]);
+                    }
+                    map.absorb(partial_order(true, w, 0), vec![(42, 0.125 * w as f64)]);
+                });
+            }
+        });
+        let mut oracle = f64::NAN;
+        let mut first = true;
+        for w in 0..4usize {
+            for seq in 0..50u32 {
+                let v = (w as f64 + 1.0) / f64::from(seq + 1);
+                if first {
+                    oracle = v;
+                    first = false;
+                } else {
+                    oracle += v;
+                }
+            }
+        }
+        for w in 0..4usize {
+            oracle += 0.125 * w as f64;
+        }
+        let merged = map.into_canonical(&red);
+        assert_eq!(merged.len(), 1);
+        assert_eq!(merged[&42].to_bits(), oracle.to_bits());
+    }
+
+    #[test]
+    fn empty_batches_and_len() {
+        let map: ShardedMap<u64, u64> = ShardedMap::new(2);
+        assert!(map.is_empty());
+        map.absorb(partial_order(false, 0, 0), Vec::new());
+        assert!(map.is_empty());
+        map.absorb(partial_order(true, 0, 0), vec![(1, 1), (2, 2)]);
+        assert_eq!(map.len(), 2);
+    }
+}

@@ -71,7 +71,7 @@ use crate::ser::tagged::{decode_pairs_tagged, encode_pairs_tagged, TaggedSer};
 use crate::util::hash::FxHashMap;
 
 use super::checkpoint::{Checkpoint, Ledger, Recover};
-use super::plan::FailureTrigger;
+use super::plan::{FailureTrigger, ATTIME_SEC_PER_ITEM};
 
 /// Recovery bookkeeping for one job, surfaced as the `fault[<label>]`
 /// metrics note (no public accessor yet — promote to a returned value if
@@ -162,6 +162,15 @@ where
         .collect();
     let mut exec_epoch = vec![0u32; n_blocks];
     let mut fired = vec![false; fault.plan.events().len()];
+    // Once-per-sequence plans: seed fired flags from the cluster's
+    // persisted state so a kill already injected by an earlier job in the
+    // sequence (e.g. a previous k-means iteration) does not re-fire.
+    if fault.plan.is_once_per_sequence() {
+        let prev = cluster.fault_fired();
+        for (i, f) in fired.iter_mut().enumerate() {
+            *f = prev.get(i).copied().unwrap_or(false);
+        }
+    }
     let mut rr = 0usize;
 
     // Evacuation policy state: victims queued until their rollback replays
@@ -179,6 +188,11 @@ where
 
     let mut per_node_secs = vec![0.0f64; nodes];
     let mut per_node_reduce_secs = vec![0.0f64; nodes];
+    // Deterministic block-progress clock for AtTime triggers (plan.rs):
+    // items executed per node × a fixed virtual per-item cost. Replays
+    // advance it too (they are deterministic work), measured host time
+    // never does.
+    let mut det_secs = vec![0.0f64; nodes];
     let mut pairs_emitted = 0u64;
     let mut pairs_shuffled = 0u64;
     let mut ser_bytes = 0u64;
@@ -203,6 +217,7 @@ where
         crate::util::random::set_stream(cfg.seed, b as u64);
         let mut parts: Vec<Vec<(K2, V2)>> = (0..nodes).map(|_| Vec::new()).collect();
         let mut emitted_here = 0u64;
+        let mut items_here = 0u64;
         let in_order = matches!(&cursors[home], Some((_, next)) if *next == w);
         if !in_order {
             // Out-of-order (a recovery replay, or the first block after
@@ -217,6 +232,7 @@ where
         if conventional {
             let t_ref: &T = &*target;
             cur.next_block(|k, v| {
+                items_here += 1;
                 let mut emit = |k2: K2, v2: V2| {
                     emitted_here += 1;
                     parts[t_ref.shard_of(&k2, nodes)].push((k2, v2));
@@ -226,6 +242,7 @@ where
         } else {
             let mut cache: FxHashMap<K2, V2> = FxHashMap::default();
             cur.next_block(|k, v| {
+                items_here += 1;
                 let mut emit = |k2: K2, v2: V2| {
                     emitted_here += 1;
                     match cache.entry(k2) {
@@ -247,6 +264,7 @@ where
             exec_secs += emitted_here as f64 * cfg.conventional_overhead_sec;
         }
         per_node_secs[p.exec_node] += exec_secs;
+        det_secs[p.exec_node] += items_here as f64 * ATTIME_SEC_PER_ITEM;
         pairs_emitted += emitted_here;
 
         // ---- Commit: eager-reduce each shard's partial once -------------
@@ -312,7 +330,11 @@ where
         }
 
         // ---- Failure triggers (block boundaries only) -------------------
-        let elapsed = per_node_secs
+        // AtTime compares against the deterministic block-progress clock
+        // (worker-scaled like a compute phase, max over nodes) so the
+        // trigger quantizes to the same commit boundary in every run —
+        // no host-load dependence (see plan.rs).
+        let elapsed = det_secs
             .iter()
             .map(|&s| VirtualTime::scaled_compute(s, workers))
             .fold(0.0f64, f64::max);
@@ -454,6 +476,13 @@ where
         }
     }
 
+    // Persist fired flags for once-per-sequence plans: the next job on
+    // this cluster skips events that already fired here. Events that
+    // never came due stay unfired and may still fire in a later job.
+    if fault.plan.is_once_per_sequence() {
+        cluster.set_fault_fired(&fired);
+    }
+
     // ---- Virtual-time phases --------------------------------------------
     vt.compute_phase("map+block-reduce", &per_node_secs, workers);
     let reduce_cpu = per_node_reduce_secs
@@ -479,12 +508,7 @@ where
     }
 
     // ---- Record -----------------------------------------------------------
-    let compute_sec: f64 = vt
-        .phases()
-        .iter()
-        .filter(|p| matches!(p.kind, crate::net::vtime::PhaseKind::Compute))
-        .map(|p| p.seconds)
-        .sum();
+    let compute_sec = vt.compute_sec();
     let makespan = vt.makespan();
     let evac_bytes = evac_flows.cross_node_bytes();
     let shuffle_bytes = shuffle_flows.cross_node_bytes()
@@ -495,6 +519,7 @@ where
     cluster.metrics().record_run(RunStats {
         label: rec.label,
         engine: format!("{}+ft", cfg.engine),
+        backend: "simulated".into(),
         nodes,
         workers_per_node: workers,
         makespan_sec: makespan,
@@ -507,6 +532,10 @@ where
         pairs_shuffled,
         peak_intermediate_bytes: peak_staged_bytes + peak_ckpt_bytes,
         host_wall_sec: rec.started.elapsed().as_secs_f64(),
+        // One whole-job entry: the recoverable engine interleaves map,
+        // commit, checkpoint, and recovery work per block, so there is no
+        // meaningful per-phase wall split to report.
+        phase_wall_ns: vec![("total".into(), rec.started.elapsed().as_nanos() as u64)],
     });
     cluster.metrics().record_note(format!(
         "fault[{label}]: checkpoints={} ckpt_bytes={} failures={} ignored={} \

@@ -9,19 +9,41 @@
 //! [`SplitRng`] stream ([`FailurePlan::random`]) so failure benchmarks are
 //! reproducible from a single seed.
 //!
-//! Reproducibility caveat: `AtBlock` triggers (including every event in a
-//! [`FailurePlan::random`] plan) fire at the same boundary in every run.
-//! `AtTime` compares against *measured* per-node compute scaled into
-//! virtual time, so the boundary it lands on can shift with host load
-//! between runs — final results stay byte-identical either way (any
-//! boundary recovers exactly), but recovery-overhead measurements should
-//! use `AtBlock`.
+//! **`AtTime` semantics (deterministic block quantization).** An
+//! `AtTime(secs)` trigger is evaluated only at block commit boundaries,
+//! against the job's *deterministic block-progress clock* — not measured
+//! host time. Every executed block advances its executing node's clock by
+//! `items_in_block × `[`ATTIME_SEC_PER_ITEM`], the per-node clocks are
+//! scaled by the worker count exactly like a compute phase, and the
+//! trigger fires at the first boundary where the max over nodes reaches
+//! `secs`. Block item counts are a pure function of the input partition,
+//! so the same `AtTime` lands on the same commit boundary in every run
+//! and on every engine — no host-load dependence (this replaced the
+//! measured-time comparison, whose boundary shifted with load; results
+//! were byte-identical either way, but recovery-overhead numbers were
+//! not reproducible). `AtTime(0.0)` fires at the first commit boundary.
+//! The clock is engine-independent by design: it deliberately ignores
+//! modeled conventional-engine overheads so `AtTime` selects the same
+//! boundary under every engine × backend combination the equivalence
+//! harness compares.
+//!
+//! `AtBlock` triggers (including every event in a [`FailurePlan::random`]
+//! plan) fire after a chosen number of *fresh* commits and are the
+//! natural choice when the boundary itself is the quantity under study.
 //!
 //! Node 0 hosts the driver and is never killed; events naming it (or a
 //! node outside the cluster) are ignored with a metrics note rather than
 //! panicking, so one plan can be reused across cluster shapes.
 
 use crate::util::rng::SplitRng;
+
+/// Virtual seconds one input item contributes to the deterministic
+/// block-progress clock that `AtTime` triggers compare against (see the
+/// module docs). The value matches the conventional engine's modeled
+/// per-record overhead order of magnitude so `AtTime` thresholds read
+/// like plausible virtual timestamps, but any positive constant yields
+/// the same *determinism* — only the boundary↔seconds mapping shifts.
+pub const ATTIME_SEC_PER_ITEM: f64 = 250e-9;
 
 /// When a planned failure fires.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -31,8 +53,11 @@ pub enum FailureTrigger {
     /// re-commit already-counted blocks and do not advance the boundary,
     /// so `n` keeps its meaning in multi-failure runs.
     AtBlock(usize),
-    /// Fire at the first block boundary where the job's virtual elapsed
-    /// time reaches `secs`.
+    /// Fire at the first block commit boundary where the job's
+    /// deterministic block-progress clock (items executed ×
+    /// [`ATTIME_SEC_PER_ITEM`], worker-scaled, max over nodes) reaches
+    /// `secs`. Quantized to commit boundaries and independent of host
+    /// load — the same boundary in every run.
     AtTime(f64),
 }
 
@@ -49,6 +74,16 @@ pub struct FailureEvent {
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct FailurePlan {
     events: Vec<FailureEvent>,
+    /// When set, each event fires at most once per *job sequence* on a
+    /// shared cluster instead of once per MapReduce job: the recoverable
+    /// engine seeds its fired flags from the cluster's persisted state
+    /// ([`crate::coordinator::cluster::Cluster::fault_fired`], keyed by
+    /// event position) and writes them back at job end. Iterative jobs
+    /// (k-means, PageRank) use this to model "the node died once", not
+    /// "a node dies every iteration". Reusing one cluster with a
+    /// *different* plan resets nothing — keep one plan per cluster when
+    /// sequencing.
+    once_per_sequence: bool,
 }
 
 impl FailurePlan {
@@ -94,6 +129,19 @@ impl FailurePlan {
             plan = plan.and_kill_at_block(node, block);
         }
         plan
+    }
+
+    /// Fire each event at most once across all jobs run on the same
+    /// cluster (builder style) — see the field docs for semantics.
+    pub fn once_per_sequence(mut self) -> Self {
+        self.once_per_sequence = true;
+        self
+    }
+
+    /// True when events fire once per job *sequence* rather than once per
+    /// job.
+    pub fn is_once_per_sequence(&self) -> bool {
+        self.once_per_sequence
     }
 
     /// Planned events, in declaration order.
@@ -201,6 +249,16 @@ mod tests {
     fn random_degenerate_shapes_are_empty() {
         assert!(FailurePlan::random(1, 1, 3, 10).is_empty());
         assert!(FailurePlan::random(1, 4, 3, 0).is_empty());
+    }
+
+    #[test]
+    fn once_per_sequence_is_a_plan_property() {
+        let plan = FailurePlan::kill_at_block(1, 3);
+        assert!(!plan.is_once_per_sequence(), "per-job firing is the default");
+        let seq = plan.clone().once_per_sequence();
+        assert!(seq.is_once_per_sequence());
+        assert_eq!(seq.events(), plan.events(), "events unchanged");
+        assert_ne!(seq, plan, "firing policy is part of plan identity");
     }
 
     #[test]

@@ -23,6 +23,14 @@
 //!   feed every engine through the single-pass block-cursor API
 //!   ([`mapreduce::DistInput::block_cursor`]): one cursor per node walks
 //!   the partition exactly once per job, yielding one block per worker.
+//! * [`exec`] — the real threaded execution backend
+//!   (`ClusterConfig::backend = Backend::Threaded(n)`, CLI
+//!   `--backend threaded:N`): a node's map+combine runs on actual OS
+//!   threads (work-stealing block queue, bounded per-thread eager caches,
+//!   lock-striped shard map with canonical merge order) while the shuffle
+//!   stays on the flow model. Byte-identical to the simulated engines at
+//!   any thread count; real per-phase wall clock recorded alongside
+//!   virtual time (DESIGN.md §Execution backends).
 //! * [`coordinator`] — cluster topology/config, block scheduler, shuffle
 //!   orchestration with backpressure, shard rebalancing, metrics.
 //! * [`fault`] — fault tolerance: deterministic failure injection
@@ -101,6 +109,7 @@ pub mod cli;
 pub mod containers;
 pub mod coordinator;
 pub mod data;
+pub mod exec;
 pub mod fault;
 pub mod mapreduce;
 pub mod net;
@@ -118,7 +127,7 @@ pub mod prelude {
         collect_hashmap, collect_vector, distribute, load_file, DistHashMap, DistRange,
         DistVector,
     };
-    pub use crate::coordinator::cluster::{Cluster, ClusterConfig};
+    pub use crate::coordinator::cluster::{Backend, Cluster, ClusterConfig};
     pub use crate::fault::{FailurePlan, FaultConfig};
     pub use crate::mapreduce::{mapreduce, mapreduce_range, Reducer};
     pub use crate::net::model::NetworkModel;

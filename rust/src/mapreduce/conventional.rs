@@ -159,16 +159,14 @@ where
     vt.shuffle_barrier("shuffle-barrier+reduce", &sres.flows, &cfg.network, reduce_cpu);
 
     // ---- Record ----------------------------------------------------------
-    let compute_sec: f64 = vt
-        .phases()
-        .iter()
-        .filter(|p| matches!(p.kind, crate::net::vtime::PhaseKind::Compute))
-        .map(|p| p.seconds)
-        .sum();
+    let compute_sec = vt.compute_sec();
     let makespan = vt.makespan();
     cluster.metrics().record_run(RunStats {
         label: rec.label,
         engine: "conventional".into(),
+        // The conventional baseline models Spark; it always runs
+        // simulated regardless of the configured backend.
+        backend: "simulated".into(),
         nodes,
         workers_per_node: workers,
         makespan_sec: makespan,
@@ -183,6 +181,10 @@ where
         // pairs + all serialized blocks + destination grouped map.
         peak_intermediate_bytes: materialized_bytes + serialized_bytes + grouped_peak,
         host_wall_sec: rec.started.elapsed().as_secs_f64(),
+        // One whole-job entry: the baseline's phases are dominated by
+        // modeled (not executed) costs, so a per-phase wall split would
+        // suggest precision the numbers don't have.
+        phase_wall_ns: vec![("total".into(), rec.started.elapsed().as_nanos() as u64)],
         ..Default::default()
     });
 }

@@ -13,6 +13,7 @@ use std::hash::Hash;
 use std::time::Instant;
 
 use crate::coordinator::backpressure::DEFAULT_WINDOW_BYTES;
+use crate::coordinator::cluster::Cluster;
 use crate::coordinator::metrics::RunStats;
 use crate::coordinator::shuffle::{self, ShufflePayloads};
 use crate::net::vtime::VirtualTime;
@@ -42,10 +43,9 @@ where
     let cfg = cluster.config().clone();
     let (nodes, workers) = (cfg.nodes, cfg.workers_per_node);
     let cache_cap = cfg.thread_cache_entries.max(1);
-    // Shuffle scratch buffers honour the allocator toggle ("Blaze TCM").
-    let scratch = Scratch::new(cfg.alloc, cluster.pool());
 
     let mut vt = VirtualTime::new();
+    let t_map = Instant::now();
     let mut per_node_map_secs = vec![0.0f64; nodes];
     let mut node_maps: Vec<FxHashMap<K2, V2>> = Vec::with_capacity(nodes);
     let mut pairs_emitted = 0u64;
@@ -71,6 +71,16 @@ where
 
         // Single pass over the node's partition: one cursor, one block per
         // worker, in block order.
+        //
+        // LOCKSTEP CONTRACT: the cache/flush policy in the emit closure
+        // below (entry-apply vs vacant-insert, byte formula, whole-cache
+        // drain once `len >= cache_cap` checked after *every* emit) is
+        // replicated by `crate::exec::cache::EagerCache` for the threaded
+        // backend; threaded-vs-simulated byte-identity (equivalence/exec
+        // test suites) depends on the two staying identical. Change them
+        // together — or better, port this loop onto `EagerCache` (the
+        // accounting of `node_peak` across concurrently-live worker
+        // caches is what has kept that port from being mechanical).
         let mut cur = input.block_cursor(node, workers);
         for (w, cache) in caches.iter_mut().enumerate() {
             // Publish the worker's random stream (paper's `blaze::random`
@@ -138,6 +148,75 @@ where
         node_maps.push(local);
     }
     vt.compute_phase("map+local-reduce", &per_node_map_secs, workers);
+    let map_wall_ns = t_map.elapsed().as_nanos() as u64;
+
+    // ---- Partition, serialize, shuffle, absorb (shared pipeline) --------
+    let out = shuffle_and_absorb(&cluster, node_maps, red, target, &mut vt);
+
+    // ---- Record ----------------------------------------------------------
+    let compute_sec = vt.compute_sec();
+    let makespan = vt.makespan();
+    cluster.metrics().record_run(RunStats {
+        label: rec.label,
+        engine: "blaze".into(),
+        backend: "simulated".into(),
+        nodes,
+        workers_per_node: workers,
+        makespan_sec: makespan,
+        compute_sec,
+        shuffle_sec: makespan - compute_sec,
+        shuffle_bytes: out.shuffle_bytes,
+        // Eager semantics: only cross-node partials ever serialize.
+        ser_bytes: out.shuffle_bytes,
+        pairs_emitted,
+        pairs_shuffled: out.pairs_shuffled,
+        peak_intermediate_bytes: map_peak_bytes + out.peak_bytes,
+        host_wall_sec: rec.started.elapsed().as_secs_f64(),
+        phase_wall_ns: vec![
+            ("map+local-reduce".into(), map_wall_ns),
+            ("shuffle+absorb".into(), out.wall_ns),
+        ],
+        ..Default::default()
+    });
+}
+
+/// Outcome of [`shuffle_and_absorb`] — the stats the caller folds into its
+/// [`RunStats`].
+pub(crate) struct ShuffleOutcome {
+    /// Pairs leaving the node-local maps (after eager combine).
+    pub pairs_shuffled: u64,
+    /// Cross-node bytes actually serialized and moved.
+    pub shuffle_bytes: u64,
+    /// Peak in-flight shuffle bytes + largest absorb buffer.
+    pub peak_bytes: u64,
+    /// Host wall nanoseconds of the whole pipeline.
+    pub wall_ns: u64,
+}
+
+/// Everything after the per-node machine-local maps exist: partition by
+/// the target's sharding, serialize cross-node partials with the fast
+/// codec, stream them through the simulated network, and absorb with the
+/// reduce overlapped. Shared verbatim by the simulated eager engine and
+/// the threaded backend ([`crate::exec`]), which is what keeps the two
+/// backends' downstream behavior — and therefore their results —
+/// identical by construction.
+pub(crate) fn shuffle_and_absorb<K2, V2, T>(
+    cluster: &Cluster,
+    node_maps: Vec<FxHashMap<K2, V2>>,
+    red: &Reducer<V2>,
+    target: &mut T,
+    vt: &mut VirtualTime,
+) -> ShuffleOutcome
+where
+    K2: Hash + Eq + Clone + FastSer,
+    V2: Clone + FastSer,
+    T: ReduceTarget<K2, V2>,
+{
+    let t_start = Instant::now();
+    let cfg = cluster.config();
+    let (nodes, workers) = (cfg.nodes, cfg.workers_per_node);
+    // Shuffle scratch buffers honour the allocator toggle ("Blaze TCM").
+    let scratch = Scratch::new(cfg.alloc, cluster.pool());
 
     // ---- Partition, serialize (fast codec), local absorb ---------------
     let mut payloads: ShufflePayloads =
@@ -202,31 +281,10 @@ where
     let shuffle_bytes = sres.flows.cross_node_bytes();
     vt.shuffle_overlapped("shuffle+async-reduce", &sres.flows, &cfg.network, cpu_overlap);
 
-    // ---- Record ----------------------------------------------------------
-    let compute_sec: f64 = vt
-        .phases()
-        .iter()
-        .filter(|p| matches!(p.kind, crate::net::vtime::PhaseKind::Compute))
-        .map(|p| p.seconds)
-        .sum();
-    let makespan = vt.makespan();
-    cluster.metrics().record_run(RunStats {
-        label: rec.label,
-        engine: "blaze".into(),
-        nodes,
-        workers_per_node: workers,
-        makespan_sec: makespan,
-        compute_sec,
-        shuffle_sec: makespan - compute_sec,
-        shuffle_bytes,
-        // Eager semantics: only cross-node partials ever serialize.
-        ser_bytes: shuffle_bytes,
-        pairs_emitted,
+    ShuffleOutcome {
         pairs_shuffled,
-        peak_intermediate_bytes: map_peak_bytes
-            + sres.peak_in_flight_bytes
-            + absorb_buffer_peak,
-        host_wall_sec: rec.started.elapsed().as_secs_f64(),
-        ..Default::default()
-    });
+        shuffle_bytes,
+        peak_bytes: sres.peak_in_flight_bytes + absorb_buffer_peak,
+        wall_ns: t_start.elapsed().as_nanos() as u64,
+    }
 }

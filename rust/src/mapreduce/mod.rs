@@ -22,6 +22,12 @@
 //! * [`conventional`] — the Spark-analog baseline: materialize every pair,
 //!   tagged serialization, barrier shuffle, group-then-reduce. Selected via
 //!   [`EngineKind::Conventional`] so every workload can run both ways.
+//!
+//! Orthogonally, `ClusterConfig::backend` picks the execution *backend*
+//! for the eager and small-key paths: `Simulated` (serial walk, virtual
+//! parallelism accounted) or `Threaded(n)` ([`crate::exec`] — real OS
+//! threads for the map+combine, byte-identical results, wall clock
+//! recorded alongside virtual time).
 
 pub mod conventional;
 pub mod eager;
@@ -31,7 +37,7 @@ pub mod smallkey;
 pub use reducers::{Numeric, Reducer};
 
 use crate::containers::DistRange;
-use crate::coordinator::cluster::{Cluster, EngineKind};
+use crate::coordinator::cluster::{Backend, Cluster, EngineKind};
 use crate::ser::fastser::FastSer;
 use crate::ser::tagged::TaggedSer;
 use std::hash::Hash;
@@ -210,12 +216,20 @@ impl<V: Numeric> IntoReducer<V> for &str {
 /// Targets additionally implement [`crate::fault::Recover`] so any job can
 /// run through the recoverable engine when the cluster's
 /// [`crate::fault::FaultConfig`] is enabled.
+///
+/// The `Send`/`Sync` bounds exist for the threaded backend
+/// ([`crate::exec`], selected by `ClusterConfig::backend`): input items
+/// are cloned into owned blocks handed to worker threads, and the mapper
+/// is shared across the pool. Pure mappers over plain data — every
+/// paper workload — satisfy them automatically.
 pub fn mapreduce<I, F, K2, V2, R, T>(input: &I, mapper: F, reducer: R, target: &mut T)
 where
     I: DistInput,
-    F: Fn(&I::K, &I::V, Emit<'_, K2, V2>),
-    K2: Hash + Eq + Clone + FastSer + TaggedSer + DenseKey,
-    V2: Clone + FastSer + TaggedSer,
+    I::K: Clone + Send,
+    I::V: Clone + Send,
+    F: Fn(&I::K, &I::V, Emit<'_, K2, V2>) + Sync,
+    K2: Hash + Eq + Clone + FastSer + TaggedSer + DenseKey + Send,
+    V2: Clone + FastSer + TaggedSer + Send,
     R: IntoReducer<V2>,
     T: ReduceTarget<K2, V2> + crate::fault::Recover,
 {
@@ -231,9 +245,11 @@ pub fn mapreduce_labeled<I, F, K2, V2, R, T>(
     target: &mut T,
 ) where
     I: DistInput,
-    F: Fn(&I::K, &I::V, Emit<'_, K2, V2>),
-    K2: Hash + Eq + Clone + FastSer + TaggedSer + DenseKey,
-    V2: Clone + FastSer + TaggedSer,
+    I::K: Clone + Send,
+    I::V: Clone + Send,
+    F: Fn(&I::K, &I::V, Emit<'_, K2, V2>) + Sync,
+    K2: Hash + Eq + Clone + FastSer + TaggedSer + DenseKey + Send,
+    V2: Clone + FastSer + TaggedSer + Send,
     R: IntoReducer<V2>,
     T: ReduceTarget<K2, V2> + crate::fault::Recover,
 {
@@ -241,18 +257,25 @@ pub fn mapreduce_labeled<I, F, K2, V2, R, T>(
     let cfg = input.cluster().config();
     if cfg.fault.enabled() {
         // Fault tolerance on: block-granular recoverable execution
-        // (respects the engine kind for codec and cost modeling).
+        // (respects the engine kind for codec and cost modeling). Runs
+        // simulated regardless of backend — threaded recovery is future
+        // work; results stay byte-identical either way.
         crate::fault::engine::run(label, input, &mapper, &red, target);
         return;
     }
     match cfg.engine {
-        EngineKind::Eager => {
-            if target.dense_len().is_some() {
-                smallkey::run(label, input, &mapper, &red, target);
-            } else {
-                eager::run(label, input, &mapper, &red, target);
+        EngineKind::Eager => match (cfg.backend, target.dense_len()) {
+            (Backend::Threaded(threads), Some(_)) => {
+                crate::exec::engine::run_smallkey(label, input, &mapper, &red, target, threads);
             }
-        }
+            (Backend::Threaded(threads), None) => {
+                crate::exec::engine::run_eager(label, input, &mapper, &red, target, threads);
+            }
+            (Backend::Simulated, Some(_)) => smallkey::run(label, input, &mapper, &red, target),
+            (Backend::Simulated, None) => eager::run(label, input, &mapper, &red, target),
+        },
+        // The conventional engine models the Spark baseline; it is never
+        // threaded (the backend accelerates Blaze's own paths).
         EngineKind::Conventional => conventional::run(label, input, &mapper, &red, target),
     }
 }
@@ -261,9 +284,9 @@ pub fn mapreduce_labeled<I, F, K2, V2, R, T>(
 /// (paper §2.2 — two-parameter mapper for ranges).
 pub fn mapreduce_range<F, K2, V2, R, T>(input: &DistRange, mapper: F, reducer: R, target: &mut T)
 where
-    F: Fn(u64, Emit<'_, K2, V2>),
-    K2: Hash + Eq + Clone + FastSer + TaggedSer + DenseKey,
-    V2: Clone + FastSer + TaggedSer,
+    F: Fn(u64, Emit<'_, K2, V2>) + Sync,
+    K2: Hash + Eq + Clone + FastSer + TaggedSer + DenseKey + Send,
+    V2: Clone + FastSer + TaggedSer + Send,
     R: IntoReducer<V2>,
     T: ReduceTarget<K2, V2> + crate::fault::Recover,
 {
@@ -278,9 +301,9 @@ pub fn mapreduce_range_labeled<F, K2, V2, R, T>(
     reducer: R,
     target: &mut T,
 ) where
-    F: Fn(u64, Emit<'_, K2, V2>),
-    K2: Hash + Eq + Clone + FastSer + TaggedSer + DenseKey,
-    V2: Clone + FastSer + TaggedSer,
+    F: Fn(u64, Emit<'_, K2, V2>) + Sync,
+    K2: Hash + Eq + Clone + FastSer + TaggedSer + DenseKey + Send,
+    V2: Clone + FastSer + TaggedSer + Send,
     R: IntoReducer<V2>,
     T: ReduceTarget<K2, V2> + crate::fault::Recover,
 {

@@ -67,7 +67,9 @@ impl<T: Numeric + Default> Numeric for Vec<T> {
 
 enum ReduceFn<V> {
     Plain(fn(&mut V, &V)),
-    Boxed(Box<dyn Fn(&mut V, &V)>),
+    // `Send + Sync` so a `&Reducer` can be shared across the threaded
+    // backend's worker pool; built-ins are fn pointers and unaffected.
+    Boxed(Box<dyn Fn(&mut V, &V) + Send + Sync>),
 }
 
 /// A reduce function handle. Built-ins are function pointers (no allocation,
@@ -115,8 +117,11 @@ impl<V: Numeric> Reducer<V> {
 }
 
 impl<V> Reducer<V> {
-    /// Custom reduce function `f(&mut existing, &new)`.
-    pub fn custom(f: impl Fn(&mut V, &V) + 'static) -> Self {
+    /// Custom reduce function `f(&mut existing, &new)`. `Send + Sync`
+    /// because reducers run concurrently on the threaded backend's worker
+    /// pool; pure reduce closures (the paper's contract) satisfy this
+    /// automatically.
+    pub fn custom(f: impl Fn(&mut V, &V) + Send + Sync + 'static) -> Self {
         Self { f: ReduceFn::Boxed(Box::new(f)), name: "custom" }
     }
 

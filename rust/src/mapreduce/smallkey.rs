@@ -12,6 +12,7 @@
 use std::hash::Hash;
 use std::time::Instant;
 
+use crate::coordinator::cluster::Cluster;
 use crate::coordinator::metrics::RunStats;
 use crate::net::sim::FlowMatrix;
 use crate::net::vtime::VirtualTime;
@@ -41,6 +42,7 @@ where
     let range = target.dense_len().expect("smallkey path requires a dense target");
 
     let mut vt = VirtualTime::new();
+    let t_map = Instant::now();
     let mut per_node_secs = vec![0.0f64; nodes];
     let mut node_partials: Vec<Vec<Option<V2>>> = Vec::with_capacity(nodes);
     let mut pairs_emitted = 0u64;
@@ -61,14 +63,7 @@ where
             let advanced = cur.next_block(|k, v| {
                 let mut emit = |k2: K2, v2: V2| {
                     emitted += 1;
-                    let idx = k2
-                        .dense_index()
-                        .unwrap_or_else(|| panic!("key has no dense index for Vec target"));
-                    assert!(idx < range, "key {idx} outside fixed key range {range}");
-                    match &mut cache[idx] {
-                        Some(acc) => red.apply(acc, &v2),
-                        slot @ None => *slot = Some(v2),
-                    }
+                    dense_reduce(cache, range, &k2, v2, red);
                 };
                 mapper(k, v, &mut emit);
             });
@@ -88,10 +83,69 @@ where
         node_partials.push(acc);
     }
     vt.compute_phase("map+dense-local-reduce", &per_node_secs, workers);
+    let map_wall_ns = t_map.elapsed().as_nanos() as u64;
 
-    // ---- Cross-machine binomial tree reduce -----------------------------
-    // Round r: node i with i % 2^(r+1) == 2^r sends its partial to
-    // i - 2^r. After ceil(log2 nodes) rounds node 0 holds the total.
+    // ---- Tree reduce + driver absorb (shared pipeline) ------------------
+    let out = tree_reduce_into_target(&cluster, node_partials, red, target, &mut vt);
+
+    // ---- Record ----------------------------------------------------------
+    let compute_sec = vt.compute_sec();
+    let makespan = vt.makespan();
+    let (pairs_shuffled, dense_cache_bytes) = dense_stats::<V2>(nodes, workers, range);
+    cluster.metrics().record_run(RunStats {
+        label: rec.label,
+        engine: "blaze".into(),
+        backend: "simulated".into(),
+        nodes,
+        workers_per_node: workers,
+        makespan_sec: makespan,
+        compute_sec,
+        shuffle_sec: makespan - compute_sec,
+        shuffle_bytes: out.shuffle_bytes,
+        // Tree-reduce candidate buffers are the only serialized payloads.
+        ser_bytes: out.shuffle_bytes,
+        pairs_emitted,
+        pairs_shuffled,
+        peak_intermediate_bytes: dense_cache_bytes + out.round_flow_peak,
+        host_wall_sec: rec.started.elapsed().as_secs_f64(),
+        phase_wall_ns: vec![
+            ("map+dense-local-reduce".into(), map_wall_ns),
+            ("tree-reduce".into(), out.wall_ns),
+        ],
+        ..Default::default()
+    });
+}
+
+/// Outcome of [`tree_reduce_into_target`].
+pub(crate) struct TreeReduceOutcome {
+    /// Serialized tree-reduce bytes moved across nodes.
+    pub shuffle_bytes: u64,
+    /// Largest single tree-reduce payload (memory accounting).
+    pub round_flow_peak: u64,
+    /// Host wall nanoseconds of the whole tree reduce.
+    pub wall_ns: u64,
+}
+
+/// The cross-machine binomial tree reduce over per-node dense partials,
+/// landing the total at the driver's target. Round r: node i with
+/// `i % 2^(r+1) == 2^r` sends its partial to `i - 2^r`; after
+/// `ceil(log2 nodes)` rounds node 0 holds the total. Shared verbatim by
+/// the simulated small-key engine and the threaded backend
+/// ([`crate::exec`]) so both land bit-identical results.
+pub(crate) fn tree_reduce_into_target<K2, V2, T>(
+    cluster: &Cluster,
+    node_partials: Vec<Vec<Option<V2>>>,
+    red: &Reducer<V2>,
+    target: &mut T,
+    vt: &mut VirtualTime,
+) -> TreeReduceOutcome
+where
+    V2: Clone + FastSer,
+    T: ReduceTarget<K2, V2>,
+{
+    let t_start = Instant::now();
+    let cfg = cluster.config();
+    let nodes = cfg.nodes;
     let mut shuffle_bytes = 0u64;
     let mut round_flow_peak = 0u64;
     let mut partials: Vec<Option<Vec<Option<V2>>>> =
@@ -131,41 +185,59 @@ where
         stride *= 2;
     }
 
-    // ---- Land at the driver ---------------------------------------------
+    // Land at the driver.
     let final_partial = partials[0].take().expect("driver partial");
     target.absorb_dense(final_partial, red);
 
-    // ---- Record ----------------------------------------------------------
-    let compute_sec: f64 = vt
-        .phases()
-        .iter()
-        .filter(|p| matches!(p.kind, crate::net::vtime::PhaseKind::Compute))
-        .map(|p| p.seconds)
-        .sum();
-    let makespan = vt.makespan();
-    // Dense caches: range slots per worker per node.
-    let slot_bytes = (std::mem::size_of::<Option<V2>>() as u64).max(1);
-    cluster.metrics().record_run(RunStats {
-        label: rec.label,
-        engine: "blaze".into(),
-        nodes,
-        workers_per_node: workers,
-        makespan_sec: makespan,
-        compute_sec,
-        shuffle_sec: makespan - compute_sec,
+    TreeReduceOutcome {
         shuffle_bytes,
-        // Tree-reduce candidate buffers are the only serialized payloads.
-        ser_bytes: shuffle_bytes,
-        pairs_emitted,
-        pairs_shuffled: (nodes.saturating_sub(1)) as u64 * range as u64,
-        peak_intermediate_bytes: (nodes * workers * range) as u64 * slot_bytes
-            + round_flow_peak,
-        host_wall_sec: rec.started.elapsed().as_secs_f64(),
-        ..Default::default()
-    });
+        round_flow_peak,
+        wall_ns: t_start.elapsed().as_nanos() as u64,
+    }
 }
 
-fn merge_dense<V: Clone>(acc: &mut [Option<V>], other: Vec<Option<V>>, red: &Reducer<V>) {
+/// Reduce one emitted pair into a dense per-worker cache — the dense
+/// path's emit body, shared by the simulated and threaded engines so the
+/// byte-identity contract between backends cannot drift.
+///
+/// # Panics
+/// If `k2` has no dense index, or it falls outside the target's fixed
+/// `range` (paper §2.2: the target defines the key range).
+#[inline]
+pub(crate) fn dense_reduce<K2: DenseKey, V2>(
+    cache: &mut [Option<V2>],
+    range: usize,
+    k2: &K2,
+    v2: V2,
+    red: &Reducer<V2>,
+) {
+    let idx = k2
+        .dense_index()
+        .unwrap_or_else(|| panic!("key has no dense index for Vec target"));
+    assert!(idx < range, "key {idx} outside fixed key range {range}");
+    match &mut cache[idx] {
+        Some(acc) => red.apply(acc, &v2),
+        slot @ None => *slot = Some(v2),
+    }
+}
+
+/// Derived dense-path stats shared by the simulated and threaded engines
+/// for an `nodes × workers` job over a `range`-slot dense target:
+/// `(pairs_shuffled, dense_cache_bytes)` — each non-driver node ships one
+/// `range`-slot partial up the tree, and every worker holds one
+/// `range`-slot cache during the map.
+pub(crate) fn dense_stats<V>(nodes: usize, workers: usize, range: usize) -> (u64, u64) {
+    let slot_bytes = (std::mem::size_of::<Option<V>>() as u64).max(1);
+    (
+        (nodes.saturating_sub(1)) as u64 * range as u64,
+        (nodes * workers * range) as u64 * slot_bytes,
+    )
+}
+
+/// Element-wise merge of one dense worker cache into the accumulator, in
+/// slot order (shared with the threaded backend's canonical worker-order
+/// merge).
+pub(crate) fn merge_dense<V: Clone>(acc: &mut [Option<V>], other: Vec<Option<V>>, red: &Reducer<V>) {
     for (slot, v) in acc.iter_mut().zip(other) {
         match (slot.as_mut(), v) {
             (Some(a), Some(b)) => red.apply(a, &b),

@@ -132,6 +132,17 @@ impl VirtualTime {
         self.phases.iter().map(|p| p.seconds).sum()
     }
 
+    /// Virtual seconds spent in compute phases (the engines' shared
+    /// `RunStats::compute_sec`; `makespan - compute_sec` is the shuffle
+    /// portion).
+    pub fn compute_sec(&self) -> f64 {
+        self.phases
+            .iter()
+            .filter(|p| matches!(p.kind, PhaseKind::Compute))
+            .map(|p| p.seconds)
+            .sum()
+    }
+
     /// Total cross-node shuffle bytes.
     pub fn total_shuffle_bytes(&self) -> u64 {
         self.phases.iter().map(|p| p.shuffle_bytes).sum()

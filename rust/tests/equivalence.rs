@@ -10,17 +10,26 @@
 //! partitions and a 1×1 degenerate cluster — and asserts **byte-identical**
 //! targets across:
 //!
-//! * eager × small-key-range (dense `Vec` target) × conventional, and
+//! * eager × small-key-range (dense `Vec` target) × conventional,
 //! * each engine under the recoverable fault layer: checkpoint-only,
 //!   injected failures with hot-standby recovery, and injected failures
-//!   with `--evacuate`-style slot re-homing.
+//!   with `--evacuate`-style slot re-homing, and
+//! * the threaded backend (`Backend::Threaded`) at 1, 2, and 4 worker
+//!   threads against the pinned-simulated reference — covering both the
+//!   threaded eager path (hash/vector targets) and the threaded small-key
+//!   path (dense `Vec` targets) — plus one checkpointed row under a
+//!   threaded config, which exercises the documented fallback (fault-
+//!   enabled jobs run the simulated recoverable engine, threaded config
+//!   or not).
 //!
 //! Values are integers (exact under any reduce order), so equality is
-//! required bit-for-bit, with no float tolerance. Every future engine
-//! change is gated by this file.
+//! required bit-for-bit, with no float tolerance. (Threaded-vs-simulated
+//! *float* bit-identity is additionally locked in by `rust/tests/exec.rs`
+//! for single-stage jobs, where input iteration order is pinned.) Every
+//! future engine change is gated by this file.
 
 use blaze::containers::{DistHashMap, DistRange, DistVector};
-use blaze::coordinator::cluster::{Cluster, ClusterConfig, EngineKind};
+use blaze::coordinator::cluster::{Backend, Cluster, ClusterConfig, EngineKind};
 use blaze::fault::{FailurePlan, FaultConfig};
 use blaze::mapreduce::{mapreduce, mapreduce_range, Reducer};
 use blaze::util::SplitRng;
@@ -36,7 +45,13 @@ const SHAPES: &[(usize, usize)] = &[(1, 1), (2, 3), (3, 2), (5, 4)];
 fn configs(seed: u64, nodes: usize, workers: usize) -> Vec<(String, ClusterConfig)> {
     let mut out = Vec::new();
     for engine in [EngineKind::Eager, EngineKind::Conventional] {
-        let base = ClusterConfig::sized(nodes, workers).with_engine(engine).with_seed(seed);
+        // Pin the simulated backend explicitly so the reference rows stay
+        // the simulated engines even when `BLAZE_BACKEND` flips the
+        // session default (the CI threaded leg).
+        let base = ClusterConfig::sized(nodes, workers)
+            .with_engine(engine)
+            .with_backend(Backend::Simulated)
+            .with_seed(seed);
         let plan = FailurePlan::random(seed ^ 0x5EED, nodes, 2, nodes * workers);
         out.push((format!("{engine}/plain"), base.clone()));
         out.push((
@@ -51,13 +66,35 @@ fn configs(seed: u64, nodes: usize, workers: usize) -> Vec<(String, ClusterConfi
         ));
         out.push((
             format!("{engine}/fail+evac"),
-            base.with_fault(
+            base.clone().with_fault(
                 FaultConfig::default()
                     .with_checkpoint_every(3)
                     .with_plan(plan)
                     .with_evacuation(true),
             ),
         ));
+        // Threaded backend axis (eager engine only — the conventional
+        // baseline is never threaded): 1/2/4 OS threads run the real
+        // threaded engines. The dense-target workload (π) exercises the
+        // threaded small-key path, the rest the threaded eager path.
+        if engine == EngineKind::Eager {
+            for threads in [1usize, 2, 4] {
+                let tb = base.clone().with_backend(Backend::Threaded(threads));
+                out.push((format!("threaded{threads}/plain"), tb));
+            }
+            // A checkpointed job under a threaded config does NOT run
+            // threaded code: FaultConfig::enabled() routes it to the
+            // simulated recoverable engine (the documented fallback).
+            // One row locks in that the fallback itself stays
+            // byte-identical under a threaded config; more thread counts
+            // would re-run identical simulated code.
+            out.push((
+                "threaded2/ckpt-fallback".to_string(),
+                base.clone()
+                    .with_backend(Backend::Threaded(2))
+                    .with_fault(FaultConfig::default().with_checkpoint_every(3)),
+            ));
+        }
     }
     out
 }

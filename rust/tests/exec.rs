@@ -1,0 +1,222 @@
+//! Threaded-backend stress tests.
+//!
+//! The equivalence harness (`equivalence.rs`) gates threaded runs on
+//! integer workloads across the full config grid; this file turns the
+//! screws on the parts that can only break under *real* concurrency:
+//!
+//! * hostile key skew (one hot key hammering one shard stripe) with a
+//!   tiny eager cache — a flush storm where a dropped or double-applied
+//!   flush shows up as a wrong exact count;
+//! * **float bit-identity**: for single-stage jobs (input iteration order
+//!   pinned by the container) threaded runs must be bit-identical to the
+//!   simulated engines even for non-associative f64 sums, at 1, 2, and 4
+//!   threads, repeated so different interleavings get a chance to
+//!   disagree;
+//! * worker-stream RNG alignment on the threaded small-key path;
+//! * thread counts above and below the block count, degenerate shapes.
+
+use blaze::containers::{DistHashMap, DistRange, DistVector};
+use blaze::coordinator::cluster::{Backend, Cluster, ClusterConfig};
+use blaze::mapreduce::{mapreduce, mapreduce_range};
+use blaze::util::SplitRng;
+
+const SHAPES: &[(usize, usize)] = &[(1, 1), (2, 3), (3, 2), (4, 4)];
+const THREADS: &[usize] = &[1, 2, 4];
+
+/// Skewed `(key, value)` stream: ~70% of items hit the hot key 0, the
+/// rest spread over a small vocabulary; values mix magnitudes wildly so
+/// f64 addition order is observable in the low bits.
+fn gen_skewed(seed: u64, n: usize) -> Vec<(u64, f64)> {
+    let mut rng = SplitRng::new(seed, 0xEC_5EED);
+    (0..n)
+        .map(|_| {
+            let key = if rng.below(10) < 7 { 0 } else { 1 + rng.below(96) };
+            let mantissa = rng.below(1 << 40) as f64;
+            let scale = -(rng.below(60) as i32);
+            (key, mantissa * 2f64.powi(scale))
+        })
+        .collect()
+}
+
+/// One single-stage f64 wordcount-shaped job; result as sorted key→bits.
+fn run_sum_f64(cfg: &ClusterConfig, items: &[(u64, f64)]) -> Vec<(u64, u64)> {
+    let c = Cluster::new(cfg.clone());
+    let dv = DistVector::from_vec(&c, items.to_vec());
+    let mut out: DistHashMap<u64, f64> = DistHashMap::new(&c);
+    mapreduce(&dv, |_, kv: &(u64, f64), emit| emit(kv.0, kv.1), "sum", &mut out);
+    let mut bits: Vec<(u64, u64)> =
+        out.collect().into_iter().map(|(k, v)| (k, v.to_bits())).collect();
+    bits.sort_unstable();
+    bits
+}
+
+#[test]
+fn threaded_eager_bit_identical_to_simulated_under_skew_and_flush_storm() {
+    for (case, &n) in [0usize, 50, 4000].iter().enumerate() {
+        let seed = 0xEC_0001 + case as u64;
+        let items = gen_skewed(seed, n);
+        for &(nodes, workers) in SHAPES {
+            // Tiny cache: every few emits overflow-flush into the shard map.
+            let mut base = ClusterConfig::sized(nodes, workers).with_seed(seed);
+            base.thread_cache_entries = 4;
+            let reference =
+                run_sum_f64(&base.clone().with_backend(Backend::Simulated), &items);
+            for &threads in THREADS {
+                // Repeat: different interleavings must not be able to differ.
+                for rep in 0..3 {
+                    let got = run_sum_f64(
+                        &base.clone().with_backend(Backend::Threaded(threads)),
+                        &items,
+                    );
+                    assert_eq!(
+                        reference, got,
+                        "threaded:{threads} rep {rep} diverged from simulated \
+                         (shape {nodes}x{workers}, n={n}, seed {seed:#x})"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn threaded_smallkey_bit_identical_with_worker_rng() {
+    // π-shaped: dense Vec target (threaded small-key path) and a mapper
+    // that draws from the published worker stream, so this also locks in
+    // stream alignment when blocks run on arbitrary OS threads.
+    for (case, &n) in [0u64, 7, 2500].iter().enumerate() {
+        let seed = 0xEC_1001 + case as u64;
+        for &(nodes, workers) in SHAPES {
+            let base = ClusterConfig::sized(nodes, workers).with_seed(seed);
+            let run = |cfg: &ClusterConfig| -> Vec<u64> {
+                let c = Cluster::new(cfg.clone());
+                let r = DistRange::new(&c, 0, n);
+                let mut sums = vec![0.0f64; 5];
+                mapreduce_range(
+                    &r,
+                    |v, emit| {
+                        let (x, y) = blaze::util::random::uniform2();
+                        emit((v % 5) as usize, x * x + y);
+                    },
+                    "sum",
+                    &mut sums,
+                );
+                sums.into_iter().map(f64::to_bits).collect()
+            };
+            let reference = run(&base.clone().with_backend(Backend::Simulated));
+            for &threads in THREADS {
+                let got = run(&base.clone().with_backend(Backend::Threaded(threads)));
+                assert_eq!(
+                    reference, got,
+                    "threaded:{threads} smallkey diverged \
+                     (shape {nodes}x{workers}, n={n}, seed {seed:#x})"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn flush_storm_neither_drops_nor_double_applies() {
+    // Cache capacity 1: every single emit overflow-flushes. All items hit
+    // one key (one shard stripe), so any lost or duplicated flush changes
+    // the exact integer total.
+    const N: u64 = 20_000;
+    for &threads in THREADS {
+        let mut cfg = ClusterConfig::sized(3, 4).with_backend(Backend::Threaded(threads));
+        cfg.thread_cache_entries = 1;
+        let c = Cluster::new(cfg);
+        let dv = DistVector::from_vec(&c, vec![1u64; N as usize]);
+        let mut out: DistHashMap<u64, u64> = DistHashMap::new(&c);
+        mapreduce(&dv, |_, one: &u64, emit| emit(7u64, *one), "sum", &mut out);
+        assert_eq!(out.get(&7), Some(N), "threads={threads}: exact count violated");
+        assert_eq!(out.len(), 1);
+    }
+}
+
+#[test]
+fn chained_hashmap_input_runs_threaded() {
+    // Stage 1 output (a DistHashMap) feeds stage 2 as input — covers the
+    // hash block cursor through the threaded feeder. Integer values, so
+    // equality with simulated is exact regardless of map iteration order.
+    let lines: Vec<String> = (0..200)
+        .map(|i| match i % 4 {
+            0 => "a b c".to_string(),
+            1 => "a a".to_string(),
+            2 => String::new(),
+            _ => "c c c c".to_string(),
+        })
+        .collect();
+    let run = |backend: Backend| -> Vec<(u64, u64)> {
+        let c = Cluster::new(ClusterConfig::sized(3, 2).with_backend(backend));
+        let dv = DistVector::from_vec(&c, lines.clone());
+        let mut words: DistHashMap<String, u64> = DistHashMap::new(&c);
+        mapreduce(
+            &dv,
+            |_, line: &String, emit| {
+                for w in line.split_whitespace() {
+                    emit(w.to_string(), 1u64);
+                }
+            },
+            "sum",
+            &mut words,
+        );
+        let mut hist: DistHashMap<u64, u64> = DistHashMap::new(&c);
+        mapreduce(&words, |w: &String, n: &u64, emit| emit(w.len() as u64, *n), "sum", &mut hist);
+        let mut out: Vec<(u64, u64)> = hist.collect().into_iter().collect();
+        out.sort_unstable();
+        out
+    };
+    let reference = run(Backend::Simulated);
+    for &threads in THREADS {
+        assert_eq!(reference, run(Backend::Threaded(threads)), "threads={threads}");
+    }
+}
+
+#[test]
+fn more_threads_than_blocks_and_empty_inputs() {
+    // 1×1 cluster has a single block; 8 threads must idle gracefully.
+    let run = |n: usize| {
+        let c = Cluster::new(
+            ClusterConfig::sized(1, 1).with_backend(Backend::Threaded(8)),
+        );
+        let dv = DistVector::from_vec(&c, (0..n as u64).collect());
+        let mut out: DistHashMap<u64, u64> = DistHashMap::new(&c);
+        mapreduce(&dv, |_, v: &u64, emit| emit(v % 3, 1u64), "sum", &mut out);
+        out.collect().values().sum::<u64>()
+    };
+    assert_eq!(run(0), 0);
+    assert_eq!(run(100), 100);
+}
+
+#[test]
+fn threaded_runs_record_hybrid_accounting() {
+    let c = Cluster::new(ClusterConfig::sized(2, 2).with_backend(Backend::Threaded(2)));
+    let dv = DistVector::from_vec(&c, (0..500u64).collect());
+    let mut out: DistHashMap<u64, u64> = DistHashMap::new(&c);
+    mapreduce(&dv, |_, v: &u64, emit| emit(v % 17, 1u64), "sum", &mut out);
+    let metrics = c.metrics();
+    let run = metrics.last_run().expect("run recorded");
+    assert_eq!(run.backend, "threaded:2");
+    assert_eq!(run.engine, "blaze");
+    assert!(run.makespan_sec > 0.0, "virtual accounting still present");
+    assert!(run.wall_ns("map+local-reduce").is_some());
+    assert!(run.wall_ns("canonical-merge").is_some());
+    assert!(run.wall_ns("shuffle+absorb").is_some());
+    assert!(run.wall_ns_total() > 0, "real wall clock recorded");
+    assert_eq!(run.pairs_emitted, 500);
+}
+
+#[test]
+fn threaded_dense_run_records_its_phases() {
+    let c = Cluster::new(ClusterConfig::sized(2, 2).with_backend(Backend::Threaded(2)));
+    let r = DistRange::new(&c, 0, 300);
+    let mut sums = vec![0u64; 3];
+    mapreduce_range(&r, |v, emit| emit((v % 3) as usize, 1u64), "sum", &mut sums);
+    assert_eq!(sums, vec![100, 100, 100]);
+    let metrics = c.metrics();
+    let run = metrics.last_run().expect("run recorded");
+    assert_eq!(run.backend, "threaded:2");
+    assert!(run.wall_ns("map+dense-local-reduce").is_some());
+    assert!(run.wall_ns("tree-reduce").is_some());
+}

@@ -67,6 +67,51 @@ fn kmeans_centroids_byte_identical_both_engines() {
     }
 }
 
+/// Sum of `failures=N` fields across all `fault[...]` notes — the number
+/// of kills actually injected over a whole job sequence.
+fn total_failures_in_notes(c: &Cluster) -> usize {
+    let metrics = c.metrics();
+    metrics
+        .notes()
+        .iter()
+        .filter(|n| n.starts_with("fault["))
+        .filter_map(|n| {
+            let rest = n.split(" failures=").nth(1)?;
+            rest.split_whitespace().next()?.parse::<usize>().ok()
+        })
+        .sum()
+}
+
+#[test]
+fn once_per_sequence_kills_once_across_kmeans_iterations() {
+    // Two-iteration k-means = two MapReduce jobs on one shared cluster.
+    // A per-job plan re-fires the same kill every iteration; a
+    // once-per-sequence plan injects it exactly once. Results stay
+    // byte-identical to the failure-free baseline in all three cases.
+    let ps = PointSet::clustered(800, 4, 3, 0.6, 23);
+    let init = kmeans::init_first_k(&ps, 3);
+    let run = |fault: FaultConfig| {
+        let c = cluster(EngineKind::Eager, fault);
+        let blocks = kmeans::distribute_blocks(&c, &ps, 64);
+        // tol = 0 never converges early: exactly 2 iterations.
+        let (_, result) = kmeans::kmeans(&c, &blocks, ps.n, 4, 3, init.clone(), 0.0, 2, None);
+        assert_eq!(result.iterations, 2, "two-iteration sequence expected");
+        (result.centers, total_failures_in_notes(&c))
+    };
+
+    let (base_centers, base_failures) = run(ckpt());
+    assert_eq!(base_failures, 0);
+
+    let plan = FailurePlan::kill_at_block(1, 2);
+    let (per_job_centers, per_job_failures) = run(ckpt().with_plan(plan.clone()));
+    assert_eq!(per_job_failures, 2, "per-job plans re-fire every iteration");
+    assert_eq!(per_job_centers, base_centers, "per-job kills still byte-identical");
+
+    let (once_centers, once_failures) = run(ckpt().with_plan(plan.once_per_sequence()));
+    assert_eq!(once_failures, 1, "once-per-sequence fires exactly one kill");
+    assert_eq!(once_centers, base_centers, "single kill still byte-identical");
+}
+
 #[test]
 fn multiple_failures_and_time_trigger_recover() {
     let plan = FailurePlan::kill_at_block(1, 2)
