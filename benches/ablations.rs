@@ -8,6 +8,10 @@
 //!    6-MapReduce decomposition.
 //! 4. Allocator (Blaze vs Blaze-TCM): pool hit rates and host-time delta.
 //! 5. Backpressure window sweep: peak in-flight shuffle bytes.
+//!
+//! Every ablation also appends its datapoints (including run counters
+//! where a cluster run is involved) to `BENCH_ablations.json` via
+//! [`bench::report`].
 
 use blaze::apps::gmm;
 use blaze::bench;
@@ -18,7 +22,9 @@ use blaze::mapreduce::{mapreduce_range_labeled, mapreduce_labeled};
 use blaze::util::alloc::AllocMode;
 use blaze::util::rng::SplitRng;
 
-fn ablation_dense_vs_hash() {
+use blaze::bench::report::{Report, Row};
+
+fn ablation_dense_vs_hash(rep: &mut Report) {
     println!("--- ablation 1: small-key dense path vs generic hash path (pi) ---");
     let n = 2_000_000 * bench::scale() as u64;
     let reps = bench::reps();
@@ -62,13 +68,21 @@ fn ablation_dense_vs_hash() {
         );
         count.get(&0)
     });
+    for (variant, s) in [("dense", &dense), ("hash", &hash)] {
+        rep.push(
+            Row::new("dense-vs-hash")
+                .tag("variant", variant)
+                .num("host_wall_mean_sec", s.mean)
+                .num("host_wall_std_sec", s.std),
+        );
+    }
     println!(
         "  dense {:>10}s   hash {:>10}s   dense is {:.2}x faster\n",
         dense, hash, hash.mean / dense.mean
     );
 }
 
-fn ablation_cache_sweep() {
+fn ablation_cache_sweep(rep: &mut Report) {
     println!("--- ablation 2: thread-local cache capacity (wordcount) ---");
     let lines = corpus_lines(30_000 * bench::scale(), 10, 42);
     println!(
@@ -96,6 +110,14 @@ fn ablation_cache_sweep() {
         let host = t0.elapsed().as_secs_f64();
         let m = c.metrics();
         let run = m.last_run().unwrap();
+        rep.push(
+            Row::new("cache-sweep")
+                .tag("cache_entries", cache)
+                .num("pairs_shuffled", run.pairs_shuffled as f64)
+                .num("shuffle_bytes", run.shuffle_bytes as f64)
+                .num("host_wall_sec", host)
+                .counters(run),
+        );
         println!(
             "  {:>10} {:>16} {:>14} {:>12.4}",
             cache, run.pairs_shuffled, run.shuffle_bytes, host
@@ -104,7 +126,7 @@ fn ablation_cache_sweep() {
     println!();
 }
 
-fn ablation_fused_vs_six_mr() {
+fn ablation_fused_vs_six_mr(rep: &mut Report) {
     println!("--- ablation 3: fused GMM E-step vs paper's 6-MapReduce structure ---");
     let ps = PointSet::clustered(6_000 * bench::scale(), 3, 4, 0.5, 9);
     let init = gmm::GmmModel::init(&ps.true_centers.clone(), 4, 3);
@@ -118,13 +140,21 @@ fn ablation_fused_vs_six_mr() {
         let c = Cluster::local(4, 4);
         gmm::gmm_paper_structured(&c, &ps, init.clone(), 0.0, 3).1.loglik
     });
+    for (variant, s) in [("fused", &fused), ("six-mr", &six)] {
+        rep.push(
+            Row::new("l2-fusion")
+                .tag("variant", variant)
+                .num("host_wall_mean_sec", s.mean)
+                .num("host_wall_std_sec", s.std),
+        );
+    }
     println!(
         "  fused {:>10}s   6-MR {:>10}s   fusion is {:.2}x faster (host)\n",
         fused, six, six.mean / fused.mean
     );
 }
 
-fn ablation_allocator() {
+fn ablation_allocator(rep: &mut Report) {
     println!("--- ablation 4: allocator (Blaze vs Blaze-TCM pool) ---");
     let lines = corpus_lines(30_000 * bench::scale(), 10, 42);
     let reps = bench::reps();
@@ -147,6 +177,16 @@ fn ablation_allocator() {
             words.len()
         });
         let (hits, misses) = cluster.pool().stats();
+        let mut row = Row::new("allocator")
+            .tag("alloc", alloc)
+            .num("host_wall_mean_sec", sample.mean)
+            .num("host_wall_std_sec", sample.std)
+            .num("pool_hits", hits as f64)
+            .num("pool_misses", misses as f64);
+        if let Some(run) = cluster.metrics().last_run() {
+            row = row.counters(run);
+        }
+        rep.push(row);
         println!(
             "  {:<10} host {:>10}s   pool hits/misses {}/{}",
             alloc.to_string(),
@@ -158,7 +198,7 @@ fn ablation_allocator() {
     println!("  (paper: throughput difference negligible; unlinked variance higher)\n");
 }
 
-fn ablation_backpressure() {
+fn ablation_backpressure(rep: &mut Report) {
     println!("--- ablation 5: backpressure window vs peak in-flight bytes ---");
     use blaze::coordinator::shuffle;
     let payload_count = 64;
@@ -179,6 +219,12 @@ fn ablation_backpressure() {
             })
             .collect();
         let res = shuffle::execute(payloads, window);
+        rep.push(
+            Row::new("backpressure")
+                .tag("window", if window == u64::MAX { "unbounded".into() } else { window.to_string() })
+                .num("peak_in_flight_bytes", res.peak_in_flight_bytes as f64)
+                .num("stalls", res.stalls as f64),
+        );
         println!(
             "  {:>12} {:>18} {:>8}",
             if window == u64::MAX { "unbounded".to_string() } else { blaze::bench::fmt_bytes(window) },
@@ -189,7 +235,7 @@ fn ablation_backpressure() {
     println!();
 }
 
-fn ablation_cross_rack() {
+fn ablation_cross_rack(rep: &mut Report) {
     println!("--- ablation 6: cross-rack bottleneck (paper 2.3.2 scaling claim) ---");
     // "The smaller size in the serialized message means less network
     // traffics, so that Blaze can scale better on large clusters when the
@@ -219,6 +265,19 @@ fn ablation_cross_rack() {
         };
         let blaze = run(EngineKind::Eager);
         let conv = run(EngineKind::Conventional);
+        rep.push(
+            Row::new("cross-rack")
+                .tag(
+                    "bisection_gbps",
+                    if bisection_gbps.is_infinite() {
+                        "uncapped".to_string()
+                    } else {
+                        bisection_gbps.to_string()
+                    },
+                )
+                .num("blaze_words_per_sec", blaze)
+                .num("conv_words_per_sec", conv),
+        );
         println!(
             "  {:>14} {:>16.0} {:>16.0} {:>8.1}x",
             if bisection_gbps.is_infinite() {
@@ -242,10 +301,17 @@ fn main() {
         "Design-choice ablations",
         "dense path, eager cache size, L2 fusion, allocator, backpressure, cross-rack",
     );
-    ablation_dense_vs_hash();
-    ablation_cache_sweep();
-    ablation_fused_vs_six_mr();
-    ablation_allocator();
-    ablation_backpressure();
-    ablation_cross_rack();
+    let mut rep = Report::new("ablations");
+    rep.meta("scale", bench::scale());
+    rep.meta("reps", bench::reps());
+    ablation_dense_vs_hash(&mut rep);
+    ablation_cache_sweep(&mut rep);
+    ablation_fused_vs_six_mr(&mut rep);
+    ablation_allocator(&mut rep);
+    ablation_backpressure(&mut rep);
+    ablation_cross_rack(&mut rep);
+    match rep.write() {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write bench json: {e}"),
+    }
 }

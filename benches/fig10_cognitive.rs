@@ -4,7 +4,8 @@
 //! official implementations use ~30 distinct parallel primitives. The Blaze
 //! side is counted *from our actual app sources* (static analysis of the
 //! files in `rust/src/apps/`); the Spark side is the primitive inventory of
-//! the referenced Spark 2.4 implementations.
+//! the referenced Spark 2.4 implementations. Datapoints (per-task API
+//! counts) append to `BENCH_fig10_cognitive.json` via [`bench::report`].
 
 use blaze::bench;
 use blaze::util::cognitive::{
@@ -28,10 +29,18 @@ fn main() {
         "{:<10} {:>12} {:>12}   blaze APIs used",
         "task", "blaze", "spark"
     );
+    let mut rep = bench::report::Report::new("fig10_cognitive");
     let mut blaze_union: std::collections::BTreeSet<&str> = std::collections::BTreeSet::new();
     for (task, source) in APP_SOURCES {
         let used = blaze_apis_used(source);
         blaze_union.extend(used.iter());
+        rep.push(
+            bench::report::Row::new("api-count")
+                .tag("task", task)
+                .tag("blaze_apis", used.join(","))
+                .num("blaze_distinct", used.len() as f64)
+                .num("spark_distinct", spark_distinct_for(task) as f64),
+        );
         println!(
             "{:<10} {:>12} {:>12}   {}",
             task,
@@ -41,6 +50,9 @@ fn main() {
         );
     }
     let spark_total: usize = SPARK_PRIMITIVES.iter().map(|(_, p)| p.len()).sum();
+    rep.meta("blaze_union_distinct", blaze_union.len());
+    rep.meta("blaze_api_surface", BLAZE_API.len());
+    rep.meta("spark_distinct_total", spark_distinct_total());
     println!(
         "\ntotals: Blaze {} distinct APIs (surface {} exported) vs Spark {} distinct ({} with repeats)",
         blaze_union.len(),
@@ -50,4 +62,9 @@ fn main() {
     );
     println!("paper: Blaze = mapreduce + 3-5 utilities, Spark ~= 30 primitives");
     assert!(blaze_union.len() <= 7, "Blaze API surface grew past the paper's claim");
+
+    match rep.write() {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write bench json: {e}"),
+    }
 }

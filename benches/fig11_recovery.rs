@@ -7,7 +7,9 @@
 //! the two recovery policies — hot-standby restore vs `--evacuate` slot
 //! re-homing (k-means reduces into a driver-resident `Vec`, which cannot
 //! re-home keys). Results are asserted identical between all runs —
-//! recovery may cost time, never correctness.
+//! recovery may cost time, never correctness. Datapoints (makespans,
+//! overhead, fault counters) append to `BENCH_fig11_recovery.json` via
+//! [`bench::report`].
 
 use blaze::apps::{kmeans, wordcount::wordcount};
 use blaze::bench;
@@ -46,6 +48,10 @@ fn main() {
     );
     let scale = bench::scale();
 
+    let mut rep = bench::report::Report::new("fig11_recovery");
+    rep.meta("scale", scale);
+    rep.meta("checkpoint_every", CKPT_EVERY);
+
     println!(
         "{:<10} {:<13} {:<12} {:>14} {:>14} {:>10}",
         "task", "engine", "policy", "no-fail (s)", "failure (s)", "overhead"
@@ -58,22 +64,32 @@ fn main() {
             let c = cluster(engine, plan, evacuate);
             let dv = DistVector::from_vec(&c, lines.clone());
             let (report, words) = wordcount(&c, &dv);
-            let evac_bytes = c
+            let stats = c
                 .metrics()
                 .runs()
                 .iter()
                 .find(|r| r.label == "wordcount.mr")
-                .map_or(0, |r| r.evac_bytes);
-            (report.makespan_sec, words.collect(), evac_bytes)
+                .cloned()
+                .expect("wordcount records wordcount.mr");
+            (report.makespan_sec, words.collect(), stats)
         };
         let (base_s, base_counts, _) = run(FailurePlan::none(), false);
         for (policy, evacuate) in [("hot-standby", false), ("evacuate", true)] {
-            let (fail_s, fail_counts, evac_bytes) = run(midjob_failure(), evacuate);
+            let (fail_s, fail_counts, stats) = run(midjob_failure(), evacuate);
             assert_eq!(base_counts, fail_counts, "wordcount counts must survive failure");
             assert_eq!(
                 evacuate,
-                evac_bytes > 0,
+                stats.evac_bytes > 0,
                 "evacuation traffic must be charged iff the policy is on"
+            );
+            rep.push(
+                bench::report::Row::new("wordcount")
+                    .tag("engine", engine)
+                    .tag("policy", policy)
+                    .num("nofail_makespan_sec", base_s)
+                    .num("failure_makespan_sec", fail_s)
+                    .num("overhead_frac", fail_s / base_s - 1.0)
+                    .counters(&stats),
             );
             println!(
                 "{:<10} {:<13} {:<12} {:>14.4} {:>14.4} {:>9.1}%",
@@ -96,11 +112,21 @@ fn main() {
             let blocks = kmeans::distribute_blocks(&c, &ps, 512);
             let (report, result) =
                 kmeans::kmeans(&c, &blocks, ps.n, 4, 5, init.clone(), 1e-4, 10, None);
-            (report.makespan_sec, result.centers)
+            let stats = c.metrics().last_run().cloned().expect("kmeans records runs");
+            (report.makespan_sec, result.centers, stats)
         };
-        let (base_s, base_centers) = run(FailurePlan::none());
-        let (fail_s, fail_centers) = run(midjob_failure());
+        let (base_s, base_centers, _) = run(FailurePlan::none());
+        let (fail_s, fail_centers, fail_stats) = run(midjob_failure());
         assert_eq!(base_centers, fail_centers, "centroids must be byte-identical");
+        rep.push(
+            bench::report::Row::new("kmeans")
+                .tag("engine", engine)
+                .tag("policy", "hot-standby")
+                .num("nofail_makespan_sec", base_s)
+                .num("failure_makespan_sec", fail_s)
+                .num("overhead_frac", fail_s / base_s - 1.0)
+                .counters(&fail_stats),
+        );
         println!(
             "{:<10} {:<13} {:<12} {:>14.4} {:>14.4} {:>9.1}%",
             "kmeans",
@@ -113,4 +139,9 @@ fn main() {
     }
 
     println!("\nresults byte-identical across failure, failure-free, and policy runs");
+
+    match rep.write() {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write bench json: {e}"),
+    }
 }

@@ -8,8 +8,11 @@
 //! `--backend threaded:N` (or `BLAZE_BACKEND`) runs the blaze series'
 //! map+combine on N real OS threads; the conventional baseline always
 //! runs simulated. Besides the printed table, every run appends the
-//! datapoints — virtual makespan *and* real wall-clock fields — to
-//! `BENCH_fig4_wordcount.json` via [`bench::report`].
+//! datapoints — virtual makespan, real wall-clock fields, and the
+//! per-run counter registry — to `BENCH_fig4_wordcount.json` via
+//! [`bench::report`]. `--trace PATH` (or `BLAZE_TRACE`) additionally
+//! exports the blaze series' structured event log per node count
+//! (`PATH.n<nodes>` + its Chrome view).
 
 use blaze::apps::wordcount::wordcount;
 use blaze::bench;
@@ -20,8 +23,7 @@ use blaze::util::alloc::AllocMode;
 struct Point {
     throughput: f64,
     makespan_sec: f64,
-    host_wall_sec: f64,
-    wall_ns: u64,
+    stats: blaze::coordinator::metrics::RunStats,
 }
 
 fn main() {
@@ -31,6 +33,7 @@ fn main() {
     );
     let backend = bench::backend();
     let scale = bench::scale();
+    let trace = bench::trace_path();
     let lines = blaze::data::corpus_lines(40_000 * scale, 10, 42);
     let n_words: u64 = lines.iter().map(|l| l.split_whitespace().count() as u64).sum();
     println!("corpus: {} lines, {} words, backend {backend}\n", lines.len(), n_words);
@@ -45,36 +48,49 @@ fn main() {
         "nodes", "blaze (w/s)", "blaze-tcm (w/s)", "conv (w/s)", "speedup"
     );
     for nodes in bench::node_sweep() {
-        let run = |engine: EngineKind, alloc: AllocMode, backend: Backend| {
+        let run = |engine: EngineKind, alloc: AllocMode, backend: Backend, trace_to: Option<String>| {
             let c = Cluster::new(
                 ClusterConfig::sized(nodes, 4)
                     .with_engine(engine)
                     .with_alloc(alloc)
-                    .with_backend(backend),
+                    .with_backend(backend)
+                    .with_trace(trace_to.is_some()),
             );
             let dv = DistVector::from_vec(&c, lines.clone());
             let report = wordcount(&c, &dv).0;
+            if let Some(path) = trace_to {
+                match c.export_trace(&path) {
+                    Ok(()) => println!("trace written: {path}"),
+                    Err(e) => eprintln!("trace export to {path:?} failed: {e}"),
+                }
+            }
             let metrics = c.metrics();
             let last = metrics.last_run().expect("wordcount records a run");
             Point {
                 throughput: report.throughput,
                 makespan_sec: report.makespan_sec,
-                host_wall_sec: last.host_wall_sec,
-                wall_ns: last.wall_ns_total(),
+                stats: last.clone(),
             }
         };
-        let blaze = run(EngineKind::Eager, AllocMode::System, backend);
-        let tcm = run(EngineKind::Eager, AllocMode::Pool, backend);
+        // Only the blaze series is traced (one log per node count).
+        let blaze = run(
+            EngineKind::Eager,
+            AllocMode::System,
+            backend,
+            trace.as_ref().map(|base| format!("{base}.n{nodes}")),
+        );
+        let tcm = run(EngineKind::Eager, AllocMode::Pool, backend, None);
         // The conventional baseline models Spark; always simulated.
-        let conv = run(EngineKind::Conventional, AllocMode::System, Backend::Simulated);
+        let conv = run(EngineKind::Conventional, AllocMode::System, Backend::Simulated, None);
         for (series, p) in [("blaze", &blaze), ("blaze-tcm", &tcm), ("conventional", &conv)] {
             rep.push(
                 bench::report::Row::new(series)
                     .tag("nodes", nodes)
                     .num("words_per_sec", p.throughput)
                     .num("virtual_makespan_sec", p.makespan_sec)
-                    .num("host_wall_sec", p.host_wall_sec)
-                    .num("wall_ns", p.wall_ns as f64),
+                    .num("host_wall_sec", p.stats.host_wall_sec)
+                    .num("wall_ns", p.stats.wall_ns_total() as f64)
+                    .counters(&p.stats),
             );
         }
         println!(

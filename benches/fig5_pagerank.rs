@@ -2,6 +2,8 @@
 //!
 //! Paper: graph500 input (10M links), convergence 1e-5 (27 iterations);
 //! Blaze >> Spark GraphX. Series: blaze, blaze-tcm, conventional.
+//! Datapoints (throughput, iterations, run counters) append to
+//! `BENCH_fig5_pagerank.json` via [`bench::report`].
 
 use blaze::apps::pagerank::pagerank;
 use blaze::bench;
@@ -25,6 +27,10 @@ fn main() {
         g.sinks().len()
     );
 
+    let mut rep = bench::report::Report::new("fig5_pagerank");
+    rep.meta("scale", scale);
+    rep.meta("links", g.n_edges());
+
     println!(
         "{:<6} {:>10} {:>16} {:>16} {:>16} {:>9}",
         "nodes", "iters", "blaze (l/s/it)", "blaze-tcm", "conv (l/s/it)", "speedup"
@@ -35,14 +41,33 @@ fn main() {
                 ClusterConfig::sized(nodes, 4).with_engine(engine).with_alloc(alloc),
             );
             let (report, result) = pagerank(&c, &g, 1e-5, 100);
-            (report.throughput, result.iterations)
+            let stats = c.metrics().last_run().cloned().expect("pagerank records runs");
+            (report.throughput, result.iterations, stats)
         };
-        let (blaze, iters) = run(EngineKind::Eager, AllocMode::System);
-        let (tcm, _) = run(EngineKind::Eager, AllocMode::Pool);
-        let (conv, _) = run(EngineKind::Conventional, AllocMode::System);
+        let (blaze, iters, blaze_stats) = run(EngineKind::Eager, AllocMode::System);
+        let (tcm, _, tcm_stats) = run(EngineKind::Eager, AllocMode::Pool);
+        let (conv, _, conv_stats) = run(EngineKind::Conventional, AllocMode::System);
+        for (series, tput, stats) in [
+            ("blaze", blaze, &blaze_stats),
+            ("blaze-tcm", tcm, &tcm_stats),
+            ("conventional", conv, &conv_stats),
+        ] {
+            rep.push(
+                bench::report::Row::new(series)
+                    .tag("nodes", nodes)
+                    .num("links_per_sec_per_iter", tput)
+                    .num("iterations", iters as f64)
+                    .counters(stats),
+            );
+        }
         println!(
             "{:<6} {:>10} {:>16.0} {:>16.0} {:>16.0} {:>8.1}x",
             nodes, iters, blaze, tcm, conv, blaze / conv
         );
+    }
+
+    match rep.write() {
+        Ok(path) => println!("\nwrote {}", path.display()),
+        Err(e) => eprintln!("\ncould not write bench json: {e}"),
     }
 }

@@ -2,7 +2,9 @@
 //!
 //! Paper: 100M points around 5 centers; Blaze >> Spark MLlib. The
 //! assignment step runs through the AOT-compiled PJRT executable (Pallas
-//! pairwise kernel) when `make artifacts` has been run.
+//! pairwise kernel) when `make artifacts` has been run. Datapoints
+//! (throughput, iterations, run counters) append to
+//! `BENCH_fig6_kmeans.json` via [`bench::report`].
 
 use blaze::apps::kmeans::{distribute_blocks, init_first_k, kmeans};
 use blaze::bench;
@@ -28,6 +30,11 @@ fn main() {
         runtime.is_some()
     );
 
+    let mut rep = bench::report::Report::new("fig6_kmeans");
+    rep.meta("scale", scale);
+    rep.meta("points", ps.n);
+    rep.meta("pjrt", runtime.is_some());
+
     println!(
         "{:<6} {:>8} {:>16} {:>16} {:>16} {:>9}",
         "nodes", "iters", "blaze (p/s/it)", "blaze-tcm", "conv (p/s/it)", "speedup"
@@ -41,14 +48,33 @@ fn main() {
             let (report, result) = kmeans(
                 &c, &blocks, ps.n, dim, k, init.clone(), 1e-4, 20, runtime.as_ref(),
             );
-            (report.throughput, result.iterations)
+            let stats = c.metrics().last_run().cloned().expect("kmeans records runs");
+            (report.throughput, result.iterations, stats)
         };
-        let (blaze, iters) = run(EngineKind::Eager, AllocMode::System);
-        let (tcm, _) = run(EngineKind::Eager, AllocMode::Pool);
-        let (conv, _) = run(EngineKind::Conventional, AllocMode::System);
+        let (blaze, iters, blaze_stats) = run(EngineKind::Eager, AllocMode::System);
+        let (tcm, _, tcm_stats) = run(EngineKind::Eager, AllocMode::Pool);
+        let (conv, _, conv_stats) = run(EngineKind::Conventional, AllocMode::System);
+        for (series, tput, stats) in [
+            ("blaze", blaze, &blaze_stats),
+            ("blaze-tcm", tcm, &tcm_stats),
+            ("conventional", conv, &conv_stats),
+        ] {
+            rep.push(
+                bench::report::Row::new(series)
+                    .tag("nodes", nodes)
+                    .num("points_per_sec_per_iter", tput)
+                    .num("iterations", iters as f64)
+                    .counters(stats),
+            );
+        }
         println!(
             "{:<6} {:>8} {:>16.0} {:>16.0} {:>16.0} {:>8.1}x",
             nodes, iters, blaze, tcm, conv, blaze / conv
         );
+    }
+
+    match rep.write() {
+        Ok(path) => println!("\nwrote {}", path.display()),
+        Err(e) => eprintln!("\ncould not write bench json: {e}"),
     }
 }

@@ -3,7 +3,8 @@
 //! Paper: 1M points, 5 components, 6 MapReduce operations per iteration;
 //! Blaze >> Spark MLlib. The fused PJRT E-step carries the production
 //! path; `benches/ablations.rs` compares it against the paper's literal
-//! 6-MR decomposition.
+//! 6-MR decomposition. Datapoints (throughput, iterations, run counters)
+//! append to `BENCH_fig7_gmm.json` via [`bench::report`].
 
 use blaze::apps::gmm::gmm_from_points;
 use blaze::bench;
@@ -23,6 +24,11 @@ fn main() {
     let ps = PointSet::clustered(12_000 * scale, dim, k, 0.6, 43);
     println!("{} points, dim={dim}, k={k}, pjrt={}\n", ps.n, runtime.is_some());
 
+    let mut rep = bench::report::Report::new("fig7_gmm");
+    rep.meta("scale", scale);
+    rep.meta("points", ps.n);
+    rep.meta("pjrt", runtime.is_some());
+
     println!(
         "{:<6} {:>8} {:>16} {:>16} {:>16} {:>9}",
         "nodes", "iters", "blaze (p/s/it)", "blaze-tcm", "conv (p/s/it)", "speedup"
@@ -33,14 +39,33 @@ fn main() {
                 ClusterConfig::sized(nodes, 4).with_engine(engine).with_alloc(alloc),
             );
             let (report, result) = gmm_from_points(&c, &ps, k, 1e-6, 15, runtime.as_ref());
-            (report.throughput, result.iterations)
+            let stats = c.metrics().last_run().cloned().expect("gmm records runs");
+            (report.throughput, result.iterations, stats)
         };
-        let (blaze, iters) = run(EngineKind::Eager, AllocMode::System);
-        let (tcm, _) = run(EngineKind::Eager, AllocMode::Pool);
-        let (conv, _) = run(EngineKind::Conventional, AllocMode::System);
+        let (blaze, iters, blaze_stats) = run(EngineKind::Eager, AllocMode::System);
+        let (tcm, _, tcm_stats) = run(EngineKind::Eager, AllocMode::Pool);
+        let (conv, _, conv_stats) = run(EngineKind::Conventional, AllocMode::System);
+        for (series, tput, stats) in [
+            ("blaze", blaze, &blaze_stats),
+            ("blaze-tcm", tcm, &tcm_stats),
+            ("conventional", conv, &conv_stats),
+        ] {
+            rep.push(
+                bench::report::Row::new(series)
+                    .tag("nodes", nodes)
+                    .num("points_per_sec_per_iter", tput)
+                    .num("iterations", iters as f64)
+                    .counters(stats),
+            );
+        }
         println!(
             "{:<6} {:>8} {:>16.0} {:>16.0} {:>16.0} {:>8.1}x",
             nodes, iters, blaze, tcm, conv, blaze / conv
         );
+    }
+
+    match rep.write() {
+        Ok(path) => println!("\nwrote {}", path.display()),
+        Err(e) => eprintln!("\ncould not write bench json: {e}"),
     }
 }

@@ -2,7 +2,9 @@
 //!
 //! Paper: 200M random points; Blaze and Spark are *closest* on this task
 //! (no intermediate key/value pairs — it's a distance scan + distributed
-//! top-k). Expect the smallest speedup of the five workloads.
+//! top-k). Expect the smallest speedup of the five workloads. Datapoints
+//! (throughput, run counters) append to `BENCH_fig8_knn.json` via
+//! [`bench::report`].
 
 use blaze::apps::knn::knn;
 use blaze::bench;
@@ -23,6 +25,11 @@ fn main() {
     let query = vec![0.5f32; dim];
     println!("{} points, dim={dim}, k=100, pjrt={}\n", ps.n, runtime.is_some());
 
+    let mut rep = bench::report::Report::new("fig8_knn");
+    rep.meta("scale", scale);
+    rep.meta("points", ps.n);
+    rep.meta("pjrt", runtime.is_some());
+
     println!(
         "{:<6} {:>16} {:>16} {:>16} {:>9}",
         "nodes", "blaze (p/s)", "blaze-tcm", "conv (p/s)", "speedup"
@@ -32,14 +39,33 @@ fn main() {
             let c = Cluster::new(
                 ClusterConfig::sized(nodes, 4).with_engine(engine).with_alloc(alloc),
             );
-            knn(&c, &ps, &query, 100, runtime.as_ref()).0.throughput
+            let tput = knn(&c, &ps, &query, 100, runtime.as_ref()).0.throughput;
+            let stats = c.metrics().last_run().cloned().expect("knn records runs");
+            (tput, stats)
         };
-        let blaze = run(EngineKind::Eager, AllocMode::System);
-        let tcm = run(EngineKind::Eager, AllocMode::Pool);
-        let conv = run(EngineKind::Conventional, AllocMode::System);
+        let (blaze, blaze_stats) = run(EngineKind::Eager, AllocMode::System);
+        let (tcm, tcm_stats) = run(EngineKind::Eager, AllocMode::Pool);
+        let (conv, conv_stats) = run(EngineKind::Conventional, AllocMode::System);
+        for (series, tput, stats) in [
+            ("blaze", blaze, &blaze_stats),
+            ("blaze-tcm", tcm, &tcm_stats),
+            ("conventional", conv, &conv_stats),
+        ] {
+            rep.push(
+                bench::report::Row::new(series)
+                    .tag("nodes", nodes)
+                    .num("points_per_sec", tput)
+                    .counters(stats),
+            );
+        }
         println!(
             "{:<6} {:>16.0} {:>16.0} {:>16.0} {:>8.1}x",
             nodes, blaze, tcm, conv, blaze / conv
         );
+    }
+
+    match rep.write() {
+        Ok(path) => println!("\nwrote {}", path.display()),
+        Err(e) => eprintln!("\ncould not write bench json: {e}"),
     }
 }

@@ -5,7 +5,9 @@
 //! close (no intermediate pairs). Blaze TCM is the same order of magnitude
 //! as Blaze. Peak bytes here are the engines' intermediate-state
 //! accounting: thread caches + materialized pair buffers + in-flight
-//! serialized blocks (see `coordinator::metrics`).
+//! serialized blocks (see `coordinator::metrics`). Datapoints (peak
+//! bytes, last-run counters) append to `BENCH_fig9_memory.json` via
+//! [`bench::report`].
 
 use blaze::apps::{gmm, kmeans, knn, pagerank, wordcount};
 use blaze::bench::{self, fmt_bytes};
@@ -39,18 +41,22 @@ fn main() {
 
     let peak = |c: &Cluster, prefix: &str| c.metrics().job_peak_bytes(prefix);
 
+    let mut rep = bench::report::Report::new("fig9_memory");
+    rep.meta("scale", scale);
+    rep.meta("pjrt", runtime.is_some());
+
     println!(
         "{:<10} {:>14} {:>14} {:>14} {:>8}",
         "task", "blaze", "blaze-tcm", "conventional", "ratio"
     );
     let configs = [
-        (EngineKind::Eager, AllocMode::System),
-        (EngineKind::Eager, AllocMode::Pool),
-        (EngineKind::Conventional, AllocMode::System),
+        ("blaze", EngineKind::Eager, AllocMode::System),
+        ("blaze-tcm", EngineKind::Eager, AllocMode::Pool),
+        ("conventional", EngineKind::Conventional, AllocMode::System),
     ];
     for task in ["wordcount", "pagerank", "kmeans", "gmm", "knn"] {
         let mut peaks = [0u64; 3];
-        for (i, &(engine, alloc)) in configs.iter().enumerate() {
+        for (i, &(series, engine, alloc)) in configs.iter().enumerate() {
             let c = mk(engine, alloc);
             peaks[i] = match task {
                 "wordcount" => {
@@ -79,6 +85,13 @@ fn main() {
                 }
                 _ => unreachable!(),
             };
+            let mut row = bench::report::Row::new(series)
+                .tag("task", task)
+                .num("peak_intermediate_bytes", peaks[i] as f64);
+            if let Some(stats) = c.metrics().last_run() {
+                row = row.counters(stats);
+            }
+            rep.push(row);
         }
         println!(
             "{:<10} {:>14} {:>14} {:>14} {:>7.1}x",
@@ -90,4 +103,9 @@ fn main() {
         );
     }
     println!("\nratio = conventional / blaze (paper: ~10x on keyed tasks, ~1x on knn)");
+
+    match rep.write() {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write bench json: {e}"),
+    }
 }

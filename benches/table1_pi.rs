@@ -10,7 +10,10 @@
 //! `--backend threaded:N` (or `BLAZE_BACKEND`) runs the Blaze MapReduce
 //! side on N real OS threads — the closest this reproduction gets to the
 //! paper's actual Table-1 measurement. Datapoints (host wall mean/std,
-//! virtual makespan) append to `BENCH_table1_pi.json`.
+//! virtual makespan, run counters) append to `BENCH_table1_pi.json`.
+//! `--trace PATH` (or `BLAZE_TRACE`) runs one extra *untimed* traced rep
+//! per sample count and exports its event log to `PATH.n<samples>` — the
+//! timed reps never pay the tracing overhead.
 
 use blaze::apps::pi::{pi_blaze, pi_hand_optimized, SLOC_BLAZE, SLOC_MPI_OPENMP};
 use blaze::bench;
@@ -19,10 +22,15 @@ use blaze::net::model::NetworkModel;
 use blaze::prelude::*;
 
 fn pi_cluster(backend: Backend) -> Cluster {
+    pi_cluster_traced(backend, false)
+}
+
+fn pi_cluster_traced(backend: Backend, trace: bool) -> Cluster {
     Cluster::new(
         ClusterConfig::sized(1, 4)
             .with_network(NetworkModel::loopback())
-            .with_backend(backend),
+            .with_backend(backend)
+            .with_trace(trace),
     )
 }
 
@@ -33,6 +41,7 @@ fn main() {
     );
     let backend = bench::backend();
     let reps = bench::reps();
+    let trace = bench::trace_path();
     // Paper scales 1e7..1e9; default here 1e6..1e8 (single host core),
     // override with BLAZE_BENCH_SCALE=10 for the paper's sizes.
     let scale = bench::scale() as u64;
@@ -50,12 +59,25 @@ fn main() {
     );
     for &n in &sample_counts {
         let mut makespans: Vec<f64> = Vec::new();
+        let mut last_stats = None;
         let blaze = bench::time_host(reps, || {
             let c = pi_cluster(backend);
             let report = pi_blaze(&c, n);
             makespans.push(report.makespan_sec);
+            last_stats = c.metrics().last_run().cloned();
             report
         });
+        // One extra untimed rep with the collector on, so the trace
+        // artifact exists without perturbing the wall statistics above.
+        if let Some(base) = &trace {
+            let c = pi_cluster_traced(backend, true);
+            pi_blaze(&c, n);
+            let path = format!("{base}.n{n}");
+            match c.export_trace(&path) {
+                Ok(()) => println!("trace written: {path}"),
+                Err(e) => eprintln!("trace export to {path:?} failed: {e}"),
+            }
+        }
         let hand = bench::time_host(reps, || {
             let c = pi_cluster(Backend::Simulated);
             pi_hand_optimized(&c, n)
@@ -65,14 +87,16 @@ fn main() {
         // same reps the wall statistics cover.
         let timed = &makespans[makespans.len().min(1)..];
         let makespan = bench::summarize(timed).mean;
-        rep.push(
-            bench::report::Row::new("blaze-mapreduce")
-                .tag("samples", n)
-                .num("host_wall_mean_sec", blaze.mean)
-                .num("host_wall_std_sec", blaze.std)
-                .num("virtual_makespan_mean_sec", makespan)
-                .num("ratio_vs_hand", blaze.mean / hand.mean),
-        );
+        let mut row = bench::report::Row::new("blaze-mapreduce")
+            .tag("samples", n)
+            .num("host_wall_mean_sec", blaze.mean)
+            .num("host_wall_std_sec", blaze.std)
+            .num("virtual_makespan_mean_sec", makespan)
+            .num("ratio_vs_hand", blaze.mean / hand.mean);
+        if let Some(stats) = &last_stats {
+            row = row.counters(stats);
+        }
+        rep.push(row);
         rep.push(
             bench::report::Row::new("hand-optimized")
                 .tag("samples", n)

@@ -70,6 +70,23 @@ pub fn backend() -> crate::coordinator::cluster::Backend {
     Backend::from_env()
 }
 
+/// Trace output path for a bench run: the `--trace PATH` argv flag wins,
+/// else the `BLAZE_TRACE` environment variable, else `None` (tracing
+/// off). Mirrors [`backend`]'s argv-then-env precedence.
+pub fn trace_path() -> Option<String> {
+    let args: Vec<String> = std::env::args().collect();
+    for pair in args.windows(2) {
+        if pair[0] == "--trace" {
+            return Some(pair[1].clone());
+        }
+    }
+    assert!(
+        args.last().map(String::as_str) != Some("--trace"),
+        "--trace needs a path"
+    );
+    std::env::var("BLAZE_TRACE").ok().filter(|p| !p.is_empty())
+}
+
 /// Repetition count from `BLAZE_BENCH_REPS` (default 3).
 pub fn reps() -> usize {
     std::env::var("BLAZE_BENCH_REPS")
@@ -157,6 +174,21 @@ pub mod report {
         /// Attach a numeric field (builder style).
         pub fn num(mut self, key: &str, value: f64) -> Self {
             self.nums.push((key.to_string(), value));
+            self
+        }
+
+        /// Fold a run's counter registry into numeric fields: global
+        /// counters under their own names, per-node counters as
+        /// `node{i}.{name}` (builder style).
+        pub fn counters(mut self, stats: &crate::coordinator::metrics::RunStats) -> Self {
+            for (k, v) in &stats.counters {
+                self.nums.push((k.clone(), *v as f64));
+            }
+            for (node, cs) in stats.node_counters.iter().enumerate() {
+                for (k, v) in cs {
+                    self.nums.push((format!("node{node}.{k}"), *v as f64));
+                }
+            }
             self
         }
     }
@@ -285,6 +317,20 @@ pub mod report {
             assert!(js.contains("\"throughput\":1.5"), "{js}");
             assert!(js.contains("\"broken\":null"), "{js}");
             assert!(js.ends_with("]}"), "{js}");
+        }
+
+        #[test]
+        fn counters_fold_into_row_nums() {
+            let stats = crate::coordinator::metrics::RunStats {
+                counters: vec![("ckpt.count".into(), 3)],
+                node_counters: vec![vec![], vec![("map.items".into(), 7)]],
+                ..Default::default()
+            };
+            let mut rep = Report::new("counter_fold");
+            rep.push(Row::new("s").counters(&stats));
+            let js = rep.to_json();
+            assert!(js.contains("\"ckpt.count\":3"), "{js}");
+            assert!(js.contains("\"node1.map.items\":7"), "{js}");
         }
 
         #[test]

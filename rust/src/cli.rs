@@ -51,6 +51,10 @@ pub struct Options {
     /// Recovery policy: re-home a dead node's keys onto survivors instead
     /// of the hot-standby restore (`--evacuate`).
     pub evacuate: bool,
+    /// Trace output path (`--trace PATH`, default from `BLAZE_TRACE`):
+    /// enables the structured event collector and exports the canonical
+    /// JSONL log (plus `PATH.chrome.json`) after the run.
+    pub trace: Option<String>,
 }
 
 impl Default for Options {
@@ -67,6 +71,7 @@ impl Default for Options {
             fail_at: Vec::new(),
             checkpoint_every: None,
             evacuate: false,
+            trace: std::env::var("BLAZE_TRACE").ok().filter(|p| !p.is_empty()),
         }
     }
 }
@@ -90,7 +95,7 @@ const USAGE: &str = "usage: blaze <pi|wordcount|pagerank|kmeans|gmm|knn|all> \
 [--nodes N] [--workers W] [--engine blaze|conventional] \
 [--backend simulated|threaded[:N]] [--scale S] \
 [--artifacts DIR|none] [--seed SEED] [--fail-at NODE@BLOCK ...] \
-[--checkpoint-every BLOCKS] [--evacuate]";
+[--checkpoint-every BLOCKS] [--evacuate] [--trace PATH]";
 
 /// Parse argv (without the program name).
 pub fn parse(args: &[String]) -> Result<Options, String> {
@@ -120,6 +125,7 @@ pub fn parse(args: &[String]) -> Result<Options, String> {
                     Some(next("block count")?.parse().map_err(|e| format!("{e}"))?)
             }
             "--evacuate" => opts.evacuate = true,
+            "--trace" => opts.trace = Some(next("path")?),
             "--fail-at" => {
                 let spec = next("NODE@BLOCK spec")?;
                 let Some((node, block)) = spec.split_once('@') else {
@@ -153,7 +159,8 @@ fn make_cluster(opts: &Options) -> Cluster {
             .with_engine(opts.engine)
             .with_backend(opts.backend)
             .with_seed(opts.seed)
-            .with_fault(opts.fault_config()),
+            .with_fault(opts.fault_config())
+            .with_trace(opts.trace.is_some()),
     )
 }
 
@@ -236,6 +243,17 @@ pub fn run(args: &[String]) -> i32 {
             }
         };
         println!("{}", report.line());
+        if let Some(base) = &opts.trace {
+            // One trace per task: `all` runs get per-task suffixes so the
+            // logs don't clobber each other.
+            let path =
+                if tasks.len() > 1 { format!("{base}.{task}") } else { base.clone() };
+            if let Err(e) = cluster.export_trace(&path) {
+                eprintln!("trace export to {path:?} failed: {e}");
+                return 1;
+            }
+            eprintln!("trace written: {path} (+ {path}.chrome.json)");
+        }
     }
     0
 }
@@ -344,6 +362,37 @@ mod tests {
     fn run_pi_end_to_end() {
         // Tiny scale, no artifacts: exercises the whole CLI path.
         assert_eq!(run(&argv("pi --nodes 2 --workers 2 --scale 1 --artifacts none")), 0);
+    }
+
+    #[test]
+    fn parse_trace_flag() {
+        let o = parse(&argv("pi --trace /tmp/t.jsonl")).unwrap();
+        assert_eq!(o.trace.as_deref(), Some("/tmp/t.jsonl"));
+        assert!(parse(&argv("pi --trace")).is_err());
+    }
+
+    #[test]
+    fn run_pi_with_trace_writes_both_files() {
+        let dir = std::env::temp_dir().join("blaze-cli-trace-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("pi.trace.jsonl");
+        let path_s = path.to_str().unwrap().to_string();
+        let args: Vec<String> =
+            argv("pi --nodes 2 --workers 2 --scale 1 --artifacts none --trace")
+                .into_iter()
+                .chain([path_s.clone()])
+                .collect();
+        assert_eq!(run(&args), 0);
+        let jsonl = std::fs::read_to_string(&path).unwrap();
+        assert!(!jsonl.is_empty(), "trace log has events");
+        assert!(jsonl.lines().all(|l| l.starts_with('{') && l.ends_with('}')));
+        let chrome = std::fs::read_to_string(format!("{path_s}.chrome.json")).unwrap();
+        assert!(
+            chrome.starts_with("{\"traceEvents\":["),
+            "chrome trace is a traceEvents object"
+        );
+        std::fs::remove_file(&path).ok();
+        std::fs::remove_file(format!("{path_s}.chrome.json")).ok();
     }
 
     #[test]

@@ -5,6 +5,7 @@ use std::rc::Rc;
 
 use crate::fault::FaultConfig;
 use crate::net::model::NetworkModel;
+use crate::trace::TraceCollector;
 use crate::util::alloc::{AllocMode, BufferPool};
 
 use super::metrics::MetricsRegistry;
@@ -142,6 +143,12 @@ pub struct ClusterConfig {
     /// cadence. When enabled, jobs run through the recoverable engine
     /// ([`crate::fault::engine`]).
     pub fault: FaultConfig,
+    /// Structured event tracing ([`crate::trace`]): when on, every job
+    /// records a typed event log into the cluster's
+    /// [`TraceCollector`]. Defaults from the `BLAZE_TRACE` env var
+    /// (non-empty = on; the CLI `--trace PATH` flag also flips it).
+    /// Off by default — the engines' hot paths then pay one branch.
+    pub trace: bool,
 }
 
 impl Default for ClusterConfig {
@@ -158,6 +165,7 @@ impl Default for ClusterConfig {
             conventional_overhead_sec: 250e-9,
             conventional_job_latency_sec: 20e-3,
             fault: FaultConfig::disabled(),
+            trace: std::env::var("BLAZE_TRACE").map_or(false, |v| !v.is_empty()),
         }
     }
 }
@@ -203,6 +211,12 @@ impl ClusterConfig {
         self.fault = fault;
         self
     }
+
+    /// Builder-style trace toggle.
+    pub fn with_trace(mut self, trace: bool) -> Self {
+        self.trace = trace;
+        self
+    }
 }
 
 struct ClusterInner {
@@ -215,6 +229,9 @@ struct ClusterInner {
     /// iterative job sequence (k-means, PageRank) injects each planned
     /// kill once instead of once per MapReduce job.
     fault_fired: RefCell<Vec<bool>>,
+    /// Structured trace event collector ([`crate::trace`]); disabled
+    /// (absorbs nothing) unless `config.trace` is on.
+    trace: RefCell<TraceCollector>,
 }
 
 /// Cheap-to-clone handle to a virtual cluster.
@@ -230,12 +247,14 @@ pub struct Cluster {
 impl Cluster {
     /// Cluster from an explicit config.
     pub fn new(config: ClusterConfig) -> Self {
+        let trace = RefCell::new(TraceCollector::new(config.trace));
         Self {
             inner: Rc::new(ClusterInner {
                 config,
                 metrics: RefCell::new(MetricsRegistry::default()),
                 pool: BufferPool::new(),
                 fault_fired: RefCell::new(Vec::new()),
+                trace,
             }),
         }
     }
@@ -297,6 +316,19 @@ impl Cluster {
     pub fn set_fault_fired(&self, fired: &[bool]) {
         *self.inner.fault_fired.borrow_mut() = fired.to_vec();
     }
+
+    /// Mutable access to the structured trace collector (engines absorb
+    /// per-job [`crate::trace::TraceBuf`]s; exporters read it back).
+    pub fn trace(&self) -> std::cell::RefMut<'_, TraceCollector> {
+        self.inner.trace.borrow_mut()
+    }
+
+    /// Export the collected trace: canonical JSONL at `path` plus the
+    /// Chrome view at `<path>.chrome.json` (no-op files when tracing is
+    /// off — the collector is then empty).
+    pub fn export_trace<P: AsRef<std::path::Path>>(&self, path: P) -> std::io::Result<()> {
+        self.inner.trace.borrow().export(path)
+    }
 }
 
 impl std::fmt::Debug for Cluster {
@@ -356,6 +388,23 @@ mod tests {
         assert!(c.fault_fired().is_empty());
         c.set_fault_fired(&[true, false]);
         assert_eq!(c.clone().fault_fired(), vec![true, false]);
+    }
+
+    #[test]
+    fn trace_flag_gates_the_collector() {
+        let off = Cluster::local(1, 1);
+        assert!(!off.trace().enabled(), "tracing is off by default");
+        let on = Cluster::new(ClusterConfig::sized(1, 1).with_trace(true));
+        assert!(on.trace().enabled());
+        let mut buf = crate::trace::TraceBuf::new(true);
+        buf.push(crate::trace::TraceEvent::new(
+            0,
+            None,
+            "map+local-reduce",
+            crate::trace::TraceEventKind::Reduce { from: 0, pairs: 1 },
+        ));
+        on.trace().absorb_job("t", buf);
+        assert_eq!(on.trace().event_count(), 1);
     }
 
     #[test]

@@ -50,6 +50,13 @@ pub struct RunStats {
     /// wall time (the hybrid accounting's hardware-speed half); the
     /// virtual `makespan_sec` remains the modeled figure.
     pub phase_wall_ns: Vec<(String, u64)>,
+    /// Run-global observability counters, sorted by name (flush counts,
+    /// pool queue peaks, checkpoint bytes, …; see [`crate::trace::Counters`]).
+    /// Observability only — values like queue peaks depend on real
+    /// scheduling and are *not* part of any determinism gate.
+    pub counters: Vec<(String, u64)>,
+    /// Per-node counters (indexed by node), each sorted by name.
+    pub node_counters: Vec<Vec<(String, u64)>>,
 }
 
 impl RunStats {
@@ -63,9 +70,34 @@ impl RunStats {
         self.phase_wall_ns.iter().map(|(_, ns)| ns).sum()
     }
 
-    /// Wall nanoseconds of one named phase, if recorded.
+    /// Wall nanoseconds of one named phase, if recorded. Duplicate phase
+    /// names *sum*: the recoverable engine can run the same phase more
+    /// than once (recovery replays), and the first-match behavior this
+    /// replaces silently dropped every repeat.
     pub fn wall_ns(&self, phase: &str) -> Option<u64> {
-        self.phase_wall_ns.iter().find(|(p, _)| p == phase).map(|&(_, ns)| ns)
+        let mut total = 0u64;
+        let mut found = false;
+        for (p, ns) in &self.phase_wall_ns {
+            if p == phase {
+                total += ns;
+                found = true;
+            }
+        }
+        found.then_some(total)
+    }
+
+    /// One run-global counter by name, if recorded.
+    pub fn counter(&self, name: &str) -> Option<u64> {
+        self.counters.iter().find(|(n, _)| n == name).map(|&(_, v)| v)
+    }
+
+    /// One node's counter by name, if recorded.
+    pub fn node_counter(&self, node: usize, name: &str) -> Option<u64> {
+        self.node_counters
+            .get(node)?
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|&(_, v)| v)
     }
 }
 
@@ -187,6 +219,31 @@ mod tests {
         assert_eq!(s.wall_ns_total(), 150);
         assert_eq!(s.wall_ns("map"), Some(100));
         assert_eq!(s.wall_ns("none"), None);
+    }
+
+    #[test]
+    fn wall_ns_sums_duplicate_phases() {
+        // Recovery replays record the same phase label more than once; the
+        // old first-match lookup silently dropped every repeat.
+        let mut s = stats("x", 1.0, 0);
+        s.phase_wall_ns =
+            vec![("map".into(), 100), ("restore".into(), 30), ("map".into(), 25)];
+        assert_eq!(s.wall_ns("map"), Some(125));
+        assert_eq!(s.wall_ns("restore"), Some(30));
+        assert_eq!(s.wall_ns_total(), 155);
+        assert_eq!(s.wall_ns("absent"), None);
+    }
+
+    #[test]
+    fn counter_lookups() {
+        let mut s = stats("x", 1.0, 0);
+        s.counters = vec![("cache.flushes".into(), 5), ("pool.queue_peak".into(), 3)];
+        s.node_counters = vec![vec![("cache.flushes".into(), 2)], vec![]];
+        assert_eq!(s.counter("cache.flushes"), Some(5));
+        assert_eq!(s.counter("nope"), None);
+        assert_eq!(s.node_counter(0, "cache.flushes"), Some(2));
+        assert_eq!(s.node_counter(1, "cache.flushes"), None);
+        assert_eq!(s.node_counter(9, "cache.flushes"), None);
     }
 
     #[test]

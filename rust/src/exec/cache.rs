@@ -27,6 +27,10 @@ use super::shard::partial_order;
 pub struct FlushBatch<K, V> {
     /// Canonical order key ([`partial_order`]).
     pub order: u64,
+    /// Modeled cache bytes at the drain moment (same formula as the
+    /// simulated engine's per-worker byte accounting) — what the
+    /// `CacheFlush` trace event reports.
+    pub bytes: u64,
     /// The drained pairs.
     pub pairs: Vec<(K, V)>,
 }
@@ -94,8 +98,9 @@ impl<K: Hash + Eq + FastSer, V: FastSer> EagerCache<K, V> {
         if !final_drain {
             self.next_seq += 1;
         }
+        let bytes = self.bytes;
         self.bytes = 0;
-        FlushBatch { order, pairs: self.map.drain().collect() }
+        FlushBatch { order, bytes, pairs: self.map.drain().collect() }
     }
 }
 

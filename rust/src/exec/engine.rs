@@ -43,6 +43,7 @@ use crate::mapreduce::smallkey;
 use crate::mapreduce::{BlockCursor, DenseKey, DistInput, Emit, ReduceTarget, RunRecorder};
 use crate::net::vtime::VirtualTime;
 use crate::ser::fastser::FastSer;
+use crate::trace::{block_done_seq, map_seq, Counters, TraceBuf, TraceEvent, TraceEventKind};
 use crate::util::hash::FxHashMap;
 
 use super::cache::EagerCache;
@@ -71,6 +72,12 @@ struct MapAcc {
     /// high-water accounting, unlike a sum over all blocks (which would
     /// overstate peak memory by the block count).
     max_cache_peak_bytes: u64,
+    /// Per-node observability tallies (fold into [`Counters`] post-pool).
+    per_node_items: Vec<u64>,
+    per_node_emitted: Vec<u64>,
+    per_node_flushes: Vec<u64>,
+    per_node_flush_entries: Vec<u64>,
+    per_node_cache_peak: Vec<u64>,
 }
 
 /// Feeder closure over every node's cursor: walks each partition exactly
@@ -145,21 +152,52 @@ pub fn run_eager<I, F, K2, V2, T>(
         per_node_secs: vec![0.0f64; nodes],
         emitted: 0,
         max_cache_peak_bytes: 0,
+        per_node_items: vec![0; nodes],
+        per_node_emitted: vec![0; nodes],
+        per_node_flushes: vec![0; nodes],
+        per_node_flush_entries: vec![0; nodes],
+        per_node_cache_peak: vec![0; nodes],
     });
+    // Worker-collected trace events: each carries a computed sort key
+    // ([`map_seq`]/[`block_done_seq`]) so the canonical order is
+    // independent of which OS thread finished first.
+    let trace_on = cfg.trace;
+    let worker_events: Mutex<Vec<TraceEvent>> = Mutex::new(Vec::new());
+    let pool_stats;
     {
         let work = |task: BlockTask<I::K, I::V>| {
             let t0 = Instant::now();
+            let block = task.node * workers + task.worker;
+            let block_start_ns = t_map.elapsed().as_nanos() as u64;
             // The worker's random stream is keyed by its *virtual* worker
             // identity, not the OS thread — same streams as the simulated
             // engines no matter which thread steals the block.
             crate::util::random::set_stream(cfg.seed, (task.node * workers + task.worker) as u64);
             let mut cache: EagerCache<K2, V2> = EagerCache::new(task.worker, cache_cap);
             let mut emitted = 0u64;
+            let mut flushes = 0u32;
+            let mut flush_entries = 0u64;
+            let mut evs: Vec<TraceEvent> = Vec::new();
             let shard = &shard_maps[task.node];
             for (k, v) in &task.items {
                 let mut emit = |k2: K2, v2: V2| {
                     emitted += 1;
                     if let Some(batch) = cache.reduce(k2, v2, red) {
+                        let entries = batch.pairs.len() as u64;
+                        if trace_on {
+                            let now = t_map.elapsed().as_nanos() as u64;
+                            let mut e = TraceEvent::new(
+                                task.node,
+                                Some(task.worker),
+                                "map+local-reduce",
+                                TraceEventKind::CacheFlush { entries, bytes: batch.bytes },
+                            )
+                            .with_wall(now, now);
+                            e.seq = map_seq(block, flushes);
+                            evs.push(e);
+                        }
+                        flushes += 1;
+                        flush_entries += entries;
                         shard.absorb(batch.order, batch.pairs);
                     }
                 };
@@ -168,17 +206,62 @@ pub fn run_eager<I, F, K2, V2, T>(
             let peak = cache.peak_bytes();
             let fin = cache.finish();
             shard.absorb(fin.order, fin.pairs);
+            if trace_on {
+                let mut e = TraceEvent::new(
+                    task.node,
+                    Some(task.worker),
+                    "map+local-reduce",
+                    TraceEventKind::MapBlock {
+                        items: task.items.len() as u64,
+                        emitted,
+                        exec_node: task.node,
+                        epoch: 1,
+                    },
+                )
+                .with_wall(block_start_ns, t_map.elapsed().as_nanos() as u64);
+                e.seq = block_done_seq(block);
+                evs.push(e);
+                worker_events.lock().expect("trace events poisoned").append(&mut evs);
+            }
             let secs = t0.elapsed().as_secs_f64();
             let mut a = acc.lock().expect("map accumulator poisoned");
             a.per_node_secs[task.node] += secs;
             a.emitted += emitted;
             a.max_cache_peak_bytes = a.max_cache_peak_bytes.max(peak);
+            a.per_node_items[task.node] += task.items.len() as u64;
+            a.per_node_emitted[task.node] += emitted;
+            a.per_node_flushes[task.node] += u64::from(flushes);
+            a.per_node_flush_entries[task.node] += flush_entries;
+            a.per_node_cache_peak[task.node] = a.per_node_cache_peak[task.node].max(peak);
         };
-        pool::execute(threads, threads * 2, feed_blocks(input, nodes, workers), work);
+        pool_stats = pool::execute(threads, threads * 2, feed_blocks(input, nodes, workers), work);
     }
     let map_wall_ns = t_map.elapsed().as_nanos() as u64;
-    let MapAcc { mut per_node_secs, emitted: pairs_emitted, max_cache_peak_bytes } =
-        acc.into_inner().expect("map accumulator poisoned");
+    let MapAcc {
+        mut per_node_secs,
+        emitted: pairs_emitted,
+        max_cache_peak_bytes,
+        per_node_items,
+        per_node_emitted,
+        per_node_flushes,
+        per_node_flush_entries,
+        per_node_cache_peak,
+    } = acc.into_inner().expect("map accumulator poisoned");
+    let mut trace = TraceBuf::new(trace_on);
+    trace.extend_keyed(worker_events.into_inner().expect("trace events poisoned"));
+    trace.seal_map(nodes * workers);
+    let mut counters = Counters::new(nodes);
+    for node in 0..nodes {
+        counters.add_node(node, "map.items", per_node_items[node]);
+        counters.add_node(node, "map.emitted", per_node_emitted[node]);
+        counters.add_node(node, "cache.flushes", per_node_flushes[node]);
+        counters.add_node(node, "cache.flush_entries", per_node_flush_entries[node]);
+        counters.max_node(node, "cache.peak_bytes", per_node_cache_peak[node]);
+    }
+    counters.max("pool.queue_peak", pool_stats.queue_peak);
+    for (t, blocks) in pool_stats.per_thread_blocks.iter().enumerate() {
+        counters.add(&format!("pool.thread{t}.blocks"), *blocks);
+    }
     // Live worker caches are bounded by the pool width (see MapAcc docs).
     let live_cache_bytes = max_cache_peak_bytes * threads.min(nodes * workers) as u64;
 
@@ -188,6 +271,9 @@ pub fn run_eager<I, F, K2, V2, T>(
     let mut local_bytes = 0u64;
     for (node, sm) in shard_maps.into_iter().enumerate() {
         let t0 = Instant::now();
+        let (locks, contended) = sm.contention();
+        counters.add_node(node, "shard.locks", locks);
+        counters.add_node(node, "shard.contended", contended);
         let local = sm.into_canonical(red);
         // Node-local map bytes, same per-entry formula as the simulated
         // engine's accounting.
@@ -206,9 +292,12 @@ pub fn run_eager<I, F, K2, V2, T>(
     vt.compute_phase("map+local-reduce", &per_node_secs, workers);
 
     // ---- Shared shuffle pipeline ----------------------------------------
-    let out = eager::shuffle_and_absorb(&cluster, node_maps, red, target, &mut vt);
+    let out = eager::shuffle_and_absorb(&cluster, node_maps, red, target, &mut vt, &mut trace);
 
     // ---- Record ----------------------------------------------------------
+    trace.stamp_phases(&vt);
+    cluster.trace().absorb_job(&rec.label, trace);
+    let (run_counters, node_counters) = counters.finish();
     let compute_sec = vt.compute_sec();
     let makespan = vt.makespan();
     cluster.metrics().record_run(RunStats {
@@ -231,6 +320,8 @@ pub fn run_eager<I, F, K2, V2, T>(
             ("canonical-merge".into(), merge_wall_ns),
             ("shuffle+absorb".into(), out.wall_ns),
         ],
+        counters: run_counters,
+        node_counters,
         ..Default::default()
     });
 }
@@ -281,6 +372,8 @@ pub fn run_smallkey<I, F, K2, V2, T>(
     struct DenseStats {
         per_node_secs: Vec<f64>,
         emitted: u64,
+        per_node_items: Vec<u64>,
+        per_node_emitted: Vec<u64>,
     }
     let dense: Vec<Mutex<NodeDense<V2>>> = (0..nodes)
         .map(|_| {
@@ -291,10 +384,20 @@ pub fn run_smallkey<I, F, K2, V2, T>(
             })
         })
         .collect();
-    let stats = Mutex::new(DenseStats { per_node_secs: vec![0.0f64; nodes], emitted: 0 });
+    let stats = Mutex::new(DenseStats {
+        per_node_secs: vec![0.0f64; nodes],
+        emitted: 0,
+        per_node_items: vec![0; nodes],
+        per_node_emitted: vec![0; nodes],
+    });
+    let trace_on = cfg.trace;
+    let worker_events: Mutex<Vec<TraceEvent>> = Mutex::new(Vec::new());
+    let pool_stats;
     {
         let work = |task: BlockTask<I::K, I::V>| {
             let t0 = Instant::now();
+            let block = task.node * workers + task.worker;
+            let block_start_ns = t_map.elapsed().as_nanos() as u64;
             crate::util::random::set_stream(cfg.seed, (task.node * workers + task.worker) as u64);
             let mut cache: Vec<Option<V2>> = vec![None; range];
             let mut emitted = 0u64;
@@ -304,6 +407,22 @@ pub fn run_smallkey<I, F, K2, V2, T>(
                     smallkey::dense_reduce(&mut cache, range, &k2, v2, red);
                 };
                 mapper(k, v, &mut emit);
+            }
+            if trace_on {
+                let mut e = TraceEvent::new(
+                    task.node,
+                    Some(task.worker),
+                    "map+dense-local-reduce",
+                    TraceEventKind::MapBlock {
+                        items: task.items.len() as u64,
+                        emitted,
+                        exec_node: task.node,
+                        epoch: 1,
+                    },
+                )
+                .with_wall(block_start_ns, t_map.elapsed().as_nanos() as u64);
+                e.seq = block_done_seq(block);
+                worker_events.lock().expect("trace events poisoned").push(e);
             }
             // In-node combine, strictly in worker order (the simulated
             // engine's serial fold — byte-identity depends on it).
@@ -329,12 +448,26 @@ pub fn run_smallkey<I, F, K2, V2, T>(
             let mut st = stats.lock().expect("dense stats poisoned");
             st.per_node_secs[task.node] += secs;
             st.emitted += emitted;
+            st.per_node_items[task.node] += task.items.len() as u64;
+            st.per_node_emitted[task.node] += emitted;
         };
-        pool::execute(threads, threads * 2, feed_blocks(input, nodes, workers), work);
+        pool_stats = pool::execute(threads, threads * 2, feed_blocks(input, nodes, workers), work);
     }
     let map_wall_ns = t_map.elapsed().as_nanos() as u64;
-    let DenseStats { per_node_secs, emitted: pairs_emitted } =
+    let DenseStats { per_node_secs, emitted: pairs_emitted, per_node_items, per_node_emitted } =
         stats.into_inner().expect("dense stats poisoned");
+    let mut trace = TraceBuf::new(trace_on);
+    trace.extend_keyed(worker_events.into_inner().expect("trace events poisoned"));
+    trace.seal_map(nodes * workers);
+    let mut counters = Counters::new(nodes);
+    for node in 0..nodes {
+        counters.add_node(node, "map.items", per_node_items[node]);
+        counters.add_node(node, "map.emitted", per_node_emitted[node]);
+    }
+    counters.max("pool.queue_peak", pool_stats.queue_peak);
+    for (t, blocks) in pool_stats.per_thread_blocks.iter().enumerate() {
+        counters.add(&format!("pool.thread{t}.blocks"), *blocks);
+    }
 
     // ---- Collect the per-node worker-order folds ------------------------
     let t_merge = Instant::now();
@@ -349,9 +482,13 @@ pub fn run_smallkey<I, F, K2, V2, T>(
     vt.compute_phase("map+dense-local-reduce", &per_node_secs, workers);
 
     // ---- Shared binomial tree reduce ------------------------------------
-    let out = smallkey::tree_reduce_into_target(&cluster, node_partials, red, target, &mut vt);
+    let out =
+        smallkey::tree_reduce_into_target(&cluster, node_partials, red, target, &mut vt, &mut trace);
 
     // ---- Record ----------------------------------------------------------
+    trace.stamp_phases(&vt);
+    cluster.trace().absorb_job(&rec.label, trace);
+    let (run_counters, node_counters) = counters.finish();
     let compute_sec = vt.compute_sec();
     let makespan = vt.makespan();
     let (pairs_shuffled, dense_cache_bytes) = smallkey::dense_stats::<V2>(nodes, workers, range);
@@ -375,6 +512,8 @@ pub fn run_smallkey<I, F, K2, V2, T>(
             ("canonical-merge".into(), merge_wall_ns),
             ("tree-reduce".into(), out.wall_ns),
         ],
+        counters: run_counters,
+        node_counters,
         ..Default::default()
     });
 }

@@ -27,17 +27,25 @@ pub struct BlockQueue<T> {
 struct State<T> {
     items: VecDeque<T>,
     closed: bool,
+    /// High-water queue depth observed after any push.
+    peak: usize,
 }
 
 impl<T> BlockQueue<T> {
     /// Queue admitting at most `cap` (≥ 1) in-flight blocks.
     pub fn bounded(cap: usize) -> Self {
         Self {
-            state: Mutex::new(State { items: VecDeque::new(), closed: false }),
+            state: Mutex::new(State { items: VecDeque::new(), closed: false, peak: 0 }),
             not_full: Condvar::new(),
             not_empty: Condvar::new(),
             cap: cap.max(1),
         }
+    }
+
+    /// High-water queue depth (the `pool.queue_peak` run counter).
+    /// Scheduling-dependent: observability only.
+    pub fn peak(&self) -> usize {
+        self.state.lock().expect("block queue poisoned").peak
     }
 
     /// Enqueue a block, blocking while the queue is full. Returns `false`
@@ -52,6 +60,7 @@ impl<T> BlockQueue<T> {
             return false;
         }
         st.items.push_back(item);
+        st.peak = st.peak.max(st.items.len());
         drop(st);
         self.not_empty.notify_one();
         true
@@ -97,13 +106,24 @@ impl<T> Drop for CloseOnDrop<'_, T> {
     }
 }
 
+/// Observability counters from one [`execute`] run. Both values depend on
+/// real thread scheduling — report them, never gate determinism on them.
+#[derive(Debug, Clone, Default)]
+pub struct PoolStats {
+    /// High-water count of blocks queued and not yet stolen.
+    pub queue_peak: u64,
+    /// Blocks each OS thread ended up executing (work-stealing balance).
+    pub per_thread_blocks: Vec<u64>,
+}
+
 /// Run every block yielded by `produce` (called on *this* thread until it
 /// returns `None`) through `work` on `threads` scoped worker threads.
+/// Returns the pool's observability counters.
 ///
 /// Worker panics propagate to the caller with their original payload, so
 /// mapper contract violations (e.g. a dense key outside the target range)
 /// fail the same way they do on the simulated engines.
-pub fn execute<T, P, W>(threads: usize, queue_cap: usize, mut produce: P, work: W)
+pub fn execute<T, P, W>(threads: usize, queue_cap: usize, mut produce: P, work: W) -> PoolStats
 where
     T: Send,
     P: FnMut() -> Option<T>,
@@ -116,9 +136,12 @@ where
             .map(|_| {
                 s.spawn(|| {
                     let _guard = CloseOnDrop { queue: &queue };
+                    let mut blocks = 0u64;
                     while let Some(block) = queue.pop() {
                         work(block);
+                        blocks += 1;
                     }
+                    blocks
                 })
             })
             .collect();
@@ -133,12 +156,15 @@ where
                 }
             }
         }
+        let mut per_thread_blocks = Vec::with_capacity(handles.len());
         for h in handles {
-            if let Err(payload) = h.join() {
-                std::panic::resume_unwind(payload);
+            match h.join() {
+                Ok(blocks) => per_thread_blocks.push(blocks),
+                Err(payload) => std::panic::resume_unwind(payload),
             }
         }
-    });
+        PoolStats { queue_peak: queue.peak() as u64, per_thread_blocks }
+    })
 }
 
 #[cfg(test)]
@@ -150,7 +176,7 @@ mod tests {
     fn all_blocks_processed_exactly_once() {
         let sum = AtomicU64::new(0);
         let mut next = 0u64;
-        execute(
+        let stats = execute(
             4,
             2,
             || {
@@ -166,6 +192,9 @@ mod tests {
             },
         );
         assert_eq!(sum.load(Ordering::Relaxed), 1000 * 1001 / 2);
+        assert_eq!(stats.per_thread_blocks.len(), 4);
+        assert_eq!(stats.per_thread_blocks.iter().sum::<u64>(), 1000);
+        assert!(stats.queue_peak >= 1 && stats.queue_peak <= 2);
     }
 
     #[test]

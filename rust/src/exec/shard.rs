@@ -14,7 +14,8 @@
 //! bit-identical even for non-associative float reductions.
 
 use std::hash::Hash;
-use std::sync::Mutex;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, MutexGuard, TryLockError};
 
 use crate::mapreduce::reducers::Reducer;
 use crate::util::hash::{fxhash, FxHashMap};
@@ -37,6 +38,10 @@ pub fn partial_order(final_drain: bool, worker: usize, seq: u32) -> u64 {
 pub struct ShardedMap<K, V> {
     stripes: Vec<Mutex<FxHashMap<K, Vec<(u64, V)>>>>,
     mask: usize,
+    /// Stripe lock acquisitions on the absorb path (observability).
+    locks: AtomicU64,
+    /// Acquisitions that found the stripe held and had to block.
+    contended: AtomicU64,
 }
 
 impl<K: Hash + Eq, V> ShardedMap<K, V> {
@@ -46,6 +51,28 @@ impl<K: Hash + Eq, V> ShardedMap<K, V> {
         Self {
             stripes: (0..n).map(|_| Mutex::new(FxHashMap::default())).collect(),
             mask: n - 1,
+            locks: AtomicU64::new(0),
+            contended: AtomicU64::new(0),
+        }
+    }
+
+    /// `(lock acquisitions, contended acquisitions)` on the absorb path —
+    /// the `shard.locks` / `shard.contended` run counters. Scheduling-
+    /// dependent: observability only, never part of a determinism gate.
+    pub fn contention(&self) -> (u64, u64) {
+        (self.locks.load(Ordering::Relaxed), self.contended.load(Ordering::Relaxed))
+    }
+
+    /// Lock one stripe, counting the acquisition and whether it contended.
+    fn lock_stripe(&self, s: usize) -> MutexGuard<'_, FxHashMap<K, Vec<(u64, V)>>> {
+        self.locks.fetch_add(1, Ordering::Relaxed);
+        match self.stripes[s].try_lock() {
+            Ok(g) => g,
+            Err(TryLockError::WouldBlock) => {
+                self.contended.fetch_add(1, Ordering::Relaxed);
+                self.stripes[s].lock().expect("shard stripe poisoned")
+            }
+            Err(TryLockError::Poisoned(_)) => panic!("shard stripe poisoned"),
         }
     }
 
@@ -60,7 +87,7 @@ impl<K: Hash + Eq, V> ShardedMap<K, V> {
         if pairs.len() <= 1 {
             let Some((k, v)) = pairs.pop() else { return };
             let s = (fxhash(&k) as usize) & self.mask;
-            let mut stripe = self.stripes[s].lock().expect("shard stripe poisoned");
+            let mut stripe = self.lock_stripe(s);
             stripe.entry(k).or_default().push((order, v));
             return;
         }
@@ -71,7 +98,7 @@ impl<K: Hash + Eq, V> ShardedMap<K, V> {
         tagged.sort_unstable_by_key(|t| t.0);
         let mut it = tagged.into_iter().peekable();
         while let Some((s, k, v)) = it.next() {
-            let mut stripe = self.stripes[s].lock().expect("shard stripe poisoned");
+            let mut stripe = self.lock_stripe(s);
             stripe.entry(k).or_default().push((order, v));
             while it.peek().is_some_and(|t| t.0 == s) {
                 let (_, k, v) = it.next().expect("peeked same-stripe pair");
@@ -208,6 +235,18 @@ mod tests {
         let merged = map.into_canonical(&red);
         assert_eq!(merged.len(), 1);
         assert_eq!(merged[&42].to_bits(), oracle.to_bits());
+    }
+
+    #[test]
+    fn contention_counts_absorb_locks() {
+        let map: ShardedMap<u64, u64> = ShardedMap::new(2);
+        map.absorb(partial_order(false, 0, 0), vec![(1, 1)]);
+        map.absorb(partial_order(false, 0, 1), vec![(2, 2), (3, 3)]);
+        let (locks, contended) = map.contention();
+        // Single-threaded: every acquisition succeeds uncontended. The
+        // two-pair batch may touch one or two stripes.
+        assert!(locks >= 2 && locks <= 3, "locks = {locks}");
+        assert_eq!(contended, 0);
     }
 
     #[test]

@@ -68,6 +68,7 @@ use crate::net::sim::FlowMatrix;
 use crate::net::vtime::VirtualTime;
 use crate::ser::fastser::{decode_pairs_exact, encode_pairs, FastSer};
 use crate::ser::tagged::{decode_pairs_tagged, encode_pairs_tagged, TaggedSer};
+use crate::trace::{Counters, TraceBuf, TraceEvent, TraceEventKind};
 use crate::util::hash::FxHashMap;
 
 use super::checkpoint::{Checkpoint, Ledger, Recover};
@@ -151,11 +152,19 @@ where
     let mut restore_flows = FlowMatrix::new(nodes);
     let mut stats = FtStats::default();
     let mut peak_ckpt_bytes = 0u64;
+    let mut trace = TraceBuf::new(cfg.trace);
+    let mut counters = Counters::new(nodes);
+
+    // The fault engine is serial, so its natural emission order is the
+    // canonical trace order; the phase labels used on shuffle/reduce
+    // events depend on which baseline engine semantics it mimics.
+    let commit_phase: &'static str =
+        if conventional { "shuffle-barrier+reduce" } else { "shuffle+async-reduce" };
 
     // Mandatory epoch-0 checkpoint: guarantees any pre-existing
     // (merged-into) target state is restorable.
     let mut latest = Checkpoint::capture(&*target, nodes, 0, &ledger);
-    account_checkpoint(&latest, &mut ckpt_flows, &mut stats, &mut peak_ckpt_bytes);
+    account_checkpoint(&latest, 0, &mut ckpt_flows, &mut stats, &mut peak_ckpt_bytes, &mut trace);
 
     let mut pending: BTreeMap<usize, PendingBlock> = (0..n_blocks)
         .map(|b| (b, PendingBlock { exec_node: b / workers, only: None }))
@@ -266,6 +275,27 @@ where
         per_node_secs[p.exec_node] += exec_secs;
         det_secs[p.exec_node] += items_here as f64 * ATTIME_SEC_PER_ITEM;
         pairs_emitted += emitted_here;
+        counters.add_node(p.exec_node, "map.items", items_here);
+        counters.add_node(p.exec_node, "map.emitted", emitted_here);
+        if p.only.is_some() {
+            trace.push(TraceEvent::new(
+                p.exec_node,
+                None,
+                "map+block-reduce",
+                TraceEventKind::Replay { block: b, exec_node: p.exec_node },
+            ));
+        }
+        trace.push(TraceEvent::new(
+            home,
+            Some(w),
+            "map+block-reduce",
+            TraceEventKind::MapBlock {
+                items: items_here,
+                emitted: emitted_here,
+                exec_node: p.exec_node,
+                epoch: exec_epoch[b],
+            },
+        ));
 
         // ---- Commit: eager-reduce each shard's partial once -------------
         let mut staged_bytes = 0u64;
@@ -281,7 +311,8 @@ where
             if ledger.contains(&(b, dst)) {
                 continue; // dedupe re-emitted partials
             }
-            pairs_shuffled += part.len() as u64;
+            let n_pairs = part.len() as u64;
+            pairs_shuffled += n_pairs;
             let t1 = Instant::now();
             if conventional {
                 // Conventional spills every block — node-local ones
@@ -291,8 +322,15 @@ where
                 let buf = encode_pairs_tagged(&part);
                 staged_bytes += buf.len() as u64;
                 ser_bytes += buf.len() as u64;
+                counters.add_node(p.exec_node, "ser.bytes", buf.len() as u64);
                 if dst != p.exec_node {
                     shuffle_flows.record(p.exec_node, dst, buf.len() as u64);
+                    trace.push(TraceEvent::new(
+                        p.exec_node,
+                        None,
+                        commit_phase,
+                        TraceEventKind::Shuffle { dst, bytes: buf.len() as u64, pairs: n_pairs },
+                    ));
                 }
                 let decoded =
                     decode_pairs_tagged::<K2, V2>(&buf).expect("ft shuffle payload must decode");
@@ -306,11 +344,24 @@ where
                 let buf = encode_pairs(&part);
                 staged_bytes += buf.len() as u64;
                 ser_bytes += buf.len() as u64;
+                counters.add_node(p.exec_node, "ser.bytes", buf.len() as u64);
                 shuffle_flows.record(p.exec_node, dst, buf.len() as u64);
+                trace.push(TraceEvent::new(
+                    p.exec_node,
+                    None,
+                    commit_phase,
+                    TraceEventKind::Shuffle { dst, bytes: buf.len() as u64, pairs: n_pairs },
+                ));
                 let decoded =
                     decode_pairs_exact::<K2, V2>(&buf).expect("ft shuffle payload must decode");
                 target.absorb(dst, decoded, red);
             }
+            trace.push(TraceEvent::new(
+                dst,
+                None,
+                commit_phase,
+                TraceEventKind::Reduce { from: p.exec_node, pairs: n_pairs },
+            ));
             per_node_reduce_secs[dst] += t1.elapsed().as_secs_f64();
             ledger.insert((b, dst));
         }
@@ -325,7 +376,14 @@ where
         if let Some(every) = fault.checkpoint_every_blocks {
             if every > 0 && was_fresh && fresh_committed % every == 0 && !pending.is_empty() {
                 latest = Checkpoint::capture(&*target, nodes, committed, &ledger);
-                account_checkpoint(&latest, &mut ckpt_flows, &mut stats, &mut peak_ckpt_bytes);
+                account_checkpoint(
+                    &latest,
+                    committed,
+                    &mut ckpt_flows,
+                    &mut stats,
+                    &mut peak_ckpt_bytes,
+                    &mut trace,
+                );
             }
         }
 
@@ -354,9 +412,15 @@ where
             let d = ev.node;
             if d == 0 || d >= nodes || !alive[d] {
                 stats.failures_ignored += 1;
-                cluster
-                    .metrics()
-                    .record_note(format!("fault[{label}]: ignored kill of node {d}"));
+                let ev_t = TraceEvent::new(
+                    d,
+                    None,
+                    "map+block-reduce",
+                    TraceEventKind::KillIgnored { victim: d },
+                );
+                let note = ev_t.render_note(label).expect("KillIgnored renders a note");
+                cluster.metrics().record_note(note);
+                trace.push(ev_t);
                 continue;
             }
             alive[d] = false;
@@ -385,6 +449,12 @@ where
                 restore_flows.record(0, d, restored);
                 stats.restore_bytes += restored;
             }
+            trace.push(TraceEvent::new(
+                d,
+                None,
+                "map+block-reduce",
+                TraceEventKind::Kill { victim: d, restore_bytes: restored },
+            ));
 
             // (3) Roll back post-checkpoint commits into that shard and
             // replay their blocks on survivors (only the lost shard's
@@ -397,6 +467,12 @@ where
             for b2 in rollback {
                 ledger.remove(&(b2, d));
                 stats.blocks_replayed += 1;
+                trace.push(TraceEvent::new(
+                    d,
+                    None,
+                    "map+block-reduce",
+                    TraceEventKind::Rollback { block: b2, shard: d },
+                ));
                 let s = next_alive_rr(&alive, &mut rr);
                 pending
                     .entry(b2)
@@ -428,13 +504,27 @@ where
             let dead_all: Vec<usize> = (0..nodes).filter(|&n| !alive[n]).collect();
             match target.evacuate_dead(&dead_all) {
                 Some(moves) => {
+                    let mut moved = 0u64;
                     for (src, dst, bytes) in moves {
                         if bytes > 0 {
                             evac_flows.record(src, dst, bytes);
                             stats.evacuation_bytes += bytes;
+                            moved += bytes;
+                            trace.push(TraceEvent::new(
+                                src,
+                                None,
+                                "evacuate",
+                                TraceEventKind::Migrate { src, dst, bytes },
+                            ));
                         }
                     }
                     stats.evacuations += evac_queue.len();
+                    trace.push(TraceEvent::new(
+                        0,
+                        None,
+                        "evacuate",
+                        TraceEventKind::Evacuate { victims: evac_queue.clone(), bytes: moved },
+                    ));
                     // Re-stabilization checkpoint: a later failure must
                     // roll back against post-evacuation routing, and a
                     // survivor's restore must include the keys it adopted.
@@ -445,17 +535,24 @@ where
                         latest = Checkpoint::capture(&*target, nodes, committed, &ledger);
                         account_checkpoint(
                             &latest,
+                            committed,
                             &mut ckpt_flows,
                             &mut stats,
                             &mut peak_ckpt_bytes,
+                            &mut trace,
                         );
                     }
                 }
                 None => {
-                    cluster.metrics().record_note(format!(
-                        "fault[{label}]: target cannot re-home keys; \
-                         hot-standby restore kept for nodes {evac_queue:?}"
-                    ));
+                    let ev_t = TraceEvent::new(
+                        0,
+                        None,
+                        "evacuate",
+                        TraceEventKind::EvacFallback { victims: evac_queue.clone() },
+                    );
+                    let note = ev_t.render_note(label).expect("EvacFallback renders a note");
+                    cluster.metrics().record_note(note);
+                    trace.push(ev_t);
                 }
             }
             evac_queue.clear();
@@ -469,10 +566,18 @@ where
     for (i, ev) in fault.plan.events().iter().enumerate() {
         if !fired[i] {
             stats.failures_ignored += 1;
-            cluster.metrics().record_note(format!(
-                "fault[{label}]: kill of node {} never fired ({:?})",
-                ev.node, ev.trigger
-            ));
+            let ev_t = TraceEvent::new(
+                ev.node,
+                None,
+                "map+block-reduce",
+                TraceEventKind::KillDropped {
+                    victim: ev.node,
+                    trigger: format!("{:?}", ev.trigger),
+                },
+            );
+            let note = ev_t.render_note(label).expect("KillDropped renders a note");
+            cluster.metrics().record_note(note);
+            trace.push(ev_t);
         }
     }
 
@@ -516,6 +621,34 @@ where
         + restore_flows.cross_node_bytes()
         + evac_bytes;
     let max_epoch = exec_epoch.iter().copied().max().unwrap_or(0);
+    let summary = TraceEvent::new(
+        0,
+        None,
+        "summary",
+        TraceEventKind::FaultSummary {
+            checkpoints: stats.checkpoints as u64,
+            checkpoint_bytes: stats.checkpoint_bytes,
+            failures: stats.failures as u64,
+            ignored: stats.failures_ignored as u64,
+            reassigned: stats.blocks_reassigned as u64,
+            replayed: stats.blocks_replayed as u64,
+            restore_bytes: stats.restore_bytes,
+            evacuations: stats.evacuations as u64,
+            evac_bytes: stats.evacuation_bytes,
+            max_epoch,
+        },
+    );
+    let summary_note = summary.render_note(label).expect("FaultSummary renders a note");
+    trace.push(summary);
+    trace.stamp_phases(&vt);
+    cluster.trace().absorb_job(&rec.label, trace);
+    counters.add("ckpt.count", stats.checkpoints as u64);
+    counters.add("ckpt.bytes", stats.checkpoint_bytes);
+    counters.add("restore.bytes", stats.restore_bytes);
+    counters.add("evac.bytes", stats.evacuation_bytes);
+    counters.add("replay.blocks", stats.blocks_replayed as u64);
+    counters.add("reassign.blocks", stats.blocks_reassigned as u64);
+    let (run_counters, node_counters) = counters.finish();
     cluster.metrics().record_run(RunStats {
         label: rec.label,
         engine: format!("{}+ft", cfg.engine),
@@ -536,35 +669,33 @@ where
         // commit, checkpoint, and recovery work per block, so there is no
         // meaningful per-phase wall split to report.
         phase_wall_ns: vec![("total".into(), rec.started.elapsed().as_nanos() as u64)],
+        counters: run_counters,
+        node_counters,
     });
-    cluster.metrics().record_note(format!(
-        "fault[{label}]: checkpoints={} ckpt_bytes={} failures={} ignored={} \
-         reassigned={} replayed={} restore_bytes={} evacuations={} evac_bytes={} max_epoch={}",
-        stats.checkpoints,
-        stats.checkpoint_bytes,
-        stats.failures,
-        stats.failures_ignored,
-        stats.blocks_reassigned,
-        stats.blocks_replayed,
-        stats.restore_bytes,
-        stats.evacuations,
-        stats.evacuation_bytes,
-        max_epoch,
-    ));
+    cluster.metrics().record_note(summary_note);
 }
 
 /// Replicate a fresh checkpoint's shards to the driver (node 0, the
 /// stable store) and fold the cost into the running stats. Node 0's own
-/// shard is driver-local and free.
+/// shard is driver-local and free. `commit` is the commit count the
+/// checkpoint was captured at (stamped on the trace event).
 fn account_checkpoint(
     ckpt: &Checkpoint,
+    commit: usize,
     ckpt_flows: &mut FlowMatrix,
     stats: &mut FtStats,
     peak_ckpt_bytes: &mut u64,
+    trace: &mut TraceBuf,
 ) {
     stats.checkpoints += 1;
     stats.checkpoint_bytes += ckpt.total_bytes();
     *peak_ckpt_bytes = (*peak_ckpt_bytes).max(ckpt.total_bytes());
+    trace.push(TraceEvent::new(
+        0,
+        None,
+        "checkpoint",
+        TraceEventKind::Checkpoint { commit, bytes: ckpt.total_bytes() },
+    ));
     for (node, size) in ckpt.manifest.shard_bytes.iter().enumerate() {
         if let Some(bytes) = size {
             if node != 0 {

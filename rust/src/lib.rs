@@ -33,6 +33,14 @@
 //!   virtual time (DESIGN.md §Execution backends).
 //! * [`coordinator`] — cluster topology/config, block scheduler, shuffle
 //!   orchestration with backpressure, shard rebalancing, metrics.
+//! * [`trace`] — structured observability: every engine records typed
+//!   events (`MapBlock`, `CacheFlush`, `Shuffle`, `Reduce`, recovery
+//!   events…) into a per-cluster [`trace::TraceCollector`] when tracing
+//!   is on (`--trace PATH` / `BLAZE_TRACE`), exported as deterministic
+//!   canonical JSONL (byte-identical across backends for failure-free
+//!   seeded runs — an equivalence-harness gate) and as Chrome
+//!   trace-event JSON; plus the per-node counter registry surfaced on
+//!   `RunStats::counters` (DESIGN.md §Observability).
 //! * [`fault`] — fault tolerance: deterministic failure injection
 //!   ([`fault::FailurePlan`]), per-shard target checkpoints replicated
 //!   through the network model, and a recoverable engine that re-executes
@@ -115,6 +123,7 @@ pub mod mapreduce;
 pub mod net;
 pub mod runtime;
 pub mod ser;
+pub mod trace;
 pub mod util;
 
 /// Convenience re-exports covering the whole public Blaze API surface.

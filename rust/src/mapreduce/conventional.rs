@@ -21,6 +21,7 @@ use crate::coordinator::shuffle::{self, ShufflePayloads};
 use crate::net::vtime::VirtualTime;
 use crate::ser::fastser::FastSer;
 use crate::ser::tagged::{decode_pairs_tagged, encode_pairs_tagged, TaggedSer};
+use crate::trace::{Counters, TraceBuf, TraceEvent, TraceEventKind};
 use crate::util::hash::FxHashMap;
 
 use super::reducers::Reducer;
@@ -47,6 +48,8 @@ where
     let cfg = cluster.config().clone();
     let (nodes, workers) = (cfg.nodes, cfg.workers_per_node);
 
+    let mut trace = TraceBuf::new(cfg.trace);
+    let mut counters = Counters::new(nodes);
     let mut vt = VirtualTime::new();
     // Spark-analog job launch latency (driver → executors scheduling).
     vt.fixed_phase("job-launch", cfg.conventional_job_latency_sec);
@@ -66,7 +69,10 @@ where
         let mut cur = input.block_cursor(node, workers);
         for w in 0..workers {
             crate::util::random::set_stream(cfg.seed, (node * workers + w) as u64);
+            let emitted_before = emitted;
+            let mut w_items = 0u64;
             let advanced = cur.next_block(|k, v| {
+                w_items += 1;
                 let mut emit = |k2: K2, v2: V2| {
                     emitted += 1;
                     bytes += RECORD_OVERHEAD + k2.encoded_len() as u64 + v2.encoded_len() as u64;
@@ -76,7 +82,20 @@ where
                 mapper(k, v, &mut emit);
             });
             debug_assert!(advanced, "cursor yields one block per worker");
+            trace.push(TraceEvent::new(
+                node,
+                Some(w),
+                "map-materialize",
+                TraceEventKind::MapBlock {
+                    items: w_items,
+                    emitted: emitted - emitted_before,
+                    exec_node: node,
+                    epoch: 1,
+                },
+            ));
+            counters.add_node(node, "map.items", w_items);
         }
+        counters.add_node(node, "map.emitted", emitted);
         let measured = t0.elapsed().as_secs_f64();
         // Calibrated per-record executor overhead (JVM analog).
         per_node_map_secs[node] = measured + emitted as f64 * cfg.conventional_overhead_sec;
@@ -101,6 +120,17 @@ where
             // writes every block (Spark spills local blocks too).
             let buf = encode_pairs_tagged(&part);
             serialized_bytes += buf.len() as u64;
+            counters.add_node(node, "ser.bytes", buf.len() as u64);
+            trace.push(TraceEvent::new(
+                node,
+                None,
+                "serialize",
+                TraceEventKind::Shuffle {
+                    dst,
+                    bytes: buf.len() as u64,
+                    pairs: part.len() as u64,
+                },
+            ));
             payloads[node][dst] = buf;
         }
         per_node_ser_secs[node] = t0.elapsed().as_secs_f64();
@@ -130,9 +160,15 @@ where
         }
         let mut grouped: FxHashMap<K2, V2> = FxHashMap::default();
         let mut grouped_bytes = 0u64;
-        for (_, buf) in by_src {
+        for (src, buf) in by_src {
             let pairs =
                 decode_pairs_tagged::<K2, V2>(&buf).expect("conventional payload must decode");
+            trace.push(TraceEvent::new(
+                dst,
+                None,
+                "shuffle-barrier+reduce",
+                TraceEventKind::Reduce { from: src, pairs: pairs.len() as u64 },
+            ));
             for (k, v) in pairs {
                 match grouped.entry(k) {
                     std::collections::hash_map::Entry::Occupied(mut e) => {
@@ -161,6 +197,9 @@ where
     // ---- Record ----------------------------------------------------------
     let compute_sec = vt.compute_sec();
     let makespan = vt.makespan();
+    trace.stamp_phases(&vt);
+    cluster.trace().absorb_job(&rec.label, trace);
+    let (run_counters, node_counters) = counters.finish();
     cluster.metrics().record_run(RunStats {
         label: rec.label,
         engine: "conventional".into(),
@@ -185,6 +224,8 @@ where
         // modeled (not executed) costs, so a per-phase wall split would
         // suggest precision the numbers don't have.
         phase_wall_ns: vec![("total".into(), rec.started.elapsed().as_nanos() as u64)],
+        counters: run_counters,
+        node_counters,
         ..Default::default()
     });
 }

@@ -18,6 +18,7 @@ use crate::coordinator::metrics::RunStats;
 use crate::coordinator::shuffle::{self, ShufflePayloads};
 use crate::net::vtime::VirtualTime;
 use crate::ser::fastser::{decode_pairs, encode_pairs_into, FastSer};
+use crate::trace::{Counters, TraceBuf, TraceEvent, TraceEventKind};
 use crate::util::alloc::Scratch;
 use crate::util::hash::FxHashMap;
 
@@ -44,6 +45,8 @@ where
     let (nodes, workers) = (cfg.nodes, cfg.workers_per_node);
     let cache_cap = cfg.thread_cache_entries.max(1);
 
+    let mut trace = TraceBuf::new(cfg.trace);
+    let mut counters = Counters::new(nodes);
     let mut vt = VirtualTime::new();
     let t_map = Instant::now();
     let mut per_node_map_secs = vec![0.0f64; nodes];
@@ -87,7 +90,13 @@ where
             // is worker-local) before its block runs.
             crate::util::random::set_stream(cfg.seed, (node * workers + w) as u64);
             let wb = &mut worker_bytes[w];
+            let emitted_before = emitted;
+            let mut w_items = 0u64;
+            let mut w_flushes = 0u64;
+            let mut w_flush_entries = 0u64;
+            let trace_ref = &mut trace;
             let advanced = cur.next_block(|k, v| {
+                w_items += 1;
                 let mut emit = |k2: K2, v2: V2| {
                     emitted += 1;
                     match cache.entry(k2) {
@@ -104,6 +113,17 @@ where
                     if cache.len() >= cache_cap {
                         // Overflow: flush the worker cache into the machine-local
                         // map (popular keys re-enter the cache immediately after).
+                        w_flushes += 1;
+                        w_flush_entries += cache.len() as u64;
+                        trace_ref.push(TraceEvent::new(
+                            node,
+                            Some(w),
+                            "map+local-reduce",
+                            TraceEventKind::CacheFlush {
+                                entries: cache.len() as u64,
+                                bytes: *wb,
+                            },
+                        ));
                         node_peak = node_peak.max(total_cache_bytes + local_bytes);
                         for (fk, fv) in cache.drain() {
                             match local.entry(fk) {
@@ -123,6 +143,20 @@ where
                 mapper(k, v, &mut emit);
             });
             debug_assert!(advanced, "cursor yields one block per worker");
+            trace.push(TraceEvent::new(
+                node,
+                Some(w),
+                "map+local-reduce",
+                TraceEventKind::MapBlock {
+                    items: w_items,
+                    emitted: emitted - emitted_before,
+                    exec_node: node,
+                    epoch: 1,
+                },
+            ));
+            counters.add_node(node, "map.items", w_items);
+            counters.add_node(node, "cache.flushes", w_flushes);
+            counters.add_node(node, "cache.flush_entries", w_flush_entries);
         }
 
         // Merge worker caches into the machine-local map.
@@ -141,6 +175,8 @@ where
             }
         }
         node_peak = node_peak.max(local_bytes);
+        counters.add_node(node, "map.emitted", emitted);
+        counters.max_node(node, "cache.peak_bytes", node_peak);
 
         per_node_map_secs[node] = t0.elapsed().as_secs_f64();
         pairs_emitted += emitted;
@@ -151,11 +187,14 @@ where
     let map_wall_ns = t_map.elapsed().as_nanos() as u64;
 
     // ---- Partition, serialize, shuffle, absorb (shared pipeline) --------
-    let out = shuffle_and_absorb(&cluster, node_maps, red, target, &mut vt);
+    let out = shuffle_and_absorb(&cluster, node_maps, red, target, &mut vt, &mut trace);
 
     // ---- Record ----------------------------------------------------------
     let compute_sec = vt.compute_sec();
     let makespan = vt.makespan();
+    trace.stamp_phases(&vt);
+    cluster.trace().absorb_job(&rec.label, trace);
+    let (run_counters, node_counters) = counters.finish();
     cluster.metrics().record_run(RunStats {
         label: rec.label,
         engine: "blaze".into(),
@@ -176,6 +215,8 @@ where
             ("map+local-reduce".into(), map_wall_ns),
             ("shuffle+absorb".into(), out.wall_ns),
         ],
+        counters: run_counters,
+        node_counters,
         ..Default::default()
     });
 }
@@ -206,6 +247,7 @@ pub(crate) fn shuffle_and_absorb<K2, V2, T>(
     red: &Reducer<V2>,
     target: &mut T,
     vt: &mut VirtualTime,
+    trace: &mut TraceBuf,
 ) -> ShuffleOutcome
 where
     K2: Hash + Eq + Clone + FastSer,
@@ -238,9 +280,26 @@ where
             pairs_shuffled += part.len() as u64;
             if dst == node {
                 // Machine-local results never serialize: reduce straight in.
+                trace.push(TraceEvent::new(
+                    dst,
+                    None,
+                    "shuffle+async-reduce",
+                    TraceEventKind::Reduce { from: node, pairs: part.len() as u64 },
+                ));
                 target.absorb(dst, part, red);
             } else {
+                let n_pairs = part.len() as u64;
                 payloads[node][dst] = encode_pairs_into(&part, scratch.get(part.len() * 4));
+                trace.push(TraceEvent::new(
+                    node,
+                    None,
+                    "shuffle+async-reduce",
+                    TraceEventKind::Shuffle {
+                        dst,
+                        bytes: payloads[node][dst].len() as u64,
+                        pairs: n_pairs,
+                    },
+                ));
             }
         }
         per_node_ser_secs[node] = t0.elapsed().as_secs_f64();
@@ -261,11 +320,17 @@ where
         for (src, chunk) in received {
             by_src.entry(src).or_default().extend_from_slice(&chunk);
         }
-        for (_, buf) in by_src {
+        for (src, buf) in by_src {
             absorb_buffer_peak = absorb_buffer_peak.max(buf.len() as u64);
             let pairs =
                 decode_pairs::<K2, V2>(&buf).expect("eager shuffle payload must decode");
             scratch.put(buf); // recycle under the pool allocator
+            trace.push(TraceEvent::new(
+                dst,
+                None,
+                "shuffle+async-reduce",
+                TraceEventKind::Reduce { from: src, pairs: pairs.len() as u64 },
+            ));
             target.absorb(dst, pairs, red);
         }
         per_node_reduce_secs[dst] = t0.elapsed().as_secs_f64();

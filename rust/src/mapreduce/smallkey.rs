@@ -17,6 +17,7 @@ use crate::coordinator::metrics::RunStats;
 use crate::net::sim::FlowMatrix;
 use crate::net::vtime::VirtualTime;
 use crate::ser::fastser::{decode_pairs, encode_pairs, FastSer};
+use crate::trace::{Counters, TraceBuf, TraceEvent, TraceEventKind};
 
 use super::reducers::Reducer;
 use super::{BlockCursor, DenseKey, DistInput, Emit, ReduceTarget, RunRecorder};
@@ -41,6 +42,8 @@ where
     let (nodes, workers) = (cfg.nodes, cfg.workers_per_node);
     let range = target.dense_len().expect("smallkey path requires a dense target");
 
+    let mut trace = TraceBuf::new(cfg.trace);
+    let mut counters = Counters::new(nodes);
     let mut vt = VirtualTime::new();
     let t_map = Instant::now();
     let mut per_node_secs = vec![0.0f64; nodes];
@@ -60,7 +63,10 @@ where
             // Publish the worker's random stream (paper's `blaze::random`
             // is worker-local).
             crate::util::random::set_stream(cfg.seed, (node * workers + w) as u64);
+            let emitted_before = emitted;
+            let mut w_items = 0u64;
             let advanced = cur.next_block(|k, v| {
+                w_items += 1;
                 let mut emit = |k2: K2, v2: V2| {
                     emitted += 1;
                     dense_reduce(cache, range, &k2, v2, red);
@@ -68,6 +74,18 @@ where
                 mapper(k, v, &mut emit);
             });
             debug_assert!(advanced, "cursor yields one block per worker");
+            trace.push(TraceEvent::new(
+                node,
+                Some(w),
+                "map+dense-local-reduce",
+                TraceEventKind::MapBlock {
+                    items: w_items,
+                    emitted: emitted - emitted_before,
+                    exec_node: node,
+                    epoch: 1,
+                },
+            ));
+            counters.add_node(node, "map.items", w_items);
         }
 
         // Local tree reduce over worker caches (log2 W combining steps on a
@@ -78,6 +96,7 @@ where
             merge_dense(&mut acc, cache, red);
         }
 
+        counters.add_node(node, "map.emitted", emitted);
         per_node_secs[node] = t0.elapsed().as_secs_f64();
         pairs_emitted += emitted;
         node_partials.push(acc);
@@ -86,11 +105,14 @@ where
     let map_wall_ns = t_map.elapsed().as_nanos() as u64;
 
     // ---- Tree reduce + driver absorb (shared pipeline) ------------------
-    let out = tree_reduce_into_target(&cluster, node_partials, red, target, &mut vt);
+    let out = tree_reduce_into_target(&cluster, node_partials, red, target, &mut vt, &mut trace);
 
     // ---- Record ----------------------------------------------------------
     let compute_sec = vt.compute_sec();
     let makespan = vt.makespan();
+    trace.stamp_phases(&vt);
+    cluster.trace().absorb_job(&rec.label, trace);
+    let (run_counters, node_counters) = counters.finish();
     let (pairs_shuffled, dense_cache_bytes) = dense_stats::<V2>(nodes, workers, range);
     cluster.metrics().record_run(RunStats {
         label: rec.label,
@@ -112,6 +134,8 @@ where
             ("map+dense-local-reduce".into(), map_wall_ns),
             ("tree-reduce".into(), out.wall_ns),
         ],
+        counters: run_counters,
+        node_counters,
         ..Default::default()
     });
 }
@@ -138,6 +162,7 @@ pub(crate) fn tree_reduce_into_target<K2, V2, T>(
     red: &Reducer<V2>,
     target: &mut T,
     vt: &mut VirtualTime,
+    trace: &mut TraceBuf,
 ) -> TreeReduceOutcome
 where
     V2: Clone + FastSer,
@@ -151,6 +176,7 @@ where
     let mut partials: Vec<Option<Vec<Option<V2>>>> =
         node_partials.into_iter().map(Some).collect();
     let mut stride = 1usize;
+    let mut round = 0u16;
     while stride < nodes {
         let mut flows = FlowMatrix::new(nodes);
         let mut reduce_secs = 0.0f64;
@@ -170,8 +196,30 @@ where
             flows.record(src, dst, buf.len() as u64);
             shuffle_bytes += buf.len() as u64;
             round_flow_peak = round_flow_peak.max(buf.len() as u64);
+            trace.push(
+                TraceEvent::new(
+                    src,
+                    None,
+                    "tree-reduce-round",
+                    TraceEventKind::Shuffle {
+                        dst,
+                        bytes: buf.len() as u64,
+                        pairs: pairs.len() as u64,
+                    },
+                )
+                .at_phase_ix(round),
+            );
             let t0 = Instant::now();
             let decoded = decode_pairs::<u32, V2>(&buf).expect("tree-reduce payload");
+            trace.push(
+                TraceEvent::new(
+                    dst,
+                    None,
+                    "tree-reduce-round",
+                    TraceEventKind::Reduce { from: src, pairs: decoded.len() as u64 },
+                )
+                .at_phase_ix(round),
+            );
             let acc = partials[dst].as_mut().expect("tree reduce destination");
             for (idx, v) in decoded {
                 match &mut acc[idx as usize] {
@@ -183,6 +231,7 @@ where
         }
         vt.shuffle_overlapped("tree-reduce-round", &flows, &cfg.network, reduce_secs);
         stride *= 2;
+        round += 1;
     }
 
     // Land at the driver.

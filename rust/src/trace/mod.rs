@@ -1,0 +1,843 @@
+//! Structured tracing — deterministic per-run event logs, per-node
+//! counters, and exporters.
+//!
+//! Observability used to be three disconnected scraps: `RunStats`
+//! aggregates, free-form fault-engine notes, and a flat `phase_wall_ns`
+//! vector. This module replaces them with one typed event stream per job:
+//!
+//! * Engines fill a [`TraceBuf`] with [`TraceEvent`]s as they run. The
+//!   buffer is a no-op unless tracing is on (`ClusterConfig::trace`,
+//!   CLI `--trace PATH`, env `BLAZE_TRACE`).
+//! * Sequencing is designed for determinism. The simulated engines push
+//!   in their natural order, which *is* the canonical order (node
+//!   ascending, worker ascending, flushes interleaved where they
+//!   happened). The threaded backend cannot control which OS thread
+//!   finishes first, so its map-phase events carry computed sort keys —
+//!   [`map_seq`]`(block, flush)` for overflow flushes,
+//!   [`block_done_seq`]`(block)` for block completion — and
+//!   [`TraceBuf::seal_map`] pins every later (serial, post-map) event
+//!   above them. Sorting by key restores exactly the simulated order.
+//! * [`TraceCollector`] (owned by `Cluster`, one per run sequence)
+//!   absorbs per-job buffers and exports two views:
+//!   [`TraceCollector::canonical_jsonl`] — schedule-invariant fields
+//!   only, **byte-identical** across the simulated engine and
+//!   `threaded:{1,2,4}` for failure-free seeded single-stage runs (gated
+//!   by `rust/tests/equivalence.rs`) — and
+//!   [`TraceCollector::chrome_json`], a `chrome://tracing` /
+//!   `ui.perfetto.dev` loadable timeline carrying the virtual-time
+//!   intervals (and real wall-clock stamps where the threaded backend
+//!   recorded them). Virtual/wall stamps derive from measured host time,
+//!   so they are *excluded* from the canonical view by construction.
+//! * [`Counters`] is the per-node counter registry surfaced on
+//!   `RunStats::counters` / `node_counters` (map items/emits, cache
+//!   flush counts and high-water bytes, pool queue depth and per-thread
+//!   block counts, shard-stripe contention, checkpoint/restore/
+//!   evacuation bytes). Counters are observability, **not** part of the
+//!   determinism gate: queue peaks and lock contention depend on real
+//!   scheduling.
+//!
+//! The fault engine's old free-form notes are now a *rendered view* of
+//! typed events ([`TraceEvent::render_note`]): the engine records the
+//! event, renders the byte-identical legacy note text from it, and the
+//! note-matching tests stay green.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::io;
+use std::path::Path;
+
+use crate::net::vtime::VirtualTime;
+
+/// Typed payload of one trace event.
+///
+/// Field values in map-phase and shuffle-phase events are pure functions
+/// of the seeded workload (never of measured time or thread scheduling),
+/// which is what makes the canonical export comparable across backends.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TraceEventKind {
+    /// One map block (one virtual worker's partition slice) finished.
+    /// `exec_node`/`epoch` only differ from the home node / 1 under the
+    /// recoverable engine (re-execution on a survivor).
+    MapBlock { items: u64, emitted: u64, exec_node: usize, epoch: u32 },
+    /// A bounded eager cache overflowed and drained into the node-local
+    /// map (`entries` keys, `bytes` modeled cache bytes at drain).
+    CacheFlush { entries: u64, bytes: u64 },
+    /// A serialized cross-node partial left `node` for `dst`.
+    Shuffle { dst: usize, bytes: u64, pairs: u64 },
+    /// A partial was reduced into `node`'s shard (from node `from`).
+    Reduce { from: usize, pairs: u64 },
+    /// A checkpoint captured all target shards after `commit` commits.
+    Checkpoint { commit: usize, bytes: u64 },
+    /// A failure trigger killed `victim`; its shard was restored from the
+    /// latest checkpoint (`restore_bytes` driver→replacement traffic).
+    Kill { victim: usize, restore_bytes: u64 },
+    /// A planned kill was ignored (driver, out of range, already dead).
+    KillIgnored { victim: usize },
+    /// A planned kill never came due before the job finished; `trigger`
+    /// is the debug-rendered trigger (e.g. `AtBlock(7)`).
+    KillDropped { victim: usize, trigger: String },
+    /// A post-checkpoint commit into the lost shard was rolled back.
+    Rollback { block: usize, shard: usize },
+    /// A rolled-back block was re-executed on `exec_node`.
+    Replay { block: usize, exec_node: usize },
+    /// Dead nodes' key spaces were re-homed onto survivors (`--evacuate`).
+    Evacuate { victims: Vec<usize>, bytes: u64 },
+    /// The target cannot re-home keys; hot-standby restore kept.
+    EvacFallback { victims: Vec<usize> },
+    /// One migration flow of an evacuation.
+    Migrate { src: usize, dst: usize, bytes: u64 },
+    /// End-of-job recovery bookkeeping (the old `fault[...]` note).
+    FaultSummary {
+        checkpoints: u64,
+        checkpoint_bytes: u64,
+        failures: u64,
+        ignored: u64,
+        reassigned: u64,
+        replayed: u64,
+        restore_bytes: u64,
+        evacuations: u64,
+        evac_bytes: u64,
+        max_epoch: u32,
+    },
+}
+
+impl TraceEventKind {
+    /// Stable kind name used by both exporters.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::MapBlock { .. } => "MapBlock",
+            Self::CacheFlush { .. } => "CacheFlush",
+            Self::Shuffle { .. } => "Shuffle",
+            Self::Reduce { .. } => "Reduce",
+            Self::Checkpoint { .. } => "Checkpoint",
+            Self::Kill { .. } => "Kill",
+            Self::KillIgnored { .. } => "KillIgnored",
+            Self::KillDropped { .. } => "KillDropped",
+            Self::Rollback { .. } => "Rollback",
+            Self::Replay { .. } => "Replay",
+            Self::Evacuate { .. } => "Evacuate",
+            Self::EvacFallback { .. } => "EvacFallback",
+            Self::Migrate { .. } => "Migrate",
+            Self::FaultSummary { .. } => "FaultSummary",
+        }
+    }
+
+    /// Append this kind's fields as `,"k":v` JSON pairs.
+    fn write_fields(&self, out: &mut String) {
+        match self {
+            Self::MapBlock { items, emitted, exec_node, epoch } => {
+                let _ = write!(
+                    out,
+                    ",\"items\":{items},\"emitted\":{emitted},\"exec_node\":{exec_node},\"epoch\":{epoch}"
+                );
+            }
+            Self::CacheFlush { entries, bytes } => {
+                let _ = write!(out, ",\"entries\":{entries},\"bytes\":{bytes}");
+            }
+            Self::Shuffle { dst, bytes, pairs } => {
+                let _ = write!(out, ",\"dst\":{dst},\"bytes\":{bytes},\"pairs\":{pairs}");
+            }
+            Self::Reduce { from, pairs } => {
+                let _ = write!(out, ",\"from\":{from},\"pairs\":{pairs}");
+            }
+            Self::Checkpoint { commit, bytes } => {
+                let _ = write!(out, ",\"commit\":{commit},\"bytes\":{bytes}");
+            }
+            Self::Kill { victim, restore_bytes } => {
+                let _ = write!(out, ",\"victim\":{victim},\"restore_bytes\":{restore_bytes}");
+            }
+            Self::KillIgnored { victim } => {
+                let _ = write!(out, ",\"victim\":{victim}");
+            }
+            Self::KillDropped { victim, trigger } => {
+                let _ = write!(out, ",\"victim\":{victim},\"trigger\":\"");
+                escape_into(trigger, out);
+                out.push('"');
+            }
+            Self::Rollback { block, shard } => {
+                let _ = write!(out, ",\"block\":{block},\"shard\":{shard}");
+            }
+            Self::Replay { block, exec_node } => {
+                let _ = write!(out, ",\"block\":{block},\"exec_node\":{exec_node}");
+            }
+            Self::Evacuate { victims, bytes } => {
+                out.push_str(",\"victims\":");
+                write_usize_list(victims, out);
+                let _ = write!(out, ",\"bytes\":{bytes}");
+            }
+            Self::EvacFallback { victims } => {
+                out.push_str(",\"victims\":");
+                write_usize_list(victims, out);
+            }
+            Self::Migrate { src, dst, bytes } => {
+                let _ = write!(out, ",\"src\":{src},\"dst\":{dst},\"bytes\":{bytes}");
+            }
+            Self::FaultSummary {
+                checkpoints,
+                checkpoint_bytes,
+                failures,
+                ignored,
+                reassigned,
+                replayed,
+                restore_bytes,
+                evacuations,
+                evac_bytes,
+                max_epoch,
+            } => {
+                let _ = write!(
+                    out,
+                    ",\"checkpoints\":{checkpoints},\"checkpoint_bytes\":{checkpoint_bytes},\
+                     \"failures\":{failures},\"ignored\":{ignored},\"reassigned\":{reassigned},\
+                     \"replayed\":{replayed},\"restore_bytes\":{restore_bytes},\
+                     \"evacuations\":{evacuations},\"evac_bytes\":{evac_bytes},\
+                     \"max_epoch\":{max_epoch}"
+                );
+            }
+        }
+    }
+}
+
+/// One trace event: a typed payload stamped with where it happened
+/// (node, virtual worker), when in the phase plan (`phase`, `phase_ix`
+/// for repeated phases like tree-reduce rounds), and — after
+/// [`TraceBuf::stamp_phases`] — the virtual-time interval. The threaded
+/// backend additionally stamps real wall-clock offsets (ns since the
+/// map phase started).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceEvent {
+    /// Sort key restoring canonical order (see module docs).
+    pub seq: u64,
+    /// Home node of the event.
+    pub node: usize,
+    /// Virtual worker, when the event is worker-scoped.
+    pub worker: Option<usize>,
+    /// Virtual-time phase label this event belongs to.
+    pub phase: &'static str,
+    /// Occurrence index for repeated phase labels (tree-reduce rounds).
+    pub phase_ix: u16,
+    /// Virtual-time interval (seconds since job start), stamped post-hoc.
+    pub vt: Option<(f64, f64)>,
+    /// Real wall-clock interval (ns offsets), threaded backend only.
+    pub wall_ns: Option<(u64, u64)>,
+    /// Typed payload.
+    pub kind: TraceEventKind,
+}
+
+impl TraceEvent {
+    /// New event with no sequence key, phase occurrence 0, no stamps.
+    pub fn new(
+        node: usize,
+        worker: Option<usize>,
+        phase: &'static str,
+        kind: TraceEventKind,
+    ) -> Self {
+        Self { seq: 0, node, worker, phase, phase_ix: 0, vt: None, wall_ns: None, kind }
+    }
+
+    /// Set the phase occurrence index (e.g. the tree-reduce round).
+    pub fn at_phase_ix(mut self, ix: u16) -> Self {
+        self.phase_ix = ix;
+        self
+    }
+
+    /// Attach a real wall-clock interval (ns offsets from phase start).
+    pub fn with_wall(mut self, start_ns: u64, end_ns: u64) -> Self {
+        self.wall_ns = Some((start_ns, end_ns));
+        self
+    }
+
+    /// Render the legacy free-form metrics note this event replaces, or
+    /// `None` for kinds that never had one. Byte-identical to the strings
+    /// the fault engine used to format inline — the note-matching tests
+    /// in `rust/tests/fault.rs` gate this.
+    pub fn render_note(&self, label: &str) -> Option<String> {
+        match &self.kind {
+            TraceEventKind::KillIgnored { victim } => {
+                Some(format!("fault[{label}]: ignored kill of node {victim}"))
+            }
+            TraceEventKind::KillDropped { victim, trigger } => Some(format!(
+                "fault[{label}]: kill of node {victim} never fired ({trigger})"
+            )),
+            TraceEventKind::EvacFallback { victims } => Some(format!(
+                "fault[{label}]: target cannot re-home keys; hot-standby restore kept for nodes {victims:?}"
+            )),
+            TraceEventKind::FaultSummary {
+                checkpoints,
+                checkpoint_bytes,
+                failures,
+                ignored,
+                reassigned,
+                replayed,
+                restore_bytes,
+                evacuations,
+                evac_bytes,
+                max_epoch,
+            } => Some(format!(
+                "fault[{label}]: checkpoints={checkpoints} ckpt_bytes={checkpoint_bytes} \
+                 failures={failures} ignored={ignored} reassigned={reassigned} \
+                 replayed={replayed} restore_bytes={restore_bytes} evacuations={evacuations} \
+                 evac_bytes={evac_bytes} max_epoch={max_epoch}"
+            )),
+            _ => None,
+        }
+    }
+
+    /// One canonical JSONL line: schedule-invariant fields only (no seq,
+    /// no virtual/wall stamps), fixed key order.
+    fn write_canonical(&self, job: &str, out: &mut String) {
+        out.push_str("{\"job\":\"");
+        escape_into(job, out);
+        out.push_str("\",\"ev\":\"");
+        out.push_str(self.kind.name());
+        let _ = write!(out, "\",\"node\":{}", self.node);
+        match self.worker {
+            Some(w) => {
+                let _ = write!(out, ",\"worker\":{w}");
+            }
+            None => out.push_str(",\"worker\":null"),
+        }
+        out.push_str(",\"phase\":\"");
+        escape_into(self.phase, out);
+        let _ = write!(out, "\",\"phase_ix\":{}", self.phase_ix);
+        self.kind.write_fields(out);
+        out.push_str("}\n");
+    }
+
+    /// One Chrome trace-event object (`ph:"X"` complete event; `ts`/`dur`
+    /// in microseconds of virtual time; wall stamps in `args`).
+    fn write_chrome(&self, job: &str, out: &mut String) {
+        let (start, end) = self.vt.unwrap_or((0.0, 0.0));
+        let ts_us = start * 1e6;
+        let dur_us = (end - start).max(0.0) * 1e6;
+        out.push_str("{\"name\":\"");
+        out.push_str(self.kind.name());
+        out.push_str("\",\"cat\":\"");
+        escape_into(job, out);
+        let _ = write!(
+            out,
+            "\",\"ph\":\"X\",\"pid\":{},\"tid\":{},\"ts\":{ts_us},\"dur\":{dur_us}",
+            self.node,
+            self.worker.unwrap_or(0)
+        );
+        out.push_str(",\"args\":{\"phase\":\"");
+        escape_into(self.phase, out);
+        let _ = write!(out, "\",\"phase_ix\":{},\"seq\":{}", self.phase_ix, self.seq);
+        self.kind.write_fields(out);
+        if let Some((ws, we)) = self.wall_ns {
+            let _ = write!(out, ",\"wall_start_ns\":{ws},\"wall_end_ns\":{we}");
+        }
+        out.push_str("}}");
+    }
+}
+
+/// Sort key for a map-phase worker event: overflow flush `flush` of
+/// block `block` (block = `node * workers + worker`).
+pub fn map_seq(block: usize, flush: u32) -> u64 {
+    ((block as u64) << 32) | flush as u64
+}
+
+/// Sort key for a map block's completion event — above every flush of
+/// the same block, below every event of later blocks.
+pub fn block_done_seq(block: usize) -> u64 {
+    ((block as u64) << 32) | u64::from(u32::MAX)
+}
+
+/// Per-job event buffer an engine fills as it runs. All recording is a
+/// no-op when tracing is disabled, so the hot paths pay one branch.
+#[derive(Debug, Default)]
+pub struct TraceBuf {
+    enabled: bool,
+    events: Vec<TraceEvent>,
+    next_seq: u64,
+}
+
+impl TraceBuf {
+    /// New buffer; `enabled = false` makes every method a no-op.
+    pub fn new(enabled: bool) -> Self {
+        Self { enabled, events: Vec::new(), next_seq: 0 }
+    }
+
+    /// Whether events are being recorded.
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Record an event with the next serial sequence key (engines whose
+    /// natural emission order is already canonical).
+    pub fn push(&mut self, mut ev: TraceEvent) {
+        if !self.enabled {
+            return;
+        }
+        ev.seq = self.next_seq;
+        self.next_seq += 1;
+        self.events.push(ev);
+    }
+
+    /// Record an event under an explicit sort key (threaded map phase).
+    pub fn push_keyed(&mut self, seq: u64, mut ev: TraceEvent) {
+        if !self.enabled {
+            return;
+        }
+        ev.seq = seq;
+        self.events.push(ev);
+    }
+
+    /// Absorb worker-collected events that already carry their keys.
+    pub fn extend_keyed(&mut self, evs: Vec<TraceEvent>) {
+        if !self.enabled {
+            return;
+        }
+        self.events.extend(evs);
+    }
+
+    /// Pin the serial counter above every map-phase key, so post-map
+    /// events sort after all `total_blocks` blocks' worker events.
+    pub fn seal_map(&mut self, total_blocks: usize) {
+        if !self.enabled {
+            return;
+        }
+        self.next_seq = self.next_seq.max((total_blocks as u64) << 32);
+    }
+
+    /// Stamp every event's virtual-time interval from the finished phase
+    /// plan: event `(phase, phase_ix)` maps to the cumulative interval of
+    /// the matching [`VirtualTime`] phase occurrence; unmatched labels
+    /// fall back to the whole-job interval.
+    pub fn stamp_phases(&mut self, vt: &VirtualTime) {
+        if !self.enabled {
+            return;
+        }
+        let mut spans: Vec<(&str, u16, (f64, f64))> = Vec::new();
+        let mut occ: BTreeMap<&str, u16> = BTreeMap::new();
+        let mut t = 0.0f64;
+        for p in vt.phases() {
+            let ix = occ.entry(p.label).or_insert(0);
+            spans.push((p.label, *ix, (t, t + p.seconds)));
+            *ix += 1;
+            t += p.seconds;
+        }
+        let makespan = t;
+        for ev in &mut self.events {
+            let span = spans
+                .iter()
+                .find(|(l, ix, _)| *l == ev.phase && *ix == ev.phase_ix)
+                .map(|&(_, _, s)| s);
+            ev.vt = Some(span.unwrap_or((0.0, makespan)));
+        }
+    }
+
+    /// Number of recorded events.
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    /// True when nothing was recorded (always true when disabled).
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+}
+
+/// One job's absorbed, canonically-ordered event log.
+#[derive(Debug, Clone)]
+pub struct JobTrace {
+    /// The job label (`RunStats::label`).
+    pub label: String,
+    /// Events in canonical order.
+    pub events: Vec<TraceEvent>,
+}
+
+/// Collects every job's trace over a cluster's lifetime and exports the
+/// canonical JSONL and Chrome views. Owned by `Cluster` behind a
+/// `RefCell`; disabled collectors absorb nothing.
+#[derive(Debug, Default)]
+pub struct TraceCollector {
+    enabled: bool,
+    jobs: Vec<JobTrace>,
+}
+
+impl TraceCollector {
+    /// New collector; disabled collectors ignore every absorb.
+    pub fn new(enabled: bool) -> Self {
+        Self { enabled, jobs: Vec::new() }
+    }
+
+    /// Whether tracing is active.
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Absorb one finished job's buffer, sorting into canonical order
+    /// (stable, so serially-keyed engines keep their emission order).
+    pub fn absorb_job(&mut self, label: &str, buf: TraceBuf) {
+        if !self.enabled || !buf.enabled {
+            return;
+        }
+        let mut events = buf.events;
+        events.sort_by_key(|e| e.seq);
+        self.jobs.push(JobTrace { label: label.to_string(), events });
+    }
+
+    /// All absorbed jobs, in run order.
+    pub fn jobs(&self) -> &[JobTrace] {
+        &self.jobs
+    }
+
+    /// Total events across all jobs.
+    pub fn event_count(&self) -> usize {
+        self.jobs.iter().map(|j| j.events.len()).sum()
+    }
+
+    /// The canonical JSONL export: one line per event, schedule-invariant
+    /// fields only. For failure-free seeded single-stage runs this string
+    /// is byte-identical across the simulated engines and any
+    /// `threaded:N` — the equivalence harness gates it.
+    pub fn canonical_jsonl(&self) -> String {
+        let mut out = String::new();
+        for job in &self.jobs {
+            for ev in &job.events {
+                ev.write_canonical(&job.label, &mut out);
+            }
+        }
+        out
+    }
+
+    /// The Chrome trace-event JSON export (`chrome://tracing`,
+    /// `ui.perfetto.dev`): complete events on a virtual-time axis
+    /// (microseconds), node as `pid`, virtual worker as `tid`, with wall
+    /// stamps and payload fields under `args`.
+    pub fn chrome_json(&self) -> String {
+        let mut out = String::from("{\"traceEvents\":[");
+        let mut first = true;
+        for job in &self.jobs {
+            for ev in &job.events {
+                if !first {
+                    out.push(',');
+                }
+                out.push('\n');
+                first = false;
+                ev.write_chrome(&job.label, &mut out);
+            }
+        }
+        out.push_str("\n]}\n");
+        out
+    }
+
+    /// Write both exports: canonical JSONL at `path`, Chrome JSON at
+    /// `<path>.chrome.json`.
+    pub fn export<P: AsRef<Path>>(&self, path: P) -> io::Result<()> {
+        let path = path.as_ref();
+        std::fs::write(path, self.canonical_jsonl())?;
+        let mut chrome = path.as_os_str().to_os_string();
+        chrome.push(".chrome.json");
+        std::fs::write(chrome, self.chrome_json())
+    }
+}
+
+/// Per-node counter registry for one run. Names are dotted lowercase
+/// (`cache.flushes`, `pool.queue_peak`). `finish` folds per-node values
+/// into the global totals and returns both sorted by name, ready for
+/// `RunStats::counters` / `node_counters`.
+#[derive(Debug)]
+pub struct Counters {
+    global: BTreeMap<String, u64>,
+    per_node: Vec<BTreeMap<String, u64>>,
+}
+
+impl Counters {
+    /// Fresh registry for a `nodes`-node run.
+    pub fn new(nodes: usize) -> Self {
+        Self { global: BTreeMap::new(), per_node: (0..nodes).map(|_| BTreeMap::new()).collect() }
+    }
+
+    /// Add to a run-global counter.
+    pub fn add(&mut self, name: &str, v: u64) {
+        *self.global.entry(name.to_string()).or_insert(0) += v;
+    }
+
+    /// Take the max of a run-global counter (peaks).
+    pub fn max(&mut self, name: &str, v: u64) {
+        let e = self.global.entry(name.to_string()).or_insert(0);
+        *e = (*e).max(v);
+    }
+
+    /// Add to one node's counter.
+    pub fn add_node(&mut self, node: usize, name: &str, v: u64) {
+        *self.per_node[node].entry(name.to_string()).or_insert(0) += v;
+    }
+
+    /// Take the max of one node's counter (peaks).
+    pub fn max_node(&mut self, node: usize, name: &str, v: u64) {
+        let e = self.per_node[node].entry(name.to_string()).or_insert(0);
+        *e = (*e).max(v);
+    }
+
+    /// Finish the run: per-node counters sum into the global map (so
+    /// `counters` always carries a total for every per-node name), both
+    /// returned sorted by name.
+    pub fn finish(mut self) -> (Vec<(String, u64)>, Vec<Vec<(String, u64)>>) {
+        for node in &self.per_node {
+            for (name, v) in node {
+                *self.global.entry(name.clone()).or_insert(0) += v;
+            }
+        }
+        let global = self.global.into_iter().collect();
+        let per_node =
+            self.per_node.into_iter().map(|m| m.into_iter().collect()).collect();
+        (global, per_node)
+    }
+}
+
+/// Minimal JSON string escaping (quotes, backslashes, control chars).
+fn escape_into(s: &str, out: &mut String) {
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+}
+
+/// `[1,2,3]` without allocation detours.
+fn write_usize_list(xs: &[usize], out: &mut String) {
+    out.push('[');
+    for (i, x) in xs.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        let _ = write!(out, "{x}");
+    }
+    out.push(']');
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(node: usize, kind: TraceEventKind) -> TraceEvent {
+        TraceEvent::new(node, Some(0), "map+local-reduce", kind)
+    }
+
+    #[test]
+    fn disabled_buf_records_nothing() {
+        let mut buf = TraceBuf::new(false);
+        buf.push(ev(0, TraceEventKind::MapBlock { items: 1, emitted: 1, exec_node: 0, epoch: 1 }));
+        buf.push_keyed(42, ev(0, TraceEventKind::CacheFlush { entries: 4, bytes: 128 }));
+        buf.seal_map(16);
+        assert!(buf.is_empty());
+        let mut col = TraceCollector::new(false);
+        col.absorb_job("job", buf);
+        assert_eq!(col.event_count(), 0);
+        assert!(col.canonical_jsonl().is_empty());
+    }
+
+    #[test]
+    fn keyed_events_sort_into_canonical_order() {
+        // Simulated order for 2 blocks: flush(b0), done(b0), done(b1),
+        // then a serial post-map event. Push them shuffled with keys.
+        let mut buf = TraceBuf::new(true);
+        buf.push_keyed(block_done_seq(1), {
+            let mut e = ev(0, TraceEventKind::MapBlock { items: 2, emitted: 2, exec_node: 0, epoch: 1 });
+            e.worker = Some(1);
+            e
+        });
+        buf.seal_map(2);
+        buf.push(TraceEvent::new(
+            0,
+            None,
+            "shuffle+async-reduce",
+            TraceEventKind::Reduce { from: 0, pairs: 3 },
+        ));
+        buf.push_keyed(
+            map_seq(0, 0),
+            ev(0, TraceEventKind::CacheFlush { entries: 4, bytes: 64 }),
+        );
+        buf.push_keyed(
+            block_done_seq(0),
+            ev(0, TraceEventKind::MapBlock { items: 5, emitted: 5, exec_node: 0, epoch: 1 }),
+        );
+        let mut col = TraceCollector::new(true);
+        col.absorb_job("j", buf);
+        let kinds: Vec<&str> =
+            col.jobs()[0].events.iter().map(|e| e.kind.name()).collect();
+        assert_eq!(kinds, vec!["CacheFlush", "MapBlock", "MapBlock", "Reduce"]);
+        // Post-map serial key sits above every map key.
+        assert!(col.jobs()[0].events[3].seq > block_done_seq(1));
+    }
+
+    #[test]
+    fn canonical_jsonl_excludes_time_stamps() {
+        let mut buf = TraceBuf::new(true);
+        buf.push(
+            ev(1, TraceEventKind::Shuffle { dst: 0, bytes: 100, pairs: 9 }).with_wall(5, 10),
+        );
+        let mut vt = VirtualTime::new();
+        vt.fixed_phase("map+local-reduce", 2.0);
+        buf.stamp_phases(&vt);
+        let mut col = TraceCollector::new(true);
+        col.absorb_job("wc", buf);
+        let line = col.canonical_jsonl();
+        assert_eq!(
+            line,
+            "{\"job\":\"wc\",\"ev\":\"Shuffle\",\"node\":1,\"worker\":0,\
+             \"phase\":\"map+local-reduce\",\"phase_ix\":0,\"dst\":0,\"bytes\":100,\"pairs\":9}\n"
+        );
+        // The chrome view carries both stamps.
+        let chrome = col.chrome_json();
+        assert!(chrome.contains("\"wall_start_ns\":5"));
+        assert!(chrome.contains("\"ts\":0"));
+    }
+
+    #[test]
+    fn stamp_phases_matches_occurrences_and_falls_back() {
+        let mut buf = TraceBuf::new(true);
+        buf.push(
+            TraceEvent::new(0, None, "tree-reduce-round", TraceEventKind::Reduce { from: 1, pairs: 2 })
+                .at_phase_ix(1),
+        );
+        buf.push(TraceEvent::new(
+            0,
+            None,
+            "no-such-phase",
+            TraceEventKind::Reduce { from: 2, pairs: 2 },
+        ));
+        let mut vt = VirtualTime::new();
+        vt.fixed_phase("tree-reduce-round", 1.0);
+        vt.fixed_phase("tree-reduce-round", 3.0);
+        buf.stamp_phases(&vt);
+        let mut col = TraceCollector::new(true);
+        col.absorb_job("j", buf);
+        let evs = &col.jobs()[0].events;
+        assert_eq!(evs[0].vt, Some((1.0, 4.0)), "second round spans [1,4)");
+        assert_eq!(evs[1].vt, Some((0.0, 4.0)), "unknown label falls back to whole job");
+    }
+
+    #[test]
+    fn empty_and_single_event_exports_round_trip() {
+        // Empty collector: no JSONL lines, valid (empty) chrome array.
+        let col = TraceCollector::new(true);
+        assert_eq!(col.canonical_jsonl(), "");
+        let chrome = col.chrome_json();
+        assert!(chrome.starts_with("{\"traceEvents\":["));
+        assert!(chrome.trim_end().ends_with("]}"));
+
+        // Single event exports to exactly one line / one object.
+        let mut buf = TraceBuf::new(true);
+        buf.push(ev(0, TraceEventKind::Checkpoint { commit: 4, bytes: 2048 }));
+        let mut col = TraceCollector::new(true);
+        col.absorb_job("solo", buf);
+        let jsonl = col.canonical_jsonl();
+        assert_eq!(jsonl.lines().count(), 1);
+        assert!(jsonl.contains("\"ev\":\"Checkpoint\""));
+        assert!(jsonl.contains("\"commit\":4"));
+        let chrome = col.chrome_json();
+        assert_eq!(chrome.matches("\"name\":\"Checkpoint\"").count(), 1);
+    }
+
+    #[test]
+    fn render_note_reproduces_legacy_fault_strings() {
+        let label = "wordcount.mr";
+        let e = ev(2, TraceEventKind::KillIgnored { victim: 0 });
+        assert_eq!(
+            e.render_note(label).unwrap(),
+            "fault[wordcount.mr]: ignored kill of node 0"
+        );
+        let e = ev(2, TraceEventKind::KillDropped { victim: 3, trigger: "AtBlock(9)".into() });
+        assert_eq!(
+            e.render_note(label).unwrap(),
+            "fault[wordcount.mr]: kill of node 3 never fired (AtBlock(9))"
+        );
+        let e = ev(0, TraceEventKind::EvacFallback { victims: vec![1, 2] });
+        assert_eq!(
+            e.render_note(label).unwrap(),
+            "fault[wordcount.mr]: target cannot re-home keys; \
+             hot-standby restore kept for nodes [1, 2]"
+        );
+        let e = ev(
+            0,
+            TraceEventKind::FaultSummary {
+                checkpoints: 3,
+                checkpoint_bytes: 400,
+                failures: 1,
+                ignored: 0,
+                reassigned: 2,
+                replayed: 5,
+                restore_bytes: 128,
+                evacuations: 1,
+                evac_bytes: 64,
+                max_epoch: 2,
+            },
+        );
+        assert_eq!(
+            e.render_note(label).unwrap(),
+            "fault[wordcount.mr]: checkpoints=3 ckpt_bytes=400 failures=1 ignored=0 \
+             reassigned=2 replayed=5 restore_bytes=128 evacuations=1 evac_bytes=64 max_epoch=2"
+        );
+        // Non-fault kinds have no note form.
+        assert!(ev(0, TraceEventKind::Reduce { from: 0, pairs: 1 }).render_note(label).is_none());
+    }
+
+    #[test]
+    fn counters_fold_per_node_into_global() {
+        let mut c = Counters::new(2);
+        c.add_node(0, "cache.flushes", 3);
+        c.add_node(1, "cache.flushes", 2);
+        c.max_node(1, "cache.peak_bytes", 100);
+        c.max_node(1, "cache.peak_bytes", 40); // max keeps 100
+        c.add("pool.queue_peak", 0);
+        c.max("pool.queue_peak", 7);
+        let (global, per_node) = c.finish();
+        assert_eq!(
+            global,
+            vec![
+                ("cache.flushes".to_string(), 5),
+                ("cache.peak_bytes".to_string(), 100),
+                ("pool.queue_peak".to_string(), 7),
+            ]
+        );
+        assert_eq!(per_node[0], vec![("cache.flushes".to_string(), 3)]);
+        assert_eq!(
+            per_node[1],
+            vec![("cache.flushes".to_string(), 2), ("cache.peak_bytes".to_string(), 100)]
+        );
+    }
+
+    #[test]
+    fn export_writes_both_files() {
+        let dir = std::env::temp_dir().join("blaze_trace_test_export");
+        let _ = std::fs::create_dir_all(&dir);
+        let path = dir.join("run.trace.jsonl");
+        let mut buf = TraceBuf::new(true);
+        buf.push(ev(0, TraceEventKind::Reduce { from: 1, pairs: 8 }));
+        let mut col = TraceCollector::new(true);
+        col.absorb_job("j", buf);
+        col.export(&path).expect("export writes");
+        let jsonl = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(jsonl, col.canonical_jsonl());
+        let chrome_path = format!("{}.chrome.json", path.display());
+        let chrome = std::fs::read_to_string(&chrome_path).unwrap();
+        assert_eq!(chrome, col.chrome_json());
+        let _ = std::fs::remove_file(&path);
+        let _ = std::fs::remove_file(&chrome_path);
+    }
+
+    #[test]
+    fn escaping_handles_quotes_and_control_chars() {
+        let mut buf = TraceBuf::new(true);
+        buf.push(ev(
+            0,
+            TraceEventKind::KillDropped { victim: 1, trigger: "At\"Time\"(0.5)\n".into() },
+        ));
+        let mut col = TraceCollector::new(true);
+        col.absorb_job("a\\b", buf);
+        let line = col.canonical_jsonl();
+        assert!(line.contains("\"job\":\"a\\\\b\""));
+        assert!(line.contains("At\\\"Time\\\"(0.5)\\n"));
+    }
+}

@@ -269,6 +269,94 @@ fn kmeans_step_byte_identical_across_engines_and_policies() {
     }
 }
 
+// ---- Trace determinism (structured event log gate) ---------------------
+
+/// Failure-free seeded runs must produce **byte-identical** canonical
+/// event logs (virtual-time order, measured durations excluded) across
+/// the simulated engine and the threaded backend at 1/2/4 threads. The
+/// gate covers the two single-stage shapes where block identity is
+/// pinned: π on the dense small-key path, and a k-means assignment step
+/// on the hash eager path with a tiny cache capacity so overflow flushes
+/// actually occur at every backend. (Chained jobs are compared
+/// result-wise above; their traces concatenate per-job logs and are
+/// covered transitively.)
+#[test]
+fn trace_logs_byte_identical_across_backends() {
+    let backends = [
+        ("simulated", Backend::Simulated),
+        ("threaded1", Backend::Threaded(1)),
+        ("threaded2", Backend::Threaded(2)),
+        ("threaded4", Backend::Threaded(4)),
+    ];
+    let points = gen_points(0x7ACE, 120);
+    for &(nodes, workers) in SHAPES {
+        // π: dense Vec target → the small-key tree-reduce path.
+        let mut reference: Option<(&str, String)> = None;
+        for (name, backend) in backends {
+            let cfg = ClusterConfig::sized(nodes, workers)
+                .with_backend(backend)
+                .with_seed(0x7ACE_0001)
+                .with_trace(true);
+            let c = Cluster::new(cfg.clone());
+            let r = DistRange::new(&c, 0, 300);
+            let mut hits = vec![0u64; 6];
+            mapreduce_range(
+                &r,
+                |v, emit| {
+                    let (x, y) = blaze::util::random::uniform2();
+                    emit((v % 6) as usize, u64::from(x * x + y * y <= 1.0));
+                },
+                "sum",
+                &mut hits,
+            );
+            let log = c.trace().canonical_jsonl();
+            assert!(!log.is_empty(), "pi trace empty under {name}");
+            match &reference {
+                None => reference = Some((name, log)),
+                Some((ref_name, want)) => assert_eq!(
+                    want, &log,
+                    "pi trace: {name} diverged from {ref_name} (shape {nodes}x{workers})"
+                ),
+            }
+        }
+        // k-means step: hash target → the eager path. Cache capacity 4
+        // forces overflow flushes (the default 64Ki cap would record none
+        // at these sizes, leaving CacheFlush untested).
+        let mut reference: Option<(&str, String)> = None;
+        for (name, backend) in backends {
+            let mut cfg = ClusterConfig::sized(nodes, workers)
+                .with_backend(backend)
+                .with_seed(0x7ACE_0002)
+                .with_trace(true);
+            cfg.thread_cache_entries = 4;
+            let c = Cluster::new(cfg.clone());
+            let dv = DistVector::from_vec(&c, points.clone());
+            let mut stats: DistHashMap<u64, Stat> = DistHashMap::new(&c);
+            mapreduce(
+                &dv,
+                |_, p: &(i64, i64), emit| {
+                    emit((p.0.unsigned_abs() % 4) as u64, (1u64, (p.0, p.1)));
+                },
+                Reducer::custom_fn(add_stat),
+                &mut stats,
+            );
+            let log = c.trace().canonical_jsonl();
+            assert!(!log.is_empty(), "kmeans trace empty under {name}");
+            assert!(
+                log.contains("\"ev\":\"CacheFlush\""),
+                "cap-4 cache must overflow under {name}"
+            );
+            match &reference {
+                None => reference = Some((name, log)),
+                Some((ref_name, want)) => assert_eq!(
+                    want, &log,
+                    "kmeans trace: {name} diverged from {ref_name} (shape {nodes}x{workers})"
+                ),
+            }
+        }
+    }
+}
+
 // ---- Harness self-check ------------------------------------------------
 
 #[test]

@@ -336,6 +336,107 @@ fn evacuation_falls_back_for_block_addressed_targets() {
     );
 }
 
+// ---- Structured fault timeline (trace events) --------------------------
+
+/// Run wordcount on a trace-enabled cluster and return the event-kind
+/// names of the `wordcount.mr` job, in canonical order, plus the cluster.
+fn traced_wordcount(fault: FaultConfig) -> (Vec<&'static str>, Cluster) {
+    let c = Cluster::new(
+        ClusterConfig::sized(NODES, WORKERS)
+            .with_engine(EngineKind::Eager)
+            .with_fault(fault)
+            .with_trace(true),
+    );
+    let lines = blaze::data::corpus_lines(600, 8, 7);
+    let dv = DistVector::from_vec(&c, lines);
+    let _ = wordcount(&c, &dv);
+    let kinds: Vec<&'static str> = {
+        let trace = c.trace();
+        let job = trace
+            .jobs()
+            .iter()
+            .find(|j| j.label == "wordcount.mr")
+            .expect("wordcount.mr trace recorded");
+        job.events.iter().map(|e| e.kind.name()).collect()
+    };
+    (kinds, c)
+}
+
+#[test]
+fn fault_trace_orders_kill_rollback_replay() {
+    // Kill at commit 4 with checkpoints every 3: the post-checkpoint
+    // commit must roll back and replay. (A kill at a checkpoint boundary
+    // would roll back nothing and leave the timeline untested.)
+    let (kinds, _c) = traced_wordcount(ckpt().with_plan(FailurePlan::kill_at_block(1, 4)));
+    let kill = kinds.iter().position(|k| *k == "Kill").expect("Kill event");
+    let rollbacks: Vec<usize> =
+        (0..kinds.len()).filter(|&i| kinds[i] == "Rollback").collect();
+    let replays: Vec<usize> = (0..kinds.len()).filter(|&i| kinds[i] == "Replay").collect();
+    assert!(!rollbacks.is_empty(), "post-checkpoint commit must roll back: {kinds:?}");
+    assert!(!replays.is_empty(), "rolled-back blocks must replay: {kinds:?}");
+    assert!(rollbacks.iter().all(|&i| i > kill), "rollbacks follow the kill");
+    assert!(
+        replays.iter().min() > rollbacks.iter().max(),
+        "replays run after every rollback: {kinds:?}"
+    );
+    assert!(!kinds.contains(&"Evacuate"), "hot-standby run must not evacuate");
+    assert_eq!(kinds.last(), Some(&"FaultSummary"), "summary closes the job");
+    assert!(kinds.contains(&"Checkpoint"), "epoch-0 + cadence checkpoints recorded");
+}
+
+#[test]
+fn fault_trace_orders_evacuation_after_replays_drain() {
+    // Evacuation is deferred: the victim's rollback replays must drain
+    // before its key space re-homes, so the timeline reads
+    // Kill -> Rollback(s) -> Replay(s) -> Migrate(s) -> Evacuate.
+    let (kinds, _c) = traced_wordcount(
+        ckpt().with_plan(FailurePlan::kill_at_block(1, 4)).with_evacuation(true),
+    );
+    let kill = kinds.iter().position(|k| *k == "Kill").expect("Kill event");
+    let evac = kinds.iter().position(|k| *k == "Evacuate").expect("Evacuate event");
+    let migrates: Vec<usize> = (0..kinds.len()).filter(|&i| kinds[i] == "Migrate").collect();
+    let replays: Vec<usize> = (0..kinds.len()).filter(|&i| kinds[i] == "Replay").collect();
+    assert!(evac > kill, "evacuation follows the kill");
+    assert!(!replays.is_empty(), "rolled-back blocks must replay");
+    assert!(
+        replays.iter().all(|&i| kill < i && i < evac),
+        "replays drain between the kill and the evacuation: {kinds:?}"
+    );
+    assert!(
+        migrates.iter().all(|&i| kill < i && i < evac),
+        "migrations immediately precede the evacuate event"
+    );
+    assert_eq!(kinds.last(), Some(&"FaultSummary"));
+}
+
+#[test]
+fn fault_summary_event_renders_the_recorded_note() {
+    // The typed FaultSummary event is the source of truth; the legacy
+    // free-form note is its rendered view, byte-for-byte.
+    let (_kinds, c) = traced_wordcount(ckpt().with_plan(FailurePlan::kill_at_block(1, 4)));
+    let rendered = {
+        let trace = c.trace();
+        let job = trace
+            .jobs()
+            .iter()
+            .find(|j| j.label == "wordcount.mr")
+            .expect("wordcount.mr trace recorded");
+        let summary = job
+            .events
+            .iter()
+            .find(|e| e.kind.name() == "FaultSummary")
+            .expect("FaultSummary event");
+        summary.render_note("wordcount.mr").expect("summary renders a note")
+    };
+    let m = c.metrics();
+    let note = m
+        .notes()
+        .iter()
+        .find(|n| n.starts_with("fault[wordcount.mr]"))
+        .expect("fault note recorded");
+    assert_eq!(&rendered, note, "rendered summary must equal the legacy note");
+}
+
 // ---- Conventional-mode serialization parity ---------------------------
 
 #[test]

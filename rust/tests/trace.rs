@@ -1,0 +1,146 @@
+//! Trace subsystem integration: exporter round-trips on empty and
+//! single-event collectors, gating semantics, and end-to-end collection
+//! plus file export on a live cluster. The cross-backend byte-identity
+//! gate lives in `rust/tests/equivalence.rs`; the fault timelines in
+//! `rust/tests/fault.rs`.
+
+use blaze::containers::DistRange;
+use blaze::coordinator::cluster::{Cluster, ClusterConfig};
+use blaze::mapreduce::mapreduce_range_labeled;
+use blaze::trace::{TraceBuf, TraceCollector, TraceEvent, TraceEventKind};
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("blaze-trace-test-{}-{name}", std::process::id()))
+}
+
+fn chrome_sibling(path: &std::path::Path) -> std::path::PathBuf {
+    std::path::PathBuf::from(format!("{}.chrome.json", path.display()))
+}
+
+fn read_and_remove(path: &std::path::Path) -> String {
+    let s = std::fs::read_to_string(path).expect("export file readable");
+    let _ = std::fs::remove_file(path);
+    s
+}
+
+/// Count π-style hits over a small range on `c`, labeled `trace.pi`.
+fn run_small_job(c: &Cluster) -> u64 {
+    let samples = DistRange::new(c, 0, 400);
+    let mut count = vec![0u64; 1];
+    mapreduce_range_labeled(
+        "trace.pi",
+        &samples,
+        |i, emit| {
+            if i % 3 == 0 {
+                emit(0usize, 1u64);
+            }
+        },
+        "sum",
+        &mut count,
+    );
+    count[0]
+}
+
+// ---- Exporter round-trips ----------------------------------------------
+
+#[test]
+fn empty_collector_exports_empty_views() {
+    let col = TraceCollector::new(true);
+    assert_eq!(col.event_count(), 0);
+    assert_eq!(col.canonical_jsonl(), "");
+    let chrome = col.chrome_json();
+    assert!(chrome.starts_with("{\"traceEvents\":["), "chrome view is a traceEvents object");
+    assert!(chrome.trim_end().ends_with("]}"), "empty chrome view closes its array");
+
+    let path = tmp("empty.jsonl");
+    col.export(&path).expect("export of an empty collector succeeds");
+    assert_eq!(read_and_remove(&path), "", "empty JSONL file");
+    assert_eq!(read_and_remove(&chrome_sibling(&path)), chrome, "chrome file matches the view");
+}
+
+#[test]
+fn single_event_canonical_line_is_exact() {
+    let mut buf = TraceBuf::new(true);
+    buf.push(TraceEvent::new(
+        0,
+        Some(1),
+        "map",
+        TraceEventKind::MapBlock { items: 3, emitted: 2, exec_node: 0, epoch: 1 },
+    ));
+    let mut col = TraceCollector::new(true);
+    col.absorb_job("t.job", buf);
+    assert_eq!(col.event_count(), 1);
+    assert_eq!(
+        col.canonical_jsonl(),
+        "{\"job\":\"t.job\",\"ev\":\"MapBlock\",\"node\":0,\"worker\":1,\
+         \"phase\":\"map\",\"phase_ix\":0,\"items\":3,\"emitted\":2,\
+         \"exec_node\":0,\"epoch\":1}\n"
+    );
+
+    let path = tmp("single.jsonl");
+    col.export(&path).expect("export succeeds");
+    assert_eq!(read_and_remove(&path), col.canonical_jsonl(), "file round-trips the view");
+    let chrome = read_and_remove(&chrome_sibling(&path));
+    assert_eq!(chrome, col.chrome_json());
+    assert!(chrome.contains("MapBlock"), "chrome view names the event");
+}
+
+// ---- Gating ------------------------------------------------------------
+
+#[test]
+fn disabled_buffers_and_collectors_record_nothing() {
+    let ev = || {
+        TraceEvent::new(0, None, "map", TraceEventKind::Checkpoint { commit: 1, bytes: 10 })
+    };
+
+    // Disabled buffer: pushes are dropped before they reach a collector.
+    let mut buf = TraceBuf::new(false);
+    buf.push(ev());
+    assert!(buf.is_empty());
+    let mut col = TraceCollector::new(true);
+    col.absorb_job("t.job", buf);
+    assert_eq!(col.event_count(), 0);
+    assert!(col.jobs().is_empty());
+
+    // Disabled collector: enabled buffers are absorbed into nothing.
+    let mut buf = TraceBuf::new(true);
+    buf.push(ev());
+    assert_eq!(buf.len(), 1);
+    let mut col = TraceCollector::new(false);
+    col.absorb_job("t.job", buf);
+    assert_eq!(col.event_count(), 0);
+    assert!(col.jobs().is_empty());
+}
+
+#[test]
+fn untraced_cluster_collects_nothing() {
+    let c = Cluster::new(ClusterConfig::sized(2, 2).with_trace(false));
+    assert!(run_small_job(&c) > 0);
+    assert_eq!(c.trace().event_count(), 0);
+    assert!(c.trace().jobs().is_empty());
+}
+
+// ---- End-to-end on a live cluster --------------------------------------
+
+#[test]
+fn cluster_trace_round_trips_through_export() {
+    let c = Cluster::new(ClusterConfig::sized(2, 2).with_trace(true));
+    assert!(run_small_job(&c) > 0);
+
+    let canonical = c.trace().canonical_jsonl();
+    assert!(!canonical.is_empty(), "traced run must record events");
+    assert!(canonical.contains("\"job\":\"trace.pi\""), "events carry the job label");
+    for line in canonical.lines() {
+        assert!(
+            line.starts_with('{') && line.ends_with('}'),
+            "each JSONL line is one object: {line}"
+        );
+    }
+
+    let path = tmp("cluster.jsonl");
+    c.export_trace(&path).expect("cluster export succeeds");
+    assert_eq!(read_and_remove(&path), canonical, "JSONL file matches the in-memory view");
+    let chrome = read_and_remove(&chrome_sibling(&path));
+    assert!(chrome.starts_with("{\"traceEvents\":["));
+    assert!(chrome.contains("MapBlock"), "chrome view carries the map events");
+}
