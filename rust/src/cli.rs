@@ -5,7 +5,7 @@
 //!              [--backend simulated|threaded[:N]] [--scale S]
 //!              [--artifacts DIR] [--seed SEED]
 //!              [--fail-at NODE@BLOCK ...] [--checkpoint-every BLOCKS]
-//!              [--evacuate]
+//!              [--evacuate] [--transport-window BYTES]
 //! ```
 //!
 //! Tasks: `pi`, `wordcount`, `pagerank`, `kmeans`, `gmm`, `knn`, `all`.
@@ -18,6 +18,10 @@
 //! eager/small-key map+combine on N real OS threads ([`crate::exec`])
 //! with byte-identical results; the default (overridable via the
 //! `BLAZE_BACKEND` environment variable) is the simulated backend.
+//! `--transport-window BYTES` sets the shuffle backpressure window
+//! (simulated accounting *and* the threaded backend's real channel
+//! capacity — see [`crate::exec::transport`]); tiny windows force stall
+//! storms, surfaced as `transport.stalls`.
 
 use crate::apps;
 use crate::coordinator::cluster::{Backend, Cluster, ClusterConfig, EngineKind};
@@ -51,6 +55,9 @@ pub struct Options {
     /// Recovery policy: re-home a dead node's keys onto survivors instead
     /// of the hot-standby restore (`--evacuate`).
     pub evacuate: bool,
+    /// Shuffle backpressure window override in bytes
+    /// (`--transport-window BYTES`); `None` keeps the 4 MiB default.
+    pub transport_window: Option<u64>,
     /// Trace output path (`--trace PATH`, default from `BLAZE_TRACE`):
     /// enables the structured event collector and exports the canonical
     /// JSONL log (plus `PATH.chrome.json`) after the run.
@@ -71,6 +78,7 @@ impl Default for Options {
             fail_at: Vec::new(),
             checkpoint_every: None,
             evacuate: false,
+            transport_window: None,
             trace: std::env::var("BLAZE_TRACE").ok().filter(|p| !p.is_empty()),
         }
     }
@@ -95,7 +103,8 @@ const USAGE: &str = "usage: blaze <pi|wordcount|pagerank|kmeans|gmm|knn|all> \
 [--nodes N] [--workers W] [--engine blaze|conventional] \
 [--backend simulated|threaded[:N]] [--scale S] \
 [--artifacts DIR|none] [--seed SEED] [--fail-at NODE@BLOCK ...] \
-[--checkpoint-every BLOCKS] [--evacuate] [--trace PATH]";
+[--checkpoint-every BLOCKS] [--evacuate] [--transport-window BYTES] \
+[--trace PATH]";
 
 /// Parse argv (without the program name).
 pub fn parse(args: &[String]) -> Result<Options, String> {
@@ -125,6 +134,10 @@ pub fn parse(args: &[String]) -> Result<Options, String> {
                     Some(next("block count")?.parse().map_err(|e| format!("{e}"))?)
             }
             "--evacuate" => opts.evacuate = true,
+            "--transport-window" => {
+                opts.transport_window =
+                    Some(next("byte count")?.parse().map_err(|e| format!("{e}"))?)
+            }
             "--trace" => opts.trace = Some(next("path")?),
             "--fail-at" => {
                 let spec = next("NODE@BLOCK spec")?;
@@ -154,14 +167,16 @@ pub fn parse(args: &[String]) -> Result<Options, String> {
 }
 
 fn make_cluster(opts: &Options) -> Cluster {
-    Cluster::new(
-        ClusterConfig::sized(opts.nodes, opts.workers)
-            .with_engine(opts.engine)
-            .with_backend(opts.backend)
-            .with_seed(opts.seed)
-            .with_fault(opts.fault_config())
-            .with_trace(opts.trace.is_some()),
-    )
+    let mut cfg = ClusterConfig::sized(opts.nodes, opts.workers)
+        .with_engine(opts.engine)
+        .with_backend(opts.backend)
+        .with_seed(opts.seed)
+        .with_fault(opts.fault_config())
+        .with_trace(opts.trace.is_some());
+    if let Some(bytes) = opts.transport_window {
+        cfg = cfg.with_transport_window(bytes);
+    }
+    Cluster::new(cfg)
 }
 
 fn load_runtime(opts: &Options) -> Option<Runtime> {
@@ -294,6 +309,28 @@ mod tests {
     }
 
     #[test]
+    fn parse_transport_window_flag() {
+        let o = parse(&argv("pi --transport-window 1")).unwrap();
+        assert_eq!(o.transport_window, Some(1));
+        assert_eq!(parse(&argv("pi")).unwrap().transport_window, None);
+        assert!(parse(&argv("pi --transport-window")).is_err());
+        assert!(parse(&argv("pi --transport-window lots")).is_err());
+    }
+
+    #[test]
+    fn run_wordcount_threaded_narrow_window_end_to_end() {
+        // Stall storm through the real transport: window 1 forces a stall
+        // per cross-node frame, and the run must still succeed.
+        assert_eq!(
+            run(&argv(
+                "wordcount --nodes 2 --workers 2 --scale 1 --artifacts none \
+                 --backend threaded:2 --transport-window 1"
+            )),
+            0
+        );
+    }
+
+    #[test]
     fn run_wordcount_threaded_end_to_end() {
         assert_eq!(
             run(&argv(
@@ -353,6 +390,19 @@ mod tests {
             run(&argv(
                 "wordcount --nodes 3 --workers 2 --scale 1 --artifacts none \
                  --fail-at 1@2 --checkpoint-every 3 --evacuate"
+            )),
+            0
+        );
+    }
+
+    #[test]
+    fn run_wordcount_threaded_recovery_with_evacuation_end_to_end() {
+        // --fail-at + --evacuate on the threaded backend: kill, rollback,
+        // replay on the live pool, then slot evacuation — full CLI path.
+        assert_eq!(
+            run(&argv(
+                "wordcount --nodes 3 --workers 2 --scale 1 --artifacts none \
+                 --backend threaded:2 --fail-at 1@2 --checkpoint-every 3 --evacuate"
             )),
             0
         );

@@ -42,11 +42,16 @@ impl std::fmt::Display for EngineKind {
 /// * `Threaded(n)` — the [`crate::exec`] backend: one virtual node's map
 ///   blocks execute for real on `n` OS threads (work-stealing block queue,
 ///   bounded per-thread eager caches, lock-striped machine-local shard
-///   map), while the shuffle/network stays on the calibrated flow model.
+///   map), and shuffle payloads physically move through the in-process
+///   bounded-channel transport ([`crate::exec::transport`]) — virtual
+///   time still comes from the calibrated flow model, real wall time
+///   lands in `RunStats::phase_wall_ns` and the `transport.*` counters.
 ///   Results are byte-identical to `Simulated` for the eager and
-///   small-key paths; fault-tolerant jobs (and the conventional engine,
-///   which models a baseline rather than Blaze) fall back to the
-///   simulated engines regardless of backend.
+///   small-key paths, with or without fault injection: fault-tolerant
+///   jobs replay killed blocks on the live pool
+///   ([`crate::fault::engine`] drives [`crate::exec::pool`]). Only the
+///   conventional engine (which models a baseline rather than Blaze)
+///   falls back to the simulated path regardless of backend.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Backend {
     /// Serial execution with virtual-time accounting (the default).
@@ -139,6 +144,15 @@ pub struct ClusterConfig {
     /// Modeled per-job task-launch overhead for the conventional engine,
     /// seconds (Spark job/stage scheduling latency).
     pub conventional_job_latency_sec: f64,
+    /// Backpressure window for shuffle transports, bytes. Used by both
+    /// the simulated shuffle ([`crate::coordinator::shuffle`]) and the
+    /// real channel transport ([`crate::exec::transport`]), where it
+    /// also sizes the per-destination bounded channels
+    /// (`window / CHUNK_BYTES` frames, floor 1). Shrinking it forces
+    /// deterministic stall storms — the transport stress suite pins it
+    /// to 1. Defaults to
+    /// [`crate::coordinator::backpressure::DEFAULT_WINDOW_BYTES`].
+    pub transport_window_bytes: u64,
     /// Fault-tolerance policy: failure injection plan plus checkpoint
     /// cadence. When enabled, jobs run through the recoverable engine
     /// ([`crate::fault::engine`]).
@@ -164,6 +178,7 @@ impl Default for ClusterConfig {
             thread_cache_entries: 1 << 16,
             conventional_overhead_sec: 250e-9,
             conventional_job_latency_sec: 20e-3,
+            transport_window_bytes: crate::coordinator::backpressure::DEFAULT_WINDOW_BYTES,
             fault: FaultConfig::disabled(),
             trace: std::env::var("BLAZE_TRACE").map_or(false, |v| !v.is_empty()),
         }
@@ -209,6 +224,13 @@ impl ClusterConfig {
     /// Builder-style fault-tolerance policy override.
     pub fn with_fault(mut self, fault: FaultConfig) -> Self {
         self.fault = fault;
+        self
+    }
+
+    /// Builder-style transport backpressure window override (bytes,
+    /// clamped to ≥ 1).
+    pub fn with_transport_window(mut self, bytes: u64) -> Self {
+        self.transport_window_bytes = bytes.max(1);
         self
     }
 
@@ -359,11 +381,17 @@ mod tests {
         let cfg = ClusterConfig::sized(4, 2)
             .with_engine(EngineKind::Conventional)
             .with_alloc(AllocMode::Pool)
-            .with_seed(7);
+            .with_seed(7)
+            .with_transport_window(0);
         assert_eq!(cfg.nodes, 4);
         assert_eq!(cfg.engine, EngineKind::Conventional);
         assert_eq!(cfg.alloc, AllocMode::Pool);
         assert_eq!(cfg.seed, 7);
+        assert_eq!(cfg.transport_window_bytes, 1, "window clamps to >= 1");
+        assert_eq!(
+            ClusterConfig::default().transport_window_bytes,
+            crate::coordinator::backpressure::DEFAULT_WINDOW_BYTES
+        );
     }
 
     #[test]

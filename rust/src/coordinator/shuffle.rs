@@ -13,6 +13,23 @@ use super::backpressure::WindowAccount;
 /// `src == dst` entries bypass the network (node-local merge).
 pub type ShufflePayloads = Vec<Vec<Vec<u8>>>;
 
+/// How shuffle payloads move between virtual nodes. Orthogonal to the
+/// engine algorithm: both modes produce byte-identical `delivered`
+/// buffers, flows, and stall counts for the same payload matrix.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Transport {
+    /// Simulated: payloads pass through [`NetSim`] mailboxes on the
+    /// calling thread; cost is a flow-model output (the default, and
+    /// the only mode for the simulated backend).
+    #[default]
+    FlowModel,
+    /// Real: frames physically move through per-node bounded channels
+    /// ([`crate::exec::transport`]) with measured wall time, queue
+    /// peaks, and `FrameSent`/`TransportStall` trace events. Used by
+    /// `Backend::Threaded(n)`.
+    Channels,
+}
+
 /// Outcome of a shuffle execution.
 #[derive(Debug)]
 pub struct ShuffleResult {

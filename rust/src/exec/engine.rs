@@ -1,8 +1,9 @@
 //! The threaded execution engine: `Backend::Threaded(n)`.
 //!
 //! Hybrid execution — one virtual node's map+combine runs *for real* on
-//! `n` OS threads while the shuffle/network stays on the calibrated flow
-//! model:
+//! `n` OS threads and shuffle frames physically move through the
+//! bounded-channel transport ([`super::transport`]), while virtual time
+//! still comes from the calibrated flow model:
 //!
 //! 1. The calling thread drains each node's
 //!    [`DistInput::block_cursor`] once, materializing every virtual
@@ -27,16 +28,18 @@
 //! Accounting is hybrid: virtual time is still charged from measured
 //! per-block seconds (summed per node, i.e. the serial-equivalent work),
 //! while the real parallel wall clock of each phase is recorded in
-//! [`RunStats::phase_wall_ns`]. Fault-tolerant jobs run on the simulated
-//! recoverable engine regardless of backend (threaded recovery is future
-//! work); the conventional engine models a baseline and is never
-//! threaded.
+//! [`RunStats::phase_wall_ns`] and the real shuffle movement in the
+//! `transport.*` counter family (frames, bytes, stalls, queue peak).
+//! Fault-tolerant jobs replay killed blocks on the live pool
+//! ([`crate::fault::engine`] drives [`super::pool`]); the conventional
+//! engine models a baseline and is never threaded.
 
 use std::hash::Hash;
 use std::sync::Mutex;
 use std::time::Instant;
 
 use crate::coordinator::metrics::RunStats;
+use crate::coordinator::shuffle::Transport;
 use crate::mapreduce::eager::{self, HASH_ENTRY_OVERHEAD};
 use crate::mapreduce::reducers::Reducer;
 use crate::mapreduce::smallkey;
@@ -49,6 +52,7 @@ use crate::util::hash::FxHashMap;
 use super::cache::EagerCache;
 use super::pool;
 use super::shard::ShardedMap;
+use super::transport::TransportTotals;
 
 /// One materialized map block: virtual worker `worker` of `node`'s
 /// partition, with its items cloned out of the input for the `Send`
@@ -291,10 +295,26 @@ pub fn run_eager<I, F, K2, V2, T>(
     let merge_wall_ns = t_merge.elapsed().as_nanos() as u64;
     vt.compute_phase("map+local-reduce", &per_node_secs, workers);
 
-    // ---- Shared shuffle pipeline ----------------------------------------
-    let out = eager::shuffle_and_absorb(&cluster, node_maps, red, target, &mut vt, &mut trace);
+    // ---- Shared shuffle pipeline, bytes moved through real channels -----
+    let out = eager::shuffle_and_absorb(
+        &cluster,
+        node_maps,
+        red,
+        target,
+        &mut vt,
+        &mut trace,
+        Transport::Channels,
+    );
 
     // ---- Record ----------------------------------------------------------
+    let mut phase_wall_ns = vec![
+        ("map+local-reduce".into(), map_wall_ns),
+        ("canonical-merge".into(), merge_wall_ns),
+        ("shuffle+absorb".into(), out.wall_ns),
+    ];
+    if let Some(t) = out.transport {
+        record_transport_counters(&mut counters, &mut phase_wall_ns, t);
+    }
     trace.stamp_phases(&vt);
     cluster.trace().absorb_job(&rec.label, trace);
     let (run_counters, node_counters) = counters.finish();
@@ -315,15 +335,26 @@ pub fn run_eager<I, F, K2, V2, T>(
         pairs_shuffled: out.pairs_shuffled,
         peak_intermediate_bytes: live_cache_bytes + local_bytes + out.peak_bytes,
         host_wall_sec: rec.started.elapsed().as_secs_f64(),
-        phase_wall_ns: vec![
-            ("map+local-reduce".into(), map_wall_ns),
-            ("canonical-merge".into(), merge_wall_ns),
-            ("shuffle+absorb".into(), out.wall_ns),
-        ],
+        phase_wall_ns,
         counters: run_counters,
         node_counters,
         ..Default::default()
     });
+}
+
+/// Fold a phase's real-transport measurements into the `transport.*`
+/// counter family plus a dedicated `phase_wall_ns` entry (entries with
+/// the same name sum across phases — `RunStats::wall_ns` semantics).
+fn record_transport_counters(
+    counters: &mut Counters,
+    phase_wall_ns: &mut Vec<(String, u64)>,
+    t: TransportTotals,
+) {
+    counters.add("transport.frames", t.frames);
+    counters.add("transport.bytes", t.bytes);
+    counters.add("transport.stalls", t.stalls);
+    counters.max("transport.queue_peak_bytes", t.queue_peak_bytes);
+    phase_wall_ns.push(("transport".into(), t.wall_ns));
 }
 
 /// Threaded small-fixed-key-range path: per-block dense caches on real
@@ -481,11 +512,26 @@ pub fn run_smallkey<I, F, K2, V2, T>(
     let merge_wall_ns = t_merge.elapsed().as_nanos() as u64;
     vt.compute_phase("map+dense-local-reduce", &per_node_secs, workers);
 
-    // ---- Shared binomial tree reduce ------------------------------------
-    let out =
-        smallkey::tree_reduce_into_target(&cluster, node_partials, red, target, &mut vt, &mut trace);
+    // ---- Shared binomial tree reduce, frames through real channels ------
+    let out = smallkey::tree_reduce_into_target(
+        &cluster,
+        node_partials,
+        red,
+        target,
+        &mut vt,
+        &mut trace,
+        Transport::Channels,
+    );
 
     // ---- Record ----------------------------------------------------------
+    let mut phase_wall_ns = vec![
+        ("map+dense-local-reduce".into(), map_wall_ns),
+        ("canonical-merge".into(), merge_wall_ns),
+        ("tree-reduce".into(), out.wall_ns),
+    ];
+    if let Some(t) = out.transport {
+        record_transport_counters(&mut counters, &mut phase_wall_ns, t);
+    }
     trace.stamp_phases(&vt);
     cluster.trace().absorb_job(&rec.label, trace);
     let (run_counters, node_counters) = counters.finish();
@@ -507,11 +553,7 @@ pub fn run_smallkey<I, F, K2, V2, T>(
         pairs_shuffled,
         peak_intermediate_bytes: dense_cache_bytes + out.round_flow_peak,
         host_wall_sec: rec.started.elapsed().as_secs_f64(),
-        phase_wall_ns: vec![
-            ("map+dense-local-reduce".into(), map_wall_ns),
-            ("canonical-merge".into(), merge_wall_ns),
-            ("tree-reduce".into(), out.wall_ns),
-        ],
+        phase_wall_ns,
         counters: run_counters,
         node_counters,
         ..Default::default()

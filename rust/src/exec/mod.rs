@@ -18,23 +18,33 @@
 //!   single-threaded canonical merge folds each key's partials in
 //!   simulated-engine order — confluence by construction, so results are
 //!   byte-identical at any thread count, floats included.
+//! * [`transport`] — the real in-process shuffle transport: per-node
+//!   bounded channels carrying actual `fastser` frames, with a
+//!   deterministic window-accounting mirror so flows/stalls/delivery
+//!   order stay byte-identical to the simulated shuffle while `wall_ns`
+//!   and queue peaks become measured quantities.
 //! * [`engine`] — the hybrid engine: threaded map+combine, then the same
-//!   partition/serialize/shuffle/absorb pipeline as the simulated engines
-//!   on the calibrated flow model. Real per-phase wall clock lands in
-//!   `RunStats::phase_wall_ns`; the virtual makespan stays the modeled
-//!   figure (see DESIGN.md §Execution backends for when each number is
+//!   partition/serialize/shuffle/absorb pipeline as the simulated
+//!   engines, with the bytes physically moved through [`transport`]
+//!   channels (virtual time still comes from the calibrated flow model).
+//!   Real per-phase wall clock lands in `RunStats::phase_wall_ns`; the
+//!   virtual makespan stays the modeled figure (see DESIGN.md
+//!   §Execution backends and §Transport for when each number is
 //!   comparable to the paper's).
 //!
 //! Select with `ClusterConfig::backend`, CLI `--backend threaded:N`, or
 //! the `BLAZE_BACKEND` environment variable (used by the CI matrix leg
-//! that runs the whole suite threaded). Gated by
-//! `rust/tests/equivalence.rs` (threaded{1,2,4} eager + small-key paths
-//! vs the simulated reference, plus the checkpointed-job fallback row —
-//! fault-enabled jobs run the simulated recoverable engine regardless of
-//! backend) and the `rust/tests/exec.rs` stress suite (hostile key skew,
-//! flush storms, 1/2/4 threads).
+//! that runs the whole suite threaded). Fault-enabled jobs replay
+//! blocks on the live pool too (`fault::engine` drives [`pool`] when
+//! the backend is threaded). Gated by `rust/tests/equivalence.rs`
+//! (threaded{1,2,4} eager + small-key paths vs the simulated reference,
+//! single-stage and chained/iterative, plus fault rows), the
+//! `rust/tests/exec.rs` stress suite (hostile key skew, flush storms,
+//! 1/2/4 threads), and the `rust/tests/transport.rs` transport stress
+//! suite (stall storms, skewed fan-in, capacity-1 windows).
 
 pub mod cache;
 pub mod engine;
 pub mod pool;
 pub mod shard;
+pub mod transport;

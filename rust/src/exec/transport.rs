@@ -1,0 +1,382 @@
+//! Real in-process shuffle transport for the threaded backend.
+//!
+//! [`coordinator::shuffle::execute`](crate::coordinator::shuffle::execute)
+//! *models* a shuffle: payloads pass through [`NetSim`] mailboxes and the
+//! cost comes out of the calibrated flow model. This module *moves* the
+//! same frames: one bounded channel per destination node, one sender
+//! thread per source node, real byte hand-off with real blocking when a
+//! destination queue fills. The coordinator keeps a deterministic
+//! accounting mirror of the exact `shuffle::execute` loop — same
+//! [`FlowMatrix`] records per chunk, same per-sender [`WindowAccount`]
+//! push/drain — so flows, `peak_in_flight_bytes`, and `stalls` are
+//! byte-identical to the simulated shuffle at any thread count, while
+//! `wall_ns` and `queue_peak_bytes` report what physically happened.
+//!
+//! Determinism contract:
+//!
+//! * **Delivery order** — frames land on receiver threads in scheduler
+//!   order, but [`execute`] sorts each destination's frames by
+//!   `(src, seq)` before returning and prepends node-local payloads, so
+//!   `delivered` is element-for-element identical to
+//!   `shuffle::execute`'s (src-ascending send loop, chunks in order,
+//!   locals delivered inline). Downstream absorb code cannot tell the
+//!   backends apart.
+//! * **Stalls** — the `transport.stalls` counter uses the same
+//!   [`WindowAccount`] semantics as the simulated window (a stall fires
+//!   iff a chunk would overflow the window), so it is deterministic and
+//!   testable (`transport_window_bytes = 1` forces a stall per frame).
+//!   Physical waiting on a full channel is real but scheduling-dependent;
+//!   it surfaces only in `wall_ns` and `queue_peak_bytes`, never in
+//!   gated output.
+//!
+//! Channel capacity derives from the window: `window_bytes / CHUNK_BYTES`
+//! frames, floor 1, so shrinking the window genuinely narrows the pipe.
+//! Receivers always drain (a frame is admitted even when it alone
+//! exceeds the window), so the transport cannot deadlock: senders block
+//! only on a full queue that a live receiver is emptying.
+//!
+//! [`NetSim`]: crate::net::sim::NetSim
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::sync_channel;
+use std::time::Instant;
+
+use crate::coordinator::backpressure::WindowAccount;
+use crate::coordinator::shuffle::{ShufflePayloads, CHUNK_BYTES};
+use crate::net::sim::FlowMatrix;
+
+/// Per-(src → dst) frame tallies, for `FrameSent`/`TransportStall`
+/// trace events. Cross-node pairs with traffic only, src-major order.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PairStats {
+    pub src: usize,
+    pub dst: usize,
+    /// Frames (chunks) shipped src → dst.
+    pub frames: u64,
+    /// Payload bytes shipped src → dst.
+    pub bytes: u64,
+    /// Window-accounting stalls charged to this pair.
+    pub stalls: u64,
+}
+
+/// Scalar transport measurements the engines fold into the
+/// `transport.*` counter family and `phase_wall_ns`. Additive: phases
+/// (or tree-reduce rounds) accumulate with [`TransportTotals::merge`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TransportTotals {
+    /// Cross-node frames physically moved (`transport.frames`).
+    pub frames: u64,
+    /// Cross-node payload bytes physically moved (`transport.bytes`).
+    pub bytes: u64,
+    /// Window-accounting stalls (`transport.stalls` — deterministic).
+    pub stalls: u64,
+    /// Peak bytes resident in destination queues
+    /// (`transport.queue_peak_bytes` — measured).
+    pub queue_peak_bytes: u64,
+    /// Wall-clock nanoseconds spent in transport (measured).
+    pub wall_ns: u64,
+}
+
+impl TransportTotals {
+    /// Accumulate another phase/round: counts and wall time add, queue
+    /// peak takes the max.
+    pub fn merge(&mut self, other: TransportTotals) {
+        self.frames += other.frames;
+        self.bytes += other.bytes;
+        self.stalls += other.stalls;
+        self.queue_peak_bytes = self.queue_peak_bytes.max(other.queue_peak_bytes);
+        self.wall_ns += other.wall_ns;
+    }
+}
+
+/// Outcome of a real transport run. `flows` / `delivered` /
+/// `peak_in_flight_bytes` / `stalls` are byte-identical to
+/// [`crate::coordinator::shuffle::ShuffleResult`] for the same payload
+/// matrix; the rest are transport-only measurements.
+#[derive(Debug)]
+pub struct TransportResult {
+    /// Real byte/message flows (recorded per chunk, like the simulation).
+    pub flows: FlowMatrix,
+    /// Per-destination `(src, frame)` buffers in simulated delivery
+    /// order: node-local payloads first, then cross-node frames by
+    /// `(src, seq)`.
+    pub delivered: Vec<Vec<(usize, Vec<u8>)>>,
+    /// Peak in-flight serialized bytes summed over senders
+    /// (window-accounting mirror).
+    pub peak_in_flight_bytes: u64,
+    /// Total sender stalls (window-accounting mirror — deterministic).
+    pub stalls: u64,
+    /// Cross-node frames physically moved through channels.
+    pub frames: u64,
+    /// Cross-node payload bytes physically moved through channels.
+    pub bytes: u64,
+    /// Peak bytes resident in destination queues (measured, not gated).
+    pub queue_peak_bytes: u64,
+    /// Wall-clock nanoseconds for the whole transport phase (measured).
+    pub wall_ns: u64,
+    /// Per-(src,dst) tallies for trace events.
+    pub pair_stats: Vec<PairStats>,
+}
+
+impl TransportResult {
+    /// The scalar totals for counters/phase accounting.
+    pub fn totals(&self) -> TransportTotals {
+        TransportTotals {
+            frames: self.frames,
+            bytes: self.bytes,
+            stalls: self.stalls,
+            queue_peak_bytes: self.queue_peak_bytes,
+            wall_ns: self.wall_ns,
+        }
+    }
+}
+
+/// One frame in flight. `seq` increases along the source's
+/// dst-ascending send loop, so sorting a destination's frames by
+/// `(src, seq)` reconstructs the simulated arrival order.
+struct Frame {
+    src: usize,
+    dst: usize,
+    seq: u64,
+    payload: Vec<u8>,
+}
+
+/// Execute a shuffle over real bounded channels. Drop-in for
+/// [`crate::coordinator::shuffle::execute`]: identical `delivered` /
+/// `flows` / `peak_in_flight_bytes` / `stalls`, plus real measurements.
+pub fn execute(payloads: ShufflePayloads, window_bytes: u64) -> TransportResult {
+    let n = payloads.len();
+    let start = Instant::now();
+
+    // Split the matrix into node-local payloads (delivered inline, like
+    // the simulation) and per-src cross-node frame lists, while running
+    // the deterministic accounting mirror of `shuffle::execute`.
+    let mut locals: Vec<Option<Vec<u8>>> = (0..n).map(|_| None).collect();
+    let mut sends: Vec<Vec<Frame>> = (0..n).map(|_| Vec::new()).collect();
+    let mut flows = FlowMatrix::new(n);
+    let mut peak = 0u64;
+    let mut stalls = 0u64;
+    let mut frames_total = 0u64;
+    let mut bytes_total = 0u64;
+    let mut pair_stats: Vec<PairStats> = Vec::new();
+
+    for (src, dsts) in payloads.into_iter().enumerate() {
+        assert_eq!(dsts.len(), n, "payload matrix must be n x n");
+        let mut window = WindowAccount::new(window_bytes);
+        let mut seq = 0u64;
+        for (dst, payload) in dsts.into_iter().enumerate() {
+            if payload.is_empty() {
+                continue;
+            }
+            if dst == src {
+                locals[dst] = Some(payload);
+                continue;
+            }
+            let stalls_before = window.stalls();
+            let mut pair_frames = 0u64;
+            let pair_bytes = payload.len() as u64;
+            if payload.len() <= CHUNK_BYTES {
+                window.push(pair_bytes);
+                flows.record(src, dst, pair_bytes);
+                sends[src].push(Frame { src, dst, seq, payload });
+                seq += 1;
+                pair_frames += 1;
+                window.drain(pair_bytes);
+            } else {
+                for chunk in payload.chunks(CHUNK_BYTES) {
+                    window.push(chunk.len() as u64);
+                    flows.record(src, dst, chunk.len() as u64);
+                    sends[src].push(Frame { src, dst, seq, payload: chunk.to_vec() });
+                    seq += 1;
+                    pair_frames += 1;
+                    window.drain(chunk.len() as u64);
+                }
+            }
+            frames_total += pair_frames;
+            bytes_total += pair_bytes;
+            pair_stats.push(PairStats {
+                src,
+                dst,
+                frames: pair_frames,
+                bytes: pair_bytes,
+                stalls: window.stalls() - stalls_before,
+            });
+        }
+        peak += window.peak_bytes();
+        stalls += window.stalls();
+    }
+
+    // Physically move the cross-node frames: one bounded channel per
+    // destination, one sender thread per source with traffic.
+    let queue_peak = AtomicU64::new(0);
+    let mut received: Vec<Vec<(usize, u64, Vec<u8>)>> = (0..n).map(|_| Vec::new()).collect();
+    if frames_total > 0 {
+        let cap = ((window_bytes as usize) / CHUNK_BYTES).max(1);
+        let queued = AtomicU64::new(0);
+        let mut txs = Vec::with_capacity(n);
+        let mut rxs = Vec::with_capacity(n);
+        for _ in 0..n {
+            let (tx, rx) = sync_channel::<Frame>(cap);
+            txs.push(tx);
+            rxs.push(rx);
+        }
+        let recv_slots: Vec<_> = received.iter_mut().collect();
+        std::thread::scope(|scope| {
+            for (rx, slot) in rxs.into_iter().zip(recv_slots) {
+                let queued = &queued;
+                scope.spawn(move || {
+                    while let Ok(frame) = rx.recv() {
+                        queued.fetch_sub(frame.payload.len() as u64, Ordering::Relaxed);
+                        slot.push((frame.src, frame.seq, frame.payload));
+                    }
+                });
+            }
+            for frames in sends.into_iter().filter(|f| !f.is_empty()) {
+                let txs = txs.clone();
+                let queued = &queued;
+                let queue_peak = &queue_peak;
+                scope.spawn(move || {
+                    for frame in frames {
+                        let len = frame.payload.len() as u64;
+                        let now = queued.fetch_add(len, Ordering::Relaxed) + len;
+                        queue_peak.fetch_max(now, Ordering::Relaxed);
+                        txs[frame.dst].send(frame).expect("receiver alive");
+                    }
+                });
+            }
+            // Drop the coordinator's senders so receivers terminate once
+            // every sender thread finishes.
+            drop(txs);
+        });
+    }
+
+    // Reconstruct the simulated delivery order: locals first, then
+    // cross-node frames sorted by (src, seq).
+    let mut delivered: Vec<Vec<(usize, Vec<u8>)>> = (0..n).map(|_| Vec::new()).collect();
+    for (dst, local) in locals.into_iter().enumerate() {
+        if let Some(payload) = local {
+            delivered[dst].push((dst, payload));
+        }
+    }
+    for (dst, mut frames) in received.into_iter().enumerate() {
+        frames.sort_by_key(|&(src, seq, _)| (src, seq));
+        delivered[dst].extend(frames.into_iter().map(|(src, _, payload)| (src, payload)));
+    }
+
+    TransportResult {
+        flows,
+        delivered,
+        peak_in_flight_bytes: peak,
+        stalls,
+        frames: frames_total,
+        bytes: bytes_total,
+        queue_peak_bytes: queue_peak.load(Ordering::Relaxed),
+        wall_ns: start.elapsed().as_nanos() as u64,
+        pair_stats,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::shuffle;
+
+    fn payloads(n: usize) -> ShufflePayloads {
+        (0..n).map(|_| (0..n).map(|_| Vec::new()).collect()).collect()
+    }
+
+    /// The transport is a drop-in for the simulated shuffle: identical
+    /// delivered buffers, flows, peak, and stalls.
+    #[test]
+    fn parity_with_simulated_shuffle() {
+        let mut p = payloads(3);
+        p[0][1] = vec![9; 10];
+        p[0][2] = vec![7; 4];
+        p[1][1] = vec![5; 3]; // node-local
+        p[2][1] = vec![8; 5];
+        let sim = shuffle::execute(p.clone(), 1 << 20);
+        let real = execute(p, 1 << 20);
+        assert_eq!(real.delivered, sim.delivered);
+        assert_eq!(real.flows.total_bytes(), sim.flows.total_bytes());
+        assert_eq!(real.flows.cross_node_bytes(), sim.flows.cross_node_bytes());
+        assert_eq!(real.peak_in_flight_bytes, sim.peak_in_flight_bytes);
+        assert_eq!(real.stalls, sim.stalls);
+        assert_eq!(real.frames, 3);
+        assert_eq!(real.bytes, 19);
+    }
+
+    #[test]
+    fn large_payload_chunked_like_simulation() {
+        let mut p = payloads(2);
+        p[0][1] = vec![0u8; CHUNK_BYTES * 2 + 7];
+        let sim = shuffle::execute(p.clone(), 1 << 20);
+        let real = execute(p, 1 << 20);
+        assert_eq!(real.delivered, sim.delivered);
+        assert_eq!(real.frames, 3, "3 chunks moved for real");
+        assert_eq!(real.peak_in_flight_bytes as usize, CHUNK_BYTES);
+        // Something actually sat in a destination queue.
+        assert!(real.queue_peak_bytes > 0);
+    }
+
+    /// A one-byte window forces the window-accounting mirror to stall
+    /// on every frame — the exact-count contract the stress suite and
+    /// `transport_window_bytes = 1` runs rely on.
+    #[test]
+    fn capacity_one_window_stalls_every_frame() {
+        let mut p = payloads(3);
+        p[0][1] = vec![9; 10];
+        p[0][2] = vec![7; 4];
+        p[2][0] = vec![8; 5];
+        let real = execute(p, 1);
+        assert_eq!(real.frames, 3);
+        assert_eq!(real.stalls, 3, "every frame exceeds a 1-byte window");
+        assert_eq!(
+            real.pair_stats,
+            vec![
+                PairStats { src: 0, dst: 1, frames: 1, bytes: 10, stalls: 1 },
+                PairStats { src: 0, dst: 2, frames: 1, bytes: 4, stalls: 1 },
+                PairStats { src: 2, dst: 0, frames: 1, bytes: 5, stalls: 1 },
+            ]
+        );
+    }
+
+    #[test]
+    fn locals_bypass_channels_and_come_first() {
+        let mut p = payloads(2);
+        p[1][1] = vec![1, 2];
+        p[0][1] = vec![3, 4];
+        let real = execute(p, 1 << 20);
+        assert_eq!(real.delivered[1], vec![(1, vec![1, 2]), (0, vec![3, 4])]);
+        assert_eq!(real.frames, 1, "only the cross payload moved");
+    }
+
+    #[test]
+    fn empty_matrix_moves_nothing() {
+        let real = execute(payloads(4), 1 << 20);
+        assert_eq!(real.frames, 0);
+        assert_eq!(real.bytes, 0);
+        assert_eq!(real.stalls, 0);
+        assert_eq!(real.queue_peak_bytes, 0);
+        assert!(real.delivered.iter().all(Vec::is_empty));
+        assert!(real.pair_stats.is_empty());
+    }
+
+    /// Many sources hammering one destination through a one-frame-deep
+    /// queue: the sort restores deterministic (src, seq) order no matter
+    /// how the scheduler interleaved the sends.
+    #[test]
+    fn skewed_fan_in_restores_deterministic_order() {
+        let n = 6;
+        let mut p = payloads(n);
+        for src in 0..n {
+            if src != 3 {
+                p[src][3] = vec![src as u8; 64 + src];
+            }
+        }
+        let sim = shuffle::execute(p.clone(), 1);
+        let real = execute(p, 1);
+        assert_eq!(real.delivered, sim.delivered);
+        let srcs: Vec<usize> = real.delivered[3].iter().map(|&(s, _)| s).collect();
+        assert_eq!(srcs, vec![0, 1, 2, 4, 5]);
+    }
+}

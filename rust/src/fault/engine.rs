@@ -54,11 +54,32 @@
 //! `DistVector`, driver-resident `Vec`) fall back to hot-standby with a
 //! metrics note. Both policies produce byte-identical results — evacuation
 //! relocates entries without re-reducing them.
+//!
+//! **Backends.** Under `Backend::Threaded(n)` (with a non-conventional
+//! engine) the map side of every block — fresh executions *and* recovery
+//! replays — runs on the live worker pool ([`crate::exec::pool`]): each
+//! time the next block to commit has no buffered map output, the engine
+//! collects every pending block still missing one (coordinator-side, with
+//! the same cursor discipline as the serial path, so walk counts are
+//! unchanged) and speculatively maps the batch on `n` OS threads. Commits
+//! then drain the buffer strictly in block-id order through the unchanged
+//! ledger/checkpoint/trigger/evacuation logic. A block's map output
+//! depends only on `(seed, block, input)`, so speculating ahead of
+//! failure triggers is safe: a kill only changes exec-node *attribution*
+//! (applied at commit time), and rollback replays re-enter `pending`
+//! after their buffer entry was consumed, forcing re-execution on the
+//! pool — the kill → rollback → replay → evacuate timeline is preserved
+//! byte-for-byte. The buffer trades memory (pending blocks' map outputs
+//! are materialized at once) for real parallelism; the conventional
+//! engine models the Spark baseline and always runs serial.
 
 use std::collections::hash_map::Entry;
 use std::collections::{BTreeMap, BTreeSet};
 use std::hash::Hash;
+use std::sync::Mutex;
 use std::time::Instant;
+
+use crate::exec::pool;
 
 use crate::coordinator::cluster::EngineKind;
 use crate::coordinator::metrics::RunStats;
@@ -109,6 +130,70 @@ struct PendingBlock {
     only: Option<BTreeSet<usize>>,
 }
 
+/// One block's pure map output, buffered between (possibly speculative)
+/// execution and its in-order commit. `pairs` is in the engine's
+/// canonical pre-partition order — emit order under conventional
+/// semantics, eager-cache drain order otherwise; partitioning by target
+/// shard happens at commit time.
+struct MappedBlock<K2, V2> {
+    items: u64,
+    emitted: u64,
+    pairs: Vec<(K2, V2)>,
+    /// Measured host seconds for the map (worker-thread time under the
+    /// threaded backend). Observability only — the deterministic trigger
+    /// clock derives from `items`, never from this.
+    exec_secs: f64,
+}
+
+/// Run the pure map for one block. `visit` yields the block's items in
+/// partition order; the result is the canonical pre-partition pair list
+/// (see [`MappedBlock`]). Shared by the serial path and the pool workers
+/// so the two backends cannot drift.
+fn map_block<K, V, F, K2, V2>(
+    visit: impl FnOnce(&mut dyn FnMut(&K, &V)),
+    mapper: &F,
+    red: &Reducer<V2>,
+    conventional: bool,
+) -> (u64, u64, Vec<(K2, V2)>)
+where
+    F: Fn(&K, &V, Emit<'_, K2, V2>),
+    K2: Hash + Eq + Clone,
+    V2: Clone,
+{
+    let mut items = 0u64;
+    let mut emitted = 0u64;
+    let mut pairs: Vec<(K2, V2)> = Vec::new();
+    if conventional {
+        // Conventional semantics: materialize every emitted pair.
+        visit(&mut |k, v| {
+            items += 1;
+            let mut emit = |k2: K2, v2: V2| {
+                emitted += 1;
+                pairs.push((k2, v2));
+            };
+            mapper(k, v, &mut emit);
+        });
+    } else {
+        // Eager semantics: block-local reduction into a cache first.
+        let mut cache: FxHashMap<K2, V2> = FxHashMap::default();
+        visit(&mut |k, v| {
+            items += 1;
+            let mut emit = |k2: K2, v2: V2| {
+                emitted += 1;
+                match cache.entry(k2) {
+                    Entry::Occupied(mut e) => red.apply(e.get_mut(), &v2),
+                    Entry::Vacant(e) => {
+                        e.insert(v2);
+                    }
+                }
+            };
+            mapper(k, v, &mut emit);
+        });
+        pairs.extend(cache.drain());
+    }
+    (items, emitted, pairs)
+}
+
 /// Deterministic round-robin pick over live nodes.
 fn next_alive_rr(alive: &[bool], rr: &mut usize) -> usize {
     let n = alive.len();
@@ -127,9 +212,11 @@ fn next_alive_rr(alive: &[bool], rr: &mut usize) -> usize {
 pub fn run<I, F, K2, V2, T>(label: &str, input: &I, mapper: &F, red: &Reducer<V2>, target: &mut T)
 where
     I: DistInput,
-    F: Fn(&I::K, &I::V, Emit<'_, K2, V2>),
-    K2: Hash + Eq + Clone + FastSer + TaggedSer,
-    V2: Clone + FastSer + TaggedSer,
+    I::K: Clone + Send,
+    I::V: Clone + Send,
+    F: Fn(&I::K, &I::V, Emit<'_, K2, V2>) + Sync,
+    K2: Hash + Eq + Clone + FastSer + TaggedSer + Send,
+    V2: Clone + FastSer + TaggedSer + Send,
     T: ReduceTarget<K2, V2> + Recover,
 {
     let rec = RunRecorder::new(label);
@@ -195,6 +282,14 @@ where
     // rebuild the cursor and skip forward.
     let mut cursors: Vec<Option<(I::Cursor<'_>, usize)>> = (0..nodes).map(|_| None).collect();
 
+    // Threaded backend (non-conventional engines only): map work runs on
+    // the live pool in speculative batches, commits stay serial (see the
+    // module docs). Pool observability accumulates across batches.
+    let threads = if conventional { None } else { cfg.backend.threads() };
+    let mut spec: BTreeMap<usize, MappedBlock<K2, V2>> = BTreeMap::new();
+    let mut pool_queue_peak = 0u64;
+    let mut pool_thread_blocks: Vec<u64> = Vec::new();
+
     let mut per_node_secs = vec![0.0f64; nodes];
     let mut per_node_reduce_secs = vec![0.0f64; nodes];
     // Deterministic block-progress clock for AtTime triggers (plan.rs):
@@ -222,53 +317,120 @@ where
         // ---- Execute block `b` on `p.exec_node` -------------------------
         // The RNG stream is keyed by the block's *home* identity, matching
         // the ordinary engines, so re-execution elsewhere is identical.
-        let t0 = Instant::now();
-        crate::util::random::set_stream(cfg.seed, b as u64);
-        let mut parts: Vec<Vec<(K2, V2)>> = (0..nodes).map(|_| Vec::new()).collect();
-        let mut emitted_here = 0u64;
-        let mut items_here = 0u64;
-        let in_order = matches!(&cursors[home], Some((_, next)) if *next == w);
-        if !in_order {
-            // Out-of-order (a recovery replay, or the first block after
-            // one): rebuild the node's cursor and skip to block `w`.
-            let mut cur = input.block_cursor(home, workers);
-            for _ in 0..w {
-                cur.next_block(|_, _| {});
-            }
-            cursors[home] = Some((cur, w));
-        }
-        let (cur, next) = cursors[home].as_mut().expect("cursor installed");
-        if conventional {
-            let t_ref: &T = &*target;
-            cur.next_block(|k, v| {
-                items_here += 1;
-                let mut emit = |k2: K2, v2: V2| {
-                    emitted_here += 1;
-                    parts[t_ref.shard_of(&k2, nodes)].push((k2, v2));
-                };
-                mapper(k, v, &mut emit);
-            });
-        } else {
-            let mut cache: FxHashMap<K2, V2> = FxHashMap::default();
-            cur.next_block(|k, v| {
-                items_here += 1;
-                let mut emit = |k2: K2, v2: V2| {
-                    emitted_here += 1;
-                    match cache.entry(k2) {
-                        Entry::Occupied(mut e) => red.apply(e.get_mut(), &v2),
-                        Entry::Vacant(e) => {
-                            e.insert(v2);
-                        }
+        let mapped = match threads {
+            // Serial (simulated backend, and always the conventional
+            // engine): map straight off the cursor, no materialization.
+            None => {
+                let t0 = Instant::now();
+                crate::util::random::set_stream(cfg.seed, b as u64);
+                let in_order = matches!(&cursors[home], Some((_, next)) if *next == w);
+                if !in_order {
+                    // Out-of-order (a recovery replay, or the first block
+                    // after one): rebuild the node's cursor and skip to
+                    // block `w`.
+                    let mut cur = input.block_cursor(home, workers);
+                    for _ in 0..w {
+                        cur.next_block(|_, _| {});
                     }
-                };
-                mapper(k, v, &mut emit);
-            });
-            for (k, v) in cache.drain() {
-                parts[target.shard_of(&k, nodes)].push((k, v));
+                    cursors[home] = Some((cur, w));
+                }
+                let (cur, next) = cursors[home].as_mut().expect("cursor installed");
+                let (items, emitted, pairs) = map_block(
+                    |f| {
+                        cur.next_block(|k, v| f(k, v));
+                    },
+                    mapper,
+                    red,
+                    conventional,
+                );
+                *next = w + 1;
+                MappedBlock { items, emitted, pairs, exec_secs: t0.elapsed().as_secs_f64() }
+            }
+            // Threaded backend: consume the block's buffered map output,
+            // running a speculative batch on the live pool first if it
+            // (a fresh frontier, or a kill-induced replay) has none yet.
+            Some(tn) => {
+                if !spec.contains_key(&b) {
+                    // `b` plus every pending block still missing output,
+                    // in id order (`b` was the minimum pending id).
+                    // Collection reuses the serial cursor discipline, so
+                    // walk counts — replay rebuild+skip included — are
+                    // identical to the simulated engine's.
+                    let mut need = vec![b];
+                    need.extend(pending.keys().copied().filter(|b2| !spec.contains_key(b2)));
+                    let mut queue = need.into_iter();
+                    let produce = || {
+                        let b2 = queue.next()?;
+                        let (home2, w2) = (b2 / workers, b2 % workers);
+                        let in_order =
+                            matches!(&cursors[home2], Some((_, next)) if *next == w2);
+                        if !in_order {
+                            let mut cur = input.block_cursor(home2, workers);
+                            for _ in 0..w2 {
+                                cur.next_block(|_, _| {});
+                            }
+                            cursors[home2] = Some((cur, w2));
+                        }
+                        let (cur, next) = cursors[home2].as_mut().expect("cursor installed");
+                        let mut items: Vec<(I::K, I::V)> = Vec::new();
+                        cur.next_block(|k, v| items.push((k.clone(), v.clone())));
+                        *next = w2 + 1;
+                        Some((b2, items))
+                    };
+                    let seed = cfg.seed;
+                    let mapped_out: Mutex<BTreeMap<usize, MappedBlock<K2, V2>>> =
+                        Mutex::new(BTreeMap::new());
+                    let work = |(b2, items): (usize, Vec<(I::K, I::V)>)| {
+                        let t0 = Instant::now();
+                        // Same home-keyed stream as the serial path, on
+                        // whichever OS thread stole the block.
+                        crate::util::random::set_stream(seed, b2 as u64);
+                        let (n_items, emitted, pairs) = map_block(
+                            |f| {
+                                for (k, v) in &items {
+                                    f(k, v);
+                                }
+                            },
+                            mapper,
+                            red,
+                            conventional,
+                        );
+                        debug_assert_eq!(n_items, items.len() as u64);
+                        mapped_out.lock().expect("map batch poisoned").insert(
+                            b2,
+                            MappedBlock {
+                                items: n_items,
+                                emitted,
+                                pairs,
+                                exec_secs: t0.elapsed().as_secs_f64(),
+                            },
+                        );
+                    };
+                    let ps = pool::execute(tn, tn * 2, produce, work);
+                    pool_queue_peak = pool_queue_peak.max(ps.queue_peak);
+                    if pool_thread_blocks.len() < ps.per_thread_blocks.len() {
+                        pool_thread_blocks.resize(ps.per_thread_blocks.len(), 0);
+                    }
+                    for (t, blocks) in ps.per_thread_blocks.iter().enumerate() {
+                        pool_thread_blocks[t] += *blocks;
+                    }
+                    spec.append(&mut mapped_out.into_inner().expect("map batch poisoned"));
+                }
+                spec.remove(&b).expect("map batch buffers every pending block")
+            }
+        };
+        let items_here = mapped.items;
+        let emitted_here = mapped.emitted;
+        // Partition by target shard at commit time (post-evacuation
+        // routing applies automatically to replays).
+        let mut parts: Vec<Vec<(K2, V2)>> = (0..nodes).map(|_| Vec::new()).collect();
+        {
+            let t_ref: &T = &*target;
+            for (k2, v2) in mapped.pairs {
+                parts[t_ref.shard_of(&k2, nodes)].push((k2, v2));
             }
         }
-        *next = w + 1;
-        let mut exec_secs = t0.elapsed().as_secs_f64();
+        let mut exec_secs = mapped.exec_secs;
         if conventional {
             exec_secs += emitted_here as f64 * cfg.conventional_overhead_sec;
         }
@@ -648,11 +810,21 @@ where
     counters.add("evac.bytes", stats.evacuation_bytes);
     counters.add("replay.blocks", stats.blocks_replayed as u64);
     counters.add("reassign.blocks", stats.blocks_reassigned as u64);
+    if threads.is_some() {
+        counters.max("pool.queue_peak", pool_queue_peak);
+        for (t, blocks) in pool_thread_blocks.iter().enumerate() {
+            counters.add(&format!("pool.thread{t}.blocks"), *blocks);
+        }
+    }
     let (run_counters, node_counters) = counters.finish();
     cluster.metrics().record_run(RunStats {
         label: rec.label,
         engine: format!("{}+ft", cfg.engine),
-        backend: "simulated".into(),
+        // Conventional+ft always executes serial, whatever the backend.
+        backend: match threads {
+            None => "simulated".into(),
+            Some(tn) => format!("threaded:{tn}"),
+        },
         nodes,
         workers_per_node: workers,
         makespan_sec: makespan,
@@ -715,5 +887,42 @@ mod tests {
         let mut rr = 0usize;
         let picks: Vec<usize> = (0..4).map(|_| next_alive_rr(&alive, &mut rr)).collect();
         assert_eq!(picks, vec![0, 3, 0, 3]);
+    }
+
+    #[test]
+    fn map_block_modes_share_one_contract() {
+        let red = Reducer::<u64>::by_name("sum");
+        let items: Vec<(u64, u64)> = (0..10u64).map(|i| (i, 1)).collect();
+        let mapper = |k: &u64, v: &u64, emit: Emit<'_, u64, u64>| emit(k % 3, *v);
+
+        // Conventional: every emitted pair materializes, in emit order.
+        let (n, emitted, pairs) = map_block(
+            |f| {
+                for (k, v) in &items {
+                    f(k, v);
+                }
+            },
+            &mapper,
+            &red,
+            true,
+        );
+        assert_eq!((n, emitted), (10, 10));
+        assert_eq!(pairs.len(), 10, "conventional materializes every pair");
+        assert_eq!(pairs[0], (0, 1), "emit order preserved");
+
+        // Eager: block-local reduction first — 3 keys survive, same mass.
+        let (n, emitted, reduced) = map_block(
+            |f| {
+                for (k, v) in &items {
+                    f(k, v);
+                }
+            },
+            &mapper,
+            &red,
+            false,
+        );
+        assert_eq!((n, emitted), (10, 10));
+        assert_eq!(reduced.len(), 3, "eager cache folds per key");
+        assert_eq!(reduced.iter().map(|&(_, v)| v).sum::<u64>(), 10);
     }
 }

@@ -27,10 +27,15 @@
 //!   (`ClusterConfig::backend = Backend::Threaded(n)`, CLI
 //!   `--backend threaded:N`): a node's map+combine runs on actual OS
 //!   threads (work-stealing block queue, bounded per-thread eager caches,
-//!   lock-striped shard map with canonical merge order) while the shuffle
-//!   stays on the flow model. Byte-identical to the simulated engines at
-//!   any thread count; real per-phase wall clock recorded alongside
-//!   virtual time (DESIGN.md §Execution backends).
+//!   lock-striped shard map with canonical merge order), and shuffle
+//!   frames physically move through [`exec::transport`] — one bounded
+//!   channel per destination node, backpressure window from
+//!   `--transport-window`, stalls/frames/bytes surfaced as `transport.*`
+//!   counters with real shuffle wall clock in `phase_wall_ns` — while a
+//!   deterministic accounting mirror keeps flows and stall counts
+//!   byte-identical to the simulated flow model. Fault-tolerant jobs
+//!   replay killed blocks on the same live pool. Byte-identical results
+//!   at any thread count (DESIGN.md §Execution backends, §Transport).
 //! * [`coordinator`] — cluster topology/config, block scheduler, shuffle
 //!   orchestration with backpressure, shard rebalancing, metrics.
 //! * [`trace`] — structured observability: every engine records typed

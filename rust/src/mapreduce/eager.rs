@@ -12,10 +12,10 @@ use std::collections::hash_map::Entry;
 use std::hash::Hash;
 use std::time::Instant;
 
-use crate::coordinator::backpressure::DEFAULT_WINDOW_BYTES;
 use crate::coordinator::cluster::Cluster;
 use crate::coordinator::metrics::RunStats;
-use crate::coordinator::shuffle::{self, ShufflePayloads};
+use crate::coordinator::shuffle::{self, ShufflePayloads, Transport};
+use crate::exec::transport::TransportTotals;
 use crate::net::vtime::VirtualTime;
 use crate::ser::fastser::{decode_pairs, encode_pairs_into, FastSer};
 use crate::trace::{Counters, TraceBuf, TraceEvent, TraceEventKind};
@@ -187,7 +187,15 @@ where
     let map_wall_ns = t_map.elapsed().as_nanos() as u64;
 
     // ---- Partition, serialize, shuffle, absorb (shared pipeline) --------
-    let out = shuffle_and_absorb(&cluster, node_maps, red, target, &mut vt, &mut trace);
+    let out = shuffle_and_absorb(
+        &cluster,
+        node_maps,
+        red,
+        target,
+        &mut vt,
+        &mut trace,
+        Transport::FlowModel,
+    );
 
     // ---- Record ----------------------------------------------------------
     let compute_sec = vt.compute_sec();
@@ -232,15 +240,18 @@ pub(crate) struct ShuffleOutcome {
     pub peak_bytes: u64,
     /// Host wall nanoseconds of the whole pipeline.
     pub wall_ns: u64,
+    /// Real-transport measurements (`Transport::Channels` only).
+    pub transport: Option<TransportTotals>,
 }
 
 /// Everything after the per-node machine-local maps exist: partition by
 /// the target's sharding, serialize cross-node partials with the fast
-/// codec, stream them through the simulated network, and absorb with the
-/// reduce overlapped. Shared verbatim by the simulated eager engine and
-/// the threaded backend ([`crate::exec`]), which is what keeps the two
-/// backends' downstream behavior — and therefore their results —
-/// identical by construction.
+/// codec, move them (simulated network or real bounded channels, per
+/// `transport`), and absorb with the reduce overlapped. Shared verbatim
+/// by the simulated eager engine and the threaded backend
+/// ([`crate::exec`]), which is what keeps the two backends' downstream
+/// behavior — and therefore their results — identical by construction:
+/// both transports hand back element-identical `delivered` buffers.
 pub(crate) fn shuffle_and_absorb<K2, V2, T>(
     cluster: &Cluster,
     node_maps: Vec<FxHashMap<K2, V2>>,
@@ -248,6 +259,7 @@ pub(crate) fn shuffle_and_absorb<K2, V2, T>(
     target: &mut T,
     vt: &mut VirtualTime,
     trace: &mut TraceBuf,
+    transport: Transport,
 ) -> ShuffleOutcome
 where
     K2: Hash + Eq + Clone + FastSer,
@@ -306,7 +318,43 @@ where
     }
 
     // ---- Shuffle with asynchronous reduce (overlapped) ------------------
-    let sres = shuffle::execute(payloads, DEFAULT_WINDOW_BYTES);
+    let window = cfg.transport_window_bytes;
+    let (sres, transport_totals) = match transport {
+        Transport::FlowModel => (shuffle::execute(payloads, window), None),
+        Transport::Channels => {
+            let tres = crate::exec::transport::execute(payloads, window);
+            // Chrome-only transport events, in deterministic src-major
+            // pair order (they never reach the canonical export).
+            for ps in &tres.pair_stats {
+                trace.push(TraceEvent::new(
+                    ps.src,
+                    None,
+                    "shuffle+async-reduce",
+                    TraceEventKind::FrameSent {
+                        dst: ps.dst,
+                        frames: ps.frames,
+                        bytes: ps.bytes,
+                    },
+                ));
+                if ps.stalls > 0 {
+                    trace.push(TraceEvent::new(
+                        ps.src,
+                        None,
+                        "shuffle+async-reduce",
+                        TraceEventKind::TransportStall { dst: ps.dst, stalls: ps.stalls },
+                    ));
+                }
+            }
+            let totals = tres.totals();
+            let sres = shuffle::ShuffleResult {
+                flows: tres.flows,
+                delivered: tres.delivered,
+                peak_in_flight_bytes: tres.peak_in_flight_bytes,
+                stalls: tres.stalls,
+            };
+            (sres, Some(totals))
+        }
+    };
     let mut per_node_reduce_secs = vec![0.0f64; nodes];
     let mut absorb_buffer_peak = 0u64;
     for (dst, received) in sres.delivered.into_iter().enumerate() {
@@ -351,5 +399,6 @@ where
         shuffle_bytes,
         peak_bytes: sres.peak_in_flight_bytes + absorb_buffer_peak,
         wall_ns: t_start.elapsed().as_nanos() as u64,
+        transport: transport_totals,
     }
 }

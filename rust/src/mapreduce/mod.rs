@@ -257,9 +257,10 @@ pub fn mapreduce_labeled<I, F, K2, V2, R, T>(
     let cfg = input.cluster().config();
     if cfg.fault.enabled() {
         // Fault tolerance on: block-granular recoverable execution
-        // (respects the engine kind for codec and cost modeling). Runs
-        // simulated regardless of backend — threaded recovery is future
-        // work; results stay byte-identical either way.
+        // (respects the engine kind for codec and cost modeling). Under
+        // `Backend::Threaded(n)` the map side — replays included — runs
+        // on the live pool; commits stay serial, so results and canonical
+        // traces are byte-identical across backends.
         crate::fault::engine::run(label, input, &mapper, &red, target);
         return;
     }

@@ -14,6 +14,8 @@ use std::time::Instant;
 
 use crate::coordinator::cluster::Cluster;
 use crate::coordinator::metrics::RunStats;
+use crate::coordinator::shuffle::{ShufflePayloads, Transport};
+use crate::exec::transport::TransportTotals;
 use crate::net::sim::FlowMatrix;
 use crate::net::vtime::VirtualTime;
 use crate::ser::fastser::{decode_pairs, encode_pairs, FastSer};
@@ -105,7 +107,15 @@ where
     let map_wall_ns = t_map.elapsed().as_nanos() as u64;
 
     // ---- Tree reduce + driver absorb (shared pipeline) ------------------
-    let out = tree_reduce_into_target(&cluster, node_partials, red, target, &mut vt, &mut trace);
+    let out = tree_reduce_into_target(
+        &cluster,
+        node_partials,
+        red,
+        target,
+        &mut vt,
+        &mut trace,
+        Transport::FlowModel,
+    );
 
     // ---- Record ----------------------------------------------------------
     let compute_sec = vt.compute_sec();
@@ -148,6 +158,9 @@ pub(crate) struct TreeReduceOutcome {
     pub round_flow_peak: u64,
     /// Host wall nanoseconds of the whole tree reduce.
     pub wall_ns: u64,
+    /// Real-transport measurements accumulated over all rounds
+    /// (`Transport::Channels` only).
+    pub transport: Option<TransportTotals>,
 }
 
 /// The cross-machine binomial tree reduce over per-node dense partials,
@@ -155,7 +168,11 @@ pub(crate) struct TreeReduceOutcome {
 /// `i % 2^(r+1) == 2^r` sends its partial to `i - 2^r`; after
 /// `ceil(log2 nodes)` rounds node 0 holds the total. Shared verbatim by
 /// the simulated small-key engine and the threaded backend
-/// ([`crate::exec`]) so both land bit-identical results.
+/// ([`crate::exec`]) so both land bit-identical results. Each round
+/// serializes every send (Shuffle events), moves the bytes — by hand
+/// under [`Transport::FlowModel`], through real bounded channels under
+/// [`Transport::Channels`] — then decodes and folds (Reduce events), so
+/// the canonical event order is transport-invariant by construction.
 pub(crate) fn tree_reduce_into_target<K2, V2, T>(
     cluster: &Cluster,
     node_partials: Vec<Vec<Option<V2>>>,
@@ -163,6 +180,7 @@ pub(crate) fn tree_reduce_into_target<K2, V2, T>(
     target: &mut T,
     vt: &mut VirtualTime,
     trace: &mut TraceBuf,
+    transport: Transport,
 ) -> TreeReduceOutcome
 where
     V2: Clone + FastSer,
@@ -173,6 +191,10 @@ where
     let nodes = cfg.nodes;
     let mut shuffle_bytes = 0u64;
     let mut round_flow_peak = 0u64;
+    let mut transport_totals = match transport {
+        Transport::FlowModel => None,
+        Transport::Channels => Some(TransportTotals::default()),
+    };
     let mut partials: Vec<Option<Vec<Option<V2>>>> =
         node_partials.into_iter().map(Some).collect();
     let mut stride = 1usize;
@@ -184,7 +206,11 @@ where
         for src in (stride..nodes).step_by(stride * 2) {
             sends.push((src, src - stride));
         }
-        for (src, dst) in sends {
+        // Serialize + Shuffle events for the whole round. The round's
+        // flow matrix records one message per payload (un-chunked),
+        // whatever the transport — virtual time is mode-invariant.
+        let mut bufs: Vec<(usize, usize, Vec<u8>)> = Vec::new();
+        for &(src, dst) in &sends {
             let Some(partial) = partials[src].take() else { continue };
             // Serialize only present entries (sparse pair encoding).
             let pairs: Vec<(u32, V2)> = partial
@@ -209,6 +235,74 @@ where
                 )
                 .at_phase_ix(round),
             );
+            bufs.push((src, dst, buf));
+        }
+        // Move the round's bytes.
+        let moved: Vec<(usize, usize, Vec<u8>)> = match transport {
+            Transport::FlowModel => bufs,
+            Transport::Channels => {
+                let order: Vec<(usize, usize)> = bufs.iter().map(|&(s, d, _)| (s, d)).collect();
+                let mut matrix: ShufflePayloads =
+                    (0..nodes).map(|_| (0..nodes).map(|_| Vec::new()).collect()).collect();
+                for (src, dst, buf) in bufs {
+                    matrix[src][dst] = buf;
+                }
+                let tres = crate::exec::transport::execute(matrix, cfg.transport_window_bytes);
+                for ps in &tres.pair_stats {
+                    trace.push(
+                        TraceEvent::new(
+                            ps.src,
+                            None,
+                            "tree-reduce-round",
+                            TraceEventKind::FrameSent {
+                                dst: ps.dst,
+                                frames: ps.frames,
+                                bytes: ps.bytes,
+                            },
+                        )
+                        .at_phase_ix(round),
+                    );
+                    if ps.stalls > 0 {
+                        trace.push(
+                            TraceEvent::new(
+                                ps.src,
+                                None,
+                                "tree-reduce-round",
+                                TraceEventKind::TransportStall {
+                                    dst: ps.dst,
+                                    stalls: ps.stalls,
+                                },
+                            )
+                            .at_phase_ix(round),
+                        );
+                    }
+                }
+                if let Some(t) = transport_totals.as_mut() {
+                    t.merge(tres.totals());
+                }
+                // Each destination hears from exactly one source per
+                // round; its (src, seq)-sorted frames concatenate back
+                // into the original payload.
+                let mut per_dst = tres.delivered;
+                order
+                    .into_iter()
+                    .map(|(src, dst)| {
+                        let mut buf = Vec::new();
+                        for (s, chunk) in std::mem::take(&mut per_dst[dst]) {
+                            debug_assert_eq!(s, src, "one sender per dst per round");
+                            if buf.is_empty() {
+                                buf = chunk;
+                            } else {
+                                buf.extend_from_slice(&chunk);
+                            }
+                        }
+                        (src, dst, buf)
+                    })
+                    .collect()
+            }
+        };
+        // Decode + fold, in send order (Reduce events).
+        for (src, dst, buf) in moved {
             let t0 = Instant::now();
             let decoded = decode_pairs::<u32, V2>(&buf).expect("tree-reduce payload");
             trace.push(
@@ -242,6 +336,7 @@ where
         shuffle_bytes,
         round_flow_peak,
         wall_ns: t_start.elapsed().as_nanos() as u64,
+        transport: transport_totals,
     }
 }
 

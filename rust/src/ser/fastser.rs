@@ -166,6 +166,13 @@ impl<'a> Reader<'a> {
     }
 
     /// Decode an unsigned LEB128 varint.
+    ///
+    /// Only *minimal* encodings are accepted: a terminal `0x00` byte after
+    /// any continuation byte (e.g. `0x80 0x00` for zero) re-encodes the
+    /// same value in more bytes and is rejected. [`Writer::put_varint`]
+    /// never produces such encodings, so accepting them would let two
+    /// different byte strings decode to the same frame — poison for the
+    /// byte-identity invariants the equivalence gates rely on.
     #[inline]
     pub fn get_varint(&mut self) -> Result<u64, DecodeError> {
         let mut result: u64 = 0;
@@ -175,6 +182,9 @@ impl<'a> Reader<'a> {
                 return Err(DecodeError { at: self.pos, what: "varint truncated" });
             };
             self.pos += 1;
+            if byte == 0 && shift != 0 {
+                return Err(DecodeError { at: self.pos, what: "varint overlong encoding" });
+            }
             if shift == 63 && byte > 1 {
                 return Err(DecodeError { at: self.pos, what: "varint overflows u64" });
             }
@@ -612,6 +622,27 @@ mod tests {
         let bad = [0xffu8; 11];
         let mut r = Reader::new(&bad);
         assert!(r.get_varint().is_err());
+    }
+
+    #[test]
+    fn overlong_varint_encodings_rejected() {
+        // Each of these re-encodes a small value in extra bytes (terminal
+        // 0x00 after a continuation byte) — legal LEB128 shapes, but not
+        // minimal, so the decoder must reject them.
+        let cases: [&[u8]; 4] =
+            [&[0x80, 0x00], &[0xff, 0x00], &[0x80, 0x80, 0x00], &[0x81, 0x80, 0x00]];
+        for bad in cases {
+            let mut r = Reader::new(bad);
+            let err = r.get_varint().unwrap_err();
+            assert_eq!(err.what, "varint overlong encoding", "input {bad:?}");
+        }
+        // The single-byte zero IS the minimal encoding of 0.
+        let mut r = Reader::new(&[0x00]);
+        assert_eq!(r.get_varint().unwrap(), 0);
+        // 0x80 continuation bytes are legal when the terminal byte is
+        // non-zero: this is the minimal encoding of 16384.
+        let mut r = Reader::new(&[0x80, 0x80, 0x01]);
+        assert_eq!(r.get_varint().unwrap(), 16384);
     }
 
     #[test]

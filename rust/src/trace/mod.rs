@@ -86,6 +86,16 @@ pub enum TraceEventKind {
     EvacFallback { victims: Vec<usize> },
     /// One migration flow of an evacuation.
     Migrate { src: usize, dst: usize, bytes: u64 },
+    /// Real transport: all frames one source shipped to `dst` through its
+    /// bounded channel ([`crate::exec::transport`]). Threaded backend
+    /// only — **chrome-view only** (see [`TraceEventKind::chrome_only`]):
+    /// the simulated backend never emits it, so including it in the
+    /// canonical export would break cross-backend byte-identity.
+    FrameSent { dst: usize, frames: u64, bytes: u64 },
+    /// Real transport: frames from one source that exceeded the
+    /// backpressure window toward `dst` and had to wait for a drain.
+    /// Chrome-view only, like [`TraceEventKind::FrameSent`].
+    TransportStall { dst: usize, stalls: u64 },
     /// End-of-job recovery bookkeeping (the old `fault[...]` note).
     FaultSummary {
         checkpoints: u64,
@@ -118,8 +128,18 @@ impl TraceEventKind {
             Self::Evacuate { .. } => "Evacuate",
             Self::EvacFallback { .. } => "EvacFallback",
             Self::Migrate { .. } => "Migrate",
+            Self::FrameSent { .. } => "FrameSent",
+            Self::TransportStall { .. } => "TransportStall",
             Self::FaultSummary { .. } => "FaultSummary",
         }
+    }
+
+    /// True for kinds that exist only on the real (threaded) transport
+    /// and therefore appear only in the Chrome view. The canonical JSONL
+    /// export skips them: a simulated run moves no real frames, and the
+    /// canonical log must stay byte-identical across backends.
+    pub fn chrome_only(&self) -> bool {
+        matches!(self, Self::FrameSent { .. } | Self::TransportStall { .. })
     }
 
     /// Append this kind's fields as `,"k":v` JSON pairs.
@@ -171,6 +191,12 @@ impl TraceEventKind {
             }
             Self::Migrate { src, dst, bytes } => {
                 let _ = write!(out, ",\"src\":{src},\"dst\":{dst},\"bytes\":{bytes}");
+            }
+            Self::FrameSent { dst, frames, bytes } => {
+                let _ = write!(out, ",\"dst\":{dst},\"frames\":{frames},\"bytes\":{bytes}");
+            }
+            Self::TransportStall { dst, stalls } => {
+                let _ = write!(out, ",\"dst\":{dst},\"stalls\":{stalls}");
             }
             Self::FaultSummary {
                 checkpoints,
@@ -488,13 +514,18 @@ impl TraceCollector {
     }
 
     /// The canonical JSONL export: one line per event, schedule-invariant
-    /// fields only. For failure-free seeded single-stage runs this string
-    /// is byte-identical across the simulated engines and any
-    /// `threaded:N` — the equivalence harness gates it.
+    /// fields only. For seeded runs this string is byte-identical across
+    /// the simulated engines and any `threaded:N` — the equivalence
+    /// harness gates it. Transport-only kinds
+    /// ([`TraceEventKind::chrome_only`]) are skipped: real frame movement
+    /// has no simulated counterpart.
     pub fn canonical_jsonl(&self) -> String {
         let mut out = String::new();
         for job in &self.jobs {
             for ev in &job.events {
+                if ev.kind.chrome_only() {
+                    continue;
+                }
                 ev.write_canonical(&job.label, &mut out);
             }
         }
@@ -738,6 +769,28 @@ mod tests {
         assert!(jsonl.contains("\"commit\":4"));
         let chrome = col.chrome_json();
         assert_eq!(chrome.matches("\"name\":\"Checkpoint\"").count(), 1);
+    }
+
+    #[test]
+    fn chrome_only_events_excluded_from_canonical() {
+        let mut buf = TraceBuf::new(true);
+        buf.push(ev(0, TraceEventKind::Reduce { from: 1, pairs: 8 }));
+        buf.push(ev(0, TraceEventKind::FrameSent { dst: 1, frames: 3, bytes: 96 }));
+        buf.push(ev(0, TraceEventKind::TransportStall { dst: 1, stalls: 2 }));
+        let mut col = TraceCollector::new(true);
+        col.absorb_job("j", buf);
+        // Canonical view: only the schedule-invariant Reduce line survives.
+        let jsonl = col.canonical_jsonl();
+        assert_eq!(jsonl.lines().count(), 1);
+        assert!(jsonl.contains("\"ev\":\"Reduce\""));
+        assert!(!jsonl.contains("FrameSent"));
+        assert!(!jsonl.contains("TransportStall"));
+        // Chrome view keeps them, with the transport fields in args.
+        let chrome = col.chrome_json();
+        assert_eq!(chrome.matches("\"name\":\"FrameSent\"").count(), 1);
+        assert_eq!(chrome.matches("\"name\":\"TransportStall\"").count(), 1);
+        assert!(chrome.contains("\"frames\":3"));
+        assert!(chrome.contains("\"stalls\":2"));
     }
 
     #[test]

@@ -15,18 +15,21 @@
 //!   injected failures with hot-standby recovery, and injected failures
 //!   with `--evacuate`-style slot re-homing, and
 //! * the threaded backend (`Backend::Threaded`) at 1, 2, and 4 worker
-//!   threads against the pinned-simulated reference — covering both the
-//!   threaded eager path (hash/vector targets) and the threaded small-key
-//!   path (dense `Vec` targets) — plus one checkpointed row under a
-//!   threaded config, which exercises the documented fallback (fault-
-//!   enabled jobs run the simulated recoverable engine, threaded config
-//!   or not).
+//!   threads against the pinned-simulated reference — covering the
+//!   threaded eager path (hash/vector targets), the threaded small-key
+//!   path (dense `Vec` targets), and the full threaded × {ckpt, fail,
+//!   fail+evac} recovery grid (the recoverable engine runs its map side —
+//!   replays included — on the live pool, with shuffle bytes moving
+//!   through the real channel transport).
 //!
 //! Values are integers (exact under any reduce order), so equality is
 //! required bit-for-bit, with no float tolerance. (Threaded-vs-simulated
 //! *float* bit-identity is additionally locked in by `rust/tests/exec.rs`
-//! for single-stage jobs, where input iteration order is pinned.) Every
-//! future engine change is gated by this file.
+//! and `rust/tests/transport.rs` for single-stage jobs, where input
+//! iteration order is pinned.) Canonical trace logs are gated the same
+//! way — single-stage, chained two-stage, and iterative jobs must be
+//! byte-identical across backends. Every future engine change is gated by
+//! this file.
 
 use blaze::containers::{DistHashMap, DistRange, DistVector};
 use blaze::coordinator::cluster::{Backend, Cluster, ClusterConfig, EngineKind};
@@ -69,31 +72,44 @@ fn configs(seed: u64, nodes: usize, workers: usize) -> Vec<(String, ClusterConfi
             base.clone().with_fault(
                 FaultConfig::default()
                     .with_checkpoint_every(3)
-                    .with_plan(plan)
+                    .with_plan(plan.clone())
                     .with_evacuation(true),
             ),
         ));
         // Threaded backend axis (eager engine only — the conventional
         // baseline is never threaded): 1/2/4 OS threads run the real
-        // threaded engines. The dense-target workload (π) exercises the
-        // threaded small-key path, the rest the threaded eager path.
+        // threaded engines, shuffle bytes through the channel transport.
+        // The dense-target workload (π) exercises the threaded small-key
+        // path, the rest the threaded eager path. The full recovery grid
+        // repeats under each thread count: fault-enabled jobs run their
+        // map side — kill-induced replays included — on the live pool.
         if engine == EngineKind::Eager {
             for threads in [1usize, 2, 4] {
                 let tb = base.clone().with_backend(Backend::Threaded(threads));
-                out.push((format!("threaded{threads}/plain"), tb));
+                out.push((format!("threaded{threads}/plain"), tb.clone()));
+                out.push((
+                    format!("threaded{threads}/ckpt"),
+                    tb.clone()
+                        .with_fault(FaultConfig::default().with_checkpoint_every(3)),
+                ));
+                out.push((
+                    format!("threaded{threads}/fail"),
+                    tb.clone().with_fault(
+                        FaultConfig::default()
+                            .with_checkpoint_every(3)
+                            .with_plan(plan.clone()),
+                    ),
+                ));
+                out.push((
+                    format!("threaded{threads}/fail+evac"),
+                    tb.with_fault(
+                        FaultConfig::default()
+                            .with_checkpoint_every(3)
+                            .with_plan(plan.clone())
+                            .with_evacuation(true),
+                    ),
+                ));
             }
-            // A checkpointed job under a threaded config does NOT run
-            // threaded code: FaultConfig::enabled() routes it to the
-            // simulated recoverable engine (the documented fallback).
-            // One row locks in that the fallback itself stays
-            // byte-identical under a threaded config; more thread counts
-            // would re-run identical simulated code.
-            out.push((
-                "threaded2/ckpt-fallback".to_string(),
-                base.clone()
-                    .with_backend(Backend::Threaded(2))
-                    .with_fault(FaultConfig::default().with_checkpoint_every(3)),
-            ));
         }
     }
     out
@@ -277,9 +293,8 @@ fn kmeans_step_byte_identical_across_engines_and_policies() {
 /// gate covers the two single-stage shapes where block identity is
 /// pinned: π on the dense small-key path, and a k-means assignment step
 /// on the hash eager path with a tiny cache capacity so overflow flushes
-/// actually occur at every backend. (Chained jobs are compared
-/// result-wise above; their traces concatenate per-job logs and are
-/// covered transitively.)
+/// actually occur at every backend. (Chained and iterative jobs get their
+/// own canonical-trace gate below.)
 #[test]
 fn trace_logs_byte_identical_across_backends() {
     let backends = [
@@ -351,6 +366,117 @@ fn trace_logs_byte_identical_across_backends() {
                 Some((ref_name, want)) => assert_eq!(
                     want, &log,
                     "kmeans trace: {name} diverged from {ref_name} (shape {nodes}x{workers})"
+                ),
+            }
+        }
+    }
+}
+
+/// Canonical-trace byte-identity for **chained and iterative** jobs: a
+/// two-stage hashmap pipeline (vector → word counts, then the hash map
+/// itself as stage-2 input) and a two-iteration k-means loop where
+/// iteration 2's mapper depends on iteration 1's reduced output. The
+/// cluster trace concatenates per-job logs, so this locks in that block
+/// identity, event ordering, *and* cross-job data handoff are all
+/// transport- and thread-count-invariant — not just within one job.
+#[test]
+fn chained_and_iterative_trace_logs_byte_identical_across_backends() {
+    let backends = [
+        ("simulated", Backend::Simulated),
+        ("threaded1", Backend::Threaded(1)),
+        ("threaded2", Backend::Threaded(2)),
+        ("threaded4", Backend::Threaded(4)),
+    ];
+    let lines = gen_lines(0x7ACE_C4A1, 60);
+    let points = gen_points(0x7ACE_C4A2, 90);
+    for &(nodes, workers) in SHAPES {
+        // Two-stage pipeline: wordcount, then a histogram over the word
+        // map (stage 2 iterates a DistHashMap input).
+        let mut reference: Option<(&str, String)> = None;
+        for (name, backend) in backends {
+            let cfg = ClusterConfig::sized(nodes, workers)
+                .with_backend(backend)
+                .with_seed(0x7ACE_0003)
+                .with_trace(true);
+            let c = Cluster::new(cfg.clone());
+            let dv = DistVector::from_vec(&c, lines.clone());
+            let mut words: DistHashMap<String, u64> = DistHashMap::new(&c);
+            mapreduce(
+                &dv,
+                |_, line: &String, emit| {
+                    for w in line.split_whitespace() {
+                        emit(w.to_string(), 1u64);
+                    }
+                },
+                "sum",
+                &mut words,
+            );
+            let mut hist: DistHashMap<u64, u64> = DistHashMap::new(&c);
+            mapreduce(
+                &words,
+                |w: &String, n: &u64, emit| emit((w.len() as u64 % 5) * 100 + n % 7, *n),
+                "sum",
+                &mut hist,
+            );
+            let log = c.trace().canonical_jsonl();
+            assert!(!log.is_empty(), "pipeline trace empty under {name}");
+            match &reference {
+                None => reference = Some((name, log)),
+                Some((ref_name, want)) => assert_eq!(
+                    want, &log,
+                    "pipeline trace: {name} diverged from {ref_name} \
+                     (shape {nodes}x{workers})"
+                ),
+            }
+        }
+        // Two-iteration k-means: integer centroid update between the
+        // iterations, so iteration 2's block outputs (and trace) depend
+        // on iteration 1 being byte-identical.
+        let mut reference: Option<(&str, String)> = None;
+        for (name, backend) in backends {
+            let cfg = ClusterConfig::sized(nodes, workers)
+                .with_backend(backend)
+                .with_seed(0x7ACE_0004)
+                .with_trace(true);
+            let c = Cluster::new(cfg.clone());
+            let dv = DistVector::from_vec(&c, points.clone());
+            let mut centers: Vec<(i64, i64)> =
+                vec![(-500, -500), (0, 0), (400, 300), (-200, 800)];
+            for _iter in 0..2 {
+                let ctrs = centers.clone();
+                let mut stats: DistHashMap<u64, Stat> = DistHashMap::new(&c);
+                mapreduce(
+                    &dv,
+                    move |_, p: &(i64, i64), emit| {
+                        let mut best = 0u64;
+                        let mut best_d = i64::MAX;
+                        for (i, ctr) in ctrs.iter().enumerate() {
+                            let (dx, dy) = (p.0 - ctr.0, p.1 - ctr.1);
+                            let d = dx * dx + dy * dy;
+                            if d < best_d {
+                                best_d = d;
+                                best = i as u64;
+                            }
+                        }
+                        emit(best, (1u64, (p.0, p.1)));
+                    },
+                    Reducer::custom_fn(add_stat),
+                    &mut stats,
+                );
+                for (k, (n, (sx, sy))) in stats.collect() {
+                    if n > 0 {
+                        centers[k as usize] = (sx / n as i64, sy / n as i64);
+                    }
+                }
+            }
+            let log = c.trace().canonical_jsonl();
+            assert!(!log.is_empty(), "kmeans-iter trace empty under {name}");
+            match &reference {
+                None => reference = Some((name, log)),
+                Some((ref_name, want)) => assert_eq!(
+                    want, &log,
+                    "kmeans-iter trace: {name} diverged from {ref_name} \
+                     (shape {nodes}x{workers})"
                 ),
             }
         }

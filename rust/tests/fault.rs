@@ -9,7 +9,7 @@ use std::collections::HashMap;
 
 use blaze::apps::{kmeans, wordcount::wordcount};
 use blaze::containers::{DistHashMap, DistVector};
-use blaze::coordinator::cluster::{Cluster, ClusterConfig, EngineKind};
+use blaze::coordinator::cluster::{Backend, Cluster, ClusterConfig, EngineKind};
 use blaze::data::PointSet;
 use blaze::fault::{FailurePlan, FaultConfig};
 use blaze::mapreduce::{mapreduce, Reducer};
@@ -435,6 +435,159 @@ fn fault_summary_event_renders_the_recorded_note() {
         .find(|n| n.starts_with("fault[wordcount.mr]"))
         .expect("fault note recorded");
     assert_eq!(&rendered, note, "rendered summary must equal the legacy note");
+}
+
+// ---- Threaded recovery: replay on the live pool ------------------------
+
+/// Wordcount on an explicitly pinned backend; returns the counts and the
+/// job's RunStats (cloned out of the registry).
+fn run_wordcount_on(
+    backend: Backend,
+    fault: FaultConfig,
+) -> (HashMap<String, u64>, blaze::coordinator::metrics::RunStats) {
+    let c = Cluster::new(
+        ClusterConfig::sized(NODES, WORKERS)
+            .with_engine(EngineKind::Eager)
+            .with_backend(backend)
+            .with_fault(fault),
+    );
+    let lines = blaze::data::corpus_lines(600, 8, 7);
+    let dv = DistVector::from_vec(&c, lines);
+    let (_, words) = wordcount(&c, &dv);
+    let stats = c
+        .metrics()
+        .runs()
+        .iter()
+        .find(|r| r.label == "wordcount.mr")
+        .expect("run recorded")
+        .clone();
+    (words.collect(), stats)
+}
+
+#[test]
+fn threaded_recovery_byte_identical_to_simulated() {
+    // The kill fires at a block-boundary commit while speculative map
+    // results for later blocks are already buffered from the live pool:
+    // rollback, replay (re-executed on the pool), and the final counts
+    // must match the simulated recoverable engine exactly.
+    for plan in [
+        ckpt().with_plan(FailurePlan::kill_at_block(1, 4)),
+        ckpt().with_plan(FailurePlan::kill_at_block(1, 4)).with_evacuation(true),
+    ] {
+        let (reference, sim_stats) = run_wordcount_on(Backend::Simulated, plan.clone());
+        assert_eq!(sim_stats.backend, "simulated");
+        for threads in [2usize, 4] {
+            let (got, stats) = run_wordcount_on(Backend::Threaded(threads), plan.clone());
+            assert_eq!(
+                reference, got,
+                "threaded:{threads} recovery diverged (evac={})",
+                plan.evacuate
+            );
+            assert_eq!(stats.backend, format!("threaded:{threads}"));
+            assert!(stats.engine.ends_with("+ft"), "engine tag {}", stats.engine);
+            // The map side (replays included) really ran on the pool.
+            assert!(stats.counter("pool.queue_peak").is_some(), "pool accounting");
+            let pool_blocks: u64 = (0..threads)
+                .map(|t| stats.counter(&format!("pool.thread{t}.blocks")).unwrap_or(0))
+                .sum();
+            assert!(pool_blocks > 0, "blocks must execute on pool threads");
+            assert!(stats.shuffle_bytes > 0, "checkpoint/restore traffic counted");
+        }
+    }
+}
+
+#[test]
+fn threaded_evacuation_reroutes_dead_shard() {
+    let fault = ckpt().with_plan(FailurePlan::kill_at_block(1, 3)).with_evacuation(true);
+    let c = Cluster::new(
+        ClusterConfig::sized(NODES, WORKERS)
+            .with_engine(EngineKind::Eager)
+            .with_backend(Backend::Threaded(2))
+            .with_fault(fault),
+    );
+    let lines = blaze::data::corpus_lines(600, 8, 7);
+    let dv = DistVector::from_vec(&c, lines);
+    let (_, words) = wordcount(&c, &dv);
+    // Post-evacuation routing applied to replayed partials too: nothing
+    // may land on (or route to) the dead shard.
+    assert!(words.shard(1).is_empty(), "dead shard must be evacuated");
+    for node in 0..NODES {
+        for (k, _) in words.shard(node) {
+            assert_ne!(words.owner_of(k), 1, "key {k:?} still routed to dead node 1");
+        }
+    }
+    let m = c.metrics();
+    let run = m.runs().iter().find(|r| r.label == "wordcount.mr").expect("run recorded");
+    assert!(run.evac_bytes > 0, "migration traffic must be charged");
+    assert_eq!(run.backend, "threaded:2");
+}
+
+#[test]
+fn threaded_fault_trace_keeps_kill_rollback_replay_order() {
+    // Same timeline contract as the simulated engine, with the map side
+    // on real threads: commits are serialized, so the canonical order
+    // Kill -> Rollback(s) -> Replay(s) -> FaultSummary must hold.
+    let c = Cluster::new(
+        ClusterConfig::sized(NODES, WORKERS)
+            .with_engine(EngineKind::Eager)
+            .with_backend(Backend::Threaded(4))
+            .with_fault(ckpt().with_plan(FailurePlan::kill_at_block(1, 4)))
+            .with_trace(true),
+    );
+    let lines = blaze::data::corpus_lines(600, 8, 7);
+    let dv = DistVector::from_vec(&c, lines);
+    let _ = wordcount(&c, &dv);
+    let trace = c.trace();
+    let job = trace
+        .jobs()
+        .iter()
+        .find(|j| j.label == "wordcount.mr")
+        .expect("wordcount.mr trace recorded");
+    let kinds: Vec<&'static str> = job.events.iter().map(|e| e.kind.name()).collect();
+    let kill = kinds.iter().position(|k| *k == "Kill").expect("Kill event");
+    let rollbacks: Vec<usize> =
+        (0..kinds.len()).filter(|&i| kinds[i] == "Rollback").collect();
+    let replays: Vec<usize> = (0..kinds.len()).filter(|&i| kinds[i] == "Replay").collect();
+    assert!(!rollbacks.is_empty(), "post-checkpoint commit must roll back: {kinds:?}");
+    assert!(!replays.is_empty(), "rolled-back blocks must replay: {kinds:?}");
+    assert!(rollbacks.iter().all(|&i| i > kill), "rollbacks follow the kill");
+    assert!(
+        replays.iter().min() > rollbacks.iter().max(),
+        "replays run after every rollback: {kinds:?}"
+    );
+    assert_eq!(kinds.last(), Some(&"FaultSummary"), "summary closes the job");
+}
+
+#[test]
+fn conventional_ft_never_threads() {
+    // The conventional baseline models a serial system; a threaded
+    // backend request must not change its execution or its accounting.
+    let fault = ckpt().with_plan(FailurePlan::kill_at_block(1, 3));
+    let run = |backend: Backend| {
+        let c = Cluster::new(
+            ClusterConfig::sized(NODES, WORKERS)
+                .with_engine(EngineKind::Conventional)
+                .with_backend(backend)
+                .with_fault(fault.clone()),
+        );
+        let lines = blaze::data::corpus_lines(600, 8, 7);
+        let dv = DistVector::from_vec(&c, lines);
+        let (_, words) = wordcount(&c, &dv);
+        let stats = c
+            .metrics()
+            .runs()
+            .iter()
+            .find(|r| r.label == "wordcount.mr")
+            .expect("run recorded")
+            .clone();
+        (words.collect(), stats)
+    };
+    let (reference, sim) = run(Backend::Simulated);
+    let (got, thr) = run(Backend::Threaded(4));
+    assert_eq!(reference, got);
+    assert_eq!(sim.backend, "simulated");
+    assert_eq!(thr.backend, "simulated", "conventional+ft always executes serial");
+    assert!(thr.counter("pool.queue_peak").is_none(), "no pool accounting");
 }
 
 // ---- Conventional-mode serialization parity ---------------------------

@@ -10,7 +10,9 @@ use blaze::coordinator::cluster::{Cluster, ClusterConfig, EngineKind};
 use blaze::coordinator::rebalance::{self, SlotMap, NUM_SLOTS};
 use blaze::coordinator::scheduler::{block_owner, block_ranges, weighted_contiguous_ranges};
 use blaze::mapreduce::{mapreduce, Reducer};
-use blaze::ser::fastser::{decode_pairs, encode_pairs, FastSer, Reader, Writer};
+use blaze::ser::fastser::{
+    decode_pairs, decode_pairs_exact, encode_pairs, varint_len, FastSer, Reader, Writer,
+};
 use blaze::ser::tagged::{decode_pairs_tagged, encode_pairs_tagged};
 use blaze::util::rng::SplitRng;
 
@@ -59,6 +61,85 @@ fn prop_fastser_encoded_len_is_exact() {
         assert_eq!(back.1, v.1);
         assert_eq!(back.2.to_bits(), v.2.to_bits());
         assert!(r.is_at_end());
+    }
+}
+
+/// Hostile varint shapes: for random values, every *overlong* re-encoding
+/// (extra continuation bytes ending in a terminal 0x00) must be rejected by
+/// `get_varint`, while the minimal encoding round-trips. LEB128 without a
+/// minimality rule maps many byte strings to one value — poison for the
+/// byte-identity gates — so the decoder enforces canonical form.
+#[test]
+fn prop_overlong_varints_rejected_minimal_accepted() {
+    let mut rng = SplitRng::new(0x0B5C_E4E, 10);
+    for case in 0..300 {
+        // Bias toward small values (short encodings leave room to pad).
+        let v = if case % 3 == 0 { rng.below(128) } else { rng.next_u64() >> rng.below(60) };
+        let mut w = Writer::new();
+        w.put_varint(v);
+        let minimal = w.as_bytes().to_vec();
+        assert_eq!(minimal.len(), varint_len(v), "case {case}");
+        let mut r = Reader::new(&minimal);
+        assert_eq!(r.get_varint().unwrap(), v, "case {case}: minimal form must decode");
+
+        // Overlong form: set the continuation bit on the last byte and
+        // append a terminal zero. Same value, one byte longer — the
+        // decoder must reject it (10-byte cap keeps the shape in range).
+        if minimal.len() < 10 {
+            let mut overlong = minimal.clone();
+            *overlong.last_mut().unwrap() |= 0x80;
+            overlong.push(0x00);
+            let mut r = Reader::new(&overlong);
+            let err = r.get_varint().unwrap_err();
+            assert_eq!(err.what, "varint overlong encoding", "case {case}: v={v}");
+        }
+    }
+}
+
+/// Frame-level rejection: a batch whose count varint (or any interior
+/// varint) is re-encoded overlong must fail `decode_pairs_exact`, and
+/// truncating a frame at every byte boundary must error — never panic,
+/// never silently return a shorter batch.
+#[test]
+fn prop_decode_pairs_exact_rejects_overlong_and_truncated_frames() {
+    let mut rng = SplitRng::new(0xF4A_3E5, 11);
+    for case in 0..100 {
+        let n = 1 + rng.below(20) as usize;
+        let pairs: Vec<(u64, u64)> = (0..n)
+            .map(|_| (rng.below(1 << 14), rng.below(1 << 14)))
+            .collect();
+        let buf = encode_pairs(&pairs);
+        assert_eq!(decode_pairs_exact::<u64, u64>(&buf).unwrap(), pairs, "case {case}");
+
+        // Overlong count varint: same count, padded encoding.
+        let count_len = varint_len(pairs.len() as u64);
+        let mut padded = buf.clone();
+        padded[count_len - 1] |= 0x80;
+        padded.insert(count_len, 0x00);
+        assert_eq!(
+            decode_pairs_exact::<u64, u64>(&padded).unwrap_err().what,
+            "varint overlong encoding",
+            "case {case}: padded count accepted"
+        );
+
+        // Overlong *interior* varint: pad the first key's encoding.
+        let key_len = varint_len(pairs[0].0);
+        let mut padded_key = buf.clone();
+        padded_key[count_len + key_len - 1] |= 0x80;
+        padded_key.insert(count_len + key_len, 0x00);
+        assert_eq!(
+            decode_pairs_exact::<u64, u64>(&padded_key).unwrap_err().what,
+            "varint overlong encoding",
+            "case {case}: padded key accepted"
+        );
+
+        // Every truncation errors (the frame is self-delimiting).
+        for cut in 0..buf.len() {
+            assert!(
+                decode_pairs_exact::<u64, u64>(&buf[..cut]).is_err(),
+                "case {case}: cut {cut} accepted"
+            );
+        }
     }
 }
 

@@ -1,0 +1,230 @@
+//! Transport stress suite: the real bounded-channel shuffle under
+//! hostile conditions.
+//!
+//! `rust/tests/exec.rs` gates the threaded backend's *results*; this
+//! file gates the transport itself, end-to-end through `Cluster` runs:
+//!
+//! * **stall storms** — `transport_window_bytes = 1` makes every
+//!   cross-node frame overflow the window, so the deterministic
+//!   window-accounting mirror must report *exactly* one stall per frame
+//!   (`transport.stalls == transport.frames`), at any thread count,
+//!   while results stay byte-identical to the simulated engine;
+//! * **hostile key skew** — one hot key concentrating ~70% of traffic
+//!   on one shard stripe, with non-associative f64 values whose low
+//!   bits expose any reordering the channels might introduce;
+//! * **degenerate shapes** — more threads than blocks, zero-item
+//!   partitions, and fully empty inputs still carry the `transport.*`
+//!   counter family and the `transport` wall-clock phase;
+//! * **counter hygiene** — frames/bytes are functions of the payload
+//!   matrix alone (identical across thread counts and window sizes);
+//!   simulated runs carry no `transport.*` counters at all.
+
+use blaze::containers::{DistHashMap, DistRange, DistVector};
+use blaze::coordinator::cluster::{Backend, Cluster, ClusterConfig};
+use blaze::mapreduce::{mapreduce, mapreduce_range};
+use blaze::util::SplitRng;
+
+const THREADS: &[usize] = &[1, 2, 4];
+
+/// Skewed `(key, value)` stream: ~70% of items hit the hot key 0, the
+/// rest spread over a vocabulary wide enough to touch every shard;
+/// values mix magnitudes so f64 addition order shows in the low bits.
+fn gen_skewed(seed: u64, n: usize) -> Vec<(u64, f64)> {
+    let mut rng = SplitRng::new(seed, 0x7A_5EED);
+    (0..n)
+        .map(|_| {
+            let key = if rng.below(10) < 7 { 0 } else { 1 + rng.below(96) };
+            let mantissa = rng.below(1 << 40) as f64;
+            let scale = -(rng.below(60) as i32);
+            (key, mantissa * 2f64.powi(scale))
+        })
+        .collect()
+}
+
+/// Run one f64 sum job and return `(sorted key→bits, last RunStats)`.
+fn run_sum_f64(
+    cfg: &ClusterConfig,
+    items: &[(u64, f64)],
+) -> (Vec<(u64, u64)>, blaze::coordinator::metrics::RunStats) {
+    let c = Cluster::new(cfg.clone());
+    let dv = DistVector::from_vec(&c, items.to_vec());
+    let mut out: DistHashMap<u64, f64> = DistHashMap::new(&c);
+    mapreduce(&dv, |_, kv: &(u64, f64), emit| emit(kv.0, kv.1), "sum", &mut out);
+    let mut bits: Vec<(u64, u64)> =
+        out.collect().into_iter().map(|(k, v)| (k, v.to_bits())).collect();
+    bits.sort_unstable();
+    let run = c.metrics().last_run().expect("run recorded").clone();
+    (bits, run)
+}
+
+/// A one-byte window makes every cross-node frame (always ≥ 2 serialized
+/// bytes) overflow: the deterministic stall mirror must charge exactly
+/// one stall per frame, and the storm must not perturb results.
+#[test]
+fn capacity_one_window_forces_exact_stall_per_frame() {
+    for &(nodes, workers) in &[(3usize, 2usize), (4, 4)] {
+        let items = gen_skewed(0x7A_0001 + nodes as u64, 3000);
+        let base = ClusterConfig::sized(nodes, workers).with_seed(0x7A_0002);
+        let (reference, sim_run) =
+            run_sum_f64(&base.clone().with_backend(Backend::Simulated), &items);
+        assert!(sim_run.counter("transport.frames").is_none());
+
+        let mut frames_seen: Option<u64> = None;
+        for &threads in THREADS {
+            let cfg = base
+                .clone()
+                .with_backend(Backend::Threaded(threads))
+                .with_transport_window(1);
+            let (got, run) = run_sum_f64(&cfg, &items);
+            assert_eq!(reference, got, "stall storm changed results (threads={threads})");
+            assert_eq!(run.backend, format!("threaded:{threads}"));
+
+            let frames = run.counter("transport.frames").expect("frames counted");
+            let stalls = run.counter("transport.stalls").expect("stalls counted");
+            let bytes = run.counter("transport.bytes").expect("bytes counted");
+            assert!(frames > 0, "{nodes}x{workers} must shuffle cross-node frames");
+            assert_eq!(
+                stalls, frames,
+                "window=1: every frame must stall exactly once (threads={threads})"
+            );
+            assert!(bytes > frames, "frames carry multi-byte payloads");
+            assert!(
+                run.counter("transport.queue_peak_bytes").expect("peak counted") > 0,
+                "moved frames must have sat in a destination queue"
+            );
+            assert!(run.wall_ns("transport").is_some(), "transport phase recorded");
+
+            // Frames are a function of the payload matrix alone.
+            match frames_seen {
+                None => frames_seen = Some(frames),
+                Some(f) => assert_eq!(f, frames, "frame count drifted with thread count"),
+            }
+
+            // A roomy window moves the same frames with zero stalls.
+            let (got_wide, run_wide) = run_sum_f64(
+                &base.clone().with_backend(Backend::Threaded(threads)),
+                &items,
+            );
+            assert_eq!(reference, got_wide);
+            assert_eq!(run_wide.counter("transport.frames"), Some(frames));
+            assert_eq!(run_wide.counter("transport.bytes"), Some(bytes));
+            assert_eq!(
+                run_wide.counter("transport.stalls"),
+                Some(0),
+                "default 4 MiB window never stalls on this payload"
+            );
+        }
+    }
+}
+
+/// Hostile skew + tiny eager cache + narrow window: flush storm and
+/// stall storm together, repeated so scheduler interleavings get a
+/// chance to break f64 bit-identity with the simulated reference.
+#[test]
+fn skewed_f64_bit_identity_survives_narrow_windows() {
+    let items = gen_skewed(0x7A_1001, 2500);
+    for &(nodes, workers) in &[(2usize, 3usize), (4, 2)] {
+        let mut base = ClusterConfig::sized(nodes, workers).with_seed(0x7A_1002);
+        base.thread_cache_entries = 4;
+        let (reference, _) =
+            run_sum_f64(&base.clone().with_backend(Backend::Simulated), &items);
+        for &threads in THREADS {
+            for window in [1u64, 64, 4 << 20] {
+                for rep in 0..2 {
+                    let cfg = base
+                        .clone()
+                        .with_backend(Backend::Threaded(threads))
+                        .with_transport_window(window);
+                    let (got, _) = run_sum_f64(&cfg, &items);
+                    assert_eq!(
+                        reference, got,
+                        "threaded:{threads} window={window} rep={rep} diverged \
+                         (shape {nodes}x{workers})"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Degenerate shapes: more threads than blocks, zero-item partitions,
+/// and an entirely empty input. The transport counters must exist (at
+/// zero where nothing moved) and results must match simulated.
+#[test]
+fn degenerate_shapes_keep_transport_accounting() {
+    // 4x4 cluster, 3 items: most partitions are empty.
+    for &n in &[0usize, 3] {
+        let items: Vec<(u64, f64)> = (0..n as u64).map(|i| (i * 31, 1.5 + i as f64)).collect();
+        let base = ClusterConfig::sized(4, 4).with_seed(0x7A_2001);
+        let (reference, _) =
+            run_sum_f64(&base.clone().with_backend(Backend::Simulated), &items);
+        let cfg = base
+            .clone()
+            .with_backend(Backend::Threaded(8))
+            .with_transport_window(1);
+        let (got, run) = run_sum_f64(&cfg, &items);
+        assert_eq!(reference, got, "n={n}");
+        let frames = run.counter("transport.frames").expect("family present even idle");
+        assert_eq!(run.counter("transport.stalls"), Some(frames), "window=1 contract");
+        assert!(run.wall_ns("transport").is_some());
+        if n == 0 {
+            assert_eq!(frames, 0, "empty input moves nothing");
+            assert_eq!(run.counter("transport.bytes"), Some(0));
+        }
+    }
+
+    // Single-node cluster: all payloads are node-local, the channel
+    // layer must stay idle but still report.
+    let items = gen_skewed(0x7A_2002, 400);
+    let base = ClusterConfig::sized(1, 2).with_seed(0x7A_2003);
+    let (reference, _) = run_sum_f64(&base.clone().with_backend(Backend::Simulated), &items);
+    let cfg = base.with_backend(Backend::Threaded(4)).with_transport_window(1);
+    let (got, run) = run_sum_f64(&cfg, &items);
+    assert_eq!(reference, got);
+    assert_eq!(run.counter("transport.frames"), Some(0), "locals bypass channels");
+    assert_eq!(run.counter("transport.stalls"), Some(0));
+}
+
+/// The dense small-key path moves tree-reduce rounds through the same
+/// transport: window=1 stalls every round's frame, and the reduced f64
+/// sums stay bit-identical to the simulated binomial tree.
+#[test]
+fn smallkey_tree_reduce_stalls_and_stays_bit_identical() {
+    const KEYS: usize = 5;
+    let run = |cfg: &ClusterConfig| -> (Vec<u64>, blaze::coordinator::metrics::RunStats) {
+        let c = Cluster::new(cfg.clone());
+        let r = DistRange::new(&c, 0, 4000);
+        let mut sums = vec![0.0f64; KEYS];
+        mapreduce_range(
+            &r,
+            |v, emit| {
+                let x = (v as f64 * 0.73).sin();
+                emit((v % KEYS as u64) as usize, x * x);
+            },
+            "sum",
+            &mut sums,
+        );
+        let run = c.metrics().last_run().expect("run recorded").clone();
+        (sums.into_iter().map(f64::to_bits).collect(), run)
+    };
+    let base = ClusterConfig::sized(4, 2).with_seed(0x7A_3001);
+    let (reference, sim_run) = run(&base.clone().with_backend(Backend::Simulated));
+    assert!(sim_run.counter("transport.frames").is_none());
+    for &threads in THREADS {
+        let cfg = base
+            .clone()
+            .with_backend(Backend::Threaded(threads))
+            .with_transport_window(1);
+        let (got, stats) = run(&cfg);
+        assert_eq!(reference, got, "threads={threads} tree-reduce diverged");
+        let frames = stats.counter("transport.frames").expect("frames counted");
+        assert!(frames > 0, "4-node binomial tree must move partials");
+        assert_eq!(
+            stats.counter("transport.stalls"),
+            Some(frames),
+            "window=1: one stall per tree-reduce frame"
+        );
+        assert!(stats.wall_ns("transport").is_some());
+        assert!(stats.wall_ns("tree-reduce").is_some());
+    }
+}
