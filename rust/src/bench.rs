@@ -7,33 +7,51 @@
 
 use std::time::Instant;
 
-/// Mean ± standard deviation of repeated measurements.
+/// Mean ± standard deviation plus order statistics of repeated
+/// measurements.
 #[derive(Debug, Clone, Copy)]
 pub struct Sample {
     /// Mean of the measurements.
     pub mean: f64,
     /// Sample standard deviation.
     pub std: f64,
+    /// Smallest measurement.
+    pub min: f64,
+    /// Median (nearest-rank).
+    pub p50: f64,
+    /// 95th percentile (nearest-rank).
+    pub p95: f64,
     /// Number of measurements.
     pub n: usize,
 }
 
 impl std::fmt::Display for Sample {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        write!(f, "{:.4} ± {:.4}", self.mean, self.std)
+        write!(
+            f,
+            "{:.4} ± {:.4} [min {:.4} p50 {:.4} p95 {:.4}]",
+            self.mean, self.std, self.min, self.p50, self.p95
+        )
     }
 }
 
-/// Summarize raw measurements.
+/// Summarize raw measurements. An empty slice (e.g. `BLAZE_BENCH_REPS=0`)
+/// yields an all-zero sample rather than NaNs, so reports stay diffable.
 pub fn summarize(xs: &[f64]) -> Sample {
     let n = xs.len();
+    if n == 0 {
+        return Sample { mean: 0.0, std: 0.0, min: 0.0, p50: 0.0, p95: 0.0, n: 0 };
+    }
     let mean = xs.iter().sum::<f64>() / n as f64;
     let var = if n > 1 {
         xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / (n - 1) as f64
     } else {
         0.0
     };
-    Sample { mean, std: var.sqrt(), n }
+    let mut sorted = xs.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).expect("finite measurements"));
+    let rank = |q: f64| sorted[((q * n as f64).ceil() as usize).clamp(1, n) - 1];
+    Sample { mean, std: var.sqrt(), min: sorted[0], p50: rank(0.50), p95: rank(0.95), n }
 }
 
 /// Run `f` once as warmup (discarded, mirroring the paper's warmup runs),
@@ -121,6 +139,7 @@ pub fn figure_header(name: &str, paper_claim: &str) {
     println!("==============================================================");
     println!("{name}");
     println!("paper: {paper_claim}");
+    println!("timings: mean ± std [min p50 p95] over {} reps", reps());
     println!("==============================================================");
 }
 
@@ -188,6 +207,16 @@ pub mod report {
                 for (k, v) in cs {
                     self.nums.push((format!("node{node}.{k}"), *v as f64));
                 }
+            }
+            // Histogram digests: `hist.<series>.<stat>`. Non-`wall.`
+            // series are deterministic and exact-gated by `blaze report`;
+            // `hist.wall.*` fields are wall-time and advisory.
+            for (name, h) in &stats.histograms {
+                self.nums.push((format!("hist.{name}.count"), h.count() as f64));
+                self.nums.push((format!("hist.{name}.p50"), h.p50() as f64));
+                self.nums.push((format!("hist.{name}.p95"), h.p95() as f64));
+                self.nums.push((format!("hist.{name}.p99"), h.p99() as f64));
+                self.nums.push((format!("hist.{name}.max"), h.max_value() as f64));
             }
             self
         }
@@ -321,9 +350,14 @@ pub mod report {
 
         #[test]
         fn counters_fold_into_row_nums() {
+            let mut h = crate::trace::histogram::Histogram::new();
+            for v in [1u64, 2, 3, 4] {
+                h.record(v);
+            }
             let stats = crate::coordinator::metrics::RunStats {
                 counters: vec![("ckpt.count".into(), 3)],
                 node_counters: vec![vec![], vec![("map.items".into(), 7)]],
+                histograms: vec![("map.block_items".into(), h)],
                 ..Default::default()
             };
             let mut rep = Report::new("counter_fold");
@@ -331,6 +365,8 @@ pub mod report {
             let js = rep.to_json();
             assert!(js.contains("\"ckpt.count\":3"), "{js}");
             assert!(js.contains("\"node1.map.items\":7"), "{js}");
+            assert!(js.contains("\"hist.map.block_items.count\":4"), "{js}");
+            assert!(js.contains("\"hist.map.block_items.max\":4"), "{js}");
         }
 
         #[test]
@@ -357,6 +393,24 @@ mod tests {
         assert!((s.mean - 2.0).abs() < 1e-12);
         assert!((s.std - 1.0).abs() < 1e-12);
         assert_eq!(s.n, 3);
+    }
+
+    #[test]
+    fn summarize_order_statistics() {
+        let s = summarize(&[3.0, 1.0, 2.0, 4.0]);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.p50, 2.0, "nearest-rank median of 4");
+        assert_eq!(s.p95, 4.0);
+        // Singleton: every statistic collapses to the one value.
+        let one = summarize(&[7.0]);
+        assert_eq!((one.min, one.p50, one.p95), (7.0, 7.0, 7.0));
+    }
+
+    #[test]
+    fn summarize_empty_is_all_zero() {
+        let s = summarize(&[]);
+        assert_eq!(s.n, 0);
+        assert_eq!((s.mean, s.std, s.min, s.p50, s.p95), (0.0, 0.0, 0.0, 0.0, 0.0));
     }
 
     #[test]

@@ -6,9 +6,17 @@
 //!              [--artifacts DIR] [--seed SEED]
 //!              [--fail-at NODE@BLOCK ...] [--checkpoint-every BLOCKS]
 //!              [--evacuate] [--transport-window BYTES]
+//! blaze report <BASELINE> <CANDIDATE> [--gate] [--deterministic-only]
+//!              [--threshold PCT] [--out PATH]
 //! ```
 //!
 //! Tasks: `pi`, `wordcount`, `pagerank`, `kmeans`, `gmm`, `knn`, `all`.
+//! The `report` subcommand is the perf regression gate over `BENCH_*.json`
+//! artifacts ([`crate::regress`]): e.g.
+//! `blaze report benches/baseline bench-out --gate --deterministic-only`
+//! exits 1 if a deterministic counter/histogram field drifted or an
+//! expected series/config row went missing, while wall-clock deltas stay
+//! advisory.
 //! `--fail-at 2@5` kills virtual node 2 after 5 map blocks commit
 //! (repeatable); either fault flag routes the job through the recoverable
 //! engine ([`crate::fault`]). `--evacuate` re-homes a dead node's keys onto
@@ -104,7 +112,9 @@ const USAGE: &str = "usage: blaze <pi|wordcount|pagerank|kmeans|gmm|knn|all> \
 [--backend simulated|threaded[:N]] [--scale S] \
 [--artifacts DIR|none] [--seed SEED] [--fail-at NODE@BLOCK ...] \
 [--checkpoint-every BLOCKS] [--evacuate] [--transport-window BYTES] \
-[--trace PATH]";
+[--trace PATH]
+       blaze report <BASELINE> <CANDIDATE> [--gate] [--deterministic-only] \
+[--threshold PCT] [--out PATH]";
 
 /// Parse argv (without the program name).
 pub fn parse(args: &[String]) -> Result<Options, String> {
@@ -197,6 +207,9 @@ fn load_runtime(opts: &Options) -> Option<Runtime> {
 
 /// Run the CLI; returns the process exit code.
 pub fn run(args: &[String]) -> i32 {
+    if args.first().map(String::as_str) == Some("report") {
+        return crate::regress::run_report(&args[1..]);
+    }
     let opts = match parse(args) {
         Ok(o) => o,
         Err(msg) => {
@@ -448,5 +461,59 @@ mod tests {
     #[test]
     fn unknown_task_fails() {
         assert_eq!(run(&argv("sort --artifacts none")), 2);
+    }
+
+    #[test]
+    fn run_report_gates_bench_artifacts_end_to_end() {
+        use crate::bench::report::{Report, Row};
+
+        let dir = std::env::temp_dir().join("blaze-report-e2e");
+        let base_dir = dir.join("base");
+        let cand_dir = dir.join("cand");
+        std::fs::create_dir_all(&base_dir).unwrap();
+        std::fs::create_dir_all(&cand_dir).unwrap();
+
+        // Two independent clusters with the same seeded config: every
+        // deterministic field (counters + histogram digests) must match.
+        let stats_for = || {
+            let cluster = Cluster::new(ClusterConfig::sized(2, 2).with_seed(7));
+            apps::pi::pi_blaze(&cluster, 10_000);
+            cluster.metrics().last_run().expect("run recorded").clone()
+        };
+        let write = |d: &std::path::Path, bump: f64| {
+            let stats = stats_for();
+            let mut rep = Report::new("e2e_pi");
+            rep.meta("backend", "simulated");
+            rep.push(
+                Row::new("blaze")
+                    .tag("nodes", 2)
+                    .num("pairs_emitted", stats.pairs_emitted as f64 + bump)
+                    .counters(&stats),
+            );
+            rep.write_to(d).expect("write bench json");
+        };
+        let report_args = |extra: &[&str]| -> Vec<String> {
+            ["report", base_dir.to_str().unwrap(), cand_dir.to_str().unwrap()]
+                .iter()
+                .copied()
+                .chain(extra.iter().copied())
+                .map(str::to_string)
+                .collect()
+        };
+
+        write(&base_dir, 0.0);
+        write(&cand_dir, 0.0);
+        assert_eq!(
+            run(&report_args(&["--gate", "--deterministic-only"])),
+            0,
+            "two seeded same-config runs diff clean"
+        );
+
+        // Perturb one deterministic field → gated regression.
+        write(&cand_dir, 1.0);
+        assert_eq!(run(&report_args(&["--gate"])), 1, "perturbed counter must gate");
+        assert_eq!(run(&report_args(&[])), 0, "without --gate the diff only reports");
+
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

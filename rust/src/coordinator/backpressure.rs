@@ -57,6 +57,12 @@ impl WindowAccount {
         self.in_flight = 0;
     }
 
+    /// Bytes currently in flight (the occupancy gauge the transport
+    /// sampler snapshots after every push).
+    pub fn in_flight(&self) -> u64 {
+        self.in_flight
+    }
+
     /// Highest in-flight byte count observed.
     pub fn peak_bytes(&self) -> u64 {
         self.peak
@@ -99,7 +105,9 @@ mod tests {
         let mut w = WindowAccount::new(100);
         for _ in 0..50 {
             w.push(30);
+            assert_eq!(w.in_flight(), 30);
             w.drain(30);
+            assert_eq!(w.in_flight(), 0);
         }
         assert_eq!(w.stalls(), 0);
         assert_eq!(w.peak_bytes(), 30);

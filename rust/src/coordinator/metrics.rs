@@ -5,6 +5,8 @@
 //! figures (throughput from virtual makespans, Fig 9 from the intermediate
 //! memory accounting).
 
+use crate::trace::histogram::Histogram;
+
 /// Statistics for one MapReduce (or container-op) execution.
 #[derive(Debug, Clone, Default)]
 pub struct RunStats {
@@ -57,6 +59,14 @@ pub struct RunStats {
     pub counters: Vec<(String, u64)>,
     /// Per-node counters (indexed by node), each sorted by name.
     pub node_counters: Vec<Vec<(String, u64)>>,
+    /// Run-global latency/size histograms, sorted by name
+    /// ([`crate::trace::histogram::Histograms::finish`]). Series without a
+    /// `wall.` name prefix record pure functions of the seeded workload
+    /// (map-block item counts, flush entry counts, shuffle frame chunk
+    /// sizes) and are byte-identical across backends — the equivalence
+    /// harness gates their encodings. `wall.`-prefixed series carry real
+    /// host time and are observability-only.
+    pub histograms: Vec<(String, Histogram)>,
 }
 
 impl RunStats {
@@ -99,6 +109,46 @@ impl RunStats {
             .find(|(n, _)| n == name)
             .map(|&(_, v)| v)
     }
+
+    /// One run-global histogram by name, if recorded.
+    pub fn histogram(&self, name: &str) -> Option<&Histogram> {
+        self.histograms.iter().find(|(n, _)| n == name).map(|(_, h)| h)
+    }
+
+    /// Internal-consistency checks, run on every `record_run` in debug
+    /// builds. Two invariants every engine must hold:
+    ///
+    /// 1. The sum of per-phase wall times never exceeds the whole-run
+    ///    host wall clock — *excluding* the `transport` entry, which is a
+    ///    sub-interval of the shuffle phase (threaded backend) and would
+    ///    double-count. A microsecond of slack absorbs the f64 rounding
+    ///    of `host_wall_sec` (stored as seconds, compared in ns).
+    /// 2. No phase name repeats within one engine pass: phase wall times
+    ///    are recorded once per phase, and `wall_ns` *sums* duplicates —
+    ///    so an engine accidentally recording a phase twice would
+    ///    silently inflate its reported time.
+    pub fn debug_validate(&self) {
+        let host_ns = self.host_wall_sec * 1e9 + 1_000.0;
+        let phase_sum: u64 = self
+            .phase_wall_ns
+            .iter()
+            .filter(|(p, _)| p != "transport")
+            .map(|(_, ns)| ns)
+            .sum();
+        debug_assert!(
+            phase_sum as f64 <= host_ns,
+            "{}: phase wall sum {phase_sum}ns exceeds host wall {:.9}s",
+            self.label,
+            self.host_wall_sec
+        );
+        for (i, (name, _)) in self.phase_wall_ns.iter().enumerate() {
+            debug_assert!(
+                !self.phase_wall_ns[..i].iter().any(|(p, _)| p == name),
+                "{}: duplicate phase name {name:?} in phase_wall_ns",
+                self.label
+            );
+        }
+    }
 }
 
 /// Cluster-wide metrics registry.
@@ -109,8 +159,9 @@ pub struct MetricsRegistry {
 }
 
 impl MetricsRegistry {
-    /// Record a completed run.
+    /// Record a completed run (consistency-checked in debug builds).
     pub fn record_run(&mut self, stats: RunStats) {
+        stats.debug_validate();
         self.runs.push(stats);
     }
 
@@ -244,6 +295,56 @@ mod tests {
         assert_eq!(s.node_counter(0, "cache.flushes"), Some(2));
         assert_eq!(s.node_counter(1, "cache.flushes"), None);
         assert_eq!(s.node_counter(9, "cache.flushes"), None);
+    }
+
+    #[test]
+    fn histogram_lookup() {
+        let mut s = stats("x", 1.0, 0);
+        let mut h = Histogram::new();
+        h.record(8);
+        h.record(100);
+        s.histograms = vec![("map.block_items".into(), h)];
+        assert_eq!(s.histogram("map.block_items").unwrap().count(), 2);
+        assert_eq!(s.histogram("map.block_items").unwrap().max_value(), 100);
+        assert!(s.histogram("absent").is_none());
+    }
+
+    #[test]
+    fn debug_validate_accepts_consistent_stats() {
+        let mut s = stats("ok", 1.0, 0);
+        s.host_wall_sec = 1.0;
+        s.phase_wall_ns = vec![
+            ("map+local-reduce".into(), 600_000_000),
+            ("shuffle+absorb".into(), 400_000_000),
+            // `transport` is a sub-interval of shuffle+absorb on the
+            // threaded backend; it is excluded from the sum, so stats
+            // where including it would exceed host wall still validate.
+            ("transport".into(), 300_000_000),
+        ];
+        s.debug_validate();
+        let mut m = MetricsRegistry::default();
+        m.record_run(s);
+        assert_eq!(m.len(), 1);
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "exceeds host wall")]
+    fn debug_validate_rejects_phase_sum_over_host_wall() {
+        let mut s = stats("bad", 1.0, 0);
+        s.host_wall_sec = 0.001;
+        s.phase_wall_ns = vec![("map+local-reduce".into(), 2_000_000)];
+        s.debug_validate();
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "duplicate phase name")]
+    fn debug_validate_rejects_duplicate_phase_names() {
+        let mut s = stats("dup", 1.0, 0);
+        s.host_wall_sec = 1.0;
+        s.phase_wall_ns = vec![("map".into(), 10), ("map".into(), 20)];
+        s.debug_validate();
     }
 
     #[test]

@@ -46,6 +46,7 @@ use crate::mapreduce::smallkey;
 use crate::mapreduce::{BlockCursor, DenseKey, DistInput, Emit, ReduceTarget, RunRecorder};
 use crate::net::vtime::VirtualTime;
 use crate::ser::fastser::FastSer;
+use crate::trace::histogram::Histograms;
 use crate::trace::{block_done_seq, map_seq, Counters, TraceBuf, TraceEvent, TraceEventKind};
 use crate::util::hash::FxHashMap;
 
@@ -82,6 +83,10 @@ struct MapAcc {
     per_node_flushes: Vec<u64>,
     per_node_flush_entries: Vec<u64>,
     per_node_cache_peak: Vec<u64>,
+    /// Gated latency histograms. Recording order varies with scheduling,
+    /// but histogram merge is commutative, so the folded result is
+    /// byte-identical to the simulated engine's.
+    hist: Histograms,
 }
 
 /// Feeder closure over every node's cursor: walks each partition exactly
@@ -161,6 +166,7 @@ pub fn run_eager<I, F, K2, V2, T>(
         per_node_flushes: vec![0; nodes],
         per_node_flush_entries: vec![0; nodes],
         per_node_cache_peak: vec![0; nodes],
+        hist: Histograms::new(nodes),
     });
     // Worker-collected trace events: each carries a computed sort key
     // ([`map_seq`]/[`block_done_seq`]) so the canonical order is
@@ -181,6 +187,7 @@ pub fn run_eager<I, F, K2, V2, T>(
             let mut emitted = 0u64;
             let mut flushes = 0u32;
             let mut flush_entries = 0u64;
+            let mut flush_sizes: Vec<u64> = Vec::new();
             let mut evs: Vec<TraceEvent> = Vec::new();
             let shard = &shard_maps[task.node];
             for (k, v) in &task.items {
@@ -202,6 +209,7 @@ pub fn run_eager<I, F, K2, V2, T>(
                         }
                         flushes += 1;
                         flush_entries += entries;
+                        flush_sizes.push(entries);
                         shard.absorb(batch.order, batch.pairs);
                     }
                 };
@@ -237,6 +245,10 @@ pub fn run_eager<I, F, K2, V2, T>(
             a.per_node_flushes[task.node] += u64::from(flushes);
             a.per_node_flush_entries[task.node] += flush_entries;
             a.per_node_cache_peak[task.node] = a.per_node_cache_peak[task.node].max(peak);
+            a.hist.record_node(task.node, "map.block_items", task.items.len() as u64);
+            for entries in flush_sizes {
+                a.hist.record_node(task.node, "cache.flush_entries", entries);
+            }
         };
         pool_stats = pool::execute(threads, threads * 2, feed_blocks(input, nodes, workers), work);
     }
@@ -250,10 +262,16 @@ pub fn run_eager<I, F, K2, V2, T>(
         per_node_flushes,
         per_node_flush_entries,
         per_node_cache_peak,
+        mut hist,
     } = acc.into_inner().expect("map accumulator poisoned");
     let mut trace = TraceBuf::new(trace_on);
     trace.extend_keyed(worker_events.into_inner().expect("trace events poisoned"));
     trace.seal_map(nodes * workers);
+    // Pool occupancy time-series: Chrome counter tracks, never canonical.
+    for s in &pool_stats.samples {
+        trace.push_sample(0, "map+local-reduce", 0, "pool.queue_depth", s.queue_depth);
+        trace.push_sample(0, "map+local-reduce", 0, "pool.busy_threads", s.busy_threads);
+    }
     let mut counters = Counters::new(nodes);
     for node in 0..nodes {
         counters.add_node(node, "map.items", per_node_items[node]);
@@ -303,6 +321,7 @@ pub fn run_eager<I, F, K2, V2, T>(
         target,
         &mut vt,
         &mut trace,
+        &mut hist,
         Transport::Channels,
     );
 
@@ -338,6 +357,7 @@ pub fn run_eager<I, F, K2, V2, T>(
         phase_wall_ns,
         counters: run_counters,
         node_counters,
+        histograms: hist.finish(),
         ..Default::default()
     });
 }
@@ -405,6 +425,8 @@ pub fn run_smallkey<I, F, K2, V2, T>(
         emitted: u64,
         per_node_items: Vec<u64>,
         per_node_emitted: Vec<u64>,
+        /// Gated histograms (commutative merge — scheduling-invariant).
+        hist: Histograms,
     }
     let dense: Vec<Mutex<NodeDense<V2>>> = (0..nodes)
         .map(|_| {
@@ -420,6 +442,7 @@ pub fn run_smallkey<I, F, K2, V2, T>(
         emitted: 0,
         per_node_items: vec![0; nodes],
         per_node_emitted: vec![0; nodes],
+        hist: Histograms::new(nodes),
     });
     let trace_on = cfg.trace;
     let worker_events: Mutex<Vec<TraceEvent>> = Mutex::new(Vec::new());
@@ -481,15 +504,26 @@ pub fn run_smallkey<I, F, K2, V2, T>(
             st.emitted += emitted;
             st.per_node_items[task.node] += task.items.len() as u64;
             st.per_node_emitted[task.node] += emitted;
+            st.hist.record_node(task.node, "map.block_items", task.items.len() as u64);
         };
         pool_stats = pool::execute(threads, threads * 2, feed_blocks(input, nodes, workers), work);
     }
     let map_wall_ns = t_map.elapsed().as_nanos() as u64;
-    let DenseStats { per_node_secs, emitted: pairs_emitted, per_node_items, per_node_emitted } =
-        stats.into_inner().expect("dense stats poisoned");
+    let DenseStats {
+        per_node_secs,
+        emitted: pairs_emitted,
+        per_node_items,
+        per_node_emitted,
+        mut hist,
+    } = stats.into_inner().expect("dense stats poisoned");
     let mut trace = TraceBuf::new(trace_on);
     trace.extend_keyed(worker_events.into_inner().expect("trace events poisoned"));
     trace.seal_map(nodes * workers);
+    // Pool occupancy time-series: Chrome counter tracks, never canonical.
+    for s in &pool_stats.samples {
+        trace.push_sample(0, "map+dense-local-reduce", 0, "pool.queue_depth", s.queue_depth);
+        trace.push_sample(0, "map+dense-local-reduce", 0, "pool.busy_threads", s.busy_threads);
+    }
     let mut counters = Counters::new(nodes);
     for node in 0..nodes {
         counters.add_node(node, "map.items", per_node_items[node]);
@@ -520,6 +554,7 @@ pub fn run_smallkey<I, F, K2, V2, T>(
         target,
         &mut vt,
         &mut trace,
+        &mut hist,
         Transport::Channels,
     );
 
@@ -556,6 +591,7 @@ pub fn run_smallkey<I, F, K2, V2, T>(
         phase_wall_ns,
         counters: run_counters,
         node_counters,
+        histograms: hist.finish(),
         ..Default::default()
     });
 }

@@ -14,7 +14,9 @@
 //! `O(threads)` blocks, not `O(nodes × workers)`.
 
 use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Condvar, Mutex};
+use std::time::Instant;
 
 /// Bounded MPMC queue of pending blocks.
 pub struct BlockQueue<T> {
@@ -46,6 +48,13 @@ impl<T> BlockQueue<T> {
     /// Scheduling-dependent: observability only.
     pub fn peak(&self) -> usize {
         self.state.lock().expect("block queue poisoned").peak
+    }
+
+    /// Current queue depth (blocks queued, not yet stolen). A live gauge
+    /// for the occupancy sampler — scheduling-dependent, observability
+    /// only, like [`BlockQueue::peak`].
+    pub fn depth(&self) -> usize {
+        self.state.lock().expect("block queue poisoned").items.len()
     }
 
     /// Enqueue a block, blocking while the queue is full. Returns `false`
@@ -106,7 +115,21 @@ impl<T> Drop for CloseOnDrop<'_, T> {
     }
 }
 
-/// Observability counters from one [`execute`] run. Both values depend on
+/// One occupancy snapshot, taken by the worker that just stole a block:
+/// how deep the queue was and how many threads were busy at that moment.
+/// Everything here depends on real scheduling — Chrome-view material
+/// (`pool.queue_depth` / `pool.busy_threads` counter tracks), never gated.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PoolSample {
+    /// Nanoseconds since the pool started.
+    pub wall_ns: u64,
+    /// Blocks queued and not yet stolen.
+    pub queue_depth: u64,
+    /// Worker threads currently executing a block (includes the sampler).
+    pub busy_threads: u64,
+}
+
+/// Observability counters from one [`execute`] run. All values depend on
 /// real thread scheduling — report them, never gate determinism on them.
 #[derive(Debug, Clone, Default)]
 pub struct PoolStats {
@@ -114,6 +137,9 @@ pub struct PoolStats {
     pub queue_peak: u64,
     /// Blocks each OS thread ended up executing (work-stealing balance).
     pub per_thread_blocks: Vec<u64>,
+    /// Occupancy time-series: one snapshot per stolen block, in
+    /// steal-completion order.
+    pub samples: Vec<PoolSample>,
 }
 
 /// Run every block yielded by `produce` (called on *this* thread until it
@@ -131,14 +157,24 @@ where
 {
     let threads = threads.max(1);
     let queue = BlockQueue::bounded(queue_cap);
-    std::thread::scope(|s| {
+    let start = Instant::now();
+    let busy = AtomicU64::new(0);
+    let samples = Mutex::new(Vec::new());
+    let mut stats = std::thread::scope(|s| {
         let handles: Vec<_> = (0..threads)
             .map(|_| {
                 s.spawn(|| {
                     let _guard = CloseOnDrop { queue: &queue };
                     let mut blocks = 0u64;
                     while let Some(block) = queue.pop() {
+                        let now_busy = busy.fetch_add(1, Ordering::Relaxed) + 1;
+                        samples.lock().expect("pool samples poisoned").push(PoolSample {
+                            wall_ns: start.elapsed().as_nanos() as u64,
+                            queue_depth: queue.depth() as u64,
+                            busy_threads: now_busy,
+                        });
                         work(block);
+                        busy.fetch_sub(1, Ordering::Relaxed);
                         blocks += 1;
                     }
                     blocks
@@ -163,8 +199,16 @@ where
                 Err(payload) => std::panic::resume_unwind(payload),
             }
         }
-        PoolStats { queue_peak: queue.peak() as u64, per_thread_blocks }
-    })
+        PoolStats {
+            queue_peak: queue.peak() as u64,
+            per_thread_blocks,
+            samples: Vec::new(),
+        }
+    });
+    // Scoped borrows end with the scope; only then can the sample vec
+    // move out of its mutex.
+    stats.samples = samples.into_inner().expect("pool samples poisoned");
+    stats
 }
 
 #[cfg(test)]
@@ -195,6 +239,17 @@ mod tests {
         assert_eq!(stats.per_thread_blocks.len(), 4);
         assert_eq!(stats.per_thread_blocks.iter().sum::<u64>(), 1000);
         assert!(stats.queue_peak >= 1 && stats.queue_peak <= 2);
+        // One occupancy snapshot per stolen block, values within bounds.
+        assert_eq!(stats.samples.len(), 1000);
+        assert!(stats.samples.iter().all(|s| s.queue_depth <= 2));
+        assert!(stats.samples.iter().all(|s| s.busy_threads >= 1 && s.busy_threads <= 4));
+    }
+
+    #[test]
+    fn zero_blocks_yields_no_samples() {
+        let stats = execute(2, 1, || None::<u64>, |_| {});
+        assert!(stats.samples.is_empty());
+        assert_eq!(stats.queue_peak, 0);
     }
 
     #[test]

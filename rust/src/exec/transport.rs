@@ -39,11 +39,13 @@
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::sync_channel;
+use std::sync::Mutex;
 use std::time::Instant;
 
 use crate::coordinator::backpressure::WindowAccount;
 use crate::coordinator::shuffle::{ShufflePayloads, CHUNK_BYTES};
 use crate::net::sim::FlowMatrix;
+use crate::trace::histogram::Histogram;
 
 /// Per-(src → dst) frame tallies, for `FrameSent`/`TransportStall`
 /// trace events. Cross-node pairs with traffic only, src-major order.
@@ -116,6 +118,16 @@ pub struct TransportResult {
     pub wall_ns: u64,
     /// Per-(src,dst) tallies for trace events.
     pub pair_stats: Vec<PairStats>,
+    /// Window-occupancy gauge: `(src, in-flight bytes)` after every
+    /// chunk push of the deterministic mirror, in the mirror's
+    /// src-ascending loop order. Feeds the `transport.in_flight_bytes`
+    /// Chrome counter track — deterministic, but Chrome-view only like
+    /// the rest of the sample machinery.
+    pub in_flight_samples: Vec<(usize, u64)>,
+    /// Per-frame channel-send wait (wall ns), merged across sender
+    /// threads. Surfaces as the `wall.transport.frame_wait_ns` histogram
+    /// — measured time, observability only, never gated.
+    pub frame_wait: Histogram,
 }
 
 impl TransportResult {
@@ -159,6 +171,7 @@ pub fn execute(payloads: ShufflePayloads, window_bytes: u64) -> TransportResult 
     let mut frames_total = 0u64;
     let mut bytes_total = 0u64;
     let mut pair_stats: Vec<PairStats> = Vec::new();
+    let mut in_flight_samples: Vec<(usize, u64)> = Vec::new();
 
     for (src, dsts) in payloads.into_iter().enumerate() {
         assert_eq!(dsts.len(), n, "payload matrix must be n x n");
@@ -177,6 +190,7 @@ pub fn execute(payloads: ShufflePayloads, window_bytes: u64) -> TransportResult 
             let pair_bytes = payload.len() as u64;
             if payload.len() <= CHUNK_BYTES {
                 window.push(pair_bytes);
+                in_flight_samples.push((src, window.in_flight()));
                 flows.record(src, dst, pair_bytes);
                 sends[src].push(Frame { src, dst, seq, payload });
                 seq += 1;
@@ -185,6 +199,7 @@ pub fn execute(payloads: ShufflePayloads, window_bytes: u64) -> TransportResult 
             } else {
                 for chunk in payload.chunks(CHUNK_BYTES) {
                     window.push(chunk.len() as u64);
+                    in_flight_samples.push((src, window.in_flight()));
                     flows.record(src, dst, chunk.len() as u64);
                     sends[src].push(Frame { src, dst, seq, payload: chunk.to_vec() });
                     seq += 1;
@@ -209,6 +224,7 @@ pub fn execute(payloads: ShufflePayloads, window_bytes: u64) -> TransportResult 
     // Physically move the cross-node frames: one bounded channel per
     // destination, one sender thread per source with traffic.
     let queue_peak = AtomicU64::new(0);
+    let frame_wait_shared = Mutex::new(Histogram::new());
     let mut received: Vec<Vec<(usize, u64, Vec<u8>)>> = (0..n).map(|_| Vec::new()).collect();
     if frames_total > 0 {
         let cap = ((window_bytes as usize) / CHUNK_BYTES).max(1);
@@ -235,13 +251,20 @@ pub fn execute(payloads: ShufflePayloads, window_bytes: u64) -> TransportResult 
                 let txs = txs.clone();
                 let queued = &queued;
                 let queue_peak = &queue_peak;
+                let frame_wait_shared = &frame_wait_shared;
                 scope.spawn(move || {
+                    // Per-thread histogram, merged once at the end: the
+                    // exact merge makes the fold order irrelevant.
+                    let mut wait = Histogram::new();
                     for frame in frames {
                         let len = frame.payload.len() as u64;
                         let now = queued.fetch_add(len, Ordering::Relaxed) + len;
                         queue_peak.fetch_max(now, Ordering::Relaxed);
+                        let sent_at = Instant::now();
                         txs[frame.dst].send(frame).expect("receiver alive");
+                        wait.record(sent_at.elapsed().as_nanos() as u64);
                     }
+                    frame_wait_shared.lock().expect("frame-wait lock").merge(&wait);
                 });
             }
             // Drop the coordinator's senders so receivers terminate once
@@ -273,6 +296,8 @@ pub fn execute(payloads: ShufflePayloads, window_bytes: u64) -> TransportResult 
         queue_peak_bytes: queue_peak.load(Ordering::Relaxed),
         wall_ns: start.elapsed().as_nanos() as u64,
         pair_stats,
+        in_flight_samples,
+        frame_wait: frame_wait_shared.into_inner().expect("frame-wait lock"),
     }
 }
 
@@ -303,6 +328,14 @@ mod tests {
         assert_eq!(real.stalls, sim.stalls);
         assert_eq!(real.frames, 3);
         assert_eq!(real.bytes, 19);
+        // One occupancy sample per cross-node chunk push, in mirror
+        // order; one frame-wait record per physical frame.
+        assert_eq!(
+            real.in_flight_samples,
+            vec![(0, 10), (0, 4), (2, 5)],
+            "gauge snapshots follow the deterministic mirror"
+        );
+        assert_eq!(real.frame_wait.count(), 3);
     }
 
     #[test]
@@ -359,6 +392,9 @@ mod tests {
         assert_eq!(real.queue_peak_bytes, 0);
         assert!(real.delivered.iter().all(Vec::is_empty));
         assert!(real.pair_stats.is_empty());
+        assert!(real.in_flight_samples.is_empty());
+        assert!(real.frame_wait.is_empty(), "no frames, no wait records");
+        assert_eq!(real.frame_wait.encode(), "0:0:0|", "empty histogram exports cleanly");
     }
 
     /// Many sources hammering one destination through a one-frame-deep

@@ -89,6 +89,7 @@ use crate::net::sim::FlowMatrix;
 use crate::net::vtime::VirtualTime;
 use crate::ser::fastser::{decode_pairs_exact, encode_pairs, FastSer};
 use crate::ser::tagged::{decode_pairs_tagged, encode_pairs_tagged, TaggedSer};
+use crate::trace::histogram::Histograms;
 use crate::trace::{Counters, TraceBuf, TraceEvent, TraceEventKind};
 use crate::util::hash::FxHashMap;
 
@@ -241,6 +242,7 @@ where
     let mut peak_ckpt_bytes = 0u64;
     let mut trace = TraceBuf::new(cfg.trace);
     let mut counters = Counters::new(nodes);
+    let mut hist = Histograms::new(nodes);
 
     // The fault engine is serial, so its natural emission order is the
     // canonical trace order; the phase labels used on shuffle/reduce
@@ -439,6 +441,9 @@ where
         pairs_emitted += emitted_here;
         counters.add_node(p.exec_node, "map.items", items_here);
         counters.add_node(p.exec_node, "map.emitted", emitted_here);
+        // Recorded at commit time in block-id order, so replays and the
+        // threaded backend land the same histogram as the serial path.
+        hist.record_node(p.exec_node, "map.block_items", items_here);
         if p.only.is_some() {
             trace.push(TraceEvent::new(
                 p.exec_node,
@@ -487,6 +492,11 @@ where
                 counters.add_node(p.exec_node, "ser.bytes", buf.len() as u64);
                 if dst != p.exec_node {
                     shuffle_flows.record(p.exec_node, dst, buf.len() as u64);
+                    crate::mapreduce::eager::record_frame_chunks(
+                        &mut hist,
+                        p.exec_node,
+                        buf.len(),
+                    );
                     trace.push(TraceEvent::new(
                         p.exec_node,
                         None,
@@ -508,6 +518,7 @@ where
                 ser_bytes += buf.len() as u64;
                 counters.add_node(p.exec_node, "ser.bytes", buf.len() as u64);
                 shuffle_flows.record(p.exec_node, dst, buf.len() as u64);
+                crate::mapreduce::eager::record_frame_chunks(&mut hist, p.exec_node, buf.len());
                 trace.push(TraceEvent::new(
                     p.exec_node,
                     None,
@@ -817,6 +828,8 @@ where
         }
     }
     let (run_counters, node_counters) = counters.finish();
+    // Measure once: host_wall_sec must bound the "total" phase entry.
+    let host_wall = rec.started.elapsed();
     cluster.metrics().record_run(RunStats {
         label: rec.label,
         engine: format!("{}+ft", cfg.engine),
@@ -836,13 +849,14 @@ where
         pairs_emitted,
         pairs_shuffled,
         peak_intermediate_bytes: peak_staged_bytes + peak_ckpt_bytes,
-        host_wall_sec: rec.started.elapsed().as_secs_f64(),
+        host_wall_sec: host_wall.as_secs_f64(),
         // One whole-job entry: the recoverable engine interleaves map,
         // commit, checkpoint, and recovery work per block, so there is no
         // meaningful per-phase wall split to report.
-        phase_wall_ns: vec![("total".into(), rec.started.elapsed().as_nanos() as u64)],
+        phase_wall_ns: vec![("total".into(), host_wall.as_nanos() as u64)],
         counters: run_counters,
         node_counters,
+        histograms: hist.finish(),
     });
     cluster.metrics().record_note(summary_note);
 }

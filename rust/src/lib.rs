@@ -44,8 +44,14 @@
 //!   is on (`--trace PATH` / `BLAZE_TRACE`), exported as deterministic
 //!   canonical JSONL (byte-identical across backends for failure-free
 //!   seeded runs — an equivalence-harness gate) and as Chrome
-//!   trace-event JSON; plus the per-node counter registry surfaced on
-//!   `RunStats::counters` (DESIGN.md §Observability).
+//!   trace-event JSON with occupancy counter tracks (`"ph":"C"`); plus
+//!   the per-node counter registry surfaced on `RunStats::counters` and
+//!   the deterministic latency histograms ([`trace::histogram`]) on
+//!   `RunStats::histograms` (DESIGN.md §Observability).
+//! * [`regress`] — the `blaze report` perf gate: loads two `BENCH_*.json`
+//!   artifact sets, aligns rows by series+tags, exact-gates deterministic
+//!   fields and threshold-checks wall-clock ones, and emits a markdown
+//!   diff (nonzero exit under `--gate` on regression).
 //! * [`fault`] — fault tolerance: deterministic failure injection
 //!   ([`fault::FailurePlan`]), per-shard target checkpoints replicated
 //!   through the network model, and a recoverable engine that re-executes
@@ -126,6 +132,7 @@ pub mod exec;
 pub mod fault;
 pub mod mapreduce;
 pub mod net;
+pub mod regress;
 pub mod runtime;
 pub mod ser;
 pub mod trace;

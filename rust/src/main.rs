@@ -3,7 +3,8 @@
 //! Hand-rolled argument parsing (the build is offline; no clap). See
 //! `blaze --help` for usage. Each subcommand runs one of the paper's five
 //! data-mining tasks (or Monte-Carlo π) on a configurable cluster shape and
-//! prints the paper's metric for that task.
+//! prints the paper's metric for that task. `blaze report` instead diffs
+//! two `BENCH_*.json` artifact sets as a perf regression gate.
 
 use blaze::cli;
 

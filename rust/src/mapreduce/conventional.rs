@@ -21,6 +21,7 @@ use crate::coordinator::shuffle::{self, ShufflePayloads};
 use crate::net::vtime::VirtualTime;
 use crate::ser::fastser::FastSer;
 use crate::ser::tagged::{decode_pairs_tagged, encode_pairs_tagged, TaggedSer};
+use crate::trace::histogram::Histograms;
 use crate::trace::{Counters, TraceBuf, TraceEvent, TraceEventKind};
 use crate::util::hash::FxHashMap;
 
@@ -50,6 +51,7 @@ where
 
     let mut trace = TraceBuf::new(cfg.trace);
     let mut counters = Counters::new(nodes);
+    let mut hist = Histograms::new(nodes);
     let mut vt = VirtualTime::new();
     // Spark-analog job launch latency (driver → executors scheduling).
     vt.fixed_phase("job-launch", cfg.conventional_job_latency_sec);
@@ -94,6 +96,7 @@ where
                 },
             ));
             counters.add_node(node, "map.items", w_items);
+            hist.record_node(node, "map.block_items", w_items);
         }
         counters.add_node(node, "map.emitted", emitted);
         let measured = t0.elapsed().as_secs_f64();
@@ -131,6 +134,11 @@ where
                     pairs: part.len() as u64,
                 },
             ));
+            if dst != node {
+                // Cross-node payloads move as bounded frames; local ones
+                // never hit the wire (same framing as the eager engine).
+                super::eager::record_frame_chunks(&mut hist, node, buf.len());
+            }
             payloads[node][dst] = buf;
         }
         per_node_ser_secs[node] = t0.elapsed().as_secs_f64();
@@ -200,6 +208,8 @@ where
     trace.stamp_phases(&vt);
     cluster.trace().absorb_job(&rec.label, trace);
     let (run_counters, node_counters) = counters.finish();
+    // Measure once: host_wall_sec must bound the "total" phase entry.
+    let host_wall = rec.started.elapsed();
     cluster.metrics().record_run(RunStats {
         label: rec.label,
         engine: "conventional".into(),
@@ -219,13 +229,14 @@ where
         // Everything is resident at once at the barrier: raw materialized
         // pairs + all serialized blocks + destination grouped map.
         peak_intermediate_bytes: materialized_bytes + serialized_bytes + grouped_peak,
-        host_wall_sec: rec.started.elapsed().as_secs_f64(),
+        host_wall_sec: host_wall.as_secs_f64(),
         // One whole-job entry: the baseline's phases are dominated by
         // modeled (not executed) costs, so a per-phase wall split would
         // suggest precision the numbers don't have.
-        phase_wall_ns: vec![("total".into(), rec.started.elapsed().as_nanos() as u64)],
+        phase_wall_ns: vec![("total".into(), host_wall.as_nanos() as u64)],
         counters: run_counters,
         node_counters,
+        histograms: hist.finish(),
         ..Default::default()
     });
 }

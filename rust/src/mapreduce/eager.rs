@@ -18,6 +18,7 @@ use crate::coordinator::shuffle::{self, ShufflePayloads, Transport};
 use crate::exec::transport::TransportTotals;
 use crate::net::vtime::VirtualTime;
 use crate::ser::fastser::{decode_pairs, encode_pairs_into, FastSer};
+use crate::trace::histogram::Histograms;
 use crate::trace::{Counters, TraceBuf, TraceEvent, TraceEventKind};
 use crate::util::alloc::Scratch;
 use crate::util::hash::FxHashMap;
@@ -47,6 +48,7 @@ where
 
     let mut trace = TraceBuf::new(cfg.trace);
     let mut counters = Counters::new(nodes);
+    let mut hist = Histograms::new(nodes);
     let mut vt = VirtualTime::new();
     let t_map = Instant::now();
     let mut per_node_map_secs = vec![0.0f64; nodes];
@@ -95,6 +97,7 @@ where
             let mut w_flushes = 0u64;
             let mut w_flush_entries = 0u64;
             let trace_ref = &mut trace;
+            let hist_ref = &mut hist;
             let advanced = cur.next_block(|k, v| {
                 w_items += 1;
                 let mut emit = |k2: K2, v2: V2| {
@@ -115,6 +118,7 @@ where
                         // map (popular keys re-enter the cache immediately after).
                         w_flushes += 1;
                         w_flush_entries += cache.len() as u64;
+                        hist_ref.record_node(node, "cache.flush_entries", cache.len() as u64);
                         trace_ref.push(TraceEvent::new(
                             node,
                             Some(w),
@@ -157,6 +161,7 @@ where
             counters.add_node(node, "map.items", w_items);
             counters.add_node(node, "cache.flushes", w_flushes);
             counters.add_node(node, "cache.flush_entries", w_flush_entries);
+            hist.record_node(node, "map.block_items", w_items);
         }
 
         // Merge worker caches into the machine-local map.
@@ -194,6 +199,7 @@ where
         target,
         &mut vt,
         &mut trace,
+        &mut hist,
         Transport::FlowModel,
     );
 
@@ -225,6 +231,7 @@ where
         ],
         counters: run_counters,
         node_counters,
+        histograms: hist.finish(),
         ..Default::default()
     });
 }
@@ -259,6 +266,7 @@ pub(crate) fn shuffle_and_absorb<K2, V2, T>(
     target: &mut T,
     vt: &mut VirtualTime,
     trace: &mut TraceBuf,
+    hist: &mut Histograms,
     transport: Transport,
 ) -> ShuffleOutcome
 where
@@ -302,6 +310,10 @@ where
             } else {
                 let n_pairs = part.len() as u64;
                 payloads[node][dst] = encode_pairs_into(&part, scratch.get(part.len() * 4));
+                // Frame-size histogram: one record per transport chunk,
+                // derived from the payload length alone — identical for
+                // the flow model and the channel transport.
+                record_frame_chunks(hist, node, payloads[node][dst].len());
                 trace.push(TraceEvent::new(
                     node,
                     None,
@@ -323,6 +335,18 @@ where
         Transport::FlowModel => (shuffle::execute(payloads, window), None),
         Transport::Channels => {
             let tres = crate::exec::transport::execute(payloads, window);
+            // Occupancy gauge + per-frame wait: Chrome-only / wall-only
+            // observability from the real transport.
+            for &(src, in_flight) in &tres.in_flight_samples {
+                trace.push_sample(
+                    src,
+                    "shuffle+async-reduce",
+                    0,
+                    "transport.in_flight_bytes",
+                    in_flight,
+                );
+            }
+            hist.merge_global("wall.transport.frame_wait_ns", &tres.frame_wait);
             // Chrome-only transport events, in deterministic src-major
             // pair order (they never reach the canonical export).
             for ps in &tres.pair_stats {
@@ -400,5 +424,18 @@ where
         peak_bytes: sres.peak_in_flight_bytes + absorb_buffer_peak,
         wall_ns: t_start.elapsed().as_nanos() as u64,
         transport: transport_totals,
+    }
+}
+
+/// Record one `shuffle.frame_bytes` histogram entry per transport chunk
+/// of a `payload_len`-byte cross-node payload — the same 1 MiB chunking
+/// both transports apply, computed from the length alone so the series
+/// is byte-identical across backends.
+pub(crate) fn record_frame_chunks(hist: &mut Histograms, src: usize, payload_len: usize) {
+    let mut rem = payload_len;
+    while rem > 0 {
+        let chunk = rem.min(shuffle::CHUNK_BYTES);
+        hist.record_node(src, "shuffle.frame_bytes", chunk as u64);
+        rem -= chunk;
     }
 }

@@ -19,6 +19,7 @@ use crate::exec::transport::TransportTotals;
 use crate::net::sim::FlowMatrix;
 use crate::net::vtime::VirtualTime;
 use crate::ser::fastser::{decode_pairs, encode_pairs, FastSer};
+use crate::trace::histogram::Histograms;
 use crate::trace::{Counters, TraceBuf, TraceEvent, TraceEventKind};
 
 use super::reducers::Reducer;
@@ -46,6 +47,7 @@ where
 
     let mut trace = TraceBuf::new(cfg.trace);
     let mut counters = Counters::new(nodes);
+    let mut hist = Histograms::new(nodes);
     let mut vt = VirtualTime::new();
     let t_map = Instant::now();
     let mut per_node_secs = vec![0.0f64; nodes];
@@ -88,6 +90,7 @@ where
                 },
             ));
             counters.add_node(node, "map.items", w_items);
+            hist.record_node(node, "map.block_items", w_items);
         }
 
         // Local tree reduce over worker caches (log2 W combining steps on a
@@ -114,6 +117,7 @@ where
         target,
         &mut vt,
         &mut trace,
+        &mut hist,
         Transport::FlowModel,
     );
 
@@ -146,6 +150,7 @@ where
         ],
         counters: run_counters,
         node_counters,
+        histograms: hist.finish(),
         ..Default::default()
     });
 }
@@ -180,6 +185,7 @@ pub(crate) fn tree_reduce_into_target<K2, V2, T>(
     target: &mut T,
     vt: &mut VirtualTime,
     trace: &mut TraceBuf,
+    hist: &mut Histograms,
     transport: Transport,
 ) -> TreeReduceOutcome
 where
@@ -222,6 +228,7 @@ where
             flows.record(src, dst, buf.len() as u64);
             shuffle_bytes += buf.len() as u64;
             round_flow_peak = round_flow_peak.max(buf.len() as u64);
+            super::eager::record_frame_chunks(hist, src, buf.len());
             trace.push(
                 TraceEvent::new(
                     src,
@@ -248,6 +255,16 @@ where
                     matrix[src][dst] = buf;
                 }
                 let tres = crate::exec::transport::execute(matrix, cfg.transport_window_bytes);
+                for &(src, in_flight) in &tres.in_flight_samples {
+                    trace.push_sample(
+                        src,
+                        "tree-reduce-round",
+                        round,
+                        "transport.in_flight_bytes",
+                        in_flight,
+                    );
+                }
+                hist.merge_global("wall.transport.frame_wait_ns", &tres.frame_wait);
                 for ps in &tres.pair_stats {
                     trace.push(
                         TraceEvent::new(

@@ -1,0 +1,845 @@
+//! `blaze report` — the perf regression gate over `BENCH_*.json`.
+//!
+//! Loads two bench artifact sets (files or directories of the
+//! [`crate::bench::report`] JSON shape), aligns rows by `(series, tags)`,
+//! and diffs the numeric fields:
+//!
+//! - **Deterministic fields** (counters, histogram digests, byte/pair
+//!   tallies) must match *exactly* — any drift is a gated regression.
+//!   These are schedule-invariant by the repo's determinism discipline,
+//!   so an exact gate has zero flake risk.
+//! - **Wall-clock fields** (names containing `wall`, `sec`, `mean`, …)
+//!   are host-load dependent: a candidate value more than `--threshold`
+//!   percent *above* baseline is flagged, and gates only when
+//!   `--deterministic-only` is off. Improvements never flag.
+//!
+//! Structure-only baselines (rows with tags but no numeric fields, as
+//! committed under `benches/baseline/`) gate row *presence*: a missing
+//! series/config row fails, numbers are not compared. The JSON reader is
+//! hand-rolled like the writer — the build is offline, no serde.
+
+use std::fmt::Write as _;
+use std::path::{Path, PathBuf};
+
+/// Field-name substrings marking a value as host-timing dependent
+/// (threshold-compared) rather than deterministic (exact-gated).
+const NONDETERMINISTIC_MARKERS: &[&str] = &[
+    "wall",
+    "sec",
+    "makespan",
+    "mean",
+    "std",
+    "ratio",
+    "per_sec",
+    "pool.",
+    "queue_peak",
+    "contended",
+    "hist.wall.",
+];
+
+/// Is `field` exact-gated (schedule-invariant) rather than
+/// threshold-compared?
+pub fn is_deterministic_field(field: &str) -> bool {
+    !NONDETERMINISTIC_MARKERS.iter().any(|m| field.contains(m))
+}
+
+// ---------------------------------------------------------------------
+// Minimal JSON reader (mirror of bench::report's hand-rolled writer).
+// ---------------------------------------------------------------------
+
+/// Parsed JSON value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    /// `null` (bench reports use it for non-finite numbers).
+    Null,
+    /// `true` / `false`.
+    Bool(bool),
+    /// Any JSON number.
+    Num(f64),
+    /// String.
+    Str(String),
+    /// Array.
+    Arr(Vec<Value>),
+    /// Object, in source order (bench field order is meaningful).
+    Obj(Vec<(String, Value)>),
+}
+
+impl Value {
+    /// Parse one JSON document (trailing whitespace allowed).
+    pub fn parse(src: &str) -> Result<Value, String> {
+        let mut p = Parser { b: src.as_bytes(), i: 0 };
+        p.skip_ws();
+        let v = p.value()?;
+        p.skip_ws();
+        if p.i != p.b.len() {
+            return Err(format!("trailing bytes at offset {}", p.i));
+        }
+        Ok(v)
+    }
+
+    fn get<'a>(&'a self, key: &str) -> Option<&'a Value> {
+        match self {
+            Value::Obj(fields) => fields.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+}
+
+struct Parser<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl Parser<'_> {
+    fn skip_ws(&mut self) {
+        while self.i < self.b.len() && matches!(self.b[self.i], b' ' | b'\t' | b'\n' | b'\r') {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.i).copied()
+    }
+
+    fn eat(&mut self, c: u8) -> Result<(), String> {
+        if self.peek() == Some(c) {
+            self.i += 1;
+            Ok(())
+        } else {
+            Err(format!("expected {:?} at offset {}", c as char, self.i))
+        }
+    }
+
+    fn eat_lit(&mut self, lit: &str) -> Result<(), String> {
+        if self.b[self.i..].starts_with(lit.as_bytes()) {
+            self.i += lit.len();
+            Ok(())
+        } else {
+            Err(format!("expected {lit:?} at offset {}", self.i))
+        }
+    }
+
+    fn value(&mut self) -> Result<Value, String> {
+        self.skip_ws();
+        match self.peek() {
+            Some(b'{') => self.object(),
+            Some(b'[') => self.array(),
+            Some(b'"') => Ok(Value::Str(self.string()?)),
+            Some(b't') => self.eat_lit("true").map(|()| Value::Bool(true)),
+            Some(b'f') => self.eat_lit("false").map(|()| Value::Bool(false)),
+            Some(b'n') => self.eat_lit("null").map(|()| Value::Null),
+            Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
+            other => Err(format!("unexpected {other:?} at offset {}", self.i)),
+        }
+    }
+
+    fn object(&mut self) -> Result<Value, String> {
+        self.eat(b'{')?;
+        let mut fields = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.i += 1;
+            return Ok(Value::Obj(fields));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.skip_ws();
+            self.eat(b':')?;
+            let val = self.value()?;
+            fields.push((key, val));
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.i += 1,
+                Some(b'}') => {
+                    self.i += 1;
+                    return Ok(Value::Obj(fields));
+                }
+                other => return Err(format!("expected ',' or '}}', got {other:?}")),
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Value, String> {
+        self.eat(b'[')?;
+        let mut items = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.i += 1;
+            return Ok(Value::Arr(items));
+        }
+        loop {
+            items.push(self.value()?);
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.i += 1,
+                Some(b']') => {
+                    self.i += 1;
+                    return Ok(Value::Arr(items));
+                }
+                other => return Err(format!("expected ',' or ']', got {other:?}")),
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<String, String> {
+        self.eat(b'"')?;
+        let mut out = String::new();
+        loop {
+            match self.peek() {
+                None => return Err("unterminated string".into()),
+                Some(b'"') => {
+                    self.i += 1;
+                    return Ok(out);
+                }
+                Some(b'\\') => {
+                    self.i += 1;
+                    match self.peek() {
+                        Some(b'"') => out.push('"'),
+                        Some(b'\\') => out.push('\\'),
+                        Some(b'/') => out.push('/'),
+                        Some(b'n') => out.push('\n'),
+                        Some(b'r') => out.push('\r'),
+                        Some(b't') => out.push('\t'),
+                        Some(b'b') => out.push('\u{8}'),
+                        Some(b'f') => out.push('\u{c}'),
+                        Some(b'u') => {
+                            let hex = self
+                                .b
+                                .get(self.i + 1..self.i + 5)
+                                .ok_or("truncated \\u escape")?;
+                            let code = u32::from_str_radix(
+                                std::str::from_utf8(hex).map_err(|e| e.to_string())?,
+                                16,
+                            )
+                            .map_err(|e| e.to_string())?;
+                            out.push(char::from_u32(code).unwrap_or('\u{fffd}'));
+                            self.i += 4;
+                        }
+                        other => return Err(format!("bad escape {other:?}")),
+                    }
+                    self.i += 1;
+                }
+                Some(_) => {
+                    // Consume one UTF-8 scalar (multi-byte sequences pass
+                    // through unchanged).
+                    let start = self.i;
+                    self.i += 1;
+                    while self.i < self.b.len() && (self.b[self.i] & 0xc0) == 0x80 {
+                        self.i += 1;
+                    }
+                    out.push_str(
+                        std::str::from_utf8(&self.b[start..self.i])
+                            .map_err(|e| e.to_string())?,
+                    );
+                }
+            }
+        }
+    }
+
+    fn number(&mut self) -> Result<Value, String> {
+        let start = self.i;
+        while self
+            .peek()
+            .is_some_and(|c| c.is_ascii_digit() || matches!(c, b'-' | b'+' | b'.' | b'e' | b'E'))
+        {
+            self.i += 1;
+        }
+        let s = std::str::from_utf8(&self.b[start..self.i]).map_err(|e| e.to_string())?;
+        s.parse::<f64>().map(Value::Num).map_err(|e| format!("bad number {s:?}: {e}"))
+    }
+}
+
+// ---------------------------------------------------------------------
+// Bench artifact model
+// ---------------------------------------------------------------------
+
+/// One row of a bench report: series, sorted string tags, numeric fields
+/// in source order (`None` = JSON `null`, a non-finite measurement).
+#[derive(Debug, Clone)]
+pub struct BenchRow {
+    /// Series label (`"blaze"`, `"conventional"`, …).
+    pub series: String,
+    /// String tags, sorted by key (alignment identity).
+    pub tags: Vec<(String, String)>,
+    /// Numeric fields, in file order.
+    pub nums: Vec<(String, Option<f64>)>,
+}
+
+impl BenchRow {
+    /// Alignment key: `series{k=v,…}` over the sorted tags.
+    pub fn key(&self) -> String {
+        let mut out = self.series.clone();
+        out.push('{');
+        for (i, (k, v)) in self.tags.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            let _ = write!(out, "{k}={v}");
+        }
+        out.push('}');
+        out
+    }
+
+    fn num(&self, field: &str) -> Option<&Option<f64>> {
+        self.nums.iter().find(|(k, _)| k == field).map(|(_, v)| v)
+    }
+}
+
+/// One parsed `BENCH_<name>.json`.
+#[derive(Debug, Clone)]
+pub struct BenchReport {
+    /// The bench's report name (`fig4_wordcount`, …).
+    pub name: String,
+    /// Provenance metadata (backend, scale, …).
+    pub meta: Vec<(String, String)>,
+    /// Data rows.
+    pub rows: Vec<BenchRow>,
+}
+
+impl BenchReport {
+    /// Decode one report document.
+    pub fn from_json(src: &str) -> Result<BenchReport, String> {
+        let v = Value::parse(src)?;
+        let name = match v.get("name") {
+            Some(Value::Str(s)) => s.clone(),
+            _ => return Err("report is missing a string \"name\"".into()),
+        };
+        let mut meta = Vec::new();
+        if let Some(Value::Obj(fields)) = v.get("meta") {
+            for (k, mv) in fields {
+                if let Value::Str(s) = mv {
+                    meta.push((k.clone(), s.clone()));
+                }
+            }
+        }
+        let mut rows = Vec::new();
+        let Some(Value::Arr(raw_rows)) = v.get("rows") else {
+            return Err("report is missing a \"rows\" array".into());
+        };
+        for (i, raw) in raw_rows.iter().enumerate() {
+            let Value::Obj(fields) = raw else {
+                return Err(format!("row {i} is not an object"));
+            };
+            let mut row = BenchRow { series: String::new(), tags: Vec::new(), nums: Vec::new() };
+            for (k, fv) in fields {
+                match fv {
+                    Value::Str(s) if k == "series" => row.series = s.clone(),
+                    Value::Str(s) => row.tags.push((k.clone(), s.clone())),
+                    Value::Num(n) => row.nums.push((k.clone(), Some(*n))),
+                    Value::Null => row.nums.push((k.clone(), None)),
+                    Value::Bool(b) => row.tags.push((k.clone(), b.to_string())),
+                    _ => return Err(format!("row {i} field {k:?} has a nested value")),
+                }
+            }
+            if row.series.is_empty() {
+                return Err(format!("row {i} is missing a \"series\""));
+            }
+            row.tags.sort();
+            rows.push(row);
+        }
+        Ok(BenchReport { name, meta, rows })
+    }
+}
+
+/// Load bench reports from `path`: a single JSON file, or a directory
+/// scanned for `BENCH_*.json` (sorted by file name).
+pub fn load(path: &Path) -> Result<Vec<BenchReport>, String> {
+    let read_one = |p: &Path| -> Result<BenchReport, String> {
+        let src =
+            std::fs::read_to_string(p).map_err(|e| format!("{}: {e}", p.display()))?;
+        BenchReport::from_json(&src).map_err(|e| format!("{}: {e}", p.display()))
+    };
+    if path.is_dir() {
+        let mut files: Vec<PathBuf> = std::fs::read_dir(path)
+            .map_err(|e| format!("{}: {e}", path.display()))?
+            .filter_map(|e| e.ok().map(|e| e.path()))
+            .filter(|p| {
+                p.file_name()
+                    .and_then(|n| n.to_str())
+                    .is_some_and(|n| n.starts_with("BENCH_") && n.ends_with(".json"))
+            })
+            .collect();
+        files.sort();
+        if files.is_empty() {
+            return Err(format!("{}: no BENCH_*.json files", path.display()));
+        }
+        files.iter().map(|p| read_one(p)).collect()
+    } else {
+        Ok(vec![read_one(path)?])
+    }
+}
+
+// ---------------------------------------------------------------------
+// Diff engine
+// ---------------------------------------------------------------------
+
+/// Diff policy.
+#[derive(Debug, Clone, Copy)]
+pub struct DiffOptions {
+    /// Allowed relative increase (percent) on wall-clock fields.
+    pub threshold_pct: f64,
+    /// Gate only on deterministic fields; wall drift stays advisory.
+    pub deterministic_only: bool,
+}
+
+impl Default for DiffOptions {
+    fn default() -> Self {
+        Self { threshold_pct: 10.0, deterministic_only: false }
+    }
+}
+
+/// One detected difference.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    /// Report name the difference is in.
+    pub report: String,
+    /// Row alignment key (empty for report-level findings).
+    pub row: String,
+    /// Field name (empty for presence findings).
+    pub field: String,
+    /// Rendered baseline value.
+    pub baseline: String,
+    /// Rendered candidate value.
+    pub candidate: String,
+    /// What kind of difference.
+    pub class: &'static str,
+    /// Does this finding fail the gate?
+    pub gating: bool,
+}
+
+fn fmt_opt(v: Option<&Option<f64>>) -> String {
+    match v {
+        None => "—".into(),
+        Some(None) => "null".into(),
+        Some(Some(x)) => format!("{x}"),
+    }
+}
+
+/// Diff `cand` against `base`. Findings are ordered baseline-first:
+/// report order, then row order, then field order.
+pub fn diff(base: &[BenchReport], cand: &[BenchReport], opts: DiffOptions) -> Vec<Finding> {
+    let mut findings = Vec::new();
+    for b in base {
+        let Some(c) = cand.iter().find(|c| c.name == b.name) else {
+            findings.push(Finding {
+                report: b.name.clone(),
+                row: String::new(),
+                field: String::new(),
+                baseline: format!("{} rows", b.rows.len()),
+                candidate: "missing report".into(),
+                class: "missing-report",
+                gating: true,
+            });
+            continue;
+        };
+        // Align by key, pairing duplicates positionally.
+        let mut used = vec![false; c.rows.len()];
+        for brow in &b.rows {
+            let key = brow.key();
+            let Some(ci) = c
+                .rows
+                .iter()
+                .enumerate()
+                .position(|(i, r)| !used[i] && r.key() == key)
+            else {
+                findings.push(Finding {
+                    report: b.name.clone(),
+                    row: key,
+                    field: String::new(),
+                    baseline: "present".into(),
+                    candidate: "missing row".into(),
+                    class: "missing-row",
+                    gating: true,
+                });
+                continue;
+            };
+            used[ci] = true;
+            let crow = &c.rows[ci];
+            for (field, bval) in &brow.nums {
+                let det = is_deterministic_field(field);
+                let cval = crow.num(field);
+                let Some(cval) = cval else {
+                    findings.push(Finding {
+                        report: b.name.clone(),
+                        row: key.clone(),
+                        field: field.clone(),
+                        baseline: fmt_opt(Some(bval)),
+                        candidate: "—".into(),
+                        class: if det { "missing-field" } else { "missing-wall-field" },
+                        gating: det,
+                    });
+                    continue;
+                };
+                match (bval, cval) {
+                    (None, None) => {}
+                    (Some(bv), Some(cv)) if det => {
+                        if bv != cv {
+                            findings.push(Finding {
+                                report: b.name.clone(),
+                                row: key.clone(),
+                                field: field.clone(),
+                                baseline: format!("{bv}"),
+                                candidate: format!("{cv}"),
+                                class: "deterministic-drift",
+                                gating: true,
+                            });
+                        }
+                    }
+                    (Some(bv), Some(cv)) => {
+                        // Wall-clock: one-sided relative threshold.
+                        let limit = bv * (1.0 + opts.threshold_pct / 100.0);
+                        if *cv > limit {
+                            findings.push(Finding {
+                                report: b.name.clone(),
+                                row: key.clone(),
+                                field: field.clone(),
+                                baseline: format!("{bv:.6}"),
+                                candidate: format!("{cv:.6}"),
+                                class: "wall-regression",
+                                gating: !opts.deterministic_only,
+                            });
+                        }
+                    }
+                    (bv, cv) => {
+                        // null vs number in either direction.
+                        findings.push(Finding {
+                            report: b.name.clone(),
+                            row: key.clone(),
+                            field: field.clone(),
+                            baseline: fmt_opt(Some(bv)),
+                            candidate: fmt_opt(Some(cv)),
+                            class: "null-drift",
+                            gating: det,
+                        });
+                    }
+                }
+            }
+        }
+        // Candidate rows with no baseline counterpart: advisory.
+        for (i, crow) in c.rows.iter().enumerate() {
+            if !used[i] {
+                findings.push(Finding {
+                    report: b.name.clone(),
+                    row: crow.key(),
+                    field: String::new(),
+                    baseline: "—".into(),
+                    candidate: "extra row".into(),
+                    class: "extra-row",
+                    gating: false,
+                });
+            }
+        }
+    }
+    findings
+}
+
+/// Render the findings as a markdown report.
+pub fn markdown(
+    base_label: &str,
+    cand_label: &str,
+    findings: &[Finding],
+    opts: DiffOptions,
+) -> String {
+    let gated = findings.iter().filter(|f| f.gating).count();
+    let advisory = findings.len() - gated;
+    let mut out = String::new();
+    let _ = writeln!(out, "# blaze report\n");
+    let _ = writeln!(out, "- baseline: `{base_label}`");
+    let _ = writeln!(out, "- candidate: `{cand_label}`");
+    let _ = writeln!(
+        out,
+        "- policy: exact on deterministic fields, +{:.1}% ceiling on wall fields{}\n",
+        opts.threshold_pct,
+        if opts.deterministic_only { " (wall advisory-only)" } else { "" },
+    );
+    if findings.is_empty() {
+        let _ = writeln!(out, "No differences.");
+        return out;
+    }
+    let _ = writeln!(out, "| report | row | field | baseline | candidate | class | gates |");
+    let _ = writeln!(out, "|---|---|---|---|---|---|---|");
+    for f in findings {
+        let _ = writeln!(
+            out,
+            "| {} | {} | {} | {} | {} | {} | {} |",
+            f.report,
+            f.row,
+            f.field,
+            f.baseline,
+            f.candidate,
+            f.class,
+            if f.gating { "yes" } else { "no" },
+        );
+    }
+    let _ = writeln!(out, "\n**{gated} gated regression(s), {advisory} advisory note(s).**");
+    out
+}
+
+// ---------------------------------------------------------------------
+// CLI entry
+// ---------------------------------------------------------------------
+
+const USAGE: &str = "usage: blaze report <BASELINE> <CANDIDATE> \
+[--gate] [--deterministic-only] [--threshold PCT] [--out PATH]
+
+  BASELINE / CANDIDATE   a BENCH_*.json file or a directory of them
+  --gate                 exit 1 when a gated regression is found
+  --deterministic-only   wall-clock drift is advisory, never gated
+  --threshold PCT        wall-clock ceiling in percent (default 10)
+  --out PATH             also write the markdown diff to PATH
+
+examples:
+  blaze report benches/baseline bench-out --gate --deterministic-only
+  blaze report BENCH_table1_pi.json bench-out/BENCH_table1_pi.json --threshold 25";
+
+/// Run `blaze report` (args exclude the literal `report`). Returns the
+/// process exit code: 0 clean, 1 gated regression, 2 usage/load error.
+pub fn run_report(args: &[String]) -> i32 {
+    let mut paths: Vec<&String> = Vec::new();
+    let mut opts = DiffOptions::default();
+    let mut gate = false;
+    let mut out_path: Option<String> = None;
+    let mut it = args.iter();
+    while let Some(arg) = it.next() {
+        match arg.as_str() {
+            "--help" | "-h" => {
+                eprintln!("{USAGE}");
+                return 2;
+            }
+            "--gate" => gate = true,
+            "--deterministic-only" => opts.deterministic_only = true,
+            "--threshold" => {
+                let Some(v) = it.next() else {
+                    eprintln!("--threshold needs a percent\n{USAGE}");
+                    return 2;
+                };
+                match v.parse::<f64>() {
+                    Ok(p) if p >= 0.0 => opts.threshold_pct = p,
+                    _ => {
+                        eprintln!("--threshold wants a non-negative percent, got {v:?}");
+                        return 2;
+                    }
+                }
+            }
+            "--out" => {
+                let Some(v) = it.next() else {
+                    eprintln!("--out needs a path\n{USAGE}");
+                    return 2;
+                };
+                out_path = Some(v.clone());
+            }
+            other if other.starts_with('-') => {
+                eprintln!("unknown flag {other:?}\n{USAGE}");
+                return 2;
+            }
+            _ => paths.push(arg),
+        }
+    }
+    let [base_path, cand_path] = paths.as_slice() else {
+        eprintln!("{USAGE}");
+        return 2;
+    };
+    let base = match load(Path::new(base_path.as_str())) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("baseline: {e}");
+            return 2;
+        }
+    };
+    let cand = match load(Path::new(cand_path.as_str())) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("candidate: {e}");
+            return 2;
+        }
+    };
+    let findings = diff(&base, &cand, opts);
+    let md = markdown(base_path, cand_path, &findings, opts);
+    print!("{md}");
+    if let Some(p) = out_path {
+        if let Err(e) = std::fs::write(&p, &md) {
+            eprintln!("--out {p:?}: {e}");
+            return 2;
+        }
+    }
+    let gated = findings.iter().any(|f| f.gating);
+    if gate && gated {
+        1
+    } else {
+        0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report(name: &str, rows: Vec<BenchRow>) -> BenchReport {
+        BenchReport { name: name.into(), meta: Vec::new(), rows }
+    }
+
+    fn row(series: &str, tags: &[(&str, &str)], nums: &[(&str, f64)]) -> BenchRow {
+        let mut tags: Vec<(String, String)> =
+            tags.iter().map(|(k, v)| (k.to_string(), v.to_string())).collect();
+        tags.sort();
+        BenchRow {
+            series: series.into(),
+            tags,
+            nums: nums.iter().map(|(k, v)| (k.to_string(), Some(*v))).collect(),
+        }
+    }
+
+    #[test]
+    fn field_classification() {
+        assert!(is_deterministic_field("map.items"));
+        assert!(is_deterministic_field("hist.map.block_items.p99"));
+        assert!(is_deterministic_field("node2.cache.flush_entries"));
+        assert!(!is_deterministic_field("wall_mean"));
+        assert!(!is_deterministic_field("virtual_makespan_mean"));
+        assert!(!is_deterministic_field("hist.wall.transport.frame_wait_ns.p50"));
+        assert!(!is_deterministic_field("pool.queue_peak"));
+        assert!(!is_deterministic_field("node0.shard.contended"));
+    }
+
+    #[test]
+    fn json_roundtrip_through_bench_writer() {
+        use crate::bench::report::{Report, Row};
+        let mut rep = Report::new("rt");
+        rep.meta("backend", "simulated");
+        rep.push(
+            Row::new("blaze")
+                .tag("nodes", 4)
+                .num("map.items", 100.0)
+                .num("broken", f64::NAN),
+        );
+        let parsed = BenchReport::from_json(&rep.to_json()).expect("parse own writer");
+        assert_eq!(parsed.name, "rt");
+        assert_eq!(parsed.meta, vec![("backend".to_string(), "simulated".to_string())]);
+        assert_eq!(parsed.rows.len(), 1);
+        assert_eq!(parsed.rows[0].key(), "blaze{nodes=4}");
+        assert_eq!(parsed.rows[0].num("map.items"), Some(&Some(100.0)));
+        assert_eq!(parsed.rows[0].num("broken"), Some(&None), "NaN → null → None");
+    }
+
+    #[test]
+    fn json_parser_handles_escapes_and_nesting() {
+        let v = Value::parse(r#"{"a":"q\"\nA","b":[1,-2.5e3,null,true]}"#).unwrap();
+        assert_eq!(v.get("a"), Some(&Value::Str("q\"\nA".into())));
+        let Some(Value::Arr(items)) = v.get("b") else { panic!("array") };
+        assert_eq!(items[0], Value::Num(1.0));
+        assert_eq!(items[1], Value::Num(-2500.0));
+        assert_eq!(items[2], Value::Null);
+        assert_eq!(items[3], Value::Bool(true));
+        assert!(Value::parse("{\"a\":1} junk").is_err());
+        assert!(Value::parse("{\"a\":}").is_err());
+    }
+
+    #[test]
+    fn identical_sets_have_no_findings() {
+        let rows = || {
+            vec![
+                row("blaze", &[("nodes", "2")], &[("map.items", 64.0), ("wall_mean", 0.5)]),
+                row("conventional", &[("nodes", "2")], &[("map.items", 64.0)]),
+            ]
+        };
+        let f = diff(
+            &[report("fig", rows())],
+            &[report("fig", rows())],
+            DiffOptions::default(),
+        );
+        assert!(f.is_empty(), "{f:?}");
+    }
+
+    #[test]
+    fn deterministic_drift_gates_exactly() {
+        let base = [report("fig", vec![row("blaze", &[], &[("map.items", 64.0)])])];
+        let cand = [report("fig", vec![row("blaze", &[], &[("map.items", 65.0)])])];
+        let f = diff(&base, &cand, DiffOptions::default());
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].class, "deterministic-drift");
+        assert!(f[0].gating);
+    }
+
+    #[test]
+    fn wall_drift_respects_threshold_and_sidedness() {
+        let opts = DiffOptions { threshold_pct: 10.0, deterministic_only: false };
+        let base = [report("fig", vec![row("blaze", &[], &[("wall_mean", 1.0)])])];
+        // +5%: inside the ceiling.
+        let ok = [report("fig", vec![row("blaze", &[], &[("wall_mean", 1.05)])])];
+        assert!(diff(&base, &ok, opts).is_empty());
+        // 2x faster: improvements never flag.
+        let faster = [report("fig", vec![row("blaze", &[], &[("wall_mean", 0.5)])])];
+        assert!(diff(&base, &faster, opts).is_empty());
+        // +50%: flagged, and gating flips with --deterministic-only.
+        let slow = [report("fig", vec![row("blaze", &[], &[("wall_mean", 1.5)])])];
+        let f = diff(&base, &slow, opts);
+        assert_eq!(f.len(), 1);
+        assert!(f[0].gating);
+        let advisory = diff(
+            &base,
+            &slow,
+            DiffOptions { deterministic_only: true, ..opts },
+        );
+        assert!(!advisory[0].gating, "wall drift is advisory under --deterministic-only");
+    }
+
+    #[test]
+    fn structure_only_baseline_gates_row_presence() {
+        // Rows with tags but no nums: only presence is checked.
+        let base = [report(
+            "fig",
+            vec![
+                BenchRow { series: "blaze".into(), tags: vec![("nodes".into(), "4".into())], nums: vec![] },
+                BenchRow { series: "blaze".into(), tags: vec![("nodes".into(), "8".into())], nums: vec![] },
+            ],
+        )];
+        let cand = [report(
+            "fig",
+            vec![row("blaze", &[("nodes", "4")], &[("map.items", 7.0)])],
+        )];
+        let f = diff(&base, &cand, DiffOptions::default());
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].class, "missing-row");
+        assert!(f[0].gating);
+        assert_eq!(f[0].row, "blaze{nodes=8}");
+    }
+
+    #[test]
+    fn missing_report_and_extra_rows() {
+        let base = [report("a", vec![]), report("b", vec![])];
+        let cand = [report(
+            "a",
+            vec![row("blaze", &[], &[("map.items", 1.0)])],
+        )];
+        let f = diff(&base, &cand, DiffOptions::default());
+        let classes: Vec<&str> = f.iter().map(|x| x.class).collect();
+        assert!(classes.contains(&"extra-row"));
+        assert!(classes.contains(&"missing-report"));
+        assert!(f.iter().find(|x| x.class == "extra-row").is_some_and(|x| !x.gating));
+        assert!(f.iter().find(|x| x.class == "missing-report").is_some_and(|x| x.gating));
+    }
+
+    #[test]
+    fn markdown_mentions_counts_and_policy() {
+        let base = [report("fig", vec![row("blaze", &[], &[("map.items", 1.0)])])];
+        let cand = [report("fig", vec![row("blaze", &[], &[("map.items", 2.0)])])];
+        let opts = DiffOptions::default();
+        let md = markdown("base", "cand", &diff(&base, &cand, opts), opts);
+        assert!(md.contains("# blaze report"), "{md}");
+        assert!(md.contains("deterministic-drift"), "{md}");
+        assert!(md.contains("**1 gated regression(s), 0 advisory note(s).**"), "{md}");
+        let clean = markdown("base", "cand", &[], opts);
+        assert!(clean.contains("No differences."), "{clean}");
+    }
+
+    #[test]
+    fn run_report_usage_errors() {
+        let argv = |s: &str| s.split_whitespace().map(str::to_string).collect::<Vec<_>>();
+        assert_eq!(run_report(&argv("")), 2, "missing paths");
+        assert_eq!(run_report(&argv("a b c")), 2, "too many paths");
+        assert_eq!(run_report(&argv("a b --threshold nope")), 2);
+        assert_eq!(run_report(&argv("a b --frobnicate")), 2);
+        assert_eq!(run_report(&argv("/definitely/missing /also/missing --gate")), 2);
+    }
+}

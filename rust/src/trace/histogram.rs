@@ -1,0 +1,336 @@
+//! Deterministic log-bucketed latency/size histograms.
+//!
+//! The perf loop needs tail behavior (p50/p95/p99), not just sums — but
+//! the repo's determinism discipline (DESIGN.md §Observability) forbids
+//! anything schedule-dependent in a gated artifact. This module squares
+//! that: a [`Histogram`] is a sparse array of power-of-two buckets whose
+//! merge is plain element-wise addition — **exact**, hence associative
+//! and commutative — so per-worker histograms folded in any thread
+//! interleaving produce byte-identical state. Gated series record pure
+//! functions of the seeded workload (item counts, flush entry counts,
+//! frame chunk sizes); wall-clock series carry a `wall.` name prefix and
+//! are excluded from every determinism gate (they exist for
+//! observability only).
+//!
+//! Bucketing: value `0` lands in bucket `0`; a value `v > 0` lands in
+//! bucket `i = 64 - v.leading_zeros()`, i.e. bucket `i` spans
+//! `[2^(i-1), 2^i - 1]`. Quantiles resolve to the bucket's upper bound —
+//! a deterministic over-estimate with ≤ 2× relative error, which is all
+//! a regression gate needs.
+
+use std::collections::BTreeMap;
+
+/// Sparse log-bucketed histogram with exact merge.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct Histogram {
+    /// Bucket index → occupancy. Sparse: empty buckets are absent.
+    /// `BTreeMap` keeps iteration (and thus encoding) deterministic.
+    buckets: BTreeMap<u32, u64>,
+    /// Total recorded values.
+    count: u64,
+    /// Saturating sum of recorded values.
+    sum: u64,
+    /// Exact maximum recorded value (0 when empty).
+    max: u64,
+}
+
+/// Bucket index for a value: 0 → 0, otherwise `64 - leading_zeros`.
+fn bucket_of(v: u64) -> u32 {
+    if v == 0 {
+        0
+    } else {
+        64 - v.leading_zeros()
+    }
+}
+
+/// Inclusive upper bound of a bucket: bucket 0 → 0, bucket i → `2^i - 1`
+/// (saturating at `u64::MAX` for bucket 64).
+fn bucket_upper(i: u32) -> u64 {
+    if i == 0 {
+        0
+    } else if i >= 64 {
+        u64::MAX
+    } else {
+        (1u64 << i) - 1
+    }
+}
+
+impl Histogram {
+    /// Empty histogram.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one value.
+    pub fn record(&mut self, v: u64) {
+        *self.buckets.entry(bucket_of(v)).or_insert(0) += 1;
+        self.count += 1;
+        self.sum = self.sum.saturating_add(v);
+        self.max = self.max.max(v);
+    }
+
+    /// Merge `other` into `self`. Element-wise bucket addition is exact,
+    /// so merge order never matters — the property the threaded backend
+    /// leans on (workers fold in arrival order, results are identical).
+    pub fn merge(&mut self, other: &Histogram) {
+        for (&b, &n) in &other.buckets {
+            *self.buckets.entry(b).or_insert(0) += n;
+        }
+        self.count += other.count;
+        self.sum = self.sum.saturating_add(other.sum);
+        self.max = self.max.max(other.max);
+    }
+
+    /// Number of recorded values.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Saturating sum of recorded values.
+    pub fn sum(&self) -> u64 {
+        self.sum
+    }
+
+    /// Exact maximum recorded value (0 when empty).
+    pub fn max_value(&self) -> u64 {
+        self.max
+    }
+
+    /// True when nothing has been recorded.
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Quantile `q ∈ (0, 1]` as the upper bound of the bucket holding the
+    /// rank-`ceil(q·count)` value; 0 on an empty histogram. The true max
+    /// is tracked exactly, so the top bucket reports `max_value()` rather
+    /// than its (looser) power-of-two bound.
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let rank = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut seen = 0u64;
+        let top = *self.buckets.keys().next_back().expect("non-empty");
+        for (&b, &n) in &self.buckets {
+            seen += n;
+            if seen >= rank {
+                return if b == top { self.max } else { bucket_upper(b) };
+            }
+        }
+        self.max
+    }
+
+    /// Median (bucket upper bound).
+    pub fn p50(&self) -> u64 {
+        self.quantile(0.50)
+    }
+
+    /// 95th percentile (bucket upper bound).
+    pub fn p95(&self) -> u64 {
+        self.quantile(0.95)
+    }
+
+    /// 99th percentile (bucket upper bound).
+    pub fn p99(&self) -> u64 {
+        self.quantile(0.99)
+    }
+
+    /// Canonical text encoding: `count:sum:max|b:n,b:n,…` with buckets in
+    /// ascending index order. Two histograms encode identically iff their
+    /// full state is identical — the byte-identity currency of the
+    /// equivalence harness.
+    pub fn encode(&self) -> String {
+        let mut out = format!("{}:{}:{}|", self.count, self.sum, self.max);
+        let mut first = true;
+        for (&b, &n) in &self.buckets {
+            if !first {
+                out.push(',');
+            }
+            first = false;
+            out.push_str(&format!("{b}:{n}"));
+        }
+        out
+    }
+}
+
+/// Per-run histogram registry, mirroring [`super::Counters`]: per-node
+/// maps folded into a global map at the end of the run. Always collected
+/// (like counters) — it is cheap and every `BENCH_*.json` row embeds the
+/// quantiles whether or not tracing is on.
+#[derive(Debug, Clone)]
+pub struct Histograms {
+    global: BTreeMap<String, Histogram>,
+    per_node: Vec<BTreeMap<String, Histogram>>,
+}
+
+impl Histograms {
+    /// Registry for a cluster of `nodes` virtual nodes.
+    pub fn new(nodes: usize) -> Self {
+        Self { global: BTreeMap::new(), per_node: vec![BTreeMap::new(); nodes] }
+    }
+
+    /// Record one value into `name` on `node`.
+    pub fn record_node(&mut self, node: usize, name: &str, v: u64) {
+        self.per_node[node].entry(name.to_string()).or_default().record(v);
+    }
+
+    /// Merge a pre-built histogram into the global series `name`
+    /// (used for cross-node series like the transport wall-wait).
+    pub fn merge_global(&mut self, name: &str, h: &Histogram) {
+        if !h.is_empty() {
+            self.global.entry(name.to_string()).or_default().merge(h);
+        }
+    }
+
+    /// Fold every per-node histogram into the global map and return the
+    /// merged series sorted by name. Merge is exact, so the fold order
+    /// (node 0, 1, …) is a convention, not a correctness requirement.
+    pub fn finish(mut self) -> Vec<(String, Histogram)> {
+        for node in self.per_node {
+            for (name, h) in node {
+                self.global.entry(name).or_default().merge(&h);
+            }
+        }
+        self.global.into_iter().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::SplitRng;
+
+    #[test]
+    fn bucketing_covers_powers_of_two() {
+        assert_eq!(bucket_of(0), 0);
+        assert_eq!(bucket_of(1), 1);
+        assert_eq!(bucket_of(2), 2);
+        assert_eq!(bucket_of(3), 2);
+        assert_eq!(bucket_of(4), 3);
+        assert_eq!(bucket_of(1023), 10);
+        assert_eq!(bucket_of(1024), 11);
+        assert_eq!(bucket_of(u64::MAX), 64);
+        assert_eq!(bucket_upper(0), 0);
+        assert_eq!(bucket_upper(2), 3);
+        assert_eq!(bucket_upper(64), u64::MAX);
+        // Every value's bucket contains it.
+        for v in [0u64, 1, 2, 5, 100, 1 << 20, u64::MAX] {
+            let b = bucket_of(v);
+            assert!(v <= bucket_upper(b));
+            if b > 1 {
+                assert!(v > bucket_upper(b - 1), "{v} above bucket {b}'s lower edge");
+            }
+        }
+    }
+
+    #[test]
+    fn record_tracks_count_sum_max() {
+        let mut h = Histogram::new();
+        assert!(h.is_empty());
+        for v in [3u64, 0, 9, 1000] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 4);
+        assert_eq!(h.sum(), 1012);
+        assert_eq!(h.max_value(), 1000);
+        assert!(!h.is_empty());
+    }
+
+    #[test]
+    fn quantiles_are_bucket_upper_bounds_with_exact_max() {
+        let mut h = Histogram::new();
+        for v in 1..=100u64 {
+            h.record(v);
+        }
+        // p50 → rank 50 → value 50 lives in bucket 6 ([32, 63]).
+        assert_eq!(h.p50(), 63);
+        // The top bucket reports the exact max, not 127.
+        assert_eq!(h.p99(), 100);
+        assert_eq!(h.max_value(), 100);
+        // Degenerate single-value histogram: all quantiles = max.
+        let mut one = Histogram::new();
+        one.record(7);
+        assert_eq!(one.p50(), 7);
+        assert_eq!(one.p99(), 7);
+    }
+
+    #[test]
+    fn empty_histogram_exports_cleanly() {
+        let h = Histogram::new();
+        assert_eq!(h.quantile(0.99), 0);
+        assert_eq!(h.p50(), 0);
+        assert_eq!(h.max_value(), 0);
+        assert_eq!(h.encode(), "0:0:0|");
+    }
+
+    #[test]
+    fn encode_is_canonical() {
+        let mut h = Histogram::new();
+        h.record(0);
+        h.record(1);
+        h.record(5);
+        h.record(5);
+        // buckets: 0→1, 1→1, 3→2
+        assert_eq!(h.encode(), "4:11:5|0:1,1:1,3:2");
+    }
+
+    #[test]
+    fn merge_is_exact_associative_and_commutative_under_fuzz() {
+        // SplitRng-fuzzed inputs: split a value stream three ways, merge
+        // the parts in every order/grouping, and require identical state.
+        let mut rng = SplitRng::new(0x4157_0061, 0);
+        let mut parts = [Histogram::new(), Histogram::new(), Histogram::new()];
+        let mut whole = Histogram::new();
+        for i in 0..3000 {
+            let v = rng.next_u64() >> (rng.next_u64() % 64);
+            parts[i % 3].record(v);
+            whole.record(v);
+        }
+        let [a, b, c] = parts;
+
+        // (a+b)+c == a+(b+c)
+        let mut ab_c = a.clone();
+        ab_c.merge(&b);
+        ab_c.merge(&c);
+        let mut bc = b.clone();
+        bc.merge(&c);
+        let mut a_bc = a.clone();
+        a_bc.merge(&bc);
+        assert_eq!(ab_c, a_bc, "merge associates");
+
+        // c+b+a == a+b+c
+        let mut cba = c.clone();
+        cba.merge(&b);
+        cba.merge(&a);
+        assert_eq!(ab_c, cba, "merge commutes");
+
+        // And all equal recording the stream directly.
+        assert_eq!(ab_c, whole, "merge is exact");
+        assert_eq!(ab_c.encode(), whole.encode(), "encodings agree byte-for-byte");
+    }
+
+    #[test]
+    fn registry_folds_per_node_into_global() {
+        let mut hs = Histograms::new(2);
+        hs.record_node(0, "map.block_items", 10);
+        hs.record_node(1, "map.block_items", 30);
+        hs.record_node(1, "cache.flush_entries", 4);
+        let mut wall = Histogram::new();
+        wall.record(1234);
+        hs.merge_global("wall.transport.frame_wait_ns", &wall);
+        // Empty histograms never enter the registry.
+        hs.merge_global("wall.unused", &Histogram::new());
+
+        let merged = hs.finish();
+        let names: Vec<&str> = merged.iter().map(|(n, _)| n.as_str()).collect();
+        assert_eq!(
+            names,
+            ["cache.flush_entries", "map.block_items", "wall.transport.frame_wait_ns"]
+        );
+        let items = &merged.iter().find(|(n, _)| n == "map.block_items").unwrap().1;
+        assert_eq!(items.count(), 2);
+        assert_eq!(items.sum(), 40);
+        assert_eq!(items.max_value(), 30);
+    }
+}

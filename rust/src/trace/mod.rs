@@ -48,6 +48,8 @@ use std::path::Path;
 
 use crate::net::vtime::VirtualTime;
 
+pub mod histogram;
+
 /// Typed payload of one trace event.
 ///
 /// Field values in map-phase and shuffle-phase events are pure functions
@@ -356,6 +358,30 @@ impl TraceEvent {
     }
 }
 
+/// One occupancy sample: the value of a named gauge (pool queue depth,
+/// busy threads, transport in-flight window bytes) observed at one point
+/// during a phase. Samples exist for the Chrome view only — occupancy is
+/// real-scheduling state, so the canonical export never sees them — and
+/// are placed on the virtual-time axis at deterministic ticks by
+/// [`TraceBuf::stamp_phases`]: the `i`-th of `n` samples of a series
+/// within a phase span lands at `start + (i+1)/(n+1) · span`, preserving
+/// observation order without importing wall-clock jitter into `ts`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CounterSample {
+    /// Node the gauge belongs to (`pid` in the Chrome view).
+    pub node: usize,
+    /// Virtual-time phase label the sample belongs to.
+    pub phase: &'static str,
+    /// Occurrence index for repeated phase labels (tree-reduce rounds).
+    pub phase_ix: u16,
+    /// Gauge name (`pool.queue_depth`, `transport.in_flight_bytes`, …).
+    pub name: &'static str,
+    /// Observed gauge value.
+    pub value: u64,
+    /// Virtual timestamp (seconds), stamped by `stamp_phases`.
+    pub vt: Option<f64>,
+}
+
 /// Sort key for a map-phase worker event: overflow flush `flush` of
 /// block `block` (block = `node * workers + worker`).
 pub fn map_seq(block: usize, flush: u32) -> u64 {
@@ -374,13 +400,14 @@ pub fn block_done_seq(block: usize) -> u64 {
 pub struct TraceBuf {
     enabled: bool,
     events: Vec<TraceEvent>,
+    samples: Vec<CounterSample>,
     next_seq: u64,
 }
 
 impl TraceBuf {
     /// New buffer; `enabled = false` makes every method a no-op.
     pub fn new(enabled: bool) -> Self {
-        Self { enabled, events: Vec::new(), next_seq: 0 }
+        Self { enabled, events: Vec::new(), samples: Vec::new(), next_seq: 0 }
     }
 
     /// Whether events are being recorded.
@@ -414,6 +441,23 @@ impl TraceBuf {
             return;
         }
         self.events.extend(evs);
+    }
+
+    /// Record one occupancy sample (Chrome counter track). Observation
+    /// order within a `(node, phase, phase_ix, name)` series is the only
+    /// ordering that matters; timestamps are assigned later.
+    pub fn push_sample(
+        &mut self,
+        node: usize,
+        phase: &'static str,
+        phase_ix: u16,
+        name: &'static str,
+        value: u64,
+    ) {
+        if !self.enabled {
+            return;
+        }
+        self.samples.push(CounterSample { node, phase, phase_ix, name, value, vt: None });
     }
 
     /// Pin the serial counter above every map-phase key, so post-map
@@ -450,6 +494,24 @@ impl TraceBuf {
                 .map(|&(_, _, s)| s);
             ev.vt = Some(span.unwrap_or((0.0, makespan)));
         }
+        // Samples: spread each (node, phase, phase_ix, name) series evenly
+        // across its phase span, in observation order — sample i of n
+        // lands at start + (i+1)/(n+1)·len. Two passes: count, then place.
+        let mut series: BTreeMap<(usize, &str, u16, &str), (u64, u64)> = BTreeMap::new();
+        for s in &self.samples {
+            series.entry((s.node, s.phase, s.phase_ix, s.name)).or_insert((0, 0)).0 += 1;
+        }
+        for s in &mut self.samples {
+            let (start, end) = spans
+                .iter()
+                .find(|(l, ix, _)| *l == s.phase && *ix == s.phase_ix)
+                .map(|&(_, _, sp)| sp)
+                .unwrap_or((0.0, makespan));
+            let e = series.get_mut(&(s.node, s.phase, s.phase_ix, s.name)).expect("counted");
+            e.1 += 1;
+            let frac = e.1 as f64 / (e.0 + 1) as f64;
+            s.vt = Some(start + frac * (end - start));
+        }
     }
 
     /// Number of recorded events.
@@ -470,6 +532,8 @@ pub struct JobTrace {
     pub label: String,
     /// Events in canonical order.
     pub events: Vec<TraceEvent>,
+    /// Occupancy samples in observation order (Chrome view only).
+    pub samples: Vec<CounterSample>,
 }
 
 /// Collects every job's trace over a cluster's lifetime and exports the
@@ -500,7 +564,7 @@ impl TraceCollector {
         }
         let mut events = buf.events;
         events.sort_by_key(|e| e.seq);
-        self.jobs.push(JobTrace { label: label.to_string(), events });
+        self.jobs.push(JobTrace { label: label.to_string(), events, samples: buf.samples });
     }
 
     /// All absorbed jobs, in run order.
@@ -535,7 +599,9 @@ impl TraceCollector {
     /// The Chrome trace-event JSON export (`chrome://tracing`,
     /// `ui.perfetto.dev`): complete events on a virtual-time axis
     /// (microseconds), node as `pid`, virtual worker as `tid`, with wall
-    /// stamps and payload fields under `args`.
+    /// stamps and payload fields under `args` — plus `ph:"C"` counter
+    /// events rendering the occupancy samples as live gauge tracks next
+    /// to the spans (queue depth, busy threads, in-flight window bytes).
     pub fn chrome_json(&self) -> String {
         let mut out = String::from("{\"traceEvents\":[");
         let mut first = true;
@@ -547,6 +613,23 @@ impl TraceCollector {
                 out.push('\n');
                 first = false;
                 ev.write_chrome(&job.label, &mut out);
+            }
+            for s in &job.samples {
+                if !first {
+                    out.push(',');
+                }
+                out.push('\n');
+                first = false;
+                let ts_us = s.vt.unwrap_or(0.0) * 1e6;
+                out.push_str("{\"name\":\"");
+                out.push_str(s.name);
+                out.push_str("\",\"cat\":\"");
+                escape_into(&job.label, &mut out);
+                let _ = write!(
+                    out,
+                    "\",\"ph\":\"C\",\"pid\":{},\"ts\":{ts_us},\"args\":{{\"{}\":{}}}}}",
+                    s.node, s.name, s.value
+                );
             }
         }
         out.push_str("\n]}\n");
@@ -747,6 +830,48 @@ mod tests {
         let evs = &col.jobs()[0].events;
         assert_eq!(evs[0].vt, Some((1.0, 4.0)), "second round spans [1,4)");
         assert_eq!(evs[1].vt, Some((0.0, 4.0)), "unknown label falls back to whole job");
+    }
+
+    #[test]
+    fn samples_get_deterministic_ticks_and_counter_events() {
+        let mut buf = TraceBuf::new(true);
+        // Three queue-depth samples on node 0 during the 2s map phase:
+        // ticks at 0.5, 1.0, 1.5 (i+1)/(n+1) spacing.
+        buf.push_sample(0, "map+local-reduce", 0, "pool.queue_depth", 4);
+        buf.push_sample(0, "map+local-reduce", 0, "pool.queue_depth", 2);
+        buf.push_sample(0, "map+local-reduce", 0, "pool.queue_depth", 0);
+        // One in-flight sample on node 1 in an unknown phase → whole job.
+        buf.push_sample(1, "no-such-phase", 0, "transport.in_flight_bytes", 1024);
+        let mut vt = VirtualTime::new();
+        vt.fixed_phase("map+local-reduce", 2.0);
+        buf.stamp_phases(&vt);
+        let mut col = TraceCollector::new(true);
+        col.absorb_job("j", buf);
+
+        let samples = &col.jobs()[0].samples;
+        assert_eq!(samples.len(), 4);
+        assert_eq!(samples[0].vt, Some(0.5));
+        assert_eq!(samples[1].vt, Some(1.0));
+        assert_eq!(samples[2].vt, Some(1.5));
+        assert_eq!(samples[3].vt, Some(1.0), "singleton sample centers its span");
+
+        // Chrome view renders them as ph:"C" counter events; canonical
+        // JSONL never sees them.
+        let chrome = col.chrome_json();
+        assert_eq!(chrome.matches("\"ph\":\"C\"").count(), 4);
+        assert!(chrome.contains("\"name\":\"pool.queue_depth\""));
+        assert!(chrome.contains("\"args\":{\"pool.queue_depth\":4}"));
+        assert!(chrome.contains("\"args\":{\"transport.in_flight_bytes\":1024}"));
+        assert_eq!(col.canonical_jsonl(), "", "samples are chrome-only");
+    }
+
+    #[test]
+    fn disabled_buf_drops_samples() {
+        let mut buf = TraceBuf::new(false);
+        buf.push_sample(0, "map", 0, "pool.queue_depth", 1);
+        let mut col = TraceCollector::new(true);
+        col.absorb_job("j", buf);
+        assert!(col.jobs().is_empty());
     }
 
     #[test]

@@ -372,6 +372,113 @@ fn trace_logs_byte_identical_across_backends() {
     }
 }
 
+/// The deterministic latency histograms on `RunStats::histograms` must be
+/// byte-identical — compared through the canonical `Histogram::encode()`
+/// string — across the simulated engines and the threaded backend at
+/// 1/2/4 threads, on the same two single-stage shapes as the trace gate:
+/// π on the dense small-key path and a k-means assignment step on the
+/// hash eager path with a cap-4 cache so `cache.flush_entries` actually
+/// records. `wall.`-prefixed series are real measured latencies
+/// (threaded-only, advisory by design) and are excluded, exactly as
+/// `blaze report --deterministic-only` excludes `hist.wall.*` fields.
+#[test]
+fn histograms_byte_identical_across_backends() {
+    fn gated_histograms(c: &Cluster) -> Vec<(String, String)> {
+        let m = c.metrics();
+        let run = m.last_run().expect("run stats recorded");
+        run.histograms
+            .iter()
+            .filter(|(name, _)| !name.starts_with("wall."))
+            .map(|(name, h)| (name.clone(), h.encode()))
+            .collect()
+    }
+    let backends = [
+        ("simulated", Backend::Simulated),
+        ("threaded1", Backend::Threaded(1)),
+        ("threaded2", Backend::Threaded(2)),
+        ("threaded4", Backend::Threaded(4)),
+    ];
+    let points = gen_points(0x7ACE, 120);
+    for &(nodes, workers) in SHAPES {
+        // π: dense Vec target → small-key tree reduce. Cross-node rounds
+        // exist whenever nodes > 1, so the frame-size series must too.
+        let mut reference: Option<(&str, Vec<(String, String)>)> = None;
+        for (name, backend) in backends {
+            let cfg = ClusterConfig::sized(nodes, workers)
+                .with_backend(backend)
+                .with_seed(0x7ACE_0001);
+            let got = {
+                let c = Cluster::new(cfg.clone());
+                let r = DistRange::new(&c, 0, 300);
+                let mut hits = vec![0u64; 6];
+                mapreduce_range(
+                    &r,
+                    |v, emit| {
+                        let (x, y) = blaze::util::random::uniform2();
+                        emit((v % 6) as usize, u64::from(x * x + y * y <= 1.0));
+                    },
+                    "sum",
+                    &mut hits,
+                );
+                gated_histograms(&c)
+            };
+            assert!(
+                got.iter().any(|(n, _)| n == "map.block_items"),
+                "pi histograms missing map.block_items under {name}"
+            );
+            if nodes > 1 {
+                assert!(
+                    got.iter().any(|(n, _)| n == "shuffle.frame_bytes"),
+                    "pi histograms missing shuffle.frame_bytes under {name}"
+                );
+            }
+            match &reference {
+                None => reference = Some((name, got)),
+                Some((ref_name, want)) => assert_eq!(
+                    want, &got,
+                    "pi histograms: {name} diverged from {ref_name} \
+                     (shape {nodes}x{workers})"
+                ),
+            }
+        }
+        // k-means step: hash target → eager path; cap-4 caches overflow,
+        // so the flush-size series records at every backend.
+        let mut reference: Option<(&str, Vec<(String, String)>)> = None;
+        for (name, backend) in backends {
+            let mut cfg = ClusterConfig::sized(nodes, workers)
+                .with_backend(backend)
+                .with_seed(0x7ACE_0002);
+            cfg.thread_cache_entries = 4;
+            let got = {
+                let c = Cluster::new(cfg.clone());
+                let dv = DistVector::from_vec(&c, points.clone());
+                let mut stats: DistHashMap<u64, Stat> = DistHashMap::new(&c);
+                mapreduce(
+                    &dv,
+                    |_, p: &(i64, i64), emit| {
+                        emit((p.0.unsigned_abs() % 4) as u64, (1u64, (p.0, p.1)));
+                    },
+                    Reducer::custom_fn(add_stat),
+                    &mut stats,
+                );
+                gated_histograms(&c)
+            };
+            assert!(
+                got.iter().any(|(n, _)| n == "cache.flush_entries"),
+                "cap-4 cache must record flush sizes under {name}"
+            );
+            match &reference {
+                None => reference = Some((name, got)),
+                Some((ref_name, want)) => assert_eq!(
+                    want, &got,
+                    "kmeans histograms: {name} diverged from {ref_name} \
+                     (shape {nodes}x{workers})"
+                ),
+            }
+        }
+    }
+}
+
 /// Canonical-trace byte-identity for **chained and iterative** jobs: a
 /// two-stage hashmap pipeline (vector → word counts, then the hash map
 /// itself as stage-2 input) and a two-iteration k-means loop where

@@ -5,7 +5,7 @@
 //! `rust/tests/fault.rs`.
 
 use blaze::containers::DistRange;
-use blaze::coordinator::cluster::{Cluster, ClusterConfig};
+use blaze::coordinator::cluster::{Backend, Cluster, ClusterConfig};
 use blaze::mapreduce::mapreduce_range_labeled;
 use blaze::trace::{TraceBuf, TraceCollector, TraceEvent, TraceEventKind};
 
@@ -143,4 +143,40 @@ fn cluster_trace_round_trips_through_export() {
     let chrome = read_and_remove(&chrome_sibling(&path));
     assert!(chrome.starts_with("{\"traceEvents\":["));
     assert!(chrome.contains("MapBlock"), "chrome view carries the map events");
+}
+
+#[test]
+fn threaded_trace_exports_occupancy_counter_tracks() {
+    // The threaded backend samples real scheduling state — pool queue
+    // depth per stolen block and the transport's in-flight window — and
+    // the Chrome view renders those as counter tracks ("ph":"C").
+    let c = Cluster::new(
+        ClusterConfig::sized(2, 2).with_trace(true).with_backend(Backend::Threaded(2)),
+    );
+    let hits = run_small_job(&c);
+    assert!(hits > 0);
+
+    let chrome = c.trace().chrome_json();
+    assert!(chrome.contains("\"ph\":\"C\""), "threaded traced run emits counter events");
+    assert!(chrome.contains("pool.queue_depth"), "pool queue-depth track present");
+    assert!(chrome.contains("pool.busy_threads"), "pool busy-threads track present");
+    assert!(
+        chrome.contains("transport.in_flight_bytes"),
+        "transport in-flight track present (multi-node run moves cross-node frames)"
+    );
+
+    // Occupancy is real-scheduling state: the canonical JSONL — the
+    // byte-identity surface across backends — must never see it.
+    let canonical = c.trace().canonical_jsonl();
+    assert!(!canonical.contains("queue_depth"), "samples are chrome-only");
+    assert!(!canonical.contains("in_flight_bytes"), "samples are chrome-only");
+
+    // The simulated engines have no real pool or wire, so the same job
+    // untraced-by-occupancy stays counter-free.
+    let sim = Cluster::new(ClusterConfig::sized(2, 2).with_trace(true));
+    assert_eq!(run_small_job(&sim), hits, "backends agree on the result");
+    assert!(
+        !sim.trace().chrome_json().contains("\"ph\":\"C\""),
+        "simulated runs emit no counter tracks"
+    );
 }
