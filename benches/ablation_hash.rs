@@ -1,0 +1,175 @@
+//! Ablation: the node-local hot path — batched hashing and pooled scratch.
+//!
+//! 1. Batched vs scalar hashing: `hash_batch`/`shard_batch` against a
+//!    per-key `fxhash` loop, over u64 and short-string keys. The batch
+//!    is a 4-lane unroll of the same scalar hash (bit-identical outputs),
+//!    so the only thing this measures is the wall delta.
+//! 2. Pooled vs system flush scratch on the threaded eager path: a
+//!    word-count whose flush buffers either round-trip through the
+//!    per-worker `BufferPool` or hit the system allocator every flush.
+//!    Counters (`alloc.pool.*`, `shard.stripes`) and histogram digests
+//!    ride along in the rows.
+//!
+//! Datapoints land in `BENCH_ablation_hash.json` via [`bench::report`].
+
+use blaze::bench;
+use blaze::bench::report::{Report, Row};
+use blaze::containers::{DistHashMap, DistVector};
+use blaze::coordinator::cluster::{Backend, Cluster, ClusterConfig};
+use blaze::data::corpus_lines;
+use blaze::mapreduce::mapreduce_labeled;
+use blaze::util::alloc::AllocMode;
+use blaze::util::hash::{fxhash, hash_batch, shard_batch};
+use blaze::util::rng::SplitRng;
+
+/// Push one scalar/batched row pair and print the comparison line.
+fn emit_pair(
+    rep: &mut Report,
+    series: &str,
+    kind: &str,
+    keys: usize,
+    scalar: &bench::Sample,
+    batched: &bench::Sample,
+) {
+    for (variant, sample) in [("scalar", scalar), ("batched", batched)] {
+        rep.push(
+            Row::new(series)
+                .tag("kind", kind)
+                .tag("variant", variant)
+                .num("host_wall_mean_sec", sample.mean)
+                .num("host_wall_std_sec", sample.std)
+                .num("keys_per_sec", keys as f64 / sample.mean),
+        );
+    }
+    println!(
+        "  {:>12} {:>6}: scalar {:>10}s   batched {:>10}s   {:.2}x",
+        series,
+        kind,
+        scalar,
+        batched,
+        scalar.mean / batched.mean
+    );
+}
+
+fn ablation_batch_vs_scalar(rep: &mut Report) {
+    println!("--- ablation A: batched vs scalar hashing ---");
+    let n = 1_000_000 * bench::scale();
+    let reps = bench::reps();
+    let mut rng = SplitRng::new(0x4A58, 0);
+    let u64_keys: Vec<u64> = (0..n).map(|_| rng.next_u64()).collect();
+    let str_keys: Vec<String> = (0..n / 8)
+        .map(|_| {
+            let len = 3 + rng.below(10) as usize;
+            (0..len).map(|_| char::from(b'a' + rng.below(26) as u8)).collect()
+        })
+        .collect();
+    let mut out: Vec<u64> = Vec::new();
+
+    // XOR-fold the hashes so the loops cannot be optimized away; the
+    // equality asserts double as parity checks on these exact inputs.
+    hash_batch(&u64_keys, &mut out);
+    let want = u64_keys.iter().map(fxhash).fold(0u64, |a, h| a ^ h);
+    assert_eq!(out.iter().fold(0u64, |a, h| a ^ h), want, "u64 batch diverged");
+    let s = bench::time_host(reps, || {
+        u64_keys.iter().map(fxhash).fold(0u64, |a, h| a ^ h)
+    });
+    let b = bench::time_host(reps, || {
+        hash_batch(&u64_keys, &mut out);
+        out.iter().fold(0u64, |a, h| a ^ h)
+    });
+    emit_pair(rep, "hash-batch", "u64", u64_keys.len(), &s, &b);
+
+    hash_batch(&str_keys, &mut out);
+    let want = str_keys.iter().map(fxhash).fold(0u64, |a, h| a ^ h);
+    assert_eq!(out.iter().fold(0u64, |a, h| a ^ h), want, "str batch diverged");
+    let s = bench::time_host(reps, || {
+        str_keys.iter().map(fxhash).fold(0u64, |a, h| a ^ h)
+    });
+    let b = bench::time_host(reps, || {
+        hash_batch(&str_keys, &mut out);
+        out.iter().fold(0u64, |a, h| a ^ h)
+    });
+    emit_pair(rep, "hash-batch", "str", str_keys.len(), &s, &b);
+
+    // Stripe selection (hash & mask) — the shard absorb inner loop.
+    let mask = 255usize;
+    let mut stripes: Vec<usize> = Vec::new();
+    let s = bench::time_host(reps, || {
+        u64_keys.iter().map(|k| (fxhash(k) as usize) & mask).fold(0usize, |a, x| a ^ x)
+    });
+    let b = bench::time_host(reps, || {
+        shard_batch(&u64_keys, mask, &mut stripes);
+        stripes.iter().fold(0usize, |a, x| a ^ x)
+    });
+    emit_pair(rep, "shard-batch", "u64", u64_keys.len(), &s, &b);
+    println!();
+}
+
+fn ablation_pooled_scratch(rep: &mut Report) {
+    println!("--- ablation B: pooled vs system flush scratch (threaded wordcount) ---");
+    let lines = corpus_lines(30_000 * bench::scale(), 10, 42);
+    let reps = bench::reps();
+    println!(
+        "  {:>8} {:>12} {:>12} {:>12} {:>8}",
+        "alloc", "host (s)", "pool hits", "misses", "stripes"
+    );
+    for alloc in [AllocMode::System, AllocMode::Pool] {
+        // Small cache → heavy flush traffic → the scratch buffers matter.
+        let mut cfg = ClusterConfig::sized(4, 4)
+            .with_backend(Backend::Threaded(4))
+            .with_alloc(alloc);
+        cfg.thread_cache_entries = 256;
+        let cluster = Cluster::new(cfg);
+        let sample = bench::time_host(reps, || {
+            let dv = DistVector::from_vec(&cluster, lines.clone());
+            let mut words: DistHashMap<String, u64> = DistHashMap::new(&cluster);
+            mapreduce_labeled(
+                "abl.hash_scratch",
+                &dv,
+                |_, line: &String, emit| {
+                    for w in line.split_whitespace() {
+                        emit(w.to_string(), 1u64);
+                    }
+                },
+                "sum",
+                &mut words,
+            );
+            words.len()
+        });
+        let m = cluster.metrics();
+        let run = m.last_run().unwrap();
+        rep.push(
+            Row::new("pooled-scratch")
+                .tag("alloc", alloc)
+                .tag("backend", "threaded:4")
+                .num("host_wall_mean_sec", sample.mean)
+                .num("host_wall_std_sec", sample.std)
+                .counters(run),
+        );
+        println!(
+            "  {:>8} {:>12} {:>12} {:>12} {:>8}",
+            alloc.to_string(),
+            sample,
+            run.counter("alloc.pool.hits").unwrap_or(0),
+            run.counter("alloc.pool.misses").unwrap_or(0),
+            run.counter("shard.stripes").unwrap_or(0),
+        );
+    }
+    println!();
+}
+
+fn main() {
+    bench::figure_header(
+        "Node-local hot path ablations",
+        "batched vs scalar hashing; pooled vs system flush scratch",
+    );
+    let mut rep = Report::new("ablation_hash");
+    rep.meta("scale", bench::scale());
+    rep.meta("reps", bench::reps());
+    ablation_batch_vs_scalar(&mut rep);
+    ablation_pooled_scratch(&mut rep);
+    match rep.write() {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write bench json: {e}"),
+    }
+}

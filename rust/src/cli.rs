@@ -5,7 +5,7 @@
 //!              [--backend simulated|threaded[:N]] [--scale S]
 //!              [--artifacts DIR] [--seed SEED]
 //!              [--fail-at NODE@BLOCK ...] [--checkpoint-every BLOCKS]
-//!              [--evacuate] [--transport-window BYTES]
+//!              [--evacuate] [--transport-window BYTES] [--pin-threads]
 //! blaze report <BASELINE> <CANDIDATE> [--gate] [--deterministic-only]
 //!              [--threshold PCT] [--out PATH]
 //! ```
@@ -26,10 +26,15 @@
 //! eager/small-key map+combine on N real OS threads ([`crate::exec`])
 //! with byte-identical results; the default (overridable via the
 //! `BLAZE_BACKEND` environment variable) is the simulated backend.
-//! `--transport-window BYTES` sets the shuffle backpressure window
+//! `--pin-threads` pins pool workers to cores on the threaded backend
+//! (best-effort affinity; a silent no-op where unsupported — results are
+//! byte-identical either way). `--transport-window BYTES` sets the
+//! shuffle backpressure window
 //! (simulated accounting *and* the threaded backend's real channel
 //! capacity — see [`crate::exec::transport`]); tiny windows force stall
-//! storms, surfaced as `transport.stalls`.
+//! storms, surfaced as `transport.stalls`. Setting `BLAZE_PIN_THREADS`
+//! to any non-empty value turns pinning on without the flag; the flag
+//! only ever turns it *on*, never off.
 
 use crate::apps;
 use crate::coordinator::cluster::{Backend, Cluster, ClusterConfig, EngineKind};
@@ -70,6 +75,8 @@ pub struct Options {
     /// enables the structured event collector and exports the canonical
     /// JSONL log (plus `PATH.chrome.json`) after the run.
     pub trace: Option<String>,
+    /// Pin threaded-backend pool workers to cores (`--pin-threads`).
+    pub pin_threads: bool,
 }
 
 impl Default for Options {
@@ -88,6 +95,7 @@ impl Default for Options {
             evacuate: false,
             transport_window: None,
             trace: std::env::var("BLAZE_TRACE").ok().filter(|p| !p.is_empty()),
+            pin_threads: false,
         }
     }
 }
@@ -112,7 +120,7 @@ const USAGE: &str = "usage: blaze <pi|wordcount|pagerank|kmeans|gmm|knn|all> \
 [--backend simulated|threaded[:N]] [--scale S] \
 [--artifacts DIR|none] [--seed SEED] [--fail-at NODE@BLOCK ...] \
 [--checkpoint-every BLOCKS] [--evacuate] [--transport-window BYTES] \
-[--trace PATH]
+[--trace PATH] [--pin-threads]
        blaze report <BASELINE> <CANDIDATE> [--gate] [--deterministic-only] \
 [--threshold PCT] [--out PATH]";
 
@@ -149,6 +157,7 @@ pub fn parse(args: &[String]) -> Result<Options, String> {
                     Some(next("byte count")?.parse().map_err(|e| format!("{e}"))?)
             }
             "--trace" => opts.trace = Some(next("path")?),
+            "--pin-threads" => opts.pin_threads = true,
             "--fail-at" => {
                 let spec = next("NODE@BLOCK spec")?;
                 let Some((node, block)) = spec.split_once('@') else {
@@ -185,6 +194,11 @@ fn make_cluster(opts: &Options) -> Cluster {
         .with_trace(opts.trace.is_some());
     if let Some(bytes) = opts.transport_window {
         cfg = cfg.with_transport_window(bytes);
+    }
+    // Only set when the flag is present, so the BLAZE_PIN_THREADS env
+    // default baked into ClusterConfig survives unflagged runs.
+    if opts.pin_threads {
+        cfg = cfg.with_pin_threads(true);
     }
     Cluster::new(cfg)
 }
@@ -349,6 +363,25 @@ mod tests {
             run(&argv(
                 "wordcount --nodes 2 --workers 2 --scale 1 --artifacts none \
                  --backend threaded:2"
+            )),
+            0
+        );
+    }
+
+    #[test]
+    fn parse_pin_threads_flag() {
+        assert!(parse(&argv("pi --pin-threads")).unwrap().pin_threads);
+        assert!(!parse(&argv("pi")).unwrap().pin_threads);
+    }
+
+    #[test]
+    fn run_wordcount_threaded_pinned_end_to_end() {
+        // Pinning is best-effort: the run must succeed (and stay
+        // byte-identical) whether or not the affinity calls land.
+        assert_eq!(
+            run(&argv(
+                "wordcount --nodes 2 --workers 2 --scale 1 --artifacts none \
+                 --backend threaded:2 --pin-threads"
             )),
             0
         );

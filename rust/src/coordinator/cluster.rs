@@ -1,8 +1,9 @@
 //! Virtual cluster handle and configuration.
 
-use std::cell::RefCell;
+use std::cell::{Cell, RefCell};
 use std::rc::Rc;
 
+use crate::exec::shard::StripeFeedback;
 use crate::fault::FaultConfig;
 use crate::net::model::NetworkModel;
 use crate::trace::TraceCollector;
@@ -163,6 +164,13 @@ pub struct ClusterConfig {
     /// (non-empty = on; the CLI `--trace PATH` flag also flips it).
     /// Off by default — the engines' hot paths then pay one branch.
     pub trace: bool,
+    /// Pin threaded-backend pool workers to cores
+    /// ([`crate::exec::pool::PoolOptions::pin_threads`]) so a block's
+    /// RNG-stream work stays on one core. Opt-in (`--pin-threads` or the
+    /// `BLAZE_PIN_THREADS` env var, non-empty = on); a no-op where the
+    /// platform has no affinity syscall. Never affects results — pinning
+    /// is placement only.
+    pub pin_threads: bool,
 }
 
 impl Default for ClusterConfig {
@@ -181,6 +189,7 @@ impl Default for ClusterConfig {
             transport_window_bytes: crate::coordinator::backpressure::DEFAULT_WINDOW_BYTES,
             fault: FaultConfig::disabled(),
             trace: std::env::var("BLAZE_TRACE").map_or(false, |v| !v.is_empty()),
+            pin_threads: std::env::var("BLAZE_PIN_THREADS").map_or(false, |v| !v.is_empty()),
         }
     }
 }
@@ -239,6 +248,12 @@ impl ClusterConfig {
         self.trace = trace;
         self
     }
+
+    /// Builder-style thread-pinning toggle.
+    pub fn with_pin_threads(mut self, pin: bool) -> Self {
+        self.pin_threads = pin;
+        self
+    }
 }
 
 struct ClusterInner {
@@ -254,6 +269,10 @@ struct ClusterInner {
     /// Structured trace event collector ([`crate::trace`]); disabled
     /// (absorbs nothing) unless `config.trace` is on.
     trace: RefCell<TraceCollector>,
+    /// Last threaded run's stripe-lock observations, feeding the next
+    /// run's [`crate::exec::shard::stripe_count`] decision. Purely a
+    /// sizing hint — canonical merge order never depends on it.
+    stripe_hint: Cell<Option<StripeFeedback>>,
 }
 
 /// Cheap-to-clone handle to a virtual cluster.
@@ -277,6 +296,7 @@ impl Cluster {
                 pool: BufferPool::new(),
                 fault_fired: RefCell::new(Vec::new()),
                 trace,
+                stripe_hint: Cell::new(None),
             }),
         }
     }
@@ -319,6 +339,18 @@ impl Cluster {
     /// Scratch buffer pool (honours the configured [`AllocMode`]).
     pub fn pool(&self) -> &BufferPool {
         &self.inner.pool
+    }
+
+    /// Stripe-lock observations from the last threaded run on this
+    /// cluster, if any ([`crate::exec::shard::stripe_count`] input).
+    pub fn stripe_feedback(&self) -> Option<StripeFeedback> {
+        self.inner.stripe_hint.get()
+    }
+
+    /// Record a threaded run's stripe-lock observations for the next
+    /// run's stripe sizing.
+    pub fn note_stripe_feedback(&self, fb: StripeFeedback) {
+        self.inner.stripe_hint.set(Some(fb));
     }
 
     /// True if two handles point at the same cluster.
@@ -382,16 +414,27 @@ mod tests {
             .with_engine(EngineKind::Conventional)
             .with_alloc(AllocMode::Pool)
             .with_seed(7)
-            .with_transport_window(0);
+            .with_transport_window(0)
+            .with_pin_threads(true);
         assert_eq!(cfg.nodes, 4);
         assert_eq!(cfg.engine, EngineKind::Conventional);
         assert_eq!(cfg.alloc, AllocMode::Pool);
         assert_eq!(cfg.seed, 7);
         assert_eq!(cfg.transport_window_bytes, 1, "window clamps to >= 1");
+        assert!(cfg.pin_threads);
         assert_eq!(
             ClusterConfig::default().transport_window_bytes,
             crate::coordinator::backpressure::DEFAULT_WINDOW_BYTES
         );
+    }
+
+    #[test]
+    fn stripe_feedback_round_trips_on_cluster() {
+        let c = Cluster::local(2, 2);
+        assert_eq!(c.stripe_feedback(), None);
+        let fb = StripeFeedback { stripes: 16, locks: 100, contended: 3 };
+        c.note_stripe_feedback(fb);
+        assert_eq!(c.clone().stripe_feedback(), Some(fb), "hint is shared by handles");
     }
 
     #[test]

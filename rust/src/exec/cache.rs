@@ -11,6 +11,13 @@
 //! ([`super::shard::partial_order`]) and lands in the lock-striped
 //! [`super::shard::ShardedMap`], which restores the simulated merge order
 //! at canonical-merge time regardless of thread interleaving.
+//!
+//! Two hot-path mechanics live here rather than in the shard: each drain
+//! hashes its keys in one batched pass ([`crate::util::hash::hash_batch_by`])
+//! so stripe selection downstream reuses the lane instead of re-hashing
+//! per pair, and drain buffers come from a [`FlushScratch`] (per-thread
+//! [`BufferPool`]s under `AllocMode::Pool`) so the flush storm recycles
+//! two allocations per drain instead of hitting the global allocator.
 
 use std::collections::hash_map::Entry;
 use std::hash::Hash;
@@ -18,7 +25,8 @@ use std::hash::Hash;
 use crate::mapreduce::eager::HASH_ENTRY_OVERHEAD;
 use crate::mapreduce::reducers::Reducer;
 use crate::ser::fastser::FastSer;
-use crate::util::hash::FxHashMap;
+use crate::util::alloc::{AllocMode, BufferPool, Scratch};
+use crate::util::hash::{hash_batch_by, FxHashMap};
 
 use super::shard::partial_order;
 
@@ -33,6 +41,37 @@ pub struct FlushBatch<K, V> {
     pub bytes: u64,
     /// The drained pairs.
     pub pairs: Vec<(K, V)>,
+    /// Batched key hashes: `hashes[i] == fxhash(&pairs[i].0)`, computed
+    /// once at drain time and reused for stripe selection.
+    pub hashes: Vec<u64>,
+}
+
+/// Buffer source for flush drains: pair buffers and hash lanes, each
+/// routed through its own typed pool. Under `AllocMode::System` this
+/// degenerates to plain `Vec::with_capacity` — byte-identical behavior,
+/// no pooling — which is exactly the blaze-vs-blaze-TCM ablation axis.
+pub struct FlushScratch<'a, K, V> {
+    pairs: Scratch<'a, (K, V)>,
+    hashes: Scratch<'a, u64>,
+}
+
+impl<'a, K, V> FlushScratch<'a, K, V> {
+    /// Scratch over a worker's private pools in `mode`.
+    pub fn new(
+        mode: AllocMode,
+        pairs: &'a BufferPool<(K, V)>,
+        hashes: &'a BufferPool<u64>,
+    ) -> Self {
+        Self { pairs: Scratch::new(mode, pairs), hashes: Scratch::new(mode, hashes) }
+    }
+
+    /// Return a fully-absorbed batch's buffers to the pools (no-op under
+    /// `System`). Call after [`super::shard::ShardedMap::absorb_prehashed`]
+    /// has drained the pairs.
+    pub fn recycle(&self, batch: FlushBatch<K, V>) {
+        self.pairs.put(batch.pairs);
+        self.hashes.put(batch.hashes);
+    }
 }
 
 /// A bounded eager-combine cache for one map block (= one virtual worker).
@@ -64,7 +103,13 @@ impl<K: Hash + Eq + FastSer, V: FastSer> EagerCache<K, V> {
     /// overflow batch when this emit filled the cache (the simulated
     /// engine's flush-into-node-map moment); popular keys re-enter the
     /// empty cache on their next emission, exactly as in the paper.
-    pub fn reduce(&mut self, key: K, value: V, red: &Reducer<V>) -> Option<FlushBatch<K, V>> {
+    pub fn reduce(
+        &mut self,
+        key: K,
+        value: V,
+        red: &Reducer<V>,
+        scratch: &FlushScratch<'_, K, V>,
+    ) -> Option<FlushBatch<K, V>> {
         match self.map.entry(key) {
             Entry::Occupied(mut e) => red.apply(e.get_mut(), &value),
             Entry::Vacant(e) => {
@@ -75,14 +120,14 @@ impl<K: Hash + Eq + FastSer, V: FastSer> EagerCache<K, V> {
             }
         }
         self.peak_bytes = self.peak_bytes.max(self.bytes);
-        (self.map.len() >= self.cap).then(|| self.drain(false))
+        (self.map.len() >= self.cap).then(|| self.drain(false, scratch))
     }
 
     /// Drain whatever remains at block end as the worker's *final* partial
     /// (canonically merged after every worker's overflow flushes, like the
     /// simulated engine's end-of-map cache merge). May be empty.
-    pub fn finish(mut self) -> FlushBatch<K, V> {
-        self.drain(true)
+    pub fn finish(mut self, scratch: &FlushScratch<'_, K, V>) -> FlushBatch<K, V> {
+        self.drain(true, scratch)
     }
 
     /// High-water cache bytes (memory accounting).
@@ -90,7 +135,7 @@ impl<K: Hash + Eq + FastSer, V: FastSer> EagerCache<K, V> {
         self.peak_bytes
     }
 
-    fn drain(&mut self, final_drain: bool) -> FlushBatch<K, V> {
+    fn drain(&mut self, final_drain: bool, scratch: &FlushScratch<'_, K, V>) -> FlushBatch<K, V> {
         // A worker has exactly one final drain, so finals always carry
         // sequence 0 — only overflow flushes consume the counter.
         let seq = if final_drain { 0 } else { self.next_seq };
@@ -100,32 +145,48 @@ impl<K: Hash + Eq + FastSer, V: FastSer> EagerCache<K, V> {
         }
         let bytes = self.bytes;
         self.bytes = 0;
-        FlushBatch { order, bytes, pairs: self.map.drain().collect() }
+        let mut pairs = scratch.pairs.get(self.map.len());
+        pairs.extend(self.map.drain());
+        let mut hashes = scratch.hashes.get(pairs.len());
+        hash_batch_by(&pairs, |p| &p.0, &mut hashes);
+        FlushBatch { order, bytes, pairs, hashes }
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::hash::fxhash;
+
+    fn scratch_pools<K, V>() -> (BufferPool<(K, V)>, BufferPool<u64>) {
+        (BufferPool::new(), BufferPool::new())
+    }
 
     #[test]
     fn overflow_drains_whole_cache_after_capacity_insert() {
         let red = Reducer::sum();
+        let (pp, hp) = scratch_pools::<u64, u64>();
+        let scratch = FlushScratch::new(AllocMode::System, &pp, &hp);
         let mut cache: EagerCache<u64, u64> = EagerCache::new(0, 2);
-        assert!(cache.reduce(1, 10, &red).is_none());
+        assert!(cache.reduce(1, 10, &red, &scratch).is_none());
         // Occupied apply: no growth, no flush.
-        assert!(cache.reduce(1, 5, &red).is_none());
+        assert!(cache.reduce(1, 5, &red, &scratch).is_none());
         // Second distinct key hits the cap: whole cache drains.
-        let batch = cache.reduce(2, 7, &red).expect("overflow flush");
+        let batch = cache.reduce(2, 7, &red, &scratch).expect("overflow flush");
+        // Hash lane is parallel to the pairs, scalar-parity.
+        assert_eq!(batch.hashes.len(), batch.pairs.len());
+        for (p, h) in batch.pairs.iter().zip(&batch.hashes) {
+            assert_eq!(*h, fxhash(&p.0));
+        }
         let mut pairs = batch.pairs;
         pairs.sort_unstable();
         assert_eq!(pairs, vec![(1, 15), (2, 7)]);
         assert_eq!(batch.order, partial_order(false, 0, 0));
         // Cache is empty again; the next overflow gets the next sequence.
-        assert!(cache.reduce(3, 1, &red).is_none());
-        let batch2 = cache.reduce(4, 1, &red).expect("second flush");
+        assert!(cache.reduce(3, 1, &red, &scratch).is_none());
+        let batch2 = cache.reduce(4, 1, &red, &scratch).expect("second flush");
         assert_eq!(batch2.order, partial_order(false, 0, 1));
-        let fin = cache.finish();
+        let fin = cache.finish(&scratch);
         assert!(fin.pairs.is_empty());
         assert_eq!(fin.order, partial_order(true, 0, 0));
     }
@@ -133,23 +194,43 @@ mod tests {
     #[test]
     fn capacity_one_flushes_every_emit() {
         let red = Reducer::sum();
+        let (pp, hp) = scratch_pools::<u64, u64>();
+        let scratch = FlushScratch::new(AllocMode::System, &pp, &hp);
         let mut cache: EagerCache<u64, u64> = EagerCache::new(3, 1);
         for i in 0..5u64 {
-            let batch = cache.reduce(i % 2, 1, &red).expect("cap-1 always flushes");
+            let batch = cache.reduce(i % 2, 1, &red, &scratch).expect("cap-1 always flushes");
             assert_eq!(batch.pairs.len(), 1);
+            assert_eq!(batch.hashes, vec![fxhash(&batch.pairs[0].0)]);
             assert_eq!(batch.order, partial_order(false, 3, i as u32));
         }
     }
 
     #[test]
+    fn pooled_scratch_recycles_drain_buffers() {
+        let red = Reducer::sum();
+        let (pp, hp) = scratch_pools::<u64, u64>();
+        let scratch = FlushScratch::new(AllocMode::Pool, &pp, &hp);
+        let mut cache: EagerCache<u64, u64> = EagerCache::new(0, 1);
+        for i in 0..10u64 {
+            let batch = cache.reduce(i, 1, &red, &scratch).expect("cap-1 always flushes");
+            scratch.recycle(batch);
+        }
+        let (hits, misses) = pp.stats();
+        assert!(hits >= 8, "drain buffers recycle through the pool: {hits}/{misses}");
+        assert!(hp.stats().0 >= 8);
+    }
+
+    #[test]
     fn byte_accounting_tracks_high_water() {
         let red = Reducer::sum();
+        let (pp, hp) = scratch_pools::<u64, u64>();
+        let scratch = FlushScratch::new(AllocMode::System, &pp, &hp);
         let mut cache: EagerCache<u64, u64> = EagerCache::new(0, 8);
         assert_eq!(cache.peak_bytes(), 0);
-        cache.reduce(1, 1, &red);
+        cache.reduce(1, 1, &red, &scratch);
         let one = cache.peak_bytes();
         assert!(one > HASH_ENTRY_OVERHEAD);
-        cache.reduce(2, 1, &red);
+        cache.reduce(2, 1, &red, &scratch);
         assert!(cache.peak_bytes() > one);
     }
 }

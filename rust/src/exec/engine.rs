@@ -48,12 +48,29 @@ use crate::net::vtime::VirtualTime;
 use crate::ser::fastser::FastSer;
 use crate::trace::histogram::Histograms;
 use crate::trace::{block_done_seq, map_seq, Counters, TraceBuf, TraceEvent, TraceEventKind};
+use crate::util::alloc::BufferPool;
 use crate::util::hash::FxHashMap;
 
-use super::cache::EagerCache;
-use super::pool;
-use super::shard::ShardedMap;
+use super::cache::{EagerCache, FlushScratch};
+use super::pool::{self, PoolOptions};
+use super::shard::{self, ShardedMap, StripeFeedback};
 use super::transport::TransportTotals;
+
+/// Per-pool-worker private scratch: typed buffer pools backing the
+/// [`FlushScratch`] every block on this thread drains through. Thread-
+/// local by construction ([`pool::execute_with`] builds one per worker),
+/// mirroring TCMalloc's thread caches — no cross-thread synchronization
+/// on the get/put path.
+struct EagerWorkerState<K2, V2> {
+    pairs: BufferPool<(K2, V2)>,
+    hashes: BufferPool<u64>,
+}
+
+impl<K2, V2> EagerWorkerState<K2, V2> {
+    fn new() -> Self {
+        Self { pairs: BufferPool::new(), hashes: BufferPool::new() }
+    }
+}
 
 /// One materialized map block: virtual worker `worker` of `node`'s
 /// partition, with its items cloned out of the input for the `Send`
@@ -149,7 +166,11 @@ pub fn run_eager<I, F, K2, V2, T>(
     let (nodes, workers) = (cfg.nodes, cfg.workers_per_node);
     let threads = threads.max(1);
     let cache_cap = cfg.thread_cache_entries.max(1);
-    let stripes = (threads * 4).next_power_of_two().min(256);
+    // Per-core stripe sizing, nudged by the previous run's observed
+    // contention (recorded on the cluster below). Stripe count only moves
+    // where pairs park between flush and drain — canonical merge order is
+    // untouched, so results stay byte-identical at any count.
+    let stripes = shard::stripe_count(threads, cluster.stripe_feedback());
 
     let mut vt = VirtualTime::new();
 
@@ -173,9 +194,8 @@ pub fn run_eager<I, F, K2, V2, T>(
     // independent of which OS thread finished first.
     let trace_on = cfg.trace;
     let worker_events: Mutex<Vec<TraceEvent>> = Mutex::new(Vec::new());
-    let pool_stats;
-    {
-        let work = |task: BlockTask<I::K, I::V>| {
+    let (pool_stats, worker_states) = {
+        let work = |state: &mut EagerWorkerState<K2, V2>, task: BlockTask<I::K, I::V>| {
             let t0 = Instant::now();
             let block = task.node * workers + task.worker;
             let block_start_ns = t_map.elapsed().as_nanos() as u64;
@@ -183,6 +203,9 @@ pub fn run_eager<I, F, K2, V2, T>(
             // identity, not the OS thread — same streams as the simulated
             // engines no matter which thread steals the block.
             crate::util::random::set_stream(cfg.seed, (task.node * workers + task.worker) as u64);
+            // Flush drains route through this thread's private pools
+            // (plain allocations under `AllocMode::System`).
+            let scratch = FlushScratch::new(cfg.alloc, &state.pairs, &state.hashes);
             let mut cache: EagerCache<K2, V2> = EagerCache::new(task.worker, cache_cap);
             let mut emitted = 0u64;
             let mut flushes = 0u32;
@@ -193,7 +216,7 @@ pub fn run_eager<I, F, K2, V2, T>(
             for (k, v) in &task.items {
                 let mut emit = |k2: K2, v2: V2| {
                     emitted += 1;
-                    if let Some(batch) = cache.reduce(k2, v2, red) {
+                    if let Some(mut batch) = cache.reduce(k2, v2, red, &scratch) {
                         let entries = batch.pairs.len() as u64;
                         if trace_on {
                             let now = t_map.elapsed().as_nanos() as u64;
@@ -210,14 +233,18 @@ pub fn run_eager<I, F, K2, V2, T>(
                         flushes += 1;
                         flush_entries += entries;
                         flush_sizes.push(entries);
-                        shard.absorb(batch.order, batch.pairs);
+                        // Stripe selection reuses the hash lane computed
+                        // at drain time; the emptied buffers recycle.
+                        shard.absorb_prehashed(batch.order, &mut batch.pairs, &batch.hashes);
+                        scratch.recycle(batch);
                     }
                 };
                 mapper(k, v, &mut emit);
             }
             let peak = cache.peak_bytes();
-            let fin = cache.finish();
-            shard.absorb(fin.order, fin.pairs);
+            let mut fin = cache.finish(&scratch);
+            shard.absorb_prehashed(fin.order, &mut fin.pairs, &fin.hashes);
+            scratch.recycle(fin);
             if trace_on {
                 let mut e = TraceEvent::new(
                     task.node,
@@ -250,8 +277,13 @@ pub fn run_eager<I, F, K2, V2, T>(
                 a.hist.record_node(task.node, "cache.flush_entries", entries);
             }
         };
-        pool_stats = pool::execute(threads, threads * 2, feed_blocks(input, nodes, workers), work);
-    }
+        pool::execute_with(
+            PoolOptions { threads, queue_cap: threads * 2, pin_threads: cfg.pin_threads },
+            feed_blocks(input, nodes, workers),
+            |_| EagerWorkerState::new(),
+            work,
+        )
+    };
     let map_wall_ns = t_map.elapsed().as_nanos() as u64;
     let MapAcc {
         mut per_node_secs,
@@ -281,8 +313,22 @@ pub fn run_eager<I, F, K2, V2, T>(
         counters.max_node(node, "cache.peak_bytes", per_node_cache_peak[node]);
     }
     counters.max("pool.queue_peak", pool_stats.queue_peak);
+    counters.add("pool.pinned_threads", pool_stats.pinned_threads);
+    counters.add("shard.stripes", stripes as u64);
     for (t, blocks) in pool_stats.per_thread_blocks.iter().enumerate() {
         counters.add(&format!("pool.thread{t}.blocks"), *blocks);
+    }
+    // Thread-local scratch-pool traffic (zero under `AllocMode::System`):
+    // the mechanism the blaze-vs-blaze-TCM ablation measures.
+    let (mut pool_hits, mut pool_misses, mut pool_bytes) = (0u64, 0u64, 0u64);
+    for st in &worker_states {
+        let (h, m) = st.pairs.stats();
+        pool_hits += h;
+        pool_misses += m;
+        let (h, m) = st.hashes.stats();
+        pool_hits += h;
+        pool_misses += m;
+        pool_bytes += (st.pairs.pooled_bytes() + st.hashes.pooled_bytes()) as u64;
     }
     // Live worker caches are bounded by the pool width (see MapAcc docs).
     let live_cache_bytes = max_cache_peak_bytes * threads.min(nodes * workers) as u64;
@@ -291,9 +337,12 @@ pub fn run_eager<I, F, K2, V2, T>(
     let t_merge = Instant::now();
     let mut node_maps: Vec<FxHashMap<K2, V2>> = Vec::with_capacity(nodes);
     let mut local_bytes = 0u64;
+    let (mut total_locks, mut total_contended) = (0u64, 0u64);
     for (node, sm) in shard_maps.into_iter().enumerate() {
         let t0 = Instant::now();
         let (locks, contended) = sm.contention();
+        total_locks += locks;
+        total_contended += contended;
         counters.add_node(node, "shard.locks", locks);
         counters.add_node(node, "shard.contended", contended);
         let local = sm.into_canonical(red);
@@ -312,8 +361,18 @@ pub fn run_eager<I, F, K2, V2, T>(
     }
     let merge_wall_ns = t_merge.elapsed().as_nanos() as u64;
     vt.compute_phase("map+local-reduce", &per_node_secs, workers);
+    // Feed this run's contention back into the next run's stripe sizing.
+    cluster.note_stripe_feedback(StripeFeedback {
+        stripes,
+        locks: total_locks,
+        contended: total_contended,
+    });
 
     // ---- Shared shuffle pipeline, bytes moved through real channels -----
+    // The cluster's byte pool backs serialization + transport scratch;
+    // delta its cumulative stats around the phase to attribute this run's
+    // traffic.
+    let (cp_hits0, cp_misses0) = cluster.pool().stats();
     let out = eager::shuffle_and_absorb(
         &cluster,
         node_maps,
@@ -323,6 +382,13 @@ pub fn run_eager<I, F, K2, V2, T>(
         &mut trace,
         &mut hist,
         Transport::Channels,
+    );
+    let (cp_hits1, cp_misses1) = cluster.pool().stats();
+    counters.add("alloc.pool.hits", pool_hits + (cp_hits1 - cp_hits0));
+    counters.add("alloc.pool.misses", pool_misses + (cp_misses1 - cp_misses0));
+    counters.max(
+        "alloc.pool.pooled_bytes",
+        pool_bytes + cluster.pool().pooled_bytes() as u64,
     );
 
     // ---- Record ----------------------------------------------------------
@@ -446,8 +512,7 @@ pub fn run_smallkey<I, F, K2, V2, T>(
     });
     let trace_on = cfg.trace;
     let worker_events: Mutex<Vec<TraceEvent>> = Mutex::new(Vec::new());
-    let pool_stats;
-    {
+    let pool_stats = {
         let work = |task: BlockTask<I::K, I::V>| {
             let t0 = Instant::now();
             let block = task.node * workers + task.worker;
@@ -506,8 +571,18 @@ pub fn run_smallkey<I, F, K2, V2, T>(
             st.per_node_emitted[task.node] += emitted;
             st.hist.record_node(task.node, "map.block_items", task.items.len() as u64);
         };
-        pool_stats = pool::execute(threads, threads * 2, feed_blocks(input, nodes, workers), work);
-    }
+        // Dense caches are consumed cross-thread under the node lock, so
+        // they cannot round-trip through a creator thread's pool — the
+        // smallkey path only opts into pinning here; its pooled scratch
+        // lives in the tree-reduce phase (cluster byte pool).
+        let (stats, _) = pool::execute_with(
+            PoolOptions { threads, queue_cap: threads * 2, pin_threads: cfg.pin_threads },
+            feed_blocks(input, nodes, workers),
+            |_| (),
+            |_: &mut (), task| work(task),
+        );
+        stats
+    };
     let map_wall_ns = t_map.elapsed().as_nanos() as u64;
     let DenseStats {
         per_node_secs,
@@ -530,6 +605,7 @@ pub fn run_smallkey<I, F, K2, V2, T>(
         counters.add_node(node, "map.emitted", per_node_emitted[node]);
     }
     counters.max("pool.queue_peak", pool_stats.queue_peak);
+    counters.add("pool.pinned_threads", pool_stats.pinned_threads);
     for (t, blocks) in pool_stats.per_thread_blocks.iter().enumerate() {
         counters.add(&format!("pool.thread{t}.blocks"), *blocks);
     }
@@ -547,6 +623,10 @@ pub fn run_smallkey<I, F, K2, V2, T>(
     vt.compute_phase("map+dense-local-reduce", &per_node_secs, workers);
 
     // ---- Shared binomial tree reduce, frames through real channels ------
+    // Attribute this run's scratch-pool traffic (fastser frames +
+    // transport chunks ride the cluster byte pool) by deltaing its
+    // cumulative stats around the phase.
+    let (cp_hits0, cp_misses0) = cluster.pool().stats();
     let out = smallkey::tree_reduce_into_target(
         &cluster,
         node_partials,
@@ -557,6 +637,10 @@ pub fn run_smallkey<I, F, K2, V2, T>(
         &mut hist,
         Transport::Channels,
     );
+    let (cp_hits1, cp_misses1) = cluster.pool().stats();
+    counters.add("alloc.pool.hits", cp_hits1 - cp_hits0);
+    counters.add("alloc.pool.misses", cp_misses1 - cp_misses0);
+    counters.max("alloc.pool.pooled_bytes", cluster.pool().pooled_bytes() as u64);
 
     // ---- Record ----------------------------------------------------------
     let mut phase_wall_ns = vec![

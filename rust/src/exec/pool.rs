@@ -12,11 +12,23 @@
 //! The queue is bounded (backpressure: the feeder blocks while `cap`
 //! blocks are in flight), so the materialized handoff memory is
 //! `O(threads)` blocks, not `O(nodes × workers)`.
+//!
+//! Observability is deliberately cheap so it does not perturb the path it
+//! measures: queue depth and peak are relaxed atomics maintained inside
+//! push/pop (no extra lock acquisition to read a gauge), and occupancy
+//! snapshots are taken every [`SAMPLE_EVERY`]-th stolen block per thread
+//! rather than on all of them. The canonical JSONL trace is sample-free,
+//! so sampling cadence never touches byte-identity.
 
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Condvar, Mutex};
 use std::time::Instant;
+
+/// Occupancy sampling stride: each worker snapshots the queue on its 1st,
+/// (k+1)-th, (2k+1)-th … stolen block. Deterministic per thread, but the
+/// resulting series still depends on real scheduling — observability only.
+const SAMPLE_EVERY: u64 = 8;
 
 /// Bounded MPMC queue of pending blocks.
 pub struct BlockQueue<T> {
@@ -24,37 +36,43 @@ pub struct BlockQueue<T> {
     not_full: Condvar,
     not_empty: Condvar,
     cap: usize,
+    /// Blocks queued and not yet stolen — relaxed mirror of
+    /// `state.items.len()`, so gauges never take the queue lock.
+    depth: AtomicUsize,
+    /// High-water queue depth observed after any push.
+    peak: AtomicUsize,
 }
 
 struct State<T> {
     items: VecDeque<T>,
     closed: bool,
-    /// High-water queue depth observed after any push.
-    peak: usize,
 }
 
 impl<T> BlockQueue<T> {
     /// Queue admitting at most `cap` (≥ 1) in-flight blocks.
     pub fn bounded(cap: usize) -> Self {
         Self {
-            state: Mutex::new(State { items: VecDeque::new(), closed: false, peak: 0 }),
+            state: Mutex::new(State { items: VecDeque::new(), closed: false }),
             not_full: Condvar::new(),
             not_empty: Condvar::new(),
             cap: cap.max(1),
+            depth: AtomicUsize::new(0),
+            peak: AtomicUsize::new(0),
         }
     }
 
     /// High-water queue depth (the `pool.queue_peak` run counter).
     /// Scheduling-dependent: observability only.
     pub fn peak(&self) -> usize {
-        self.state.lock().expect("block queue poisoned").peak
+        self.peak.load(Ordering::Relaxed)
     }
 
     /// Current queue depth (blocks queued, not yet stolen). A live gauge
     /// for the occupancy sampler — scheduling-dependent, observability
-    /// only, like [`BlockQueue::peak`].
+    /// only, like [`BlockQueue::peak`]. Lock-free: reading it cannot
+    /// stall a worker mid-steal.
     pub fn depth(&self) -> usize {
-        self.state.lock().expect("block queue poisoned").items.len()
+        self.depth.load(Ordering::Relaxed)
     }
 
     /// Enqueue a block, blocking while the queue is full. Returns `false`
@@ -69,7 +87,9 @@ impl<T> BlockQueue<T> {
             return false;
         }
         st.items.push_back(item);
-        st.peak = st.peak.max(st.items.len());
+        let depth = st.items.len();
+        self.depth.store(depth, Ordering::Relaxed);
+        self.peak.fetch_max(depth, Ordering::Relaxed);
         drop(st);
         self.not_empty.notify_one();
         true
@@ -81,6 +101,7 @@ impl<T> BlockQueue<T> {
         let mut st = self.state.lock().expect("block queue poisoned");
         loop {
             if let Some(item) = st.items.pop_front() {
+                self.depth.store(st.items.len(), Ordering::Relaxed);
                 drop(st);
                 self.not_full.notify_one();
                 return Some(item);
@@ -137,47 +158,109 @@ pub struct PoolStats {
     pub queue_peak: u64,
     /// Blocks each OS thread ended up executing (work-stealing balance).
     pub per_thread_blocks: Vec<u64>,
-    /// Occupancy time-series: one snapshot per stolen block, in
-    /// steal-completion order.
+    /// Occupancy time-series: one snapshot per [`SAMPLE_EVERY`] stolen
+    /// blocks per thread, in steal-completion order.
     pub samples: Vec<PoolSample>,
+    /// Worker threads successfully pinned to a core (0 unless
+    /// [`PoolOptions::pin_threads`] was set and the platform supports it).
+    pub pinned_threads: u64,
+}
+
+/// Knobs for [`execute_with`].
+#[derive(Debug, Clone, Copy)]
+pub struct PoolOptions {
+    /// Worker thread count (clamped to ≥ 1).
+    pub threads: usize,
+    /// Bounded queue capacity (clamped to ≥ 1).
+    pub queue_cap: usize,
+    /// Pin worker `i` to core `i % cores`. Opt-in; a no-op (with
+    /// `pinned_threads == 0`) on platforms without `sched_setaffinity`.
+    /// Pinning is pure placement: block→thread assignment is still
+    /// work-stealing, so results stay byte-identical either way.
+    pub pin_threads: bool,
+}
+
+/// Pin the calling thread to `core` (mod the visible CPU count) via
+/// `sched_setaffinity`. Returns whether the syscall succeeded.
+#[cfg(target_os = "linux")]
+fn pin_current_thread(core: usize) -> bool {
+    // 16 × u64 = room for 1024 CPUs, same layout as libc's cpu_set_t.
+    let mut mask = [0u64; 16];
+    let cpus = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let cpu = core % cpus.min(16 * 64).max(1);
+    mask[cpu / 64] |= 1u64 << (cpu % 64);
+    extern "C" {
+        fn sched_setaffinity(pid: i32, cpusetsize: usize, mask: *const u64) -> i32;
+    }
+    // pid 0 = the calling thread. std already links libc; no crate needed.
+    unsafe { sched_setaffinity(0, std::mem::size_of_val(&mask), mask.as_ptr()) == 0 }
+}
+
+#[cfg(not(target_os = "linux"))]
+fn pin_current_thread(_core: usize) -> bool {
+    false
 }
 
 /// Run every block yielded by `produce` (called on *this* thread until it
-/// returns `None`) through `work` on `threads` scoped worker threads.
-/// Returns the pool's observability counters.
+/// returns `None`) through `work` on `opts.threads` scoped worker threads,
+/// giving each worker a private state built by `init(thread_index)` —
+/// the hook the engines use for thread-local scratch [`crate::util::alloc::BufferPool`]s.
+/// Returns the pool's observability counters plus every worker's final
+/// state (in thread-index order) so per-thread pool stats can be folded
+/// into run counters.
 ///
 /// Worker panics propagate to the caller with their original payload, so
 /// mapper contract violations (e.g. a dense key outside the target range)
 /// fail the same way they do on the simulated engines.
-pub fn execute<T, P, W>(threads: usize, queue_cap: usize, mut produce: P, work: W) -> PoolStats
+pub fn execute_with<T, S, P, Init, W>(
+    opts: PoolOptions,
+    mut produce: P,
+    init: Init,
+    work: W,
+) -> (PoolStats, Vec<S>)
 where
     T: Send,
+    S: Send,
     P: FnMut() -> Option<T>,
-    W: Fn(T) + Sync,
+    Init: Fn(usize) -> S + Sync,
+    W: Fn(&mut S, T) + Sync,
 {
-    let threads = threads.max(1);
-    let queue = BlockQueue::bounded(queue_cap);
+    let threads = opts.threads.max(1);
+    let queue = BlockQueue::bounded(opts.queue_cap);
     let start = Instant::now();
     let busy = AtomicU64::new(0);
+    let pinned = AtomicU64::new(0);
     let samples = Mutex::new(Vec::new());
-    let mut stats = std::thread::scope(|s| {
+    let (mut stats, states) = std::thread::scope(|s| {
+        let queue = &queue;
+        let busy = &busy;
+        let pinned = &pinned;
+        let samples = &samples;
+        let init = &init;
+        let work = &work;
         let handles: Vec<_> = (0..threads)
-            .map(|_| {
-                s.spawn(|| {
-                    let _guard = CloseOnDrop { queue: &queue };
+            .map(|i| {
+                s.spawn(move || {
+                    let _guard = CloseOnDrop { queue };
+                    if opts.pin_threads && pin_current_thread(i) {
+                        pinned.fetch_add(1, Ordering::Relaxed);
+                    }
+                    let mut state = init(i);
                     let mut blocks = 0u64;
                     while let Some(block) = queue.pop() {
                         let now_busy = busy.fetch_add(1, Ordering::Relaxed) + 1;
-                        samples.lock().expect("pool samples poisoned").push(PoolSample {
-                            wall_ns: start.elapsed().as_nanos() as u64,
-                            queue_depth: queue.depth() as u64,
-                            busy_threads: now_busy,
-                        });
-                        work(block);
+                        if blocks % SAMPLE_EVERY == 0 {
+                            samples.lock().expect("pool samples poisoned").push(PoolSample {
+                                wall_ns: start.elapsed().as_nanos() as u64,
+                                queue_depth: queue.depth() as u64,
+                                busy_threads: now_busy,
+                            });
+                        }
+                        work(&mut state, block);
                         busy.fetch_sub(1, Ordering::Relaxed);
                         blocks += 1;
                     }
-                    blocks
+                    (blocks, state)
                 })
             })
             .collect();
@@ -185,7 +268,7 @@ where
             // Guard the feeder as well: if `produce` panics, the queue
             // still closes so workers drain out and the scope can join
             // them before propagating the panic.
-            let _feed_guard = CloseOnDrop { queue: &queue };
+            let _feed_guard = CloseOnDrop { queue };
             while let Some(block) = produce() {
                 if !queue.push(block) {
                     break; // a worker died; fall through to the joins below
@@ -193,21 +276,44 @@ where
             }
         }
         let mut per_thread_blocks = Vec::with_capacity(handles.len());
+        let mut states = Vec::with_capacity(handles.len());
         for h in handles {
             match h.join() {
-                Ok(blocks) => per_thread_blocks.push(blocks),
+                Ok((blocks, state)) => {
+                    per_thread_blocks.push(blocks);
+                    states.push(state);
+                }
                 Err(payload) => std::panic::resume_unwind(payload),
             }
         }
-        PoolStats {
+        let stats = PoolStats {
             queue_peak: queue.peak() as u64,
             per_thread_blocks,
             samples: Vec::new(),
-        }
+            pinned_threads: pinned.load(Ordering::Relaxed),
+        };
+        (stats, states)
     });
     // Scoped borrows end with the scope; only then can the sample vec
     // move out of its mutex.
     stats.samples = samples.into_inner().expect("pool samples poisoned");
+    (stats, states)
+}
+
+/// Stateless convenience wrapper over [`execute_with`]: no per-thread
+/// state, no pinning.
+pub fn execute<T, P, W>(threads: usize, queue_cap: usize, produce: P, work: W) -> PoolStats
+where
+    T: Send,
+    P: FnMut() -> Option<T>,
+    W: Fn(T) + Sync,
+{
+    let (stats, _) = execute_with(
+        PoolOptions { threads, queue_cap, pin_threads: false },
+        produce,
+        |_| (),
+        |_: &mut (), block| work(block),
+    );
     stats
 }
 
@@ -239,10 +345,17 @@ mod tests {
         assert_eq!(stats.per_thread_blocks.len(), 4);
         assert_eq!(stats.per_thread_blocks.iter().sum::<u64>(), 1000);
         assert!(stats.queue_peak >= 1 && stats.queue_peak <= 2);
-        // One occupancy snapshot per stolen block, values within bounds.
-        assert_eq!(stats.samples.len(), 1000);
+        // One occupancy snapshot per SAMPLE_EVERY stolen blocks per
+        // thread: Σ ceil(b_t / 8) over 4 threads with Σ b_t = 1000 lies
+        // in [125, 128].
+        assert!(
+            stats.samples.len() >= 125 && stats.samples.len() <= 128,
+            "got {} samples",
+            stats.samples.len()
+        );
         assert!(stats.samples.iter().all(|s| s.queue_depth <= 2));
         assert!(stats.samples.iter().all(|s| s.busy_threads >= 1 && s.busy_threads <= 4));
+        assert_eq!(stats.pinned_threads, 0, "pinning is opt-in");
     }
 
     #[test]
@@ -265,6 +378,38 @@ mod tests {
             sum.fetch_add(v, Ordering::Relaxed);
         });
         assert_eq!(sum.load(Ordering::Relaxed), 55);
+    }
+
+    #[test]
+    fn pinned_run_completes_and_counts() {
+        let sum = AtomicU64::new(0);
+        let mut next = 0u64;
+        let (stats, states) = execute_with(
+            PoolOptions { threads: 4, queue_cap: 2, pin_threads: true },
+            || {
+                if next < 200 {
+                    next += 1;
+                    Some(next)
+                } else {
+                    None
+                }
+            },
+            |i| (i, 0u64),
+            |state: &mut (usize, u64), v| {
+                state.1 += v;
+                sum.fetch_add(v, Ordering::Relaxed);
+            },
+        );
+        assert_eq!(sum.load(Ordering::Relaxed), 200 * 201 / 2);
+        // Per-thread states come back in thread-index order and their
+        // private sums add up to the total.
+        assert_eq!(states.len(), 4);
+        for (i, (idx, _)) in states.iter().enumerate() {
+            assert_eq!(*idx, i);
+        }
+        assert_eq!(states.iter().map(|(_, s)| s).sum::<u64>(), 200 * 201 / 2);
+        // Pinning is best-effort: bounded above by the thread count.
+        assert!(stats.pinned_threads <= 4);
     }
 
     #[test]

@@ -18,7 +18,51 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Mutex, MutexGuard, TryLockError};
 
 use crate::mapreduce::reducers::Reducer;
-use crate::util::hash::{fxhash, FxHashMap};
+use crate::util::hash::{fxhash, hash_batch_by, FxHashMap};
+
+/// Upper bound on stripe count — past this, stripe headers outgrow any
+/// realistic contention win.
+pub const MAX_STRIPES: usize = 256;
+
+/// One run's stripe-lock observations, fed back into the next run's
+/// [`stripe_count`] decision. Scheduling-dependent (observability-grade
+/// numbers), which is fine: stripe count only changes *where* pairs park
+/// between flush and drain, never the canonical fold order, so any
+/// feedback value yields byte-identical results.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StripeFeedback {
+    /// Stripe count the observed run used.
+    pub stripes: usize,
+    /// Total `shard.locks` across nodes.
+    pub locks: u64,
+    /// Total `shard.contended` across nodes.
+    pub contended: u64,
+}
+
+/// Stripe count for a run: per-core sizing from the thread count, nudged
+/// by the previous run's observed contention when available.
+///
+/// Cold start is `threads × 4` (rounded up to a power of two): enough
+/// slack that two workers flushing hash-adjacent keys usually land on
+/// different locks. With feedback, ≥ 2% contended acquisitions doubles
+/// the count, zero contention sheds stripes back toward the
+/// `threads`-sized floor, and anything in between keeps the observed
+/// count. Always a power of two in `[threads.next_power_of_two(),
+/// MAX_STRIPES]`.
+pub fn stripe_count(threads: usize, feedback: Option<StripeFeedback>) -> usize {
+    let threads = threads.max(1);
+    let base = (threads * 4).next_power_of_two().min(MAX_STRIPES);
+    let Some(fb) = feedback else { return base };
+    let floor = threads.next_power_of_two().min(MAX_STRIPES);
+    let stripes = fb.stripes.next_power_of_two().clamp(floor, MAX_STRIPES);
+    if fb.locks > 0 && fb.contended * 50 >= fb.locks {
+        (stripes * 2).min(MAX_STRIPES)
+    } else if fb.contended == 0 && stripes > floor {
+        stripes / 2
+    } else {
+        stripes
+    }
+}
 
 /// Canonical order key for one locally-reduced partial.
 ///
@@ -81,19 +125,44 @@ impl<K: Hash + Eq, V> ShardedMap<K, V> {
     /// so the outcome is independent of flush interleaving. (The unstable
     /// sort cannot reorder anything observable: a key appears at most
     /// once per batch and every pair carries the same `order` tag.)
+    ///
+    /// Convenience form: hashes the keys itself (batched). The threaded
+    /// engines call [`ShardedMap::absorb_prehashed`] instead, reusing the
+    /// hash lane computed once per flush batch at cache-drain time.
     pub fn absorb(&self, order: u64, mut pairs: Vec<(K, V)>) {
-        // Fast path for the flush-storm shape (tiny caches drain one pair
-        // per emit): one hash, one lock, no scratch allocation.
         if pairs.len() <= 1 {
+            // Tiny-batch fast path: one hash, one lock, no scratch.
             let Some((k, v)) = pairs.pop() else { return };
             let s = (fxhash(&k) as usize) & self.mask;
             let mut stripe = self.lock_stripe(s);
             stripe.entry(k).or_default().push((order, v));
             return;
         }
+        let mut hashes = Vec::new();
+        hash_batch_by(&pairs, |p| &p.0, &mut hashes);
+        self.absorb_prehashed(order, &mut pairs, &hashes);
+    }
+
+    /// [`ShardedMap::absorb`] with the key hashes already computed —
+    /// `hashes[i]` must equal `fxhash(&pairs[i].0)`. Drains `pairs`
+    /// (leaving its capacity intact so the caller can recycle the buffer
+    /// through its scratch pool). Stripe selection is `hash & mask`,
+    /// identical to the scalar path.
+    pub fn absorb_prehashed(&self, order: u64, pairs: &mut Vec<(K, V)>, hashes: &[u64]) {
+        debug_assert_eq!(pairs.len(), hashes.len());
+        // Fast path for the flush-storm shape (tiny caches drain one pair
+        // per emit): one lock, no scratch allocation.
+        if pairs.len() <= 1 {
+            let Some((k, v)) = pairs.pop() else { return };
+            let s = (hashes[0] as usize) & self.mask;
+            let mut stripe = self.lock_stripe(s);
+            stripe.entry(k).or_default().push((order, v));
+            return;
+        }
         let mut tagged: Vec<(usize, K, V)> = pairs
-            .into_iter()
-            .map(|(k, v)| ((fxhash(&k) as usize) & self.mask, k, v))
+            .drain(..)
+            .zip(hashes)
+            .map(|((k, v), h)| ((*h as usize) & self.mask, k, v))
             .collect();
         tagged.sort_unstable_by_key(|t| t.0);
         let mut it = tagged.into_iter().peekable();
@@ -257,5 +326,62 @@ mod tests {
         assert!(map.is_empty());
         map.absorb(partial_order(true, 0, 0), vec![(1, 1), (2, 2)]);
         assert_eq!(map.len(), 2);
+    }
+
+    #[test]
+    fn prehashed_matches_self_hashing_absorb() {
+        let red = Reducer::sum();
+        let pairs: Vec<(u64, f64)> =
+            (0..23).map(|k| (k % 7, 0.1 * k as f64 + 1e-17)).collect();
+        // Make per-batch keys unique (a key appears at most once per
+        // batch) by splitting into 7-key batches.
+        let batches: Vec<Vec<(u64, f64)>> =
+            pairs.chunks(7).map(|c| c.to_vec()).collect();
+
+        let plain: ShardedMap<u64, f64> = ShardedMap::new(4);
+        for (i, b) in batches.iter().enumerate() {
+            plain.absorb(partial_order(false, 0, i as u32), b.clone());
+        }
+        let pre: ShardedMap<u64, f64> = ShardedMap::new(4);
+        for (i, b) in batches.iter().enumerate() {
+            let mut buf = b.clone();
+            let mut hashes = Vec::new();
+            crate::util::hash::hash_batch_by(&buf, |p| &p.0, &mut hashes);
+            pre.absorb_prehashed(partial_order(false, 0, i as u32), &mut buf, &hashes);
+            assert!(buf.is_empty(), "prehashed absorb drains the pair buffer");
+            assert!(buf.capacity() > 0, "capacity survives for recycling");
+        }
+        let a = plain.into_canonical(&red);
+        let b = pre.into_canonical(&red);
+        assert_eq!(a.len(), b.len());
+        for (k, v) in &a {
+            assert_eq!(v.to_bits(), b[k].to_bits(), "key {k}");
+        }
+    }
+
+    #[test]
+    fn stripe_count_cold_start_scales_with_threads() {
+        assert_eq!(stripe_count(1, None), 4);
+        assert_eq!(stripe_count(2, None), 8);
+        assert_eq!(stripe_count(4, None), 16);
+        assert_eq!(stripe_count(8, None), 32);
+        assert_eq!(stripe_count(128, None), MAX_STRIPES);
+        assert_eq!(stripe_count(0, None), 4, "clamped to one thread");
+    }
+
+    #[test]
+    fn stripe_count_feedback_grows_and_sheds() {
+        let fb = |stripes, locks, contended| StripeFeedback { stripes, locks, contended };
+        // ≥2% contention doubles…
+        assert_eq!(stripe_count(4, Some(fb(16, 1000, 20))), 32);
+        // …but never past the cap…
+        assert_eq!(stripe_count(4, Some(fb(MAX_STRIPES, 1000, 500))), MAX_STRIPES);
+        // …zero contention sheds toward the per-thread floor…
+        assert_eq!(stripe_count(4, Some(fb(32, 1000, 0))), 16);
+        assert_eq!(stripe_count(4, Some(fb(4, 1000, 0))), 4, "floor holds");
+        // …mild contention keeps the observed count…
+        assert_eq!(stripe_count(4, Some(fb(16, 1000, 5))), 16);
+        // …and a zero-lock run (empty input) counts as uncontended.
+        assert_eq!(stripe_count(4, Some(fb(16, 0, 0))), 8);
     }
 }

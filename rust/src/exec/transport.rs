@@ -46,6 +46,7 @@ use crate::coordinator::backpressure::WindowAccount;
 use crate::coordinator::shuffle::{ShufflePayloads, CHUNK_BYTES};
 use crate::net::sim::FlowMatrix;
 use crate::trace::histogram::Histogram;
+use crate::util::alloc::{AllocMode, BufferPool, Scratch};
 
 /// Per-(src → dst) frame tallies, for `FrameSent`/`TransportStall`
 /// trace events. Cross-node pairs with traffic only, src-major order.
@@ -156,7 +157,28 @@ struct Frame {
 /// Execute a shuffle over real bounded channels. Drop-in for
 /// [`crate::coordinator::shuffle::execute`]: identical `delivered` /
 /// `flows` / `peak_in_flight_bytes` / `stalls`, plus real measurements.
+///
+/// Convenience form with system-allocated chunk buffers; the engines
+/// call [`execute_pooled`] with the cluster's scratch so chunk copies
+/// recycle.
 pub fn execute(payloads: ShufflePayloads, window_bytes: u64) -> TransportResult {
+    let pool = BufferPool::new();
+    let scratch = Scratch::new(AllocMode::System, &pool);
+    execute_pooled(payloads, window_bytes, &scratch)
+}
+
+/// [`execute`] with chunk-copy buffers drawn from `scratch`. Every
+/// scratch operation happens on the *calling* thread (the deterministic
+/// mirror loop runs before the sender/receiver threads spawn), so a
+/// single-threaded [`BufferPool`] behind the scratch is safe; the chunk
+/// buffers themselves travel through the channels and come back to the
+/// caller inside `delivered`, where the absorb loops return them to the
+/// same scratch.
+pub fn execute_pooled(
+    payloads: ShufflePayloads,
+    window_bytes: u64,
+    scratch: &Scratch<'_, u8>,
+) -> TransportResult {
     let n = payloads.len();
     let start = Instant::now();
 
@@ -201,11 +223,15 @@ pub fn execute(payloads: ShufflePayloads, window_bytes: u64) -> TransportResult 
                     window.push(chunk.len() as u64);
                     in_flight_samples.push((src, window.in_flight()));
                     flows.record(src, dst, chunk.len() as u64);
-                    sends[src].push(Frame { src, dst, seq, payload: chunk.to_vec() });
+                    let mut copy = scratch.get(chunk.len());
+                    copy.extend_from_slice(chunk);
+                    sends[src].push(Frame { src, dst, seq, payload: copy });
                     seq += 1;
                     pair_frames += 1;
                     window.drain(chunk.len() as u64);
                 }
+                // The chunked original served only as the copy source.
+                scratch.put(payload);
             }
             frames_total += pair_frames;
             bytes_total += pair_bytes;

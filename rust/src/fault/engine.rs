@@ -408,7 +408,16 @@ where
                             },
                         );
                     };
-                    let ps = pool::execute(tn, tn * 2, produce, work);
+                    let (ps, _) = pool::execute_with(
+                        pool::PoolOptions {
+                            threads: tn,
+                            queue_cap: tn * 2,
+                            pin_threads: cfg.pin_threads,
+                        },
+                        produce,
+                        |_| (),
+                        |_: &mut (), block| work(block),
+                    );
                     pool_queue_peak = pool_queue_peak.max(ps.queue_peak);
                     if pool_thread_blocks.len() < ps.per_thread_blocks.len() {
                         pool_thread_blocks.resize(ps.per_thread_blocks.len(), 0);

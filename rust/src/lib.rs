@@ -10,8 +10,10 @@
 //!   varint codec **without** field tags / wire types, plus the tagged
 //!   baseline codec used by the conventional engine.
 //! * [`util`] — deterministic splittable RNG, bounded top-k selection,
-//!   pool-allocator toggle (the "Blaze TCM" analogue), cognitive-load
-//!   accounting.
+//!   the batched `fxhash` lanes feeding flush routing and stripe
+//!   selection ([`util::hash::hash_batch`] — bit-identical to the scalar
+//!   hash), the generic pooled-buffer allocator toggle (the "Blaze TCM"
+//!   analogue, [`util::alloc::BufferPool`]), cognitive-load accounting.
 //! * [`net`] — the simulated cluster interconnect: per-link bandwidth and
 //!   latency, real byte accounting, virtual-time makespan model.
 //! * [`containers`] — §2.1 distributed containers: [`containers::DistRange`],
@@ -34,8 +36,14 @@
 //!   counters with real shuffle wall clock in `phase_wall_ns` — while a
 //!   deterministic accounting mirror keeps flows and stall counts
 //!   byte-identical to the simulated flow model. Fault-tolerant jobs
-//!   replay killed blocks on the same live pool. Byte-identical results
-//!   at any thread count (DESIGN.md §Execution backends, §Transport).
+//!   replay killed blocks on the same live pool. The node-local hot
+//!   path batches its hashing, recycles flush/frame/chunk buffers
+//!   through per-worker and cluster pools under `AllocMode::Pool`
+//!   (`alloc.pool.*` counters), sizes shard stripes from the thread
+//!   count plus observed contention, and optionally pins pool workers
+//!   to cores (`--pin-threads`). Byte-identical results at any thread
+//!   count (DESIGN.md §Execution backends, §Transport, §Node-local
+//!   hot path).
 //! * [`coordinator`] — cluster topology/config, block scheduler, shuffle
 //!   orchestration with backpressure, shard rebalancing, metrics.
 //! * [`trace`] — structured observability: every engine records typed

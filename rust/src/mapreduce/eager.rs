@@ -334,7 +334,9 @@ where
     let (sres, transport_totals) = match transport {
         Transport::FlowModel => (shuffle::execute(payloads, window), None),
         Transport::Channels => {
-            let tres = crate::exec::transport::execute(payloads, window);
+            // Chunk-copy buffers ride the same scratch as the payloads
+            // they split; the absorb loop below recycles both.
+            let tres = crate::exec::transport::execute_pooled(payloads, window, &scratch);
             // Occupancy gauge + per-frame wait: Chrome-only / wall-only
             // observability from the real transport.
             for &(src, in_flight) in &tres.in_flight_samples {
@@ -391,6 +393,7 @@ where
         let mut by_src: FxHashMap<usize, Vec<u8>> = FxHashMap::default();
         for (src, chunk) in received {
             by_src.entry(src).or_default().extend_from_slice(&chunk);
+            scratch.put(chunk); // recycle under the pool allocator
         }
         for (src, buf) in by_src {
             absorb_buffer_peak = absorb_buffer_peak.max(buf.len() as u64);

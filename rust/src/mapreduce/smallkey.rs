@@ -18,7 +18,8 @@ use crate::coordinator::shuffle::{ShufflePayloads, Transport};
 use crate::exec::transport::TransportTotals;
 use crate::net::sim::FlowMatrix;
 use crate::net::vtime::VirtualTime;
-use crate::ser::fastser::{decode_pairs, encode_pairs, FastSer};
+use crate::ser::fastser::{decode_pairs, encode_pairs_into, FastSer};
+use crate::util::alloc::Scratch;
 use crate::trace::histogram::Histograms;
 use crate::trace::{Counters, TraceBuf, TraceEvent, TraceEventKind};
 
@@ -195,6 +196,9 @@ where
     let t_start = Instant::now();
     let cfg = cluster.config();
     let nodes = cfg.nodes;
+    // Frame + transport-chunk scratch honours the allocator toggle
+    // ("Blaze TCM"), like the eager shuffle.
+    let scratch = Scratch::new(cfg.alloc, cluster.pool());
     let mut shuffle_bytes = 0u64;
     let mut round_flow_peak = 0u64;
     let mut transport_totals = match transport {
@@ -224,7 +228,7 @@ where
                 .enumerate()
                 .filter_map(|(i, v)| v.map(|v| (i as u32, v)))
                 .collect();
-            let buf = encode_pairs(&pairs);
+            let buf = encode_pairs_into(&pairs, scratch.get(pairs.len() * 4));
             flows.record(src, dst, buf.len() as u64);
             shuffle_bytes += buf.len() as u64;
             round_flow_peak = round_flow_peak.max(buf.len() as u64);
@@ -254,7 +258,11 @@ where
                 for (src, dst, buf) in bufs {
                     matrix[src][dst] = buf;
                 }
-                let tres = crate::exec::transport::execute(matrix, cfg.transport_window_bytes);
+                let tres = crate::exec::transport::execute_pooled(
+                    matrix,
+                    cfg.transport_window_bytes,
+                    &scratch,
+                );
                 for &(src, in_flight) in &tres.in_flight_samples {
                     trace.push_sample(
                         src,
@@ -311,6 +319,7 @@ where
                                 buf = chunk;
                             } else {
                                 buf.extend_from_slice(&chunk);
+                                scratch.put(chunk); // recycle the copied tail
                             }
                         }
                         (src, dst, buf)
@@ -322,6 +331,7 @@ where
         for (src, dst, buf) in moved {
             let t0 = Instant::now();
             let decoded = decode_pairs::<u32, V2>(&buf).expect("tree-reduce payload");
+            scratch.put(buf); // recycle under the pool allocator
             trace.push(
                 TraceEvent::new(
                     dst,

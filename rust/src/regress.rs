@@ -35,6 +35,9 @@ const NONDETERMINISTIC_MARKERS: &[&str] = &[
     "queue_peak",
     "contended",
     "hist.wall.",
+    // Stripe count is sized from the thread count and the previous run's
+    // observed contention, so it varies across backends and hosts.
+    "shard.stripes",
 ];
 
 /// Is `field` exact-gated (schedule-invariant) rather than
@@ -700,6 +703,13 @@ mod tests {
         assert!(!is_deterministic_field("hist.wall.transport.frame_wait_ns.p50"));
         assert!(!is_deterministic_field("pool.queue_peak"));
         assert!(!is_deterministic_field("node0.shard.contended"));
+        // The hot-path additions: pool allocator stats and pin counts ride
+        // the "pool." marker; stripe sizing is feedback-driven.
+        assert!(!is_deterministic_field("alloc.pool.hits"));
+        assert!(!is_deterministic_field("alloc.pool.pooled_bytes"));
+        assert!(!is_deterministic_field("pool.pinned_threads"));
+        assert!(!is_deterministic_field("shard.stripes"));
+        assert!(is_deterministic_field("shard.absorbed_pairs"));
     }
 
     #[test]

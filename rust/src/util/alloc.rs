@@ -7,8 +7,14 @@
 //! worker-local slab pool for the engines' scratch buffers: `AllocMode::Pool`
 //! recycles buffers through a size-classed free list, `AllocMode::System`
 //! hits the global allocator every time. The Fig-4..9 benches run both.
+//!
+//! The pool is generic over the element type so the threaded engines can
+//! recycle typed flush-batch buffers (`Vec<(K, V)>`, `Vec<u64>` hash lanes)
+//! with the same mechanism as the byte scratch used by serialization and
+//! transport. Size classes are measured in *elements*; [`BufferPool::pooled_bytes`]
+//! converts to bytes for the `alloc.pool.pooled_bytes` counter.
 
-use std::cell::RefCell;
+use std::cell::{Cell, RefCell};
 
 /// Allocation strategy for engine scratch buffers.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -29,23 +35,37 @@ impl std::fmt::Display for AllocMode {
     }
 }
 
-/// Size classes: powers of two from 64 B to 1 MiB.
-const MIN_CLASS_SHIFT: u32 = 6; // 64 B
-const MAX_CLASS_SHIFT: u32 = 20; // 1 MiB
+/// Size classes: powers of two from 64 to 1 Mi elements.
+const MIN_CLASS_SHIFT: u32 = 6; // 64
+const MAX_CLASS_SHIFT: u32 = 20; // 1 Mi
 const N_CLASSES: usize = (MAX_CLASS_SHIFT - MIN_CLASS_SHIFT + 1) as usize;
+
+/// Max buffers parked per size class; beyond this, returns are dropped.
+const CLASS_DEPTH: usize = 64;
 
 /// Worker-local buffer pool (thread-caching malloc analogue).
 ///
-/// Not a global allocator: the engines route their `Vec<u8>` scratch through
+/// Not a global allocator: the engines route their scratch `Vec`s through
 /// this explicitly so both modes are measurable under identical workloads.
-#[derive(Default)]
-pub struct BufferPool {
-    classes: RefCell<[Vec<Vec<u8>>; N_CLASSES]>,
-    hits: RefCell<u64>,
-    misses: RefCell<u64>,
+/// Single-threaded by design (`RefCell`); each pool worker owns its own
+/// instance, mirroring TCMalloc's thread caches.
+pub struct BufferPool<T = u8> {
+    classes: RefCell<[Vec<Vec<T>>; N_CLASSES]>,
+    hits: Cell<u64>,
+    misses: Cell<u64>,
 }
 
-impl BufferPool {
+impl<T> Default for BufferPool<T> {
+    fn default() -> Self {
+        Self {
+            classes: RefCell::new(std::array::from_fn(|_| Vec::new())),
+            hits: Cell::new(0),
+            misses: Cell::new(0),
+        }
+    }
+}
+
+impl<T> BufferPool<T> {
     /// Empty pool.
     pub fn new() -> Self {
         Self::default()
@@ -57,44 +77,56 @@ impl BufferPool {
         (shift.clamp(MIN_CLASS_SHIFT, MAX_CLASS_SHIFT) - MIN_CLASS_SHIFT) as usize
     }
 
-    /// Get a cleared buffer with at least `cap` capacity.
-    pub fn get(&self, cap: usize) -> Vec<u8> {
+    /// Get a cleared buffer with at least `cap` capacity (in elements).
+    pub fn get(&self, cap: usize) -> Vec<T> {
         if cap > 1 << MAX_CLASS_SHIFT {
-            *self.misses.borrow_mut() += 1;
+            self.misses.set(self.misses.get() + 1);
             return Vec::with_capacity(cap);
         }
         let class = Self::class_for(cap);
-        if let Some(mut buf) = self.classes.borrow_mut()[class].pop() {
-            buf.clear();
-            *self.hits.borrow_mut() += 1;
+        if let Some(buf) = self.classes.borrow_mut()[class].pop() {
+            self.hits.set(self.hits.get() + 1);
             buf
         } else {
-            *self.misses.borrow_mut() += 1;
+            self.misses.set(self.misses.get() + 1);
             Vec::with_capacity(1 << (class as u32 + MIN_CLASS_SHIFT))
         }
     }
 
     /// Return a buffer to the pool for reuse.
-    pub fn put(&self, buf: Vec<u8>) {
+    ///
+    /// Contents are dropped immediately (`clear`), and non-power-of-two
+    /// capacities are normalized up to the next class boundary before
+    /// parking. Without the normalization a capacity-100 buffer parks in
+    /// the 64-element class, where a `get(100)` (which rounds *up* to the
+    /// 128 class) can never find it — the buffer strands in the pool and
+    /// every matching request misses.
+    pub fn put(&self, mut buf: Vec<T>) {
+        buf.clear();
         let cap = buf.capacity();
-        if cap == 0 || cap > 1 << MAX_CLASS_SHIFT {
+        if cap < 1 << MIN_CLASS_SHIFT || cap > 1 << MAX_CLASS_SHIFT {
             return; // outside pooled classes; let it drop
+        }
+        if !cap.is_power_of_two() {
+            // len == 0, so this requests exactly next_power_of_two(cap).
+            buf.reserve_exact(cap.next_power_of_two());
+        }
+        let cap = buf.capacity();
+        if cap > 1 << MAX_CLASS_SHIFT {
+            return;
         }
         // A buffer of capacity c serves class floor(log2 c) requests.
         let shift = usize::BITS - 1 - cap.leading_zeros(); // floor log2
-        if shift < MIN_CLASS_SHIFT {
-            return;
-        }
         let class = (shift.min(MAX_CLASS_SHIFT) - MIN_CLASS_SHIFT) as usize;
         let mut classes = self.classes.borrow_mut();
-        if classes[class].len() < 64 {
+        if classes[class].len() < CLASS_DEPTH {
             classes[class].push(buf);
         }
     }
 
     /// (hits, misses) counters — used by the allocator ablation bench.
     pub fn stats(&self) -> (u64, u64) {
-        (*self.hits.borrow(), *self.misses.borrow())
+        (self.hits.get(), self.misses.get())
     }
 
     /// Bytes currently parked in the pool.
@@ -103,24 +135,25 @@ impl BufferPool {
             .borrow()
             .iter()
             .flat_map(|c| c.iter().map(Vec::capacity))
-            .sum()
+            .sum::<usize>()
+            * std::mem::size_of::<T>()
     }
 }
 
 /// Scratch-buffer source honouring an [`AllocMode`].
-pub struct Scratch<'a> {
+pub struct Scratch<'a, T = u8> {
     mode: AllocMode,
-    pool: &'a BufferPool,
+    pool: &'a BufferPool<T>,
 }
 
-impl<'a> Scratch<'a> {
+impl<'a, T> Scratch<'a, T> {
     /// Scratch source over `pool` in `mode`.
-    pub fn new(mode: AllocMode, pool: &'a BufferPool) -> Self {
+    pub fn new(mode: AllocMode, pool: &'a BufferPool<T>) -> Self {
         Self { mode, pool }
     }
 
-    /// Acquire a buffer of at least `cap` bytes.
-    pub fn get(&self, cap: usize) -> Vec<u8> {
+    /// Acquire a buffer of at least `cap` elements.
+    pub fn get(&self, cap: usize) -> Vec<T> {
         match self.mode {
             AllocMode::System => Vec::with_capacity(cap),
             AllocMode::Pool => self.pool.get(cap),
@@ -128,7 +161,7 @@ impl<'a> Scratch<'a> {
     }
 
     /// Release a buffer (no-op under `System`).
-    pub fn put(&self, buf: Vec<u8>) {
+    pub fn put(&self, buf: Vec<T>) {
         if self.mode == AllocMode::Pool {
             self.pool.put(buf);
         }
@@ -141,7 +174,7 @@ mod tests {
 
     #[test]
     fn pool_reuses_buffers() {
-        let pool = BufferPool::new();
+        let pool: BufferPool = BufferPool::new();
         let b = pool.get(100);
         let cap = b.capacity();
         assert!(cap >= 100);
@@ -154,16 +187,16 @@ mod tests {
 
     #[test]
     fn class_rounding() {
-        assert_eq!(BufferPool::class_for(1), 0);
-        assert_eq!(BufferPool::class_for(64), 0);
-        assert_eq!(BufferPool::class_for(65), 1);
-        assert_eq!(BufferPool::class_for(128), 1);
-        assert_eq!(BufferPool::class_for(1 << 20), N_CLASSES - 1);
+        assert_eq!(BufferPool::<u8>::class_for(1), 0);
+        assert_eq!(BufferPool::<u8>::class_for(64), 0);
+        assert_eq!(BufferPool::<u8>::class_for(65), 1);
+        assert_eq!(BufferPool::<u8>::class_for(128), 1);
+        assert_eq!(BufferPool::<u8>::class_for(1 << 20), N_CLASSES - 1);
     }
 
     #[test]
     fn oversized_bypasses_pool() {
-        let pool = BufferPool::new();
+        let pool: BufferPool = BufferPool::new();
         let b = pool.get((1 << 20) + 1);
         assert!(b.capacity() > 1 << 20);
         pool.put(b);
@@ -172,7 +205,7 @@ mod tests {
 
     #[test]
     fn returned_buffer_serves_smaller_class() {
-        let pool = BufferPool::new();
+        let pool: BufferPool = BufferPool::new();
         // Capacity 256 buffer parked in class floor(log2 256)=8 → class 2.
         pool.put(Vec::with_capacity(256));
         let b = pool.get(200); // class_for(200)=ceil → 256 → class 2
@@ -181,8 +214,38 @@ mod tests {
     }
 
     #[test]
+    fn odd_capacity_put_is_findable_again() {
+        // Regression: a capacity-100 buffer used to park in the 64 class
+        // (floor log2), where get(100) — which rounds up to the 128 class —
+        // could never find it. put now normalizes to the next power of two.
+        let pool: BufferPool = BufferPool::new();
+        pool.put(Vec::with_capacity(100));
+        assert!(pool.pooled_bytes() >= 128, "normalized up to a full class");
+        let b = pool.get(100);
+        assert!(b.capacity() >= 100);
+        assert_eq!(pool.stats(), (1, 0), "round-trip must be a pool hit");
+    }
+
+    #[test]
+    fn put_clears_contents() {
+        let pool: BufferPool<u64> = BufferPool::new();
+        let mut b = pool.get(64);
+        b.extend(0..10u64);
+        pool.put(b);
+        let b2 = pool.get(64);
+        assert!(b2.is_empty(), "pooled buffers come back cleared");
+    }
+
+    #[test]
+    fn typed_pool_counts_bytes_not_elements() {
+        let pool: BufferPool<u64> = BufferPool::new();
+        pool.put(Vec::with_capacity(64));
+        assert_eq!(pool.pooled_bytes(), 64 * std::mem::size_of::<u64>());
+    }
+
+    #[test]
     fn system_mode_never_pools() {
-        let pool = BufferPool::new();
+        let pool: BufferPool = BufferPool::new();
         let scratch = Scratch::new(AllocMode::System, &pool);
         let b = scratch.get(128);
         scratch.put(b);

@@ -82,6 +82,67 @@ pub fn fxhash<T: Hash + ?Sized>(value: &T) -> u64 {
     h.finish()
 }
 
+/// Batched hashing width: the unrolled loop runs this many independent
+/// hash lanes per iteration so the multiply-rotate chains have no
+/// cross-element dependency (auto-vectorizable for fixed-width keys).
+const BATCH_LANES: usize = 4;
+
+/// Hash a batch of items through a key accessor into `out` (cleared
+/// first). `out[i]` is bit-identical to `fxhash(key(&items[i]))` — the
+/// batch form only amortizes loop overhead and removes the per-element
+/// dependency chain; it never changes the hash function. Used by the
+/// threaded backend's flush routing ([`crate::exec::cache`]) and stripe
+/// selection ([`crate::exec::shard`]), where keys live inside `(K, V)`
+/// pairs.
+#[inline]
+pub fn hash_batch_by<T, K, F>(items: &[T], key: F, out: &mut Vec<u64>)
+where
+    K: Hash + ?Sized,
+    F: Fn(&T) -> &K,
+{
+    out.clear();
+    out.reserve(items.len());
+    let mut chunks = items.chunks_exact(BATCH_LANES);
+    for c in &mut chunks {
+        // Four independent lanes: no lane reads another's state.
+        let h0 = fxhash(key(&c[0]));
+        let h1 = fxhash(key(&c[1]));
+        let h2 = fxhash(key(&c[2]));
+        let h3 = fxhash(key(&c[3]));
+        out.extend_from_slice(&[h0, h1, h2, h3]);
+    }
+    for item in chunks.remainder() {
+        out.push(fxhash(key(item)));
+    }
+}
+
+/// Hash a slice of keys into `out` (cleared first), element-for-element
+/// identical to scalar [`fxhash`]. See [`hash_batch_by`].
+#[inline]
+pub fn hash_batch<K: Hash>(keys: &[K], out: &mut Vec<u64>) {
+    hash_batch_by(keys, |k| k, out);
+}
+
+/// Map a slice of keys to shard/stripe indices under a power-of-two
+/// `mask` in one batched pass: `out[i] == (fxhash(&keys[i]) as usize) &
+/// mask`, exactly the scalar stripe-selection formula.
+#[inline]
+pub fn shard_batch<K: Hash>(keys: &[K], mask: usize, out: &mut Vec<usize>) {
+    out.clear();
+    out.reserve(keys.len());
+    let mut chunks = keys.chunks_exact(BATCH_LANES);
+    for c in &mut chunks {
+        let s0 = (fxhash(&c[0]) as usize) & mask;
+        let s1 = (fxhash(&c[1]) as usize) & mask;
+        let s2 = (fxhash(&c[2]) as usize) & mask;
+        let s3 = (fxhash(&c[3]) as usize) & mask;
+        out.extend_from_slice(&[s0, s1, s2, s3]);
+    }
+    for k in chunks.remainder() {
+        out.push((fxhash(k) as usize) & mask);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -104,5 +165,51 @@ mod tests {
     #[test]
     fn string_tail_bytes_matter() {
         assert_ne!(fxhash("abcdefghi"), fxhash("abcdefghj"));
+    }
+
+    #[test]
+    fn batch_matches_scalar_u64() {
+        // Lengths straddling the 4-lane unroll: empty, sub-lane, exact
+        // multiples, and remainders all must agree with scalar fxhash.
+        for len in [0usize, 1, 3, 4, 5, 8, 17, 100] {
+            let keys: Vec<u64> = (0..len as u64).map(|k| k.wrapping_mul(0x9e37)).collect();
+            let mut out = Vec::new();
+            hash_batch(&keys, &mut out);
+            assert_eq!(out.len(), keys.len());
+            for (k, h) in keys.iter().zip(&out) {
+                assert_eq!(*h, fxhash(k), "len={len} key={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn batch_by_extracts_pair_keys() {
+        let pairs: Vec<(String, u64)> =
+            (0..13).map(|i| (format!("key-{i}"), i)).collect();
+        let mut out = Vec::new();
+        hash_batch_by(&pairs, |p| p.0.as_str(), &mut out);
+        for (p, h) in pairs.iter().zip(&out) {
+            assert_eq!(*h, fxhash(p.0.as_str()));
+        }
+    }
+
+    #[test]
+    fn shard_batch_matches_scalar_mask() {
+        let keys: Vec<u64> = (0..37).collect();
+        let mut out = Vec::new();
+        for mask in [0usize, 1, 7, 255] {
+            shard_batch(&keys, mask, &mut out);
+            for (k, s) in keys.iter().zip(&out) {
+                assert_eq!(*s, (fxhash(k) as usize) & mask);
+                assert!(*s <= mask);
+            }
+        }
+    }
+
+    #[test]
+    fn batch_clears_previous_output() {
+        let mut out = vec![99u64; 8];
+        hash_batch::<u64>(&[], &mut out);
+        assert!(out.is_empty());
     }
 }

@@ -117,6 +117,40 @@ fn threaded_smallkey_bit_identical_with_worker_rng() {
 }
 
 #[test]
+fn threaded_pinned_pooled_bit_identical_to_simulated() {
+    // The hot-path knobs together: pooled scratch buffers on the flush
+    // path AND pinned pool workers. Neither may perturb results — the
+    // simulated reference runs with the same alloc mode but no pinning.
+    use blaze::util::alloc::AllocMode;
+    for (case, &n) in [0usize, 50, 4000].iter().enumerate() {
+        let seed = 0xEC_2001 + case as u64;
+        let items = gen_skewed(seed, n);
+        for &(nodes, workers) in SHAPES {
+            let mut base = ClusterConfig::sized(nodes, workers)
+                .with_seed(seed)
+                .with_alloc(AllocMode::Pool);
+            base.thread_cache_entries = 4;
+            let reference =
+                run_sum_f64(&base.clone().with_backend(Backend::Simulated), &items);
+            for &threads in THREADS {
+                let got = run_sum_f64(
+                    &base
+                        .clone()
+                        .with_backend(Backend::Threaded(threads))
+                        .with_pin_threads(true),
+                    &items,
+                );
+                assert_eq!(
+                    reference, got,
+                    "threaded:{threads} pinned+pooled diverged from simulated \
+                     (shape {nodes}x{workers}, n={n}, seed {seed:#x})"
+                );
+            }
+        }
+    }
+}
+
+#[test]
 fn flush_storm_neither_drops_nor_double_applies() {
     // Cache capacity 1: every single emit overflow-flushes. All items hit
     // one key (one shard stripe), so any lost or duplicated flush changes
@@ -205,6 +239,29 @@ fn threaded_runs_record_hybrid_accounting() {
     assert!(run.wall_ns("shuffle+absorb").is_some());
     assert!(run.wall_ns_total() > 0, "real wall clock recorded");
     assert_eq!(run.pairs_emitted, 500);
+}
+
+#[test]
+fn pooled_threaded_run_surfaces_hot_path_counters() {
+    use blaze::util::alloc::AllocMode;
+    let mut cfg = ClusterConfig::sized(2, 2)
+        .with_backend(Backend::Threaded(2))
+        .with_alloc(AllocMode::Pool);
+    cfg.thread_cache_entries = 4; // force repeated flush-buffer round-trips
+    let c = Cluster::new(cfg);
+    let dv = DistVector::from_vec(&c, (0..2000u64).collect());
+    let mut out: DistHashMap<u64, u64> = DistHashMap::new(&c);
+    mapreduce(&dv, |_, v: &u64, emit| emit(v % 17, 1u64), "sum", &mut out);
+    let metrics = c.metrics();
+    let run = metrics.last_run().expect("run recorded");
+    let hits = run.counter("alloc.pool.hits").expect("alloc.pool.hits recorded");
+    assert!(run.counter("alloc.pool.misses").is_some());
+    assert!(run.counter("alloc.pool.pooled_bytes").is_some());
+    assert!(hits > 0, "flush scratch buffers must recycle through the pool");
+    let stripes = run.counter("shard.stripes").expect("stripe count recorded");
+    assert!(stripes.is_power_of_two() && stripes >= 2);
+    // Not pinned: the counter exists (0) rather than being absent.
+    assert_eq!(run.counter("pool.pinned_threads"), Some(0));
 }
 
 #[test]

@@ -143,6 +143,54 @@ fn prop_decode_pairs_exact_rejects_overlong_and_truncated_frames() {
     }
 }
 
+// ---------- hashing properties -------------------------------------------
+
+/// Batched hashing is a pure unroll of the scalar hash: for random key
+/// sets of every awkward length (empty, sub-lane, lane-straddling),
+/// `hash_batch` and `shard_batch` must agree with per-key `fxhash` —
+/// the flush-routing byte-identity contract rides on this.
+#[test]
+fn prop_hash_batch_matches_scalar_fxhash() {
+    use blaze::util::hash::{fxhash, hash_batch, hash_batch_by, shard_batch};
+    let mut rng = SplitRng::new(0x4A58, 12);
+    let mut hashes = Vec::new();
+    let mut shards = Vec::new();
+    for case in 0..200 {
+        // Lengths biased around the 4-lane boundary: 0..=9 plus larger.
+        let n = if case % 2 == 0 { rng.below(10) } else { rng.below(500) } as usize;
+        let keys: Vec<u64> = (0..n).map(|_| rng.next_u64()).collect();
+        hash_batch(&keys, &mut hashes);
+        assert_eq!(hashes.len(), n, "case {case}");
+        for (k, h) in keys.iter().zip(&hashes) {
+            assert_eq!(*h, fxhash(k), "case {case}: lane diverged from scalar");
+        }
+        // Mask edge cases: 0 (one shard) through 255, always 2^k - 1.
+        let mask = (1usize << rng.below(9)) - 1;
+        shard_batch(&keys, mask, &mut shards);
+        assert_eq!(shards.len(), n, "case {case}");
+        for (k, s) in keys.iter().zip(&shards) {
+            assert_eq!(*s, (fxhash(k) as usize) & mask, "case {case} mask {mask}");
+        }
+
+        // Projected keys (the flush path hashes `&pair.0`, not the pair):
+        // string keys of random length, hashed through the extractor.
+        let m = rng.below(40) as usize;
+        let pairs: Vec<(String, u64)> = (0..m)
+            .map(|_| {
+                let len = rng.below(16) as usize;
+                let s: String =
+                    (0..len).map(|_| char::from(b'a' + rng.below(26) as u8)).collect();
+                (s, rng.next_u64())
+            })
+            .collect();
+        hash_batch_by(&pairs, |p| &p.0, &mut hashes);
+        assert_eq!(hashes.len(), m, "case {case}");
+        for (p, h) in pairs.iter().zip(&hashes) {
+            assert_eq!(*h, fxhash(&p.0), "case {case}: projected lane diverged");
+        }
+    }
+}
+
 // ---------- scheduler / routing properties ------------------------------
 
 #[test]
