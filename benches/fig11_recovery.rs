@@ -13,8 +13,9 @@
 
 use blaze::apps::{kmeans, wordcount::wordcount};
 use blaze::bench;
-use blaze::coordinator::cluster::{Cluster, ClusterConfig, EngineKind};
+use blaze::coordinator::cluster::{Backend, Cluster, ClusterConfig, EngineKind};
 use blaze::data::PointSet;
+use blaze::exec::transport::TransportFaultPlan;
 use blaze::prelude::*;
 
 const NODES: usize = 4;
@@ -39,6 +40,17 @@ fn midjob_failure() -> FailurePlan {
     let block = NODES * WORKERS / 2 - 2;
     assert!(block % CKPT_EVERY != 0, "kill block must not sit on a checkpoint");
     FailurePlan::kill_at_block(2, block)
+}
+
+/// Kill node 2 *inside* a block's map — sub-task granularity. Blocks
+/// `2*WORKERS .. 3*WORKERS` are homed on node 2; pick one misaligned
+/// with `CKPT_EVERY` (same reasoning as [`midjob_failure`]) so the
+/// overhead includes the charged-but-discarded partial map on top of
+/// rollback + replay.
+fn midblock_failure() -> FailurePlan {
+    let block = 2 * WORKERS + 1;
+    assert!(block % CKPT_EVERY != 0, "kill block must not sit on a checkpoint");
+    FailurePlan::kill_at_item(2, block, 200)
 }
 
 fn main() {
@@ -71,11 +83,17 @@ fn main() {
                 .find(|r| r.label == "wordcount.mr")
                 .cloned()
                 .expect("wordcount records wordcount.mr");
-            (report.makespan_sec, words.collect(), stats)
+            let aborts: u64 = c
+                .metrics()
+                .runs()
+                .iter()
+                .filter_map(|r| r.counter("fault.midblock_aborts"))
+                .sum();
+            (report.makespan_sec, words.collect(), stats, aborts)
         };
-        let (base_s, base_counts, _) = run(FailurePlan::none(), false);
+        let (base_s, base_counts, _, _) = run(FailurePlan::none(), false);
         for (policy, evacuate) in [("hot-standby", false), ("evacuate", true)] {
-            let (fail_s, fail_counts, stats) = run(midjob_failure(), evacuate);
+            let (fail_s, fail_counts, stats, _) = run(midjob_failure(), evacuate);
             assert_eq!(base_counts, fail_counts, "wordcount counts must survive failure");
             assert_eq!(
                 evacuate,
@@ -101,6 +119,125 @@ fn main() {
                 (fail_s / base_s - 1.0) * 100.0
             );
         }
+
+        // Mid-block: the kill lands after 200 items of one block's map —
+        // not at a commit boundary — so the overhead also pays for the
+        // charged-but-discarded partial attempt.
+        let (fail_s, fail_counts, stats, aborts) = run(midblock_failure(), false);
+        assert_eq!(base_counts, fail_counts, "wordcount counts must survive a mid-block kill");
+        assert!(aborts > 0, "mid-block kill must abort an in-flight map");
+        rep.push(
+            bench::report::Row::new("wordcount")
+                .tag("engine", engine)
+                .tag("policy", "mid-block")
+                .num("nofail_makespan_sec", base_s)
+                .num("failure_makespan_sec", fail_s)
+                .num("overhead_frac", fail_s / base_s - 1.0)
+                .num("midblock_aborts", aborts as f64)
+                .counters(&stats),
+        );
+        println!(
+            "{:<10} {:<13} {:<12} {:>14.4} {:>14.4} {:>9.1}%",
+            "wordcount",
+            engine,
+            "mid-block",
+            base_s,
+            fail_s,
+            (fail_s / base_s - 1.0) * 100.0
+        );
+    }
+
+    // ---- Wordcount over a lossy transport (eager engine, threaded) -------
+    // The conventional engine is never threaded and the fault engine's
+    // shuffle is flow-model only, so the lossy channel path belongs to the
+    // ordinary eager engine under `Backend::Threaded`. The deterministic
+    // virtual-time mirror charges every retry's backoff, so the overhead
+    // column is the reliability cost of the lossy network; the
+    // `transport.*` counters ride along in each row.
+    {
+        let run_threaded = |net: Option<TransportFaultPlan>| {
+            let mut cfg = ClusterConfig::sized(NODES, WORKERS)
+                .with_engine(EngineKind::Eager)
+                .with_backend(Backend::Threaded(2));
+            if let Some(plan) = net {
+                cfg = cfg.with_net_fault(plan);
+            }
+            let c = Cluster::new(cfg);
+            let dv = DistVector::from_vec(&c, lines.clone());
+            let (report, words) = wordcount(&c, &dv);
+            let stats = c
+                .metrics()
+                .runs()
+                .iter()
+                .find(|r| r.label == "wordcount.mr")
+                .cloned()
+                .expect("wordcount records wordcount.mr");
+            (report.makespan_sec, words.collect(), stats)
+        };
+        let (base_s, base_counts, base_stats) = run_threaded(None);
+        assert!(
+            base_stats.counter("transport.retries").is_none(),
+            "a lossless run must keep its counter set unchanged"
+        );
+
+        // Aggressive loss so retries are observed at any seed; unbounded
+        // retry budget so delivery still succeeds.
+        let lossy = TransportFaultPlan::new(0.5, 0.1, 0xF16_11AA)
+            .with_retry_max(64)
+            .with_timeout_ns(u64::MAX);
+        let (lossy_s, lossy_counts, stats) = run_threaded(Some(lossy));
+        assert_eq!(base_counts, lossy_counts, "wordcount counts must survive a lossy transport");
+        assert!(
+            stats.counter("transport.retries").unwrap_or(0) > 0,
+            "a lossy plan at these rates must observe retries"
+        );
+        rep.push(
+            bench::report::Row::new("wordcount-lossy")
+                .tag("engine", EngineKind::Eager)
+                .tag("policy", "retry-backoff")
+                .num("nofail_makespan_sec", base_s)
+                .num("failure_makespan_sec", lossy_s)
+                .num("overhead_frac", lossy_s / base_s - 1.0)
+                .counters(&stats),
+        );
+        println!(
+            "{:<10} {:<13} {:<12} {:>14.4} {:>14.4} {:>9.1}%",
+            "wc-lossy",
+            EngineKind::Eager,
+            "retry-backoff",
+            base_s,
+            lossy_s,
+            (lossy_s / base_s - 1.0) * 100.0
+        );
+
+        // Total loss: every frame exhausts its retry budget and the run
+        // degrades to the flow-model shuffle — a structured timeout, never
+        // a hang, and still byte-identical results.
+        let dead = TransportFaultPlan::new(1.0, 0.0, 0xF16_11AB).with_retry_max(3);
+        let (dead_s, dead_counts, stats) = run_threaded(Some(dead));
+        assert_eq!(base_counts, dead_counts, "timeout fallback must preserve results");
+        assert!(
+            stats.counter("transport.timeouts").unwrap_or(0) > 0,
+            "a dead link must be reported as a timeout"
+        );
+        rep.push(
+            bench::report::Row::new("wordcount-lossy")
+                .tag("engine", EngineKind::Eager)
+                .tag("policy", "timeout-fallback")
+                .num("nofail_makespan_sec", base_s)
+                .num("failure_makespan_sec", dead_s)
+                .num("overhead_frac", dead_s / base_s - 1.0)
+                .counters(&stats),
+        );
+        println!(
+            "{:<10} {:<13} {:<12} {:>14.4} {:>14.4} {:>9.1}%",
+            "wc-lossy",
+            EngineKind::Eager,
+            "timeout-fb",
+            base_s,
+            dead_s,
+            (dead_s / base_s - 1.0) * 100.0
+        );
     }
 
     // ---- K-means (driver-resident target: hot-standby only) --------------

@@ -4,8 +4,10 @@
 //! blaze <task> [--nodes N] [--workers W] [--engine blaze|conventional]
 //!              [--backend simulated|threaded[:N]] [--scale S]
 //!              [--artifacts DIR] [--seed SEED]
-//!              [--fail-at NODE@BLOCK ...] [--checkpoint-every BLOCKS]
-//!              [--evacuate] [--transport-window BYTES] [--pin-threads]
+//!              [--fail-at NODE@BLOCK[.ITEM] ...] [--checkpoint-every BLOCKS]
+//!              [--evacuate] [--net-fault drop=P,corrupt=P[,delay=P][,seed=S]]
+//!              [--retry-max N] [--net-timeout NS]
+//!              [--transport-window BYTES] [--pin-threads]
 //! blaze report <BASELINE> <CANDIDATE> [--gate] [--deterministic-only]
 //!              [--threshold PCT] [--out PATH]
 //! ```
@@ -17,9 +19,20 @@
 //! exits 1 if a deterministic counter/histogram field drifted or an
 //! expected series/config row went missing, while wall-clock deltas stay
 //! advisory.
-//! `--fail-at 2@5` kills virtual node 2 after 5 map blocks commit
-//! (repeatable); either fault flag routes the job through the recoverable
-//! engine ([`crate::fault`]). `--evacuate` re-homes a dead node's keys onto
+//! `--fail-at 2@5` kills virtual node 2 after 5 map blocks commit;
+//! `--fail-at 2@5.100` kills it *mid-block* — while block 5's map is 100
+//! items in, discarding the in-flight partials (repeatable); either fault
+//! flag routes the job through the recoverable engine ([`crate::fault`]).
+//! `--net-fault drop=0.2,corrupt=0.05,seed=9` runs the threaded backend's
+//! shuffle over the lossy channel transport
+//! ([`crate::exec::transport`]): frames drop, arrive bit-flipped (and are
+//! rejected by the frame checksum), and retry under capped exponential
+//! backoff. `--retry-max` bounds retransmissions per frame and
+//! `--net-timeout` sets the per-frame delivery deadline in virtual
+//! nanoseconds; exhausting either declares the destination dead and the
+//! run degrades gracefully — a structured fallback, never a hang. Results
+//! stay byte-identical to the lossless run; the simulated backend ignores
+//! the plan entirely. `--evacuate` re-homes a dead node's keys onto
 //! the survivors (slot evacuation) instead of the default hot-standby
 //! restore — both policies produce identical results, so each stays
 //! benchmarkable against the other. `--backend threaded:N` executes the
@@ -39,6 +52,7 @@
 use crate::apps;
 use crate::coordinator::cluster::{Backend, Cluster, ClusterConfig, EngineKind};
 use crate::data::{corpus_lines, Graph, PointSet};
+use crate::exec::transport::TransportFaultPlan;
 use crate::fault::{FailurePlan, FaultConfig};
 use crate::runtime::Runtime;
 
@@ -63,6 +77,17 @@ pub struct Options {
     pub seed: u64,
     /// Injected failures as `(node, block)` pairs (`--fail-at NODE@BLOCK`).
     pub fail_at: Vec<(usize, usize)>,
+    /// Injected mid-block failures as `(node, block, item)` triples
+    /// (`--fail-at NODE@BLOCK.ITEM`).
+    pub fail_at_item: Vec<(usize, usize, u64)>,
+    /// Lossy-transport fault model as `(drop_p, corrupt_p, delay_p, seed)`
+    /// (`--net-fault drop=P,corrupt=P[,delay=P][,seed=S]`); a `None` seed
+    /// falls back to the run seed, whatever flag order argv used.
+    pub net_fault: Option<(f64, f64, f64, Option<u64>)>,
+    /// Retransmission budget per frame (`--retry-max N`).
+    pub retry_max: Option<u32>,
+    /// Per-frame delivery deadline in virtual ns (`--net-timeout NS`).
+    pub net_timeout: Option<u64>,
     /// Checkpoint cadence in committed blocks (`--checkpoint-every N`).
     pub checkpoint_every: Option<usize>,
     /// Recovery policy: re-home a dead node's keys onto survivors instead
@@ -91,6 +116,10 @@ impl Default for Options {
             artifacts: "artifacts".into(),
             seed: 42,
             fail_at: Vec::new(),
+            fail_at_item: Vec::new(),
+            net_fault: None,
+            retry_max: None,
+            net_timeout: None,
             checkpoint_every: None,
             evacuate: false,
             transport_window: None,
@@ -107,19 +136,39 @@ impl Options {
         for &(node, block) in &self.fail_at {
             plan = plan.and_kill_at_block(node, block);
         }
+        for &(node, block, item) in &self.fail_at_item {
+            plan = plan.and_kill_at_item(node, block, item);
+        }
         let mut fault = FaultConfig::disabled().with_plan(plan).with_evacuation(self.evacuate);
         if let Some(every) = self.checkpoint_every {
             fault = fault.with_checkpoint_every(every);
         }
         fault
     }
+
+    /// Lossy transport plan assembled from `--net-fault`/`--retry-max`/
+    /// `--net-timeout`; `None` when the transport stays lossless.
+    pub fn net_fault_plan(&self) -> Option<TransportFaultPlan> {
+        let (drop_p, corrupt_p, delay_p, seed) = self.net_fault?;
+        let mut plan = TransportFaultPlan::new(drop_p, corrupt_p, seed.unwrap_or(self.seed))
+            .with_delay(delay_p);
+        if let Some(n) = self.retry_max {
+            plan = plan.with_retry_max(n);
+        }
+        if let Some(ns) = self.net_timeout {
+            plan = plan.with_timeout_ns(ns);
+        }
+        Some(plan)
+    }
 }
 
 const USAGE: &str = "usage: blaze <pi|wordcount|pagerank|kmeans|gmm|knn|all> \
 [--nodes N] [--workers W] [--engine blaze|conventional] \
 [--backend simulated|threaded[:N]] [--scale S] \
-[--artifacts DIR|none] [--seed SEED] [--fail-at NODE@BLOCK ...] \
-[--checkpoint-every BLOCKS] [--evacuate] [--transport-window BYTES] \
+[--artifacts DIR|none] [--seed SEED] [--fail-at NODE@BLOCK[.ITEM] ...] \
+[--checkpoint-every BLOCKS] [--evacuate] \
+[--net-fault drop=P,corrupt=P[,delay=P][,seed=S]] [--retry-max N] \
+[--net-timeout NS] [--transport-window BYTES] \
 [--trace PATH] [--pin-threads]
        blaze report <BASELINE> <CANDIDATE> [--gate] [--deterministic-only] \
 [--threshold PCT] [--out PATH]";
@@ -159,14 +208,65 @@ pub fn parse(args: &[String]) -> Result<Options, String> {
             "--trace" => opts.trace = Some(next("path")?),
             "--pin-threads" => opts.pin_threads = true,
             "--fail-at" => {
-                let spec = next("NODE@BLOCK spec")?;
-                let Some((node, block)) = spec.split_once('@') else {
-                    return Err(format!("--fail-at wants NODE@BLOCK, got {spec:?}"));
+                let spec = next("NODE@BLOCK[.ITEM] spec")?;
+                let Some((node, rest)) = spec.split_once('@') else {
+                    return Err(format!("--fail-at wants NODE@BLOCK[.ITEM], got {spec:?}"));
                 };
-                opts.fail_at.push((
-                    node.parse().map_err(|e| format!("--fail-at node: {e}"))?,
-                    block.parse().map_err(|e| format!("--fail-at block: {e}"))?,
-                ));
+                let node = node.parse().map_err(|e| format!("--fail-at node: {e}"))?;
+                match rest.split_once('.') {
+                    // NODE@BLOCK.ITEM: a mid-block (sub-task) kill.
+                    Some((block, item)) => opts.fail_at_item.push((
+                        node,
+                        block.parse().map_err(|e| format!("--fail-at block: {e}"))?,
+                        item.parse().map_err(|e| format!("--fail-at item: {e}"))?,
+                    )),
+                    None => opts.fail_at.push((
+                        node,
+                        rest.parse().map_err(|e| format!("--fail-at block: {e}"))?,
+                    )),
+                }
+            }
+            "--net-fault" => {
+                let spec = next("drop=P,corrupt=P[,delay=P][,seed=S] spec")?;
+                let (mut drop_p, mut corrupt_p, mut delay_p) = (0.0f64, 0.0f64, 0.0f64);
+                let mut fault_seed: Option<u64> = None;
+                for kv in spec.split(',') {
+                    let Some((key, val)) = kv.split_once('=') else {
+                        return Err(format!("--net-fault wants key=value pairs, got {kv:?}"));
+                    };
+                    match key {
+                        "drop" => {
+                            drop_p = val.parse().map_err(|e| format!("--net-fault drop: {e}"))?
+                        }
+                        "corrupt" => {
+                            corrupt_p =
+                                val.parse().map_err(|e| format!("--net-fault corrupt: {e}"))?
+                        }
+                        "delay" => {
+                            delay_p =
+                                val.parse().map_err(|e| format!("--net-fault delay: {e}"))?
+                        }
+                        "seed" => {
+                            fault_seed = Some(
+                                val.parse().map_err(|e| format!("--net-fault seed: {e}"))?,
+                            )
+                        }
+                        other => return Err(format!("--net-fault: unknown key {other:?}")),
+                    }
+                }
+                for (name, p) in [("drop", drop_p), ("corrupt", corrupt_p), ("delay", delay_p)] {
+                    if !(0.0..=1.0).contains(&p) {
+                        return Err(format!("--net-fault {name} must be in [0, 1], got {p}"));
+                    }
+                }
+                opts.net_fault = Some((drop_p, corrupt_p, delay_p, fault_seed));
+            }
+            "--retry-max" => {
+                opts.retry_max = Some(next("count")?.parse().map_err(|e| format!("{e}"))?)
+            }
+            "--net-timeout" => {
+                opts.net_timeout =
+                    Some(next("nanoseconds")?.parse().map_err(|e| format!("{e}"))?)
             }
             "--engine" => {
                 opts.engine = match next("name")?.as_str() {
@@ -194,6 +294,9 @@ fn make_cluster(opts: &Options) -> Cluster {
         .with_trace(opts.trace.is_some());
     if let Some(bytes) = opts.transport_window {
         cfg = cfg.with_transport_window(bytes);
+    }
+    if let Some(plan) = opts.net_fault_plan() {
+        cfg = cfg.with_net_fault(plan);
     }
     // Only set when the flag is present, so the BLAZE_PIN_THREADS env
     // default baked into ClusterConfig survives unflagged runs.
@@ -417,6 +520,71 @@ mod tests {
         let plain = parse(&argv("wordcount")).unwrap().fault_config();
         assert!(!plain.enabled());
         assert!(!plain.evacuate);
+    }
+
+    #[test]
+    fn parse_fail_at_item_spec() {
+        let o = parse(&argv("wordcount --fail-at 1@3 --fail-at 2@5.100")).unwrap();
+        assert_eq!(o.fail_at, vec![(1, 3)]);
+        assert_eq!(o.fail_at_item, vec![(2, 5, 100)]);
+        let fault = o.fault_config();
+        assert!(fault.enabled());
+        assert_eq!(fault.plan.events().len(), 2);
+        assert!(parse(&argv("pi --fail-at 2@5.")).is_err());
+        assert!(parse(&argv("pi --fail-at 2@.7")).is_err());
+        assert!(parse(&argv("pi --fail-at 2@5.x")).is_err());
+    }
+
+    #[test]
+    fn parse_net_fault_flags() {
+        let o = parse(&argv(
+            "wordcount --net-fault drop=0.2,corrupt=0.05,seed=9 --retry-max 16 \
+             --net-timeout 500000000",
+        ))
+        .unwrap();
+        assert_eq!(o.net_fault, Some((0.2, 0.05, 0.0, Some(9))));
+        assert_eq!(o.retry_max, Some(16));
+        assert_eq!(o.net_timeout, Some(500_000_000));
+        let plan = o.net_fault_plan().expect("plan assembled");
+        assert_eq!(plan.retry_max, 16);
+        assert_eq!(plan.timeout_ns, 500_000_000);
+        // Unflagged runs stay lossless.
+        assert_eq!(parse(&argv("pi")).unwrap().net_fault_plan(), None);
+        // Without seed=, the run seed feeds the plan — flag order free.
+        let o = parse(&argv("pi --net-fault drop=0.1,corrupt=0 --seed 7")).unwrap();
+        assert_eq!(o.net_fault_plan().unwrap().seed, 7);
+        assert!(parse(&argv("pi --net-fault drop=2.0,corrupt=0")).is_err());
+        assert!(parse(&argv("pi --net-fault dorp=0.1")).is_err());
+        assert!(parse(&argv("pi --net-fault drop")).is_err());
+        assert!(parse(&argv("pi --retry-max x")).is_err());
+        assert!(parse(&argv("pi --net-timeout")).is_err());
+    }
+
+    #[test]
+    fn run_wordcount_threaded_lossy_end_to_end() {
+        // Lossy channel transport through the whole CLI path: drops,
+        // corruptions (checksum rejects), retries — and the run succeeds.
+        assert_eq!(
+            run(&argv(
+                "wordcount --nodes 3 --workers 2 --scale 1 --artifacts none \
+                 --backend threaded:2 --net-fault drop=0.2,corrupt=0.05,seed=9 \
+                 --retry-max 16"
+            )),
+            0
+        );
+    }
+
+    #[test]
+    fn run_wordcount_threaded_midblock_kill_end_to_end() {
+        // A mid-block kill on the threaded backend: the in-flight map
+        // aborts, partials are discarded, and recovery replays the block.
+        assert_eq!(
+            run(&argv(
+                "wordcount --nodes 3 --workers 2 --scale 1 --artifacts none \
+                 --backend threaded:2 --fail-at 1@2.50 --checkpoint-every 3"
+            )),
+            0
+        );
     }
 
     #[test]

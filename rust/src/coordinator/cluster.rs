@@ -4,6 +4,7 @@ use std::cell::{Cell, RefCell};
 use std::rc::Rc;
 
 use crate::exec::shard::StripeFeedback;
+use crate::exec::transport::TransportFaultPlan;
 use crate::fault::FaultConfig;
 use crate::net::model::NetworkModel;
 use crate::trace::TraceCollector;
@@ -158,6 +159,15 @@ pub struct ClusterConfig {
     /// cadence. When enabled, jobs run through the recoverable engine
     /// ([`crate::fault::engine`]).
     pub fault: FaultConfig,
+    /// Lossy-transport fault model (`--net-fault`): per-frame
+    /// drop/corrupt/delay probabilities plus the retry budget and
+    /// delivery deadline, applied by the threaded backend's channel
+    /// transport ([`crate::exec::transport::execute_lossy`]). `None`
+    /// (the default) keeps the lossless transport. The simulated
+    /// backend moves no physical frames and ignores the plan; results
+    /// stay byte-identical either way because recovered delivery is
+    /// element-identical to lossless delivery.
+    pub net_fault: Option<TransportFaultPlan>,
     /// Structured event tracing ([`crate::trace`]): when on, every job
     /// records a typed event log into the cluster's
     /// [`TraceCollector`]. Defaults from the `BLAZE_TRACE` env var
@@ -188,6 +198,7 @@ impl Default for ClusterConfig {
             conventional_job_latency_sec: 20e-3,
             transport_window_bytes: crate::coordinator::backpressure::DEFAULT_WINDOW_BYTES,
             fault: FaultConfig::disabled(),
+            net_fault: None,
             trace: std::env::var("BLAZE_TRACE").map_or(false, |v| !v.is_empty()),
             pin_threads: std::env::var("BLAZE_PIN_THREADS").map_or(false, |v| !v.is_empty()),
         }
@@ -240,6 +251,13 @@ impl ClusterConfig {
     /// clamped to ≥ 1).
     pub fn with_transport_window(mut self, bytes: u64) -> Self {
         self.transport_window_bytes = bytes.max(1);
+        self
+    }
+
+    /// Builder-style lossy-transport fault model override (see
+    /// [`ClusterConfig::net_fault`]).
+    pub fn with_net_fault(mut self, plan: TransportFaultPlan) -> Self {
+        self.net_fault = Some(plan);
         self
     }
 
@@ -422,6 +440,10 @@ mod tests {
         assert_eq!(cfg.seed, 7);
         assert_eq!(cfg.transport_window_bytes, 1, "window clamps to >= 1");
         assert!(cfg.pin_threads);
+        assert_eq!(cfg.net_fault, None, "lossless transport by default");
+        let lossy = ClusterConfig::sized(2, 2)
+            .with_net_fault(TransportFaultPlan::new(0.2, 0.05, 42));
+        assert_eq!(lossy.net_fault, Some(TransportFaultPlan::new(0.2, 0.05, 42)));
         assert_eq!(
             ClusterConfig::default().transport_window_bytes,
             crate::coordinator::backpressure::DEFAULT_WINDOW_BYTES

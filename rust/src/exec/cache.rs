@@ -72,6 +72,19 @@ impl<'a, K, V> FlushScratch<'a, K, V> {
         self.pairs.put(batch.pairs);
         self.hashes.put(batch.hashes);
     }
+
+    /// Drop an aborted worker's drained batch *without* absorbing it:
+    /// the pairs never reach a shard and the buffers go straight back to
+    /// the pools (length-cleared, so a later reuse cannot observe stale
+    /// tail entries). Returns `(pairs, bytes)` drop accounting for the
+    /// abort bookkeeping. Same mechanics as [`FlushScratch::recycle`];
+    /// it exists as its own verb so call sites that *must not* absorb
+    /// read as such.
+    pub fn discard(&self, batch: FlushBatch<K, V>) -> (u64, u64) {
+        let dropped = (batch.pairs.len() as u64, batch.bytes);
+        self.recycle(batch);
+        dropped
+    }
 }
 
 /// A bounded eager-combine cache for one map block (= one virtual worker).
@@ -133,6 +146,20 @@ impl<K: Hash + Eq + FastSer, V: FastSer> EagerCache<K, V> {
     /// High-water cache bytes (memory accounting).
     pub fn peak_bytes(&self) -> u64 {
         self.peak_bytes
+    }
+
+    /// Poison the cache on a mid-block abort (its node was killed while
+    /// the block was still mapping): every pending partial is dropped on
+    /// the floor — no [`FlushBatch`] is produced, so the attempt cannot
+    /// leak into any shard — and `(entries, bytes)` pending at the abort
+    /// moment come back as drop accounting. This is the threaded half of
+    /// the [`crate::fault::engine`] discard contract: an aborted attempt
+    /// contributes *zero* to every gated counter, and the block's
+    /// re-execution starts from a fresh cache with the same
+    /// [`partial_order`] sequence space, so failure and failure-free
+    /// runs stay byte-identical.
+    pub fn poison(self) -> (u64, u64) {
+        (self.map.len() as u64, self.bytes)
     }
 
     fn drain(&mut self, final_drain: bool, scratch: &FlushScratch<'_, K, V>) -> FlushBatch<K, V> {
@@ -218,6 +245,60 @@ mod tests {
         let (hits, misses) = pp.stats();
         assert!(hits >= 8, "drain buffers recycle through the pool: {hits}/{misses}");
         assert!(hp.stats().0 >= 8);
+    }
+
+    #[test]
+    fn poison_drops_pending_partials_with_accounting() {
+        let red = Reducer::sum();
+        let (pp, hp) = scratch_pools::<u64, u64>();
+        let scratch = FlushScratch::new(AllocMode::System, &pp, &hp);
+        let mut cache: EagerCache<u64, u64> = EagerCache::new(0, 8);
+        for i in 0..5u64 {
+            assert!(cache.reduce(i, 1, &red, &scratch).is_none());
+        }
+        let pending_bytes = 5 * (HASH_ENTRY_OVERHEAD + 1 + 1);
+        let (entries, bytes) = cache.poison();
+        assert_eq!(entries, 5, "every pending partial is dropped");
+        assert_eq!(bytes, pending_bytes, "drop accounting matches the byte formula");
+        // `poison` consumes the cache: no FlushBatch existed and none can
+        // be produced afterwards, so nothing from the aborted attempt can
+        // reach a shard.
+    }
+
+    #[test]
+    fn poison_after_overflow_accounts_only_the_residue() {
+        let red = Reducer::sum();
+        let (pp, hp) = scratch_pools::<u64, u64>();
+        let scratch = FlushScratch::new(AllocMode::System, &pp, &hp);
+        let mut cache: EagerCache<u64, u64> = EagerCache::new(0, 2);
+        assert!(cache.reduce(1, 1, &red, &scratch).is_none());
+        let flushed = cache.reduce(2, 1, &red, &scratch).expect("overflow flush");
+        scratch.recycle(flushed);
+        // One entry re-enters the empty cache, then the node dies.
+        assert!(cache.reduce(3, 1, &red, &scratch).is_none());
+        let (entries, bytes) = cache.poison();
+        assert_eq!(entries, 1, "already-flushed entries are not re-dropped");
+        assert_eq!(bytes, HASH_ENTRY_OVERHEAD + 1 + 1);
+    }
+
+    #[test]
+    fn discard_recycles_buffers_without_absorbing() {
+        let red = Reducer::sum();
+        let (pp, hp) = scratch_pools::<u64, u64>();
+        let scratch = FlushScratch::new(AllocMode::Pool, &pp, &hp);
+        let mut cache: EagerCache<u64, u64> = EagerCache::new(0, 1);
+        let batch = cache.reduce(7, 9, &red, &scratch).expect("cap-1 flushes");
+        let batch_bytes = batch.bytes;
+        let (pairs, bytes) = scratch.discard(batch);
+        assert_eq!((pairs, bytes), (1, batch_bytes));
+        // The discarded batch's buffers really went back to the pools:
+        // the next drain reuses them (length-cleared) instead of
+        // allocating.
+        let batch2 = cache.reduce(8, 1, &red, &scratch).expect("cap-1 flushes");
+        assert_eq!(pp.stats().0, 1, "pair buffer recycled through the pool");
+        assert_eq!(hp.stats().0, 1, "hash lane recycled through the pool");
+        assert_eq!(batch2.pairs, vec![(8, 1)], "no stale tail from the discarded batch");
+        assert_eq!(batch2.hashes.len(), 1);
     }
 
     #[test]

@@ -440,6 +440,15 @@ fn record_transport_counters(
     counters.add("transport.bytes", t.bytes);
     counters.add("transport.stalls", t.stalls);
     counters.max("transport.queue_peak_bytes", t.queue_peak_bytes);
+    if t.faulted {
+        // Reliability cost, recorded only when a fault plan was active so
+        // lossless runs keep their counter set unchanged.
+        counters.add("transport.retries", t.retries);
+        counters.add("transport.drops", t.drops);
+        counters.add("transport.corrupt", t.corrupt);
+        counters.add("transport.timeouts", t.timeouts);
+        counters.add("transport.backoff_ns", t.backoff_ns);
+    }
     phase_wall_ns.push(("transport".into(), t.wall_ns));
 }
 

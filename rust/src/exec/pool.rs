@@ -120,19 +120,52 @@ impl<T> BlockQueue<T> {
         self.not_full.notify_all();
         self.not_empty.notify_all();
     }
+
+    /// Close the queue *and discard everything still queued*: the abort
+    /// path for a dying worker. Blocks already stolen are the worker's
+    /// problem (their partials die with its unwind); blocks still queued
+    /// must not run either — the pool is failing the whole batch, so
+    /// surviving workers drain to `None` immediately instead of mapping
+    /// work whose output would be thrown away. Harmless after a normal
+    /// `close()`: by then the queue is already empty.
+    pub fn abort(&self) {
+        let mut st = self.state.lock().expect("block queue poisoned");
+        st.closed = true;
+        st.items.clear();
+        self.depth.store(0, Ordering::Relaxed);
+        drop(st);
+        self.not_full.notify_all();
+        self.not_empty.notify_all();
+    }
 }
 
-/// Close the queue when a worker unwinds, so a feeder blocked on a full
-/// queue wakes up and the panic propagates instead of deadlocking.
+/// Close the queue when the feeder unwinds, so workers drain out and the
+/// panic propagates instead of deadlocking. Drain-close: blocks already
+/// queued still execute.
 struct CloseOnDrop<'a, T> {
     queue: &'a BlockQueue<T>,
 }
 
 impl<T> Drop for CloseOnDrop<'_, T> {
     fn drop(&mut self) {
-        // Harmless on the normal exit path: workers only return after the
-        // queue is already closed and drained.
         self.queue.close();
+    }
+}
+
+/// Abort the queue when a *worker* unwinds: a blocked feeder wakes (the
+/// panic propagates instead of deadlocking) and queued blocks are
+/// discarded rather than drained — the batch is failing, so surviving
+/// workers must not keep mapping work whose output dies with it.
+struct AbortOnDrop<'a, T> {
+    queue: &'a BlockQueue<T>,
+}
+
+impl<T> Drop for AbortOnDrop<'_, T> {
+    fn drop(&mut self) {
+        // Harmless on the normal exit path: workers only return after the
+        // queue is already closed and drained, so there is nothing left
+        // to discard.
+        self.queue.abort();
     }
 }
 
@@ -241,7 +274,7 @@ where
         let handles: Vec<_> = (0..threads)
             .map(|i| {
                 s.spawn(move || {
-                    let _guard = CloseOnDrop { queue };
+                    let _guard = AbortOnDrop { queue };
                     if opts.pin_threads && pin_current_thread(i) {
                         pinned.fetch_add(1, Ordering::Relaxed);
                     }
@@ -443,5 +476,42 @@ mod tests {
         assert_eq!(q.pop(), Some(1));
         assert_eq!(q.pop(), Some(2));
         assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn aborted_queue_discards_queued_blocks() {
+        let q = BlockQueue::bounded(4);
+        assert!(q.push(1u64));
+        assert!(q.push(2));
+        q.abort();
+        assert!(!q.push(3));
+        assert_eq!(q.pop(), None, "abort discards, close drains");
+        assert_eq!(q.depth(), 0);
+        // Idempotent, and harmless after the queue is already empty.
+        q.abort();
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    #[should_panic(expected = "worker exploded")]
+    fn worker_panic_aborts_queued_blocks() {
+        // One worker: after it dies on block 1, the queued blocks must be
+        // discarded, not executed — an executed block would trip the
+        // second panic branch and change the payload.
+        let mut next = 0u64;
+        execute(
+            1,
+            4,
+            || {
+                next += 1;
+                (next <= 100).then_some(next)
+            },
+            |v| {
+                if v == 1 {
+                    panic!("worker exploded");
+                }
+                panic!("queued block ran after abort");
+            },
+        );
     }
 }

@@ -45,8 +45,179 @@ use std::time::Instant;
 use crate::coordinator::backpressure::WindowAccount;
 use crate::coordinator::shuffle::{ShufflePayloads, CHUNK_BYTES};
 use crate::net::sim::FlowMatrix;
+use crate::ser::fastser::{decode_frame, encode_frame_into, FRAME_HEADER_BYTES};
 use crate::trace::histogram::Histogram;
 use crate::util::alloc::{AllocMode, BufferPool, Scratch};
+use crate::util::rng::SplitRng;
+
+/// Virtual backoff before retry `k` (1-based): `BACKOFF_BASE_NS · 2^(k-1)`,
+/// capped at [`BACKOFF_CAP_NS`].
+pub const BACKOFF_BASE_NS: u64 = 100_000;
+/// Exponential-backoff ceiling.
+pub const BACKOFF_CAP_NS: u64 = 10_000_000;
+/// Virtual latency charged to a delayed (but delivered) frame attempt.
+pub const DELAY_NS: u64 = 250_000;
+/// Default retransmissions per frame before the destination is declared
+/// dead. With drop ≤ 0.2 and corrupt ≤ 0.05 the chance of 9 consecutive
+/// failed attempts is (0.25)⁹ ≈ 4·10⁻⁶ per frame — the chaos legs never
+/// trip it; adversarial plans (drop = 1.0) trip it deterministically.
+pub const DEFAULT_RETRY_MAX: u32 = 8;
+/// Default per-frame delivery deadline (virtual backoff budget).
+pub const DEFAULT_TIMEOUT_NS: u64 = 100_000_000;
+
+/// Virtual backoff before the `attempt`-th send of a frame (attempt ≥ 1).
+#[inline]
+pub fn backoff_ns(attempt: u32) -> u64 {
+    BACKOFF_BASE_NS
+        .saturating_mul(1u64 << (attempt.saturating_sub(1)).min(32))
+        .min(BACKOFF_CAP_NS)
+}
+
+/// Deterministic fate of one frame send attempt under a
+/// [`TransportFaultPlan`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AttemptFate {
+    /// Delivered intact.
+    Deliver,
+    /// Never arrives; sender retries after backoff.
+    Drop,
+    /// Arrives with one flipped bit; the receiver's frame checksum
+    /// rejects it and the sender retries after backoff.
+    Corrupt,
+    /// Delivered intact after an extra [`DELAY_NS`] of virtual latency.
+    Delay,
+}
+
+/// SplitRng-seeded per-frame fault model for the lossy transport.
+///
+/// The fate of attempt `a` of frame `(src, dst, seq)` is a pure function
+/// of `(seed, src, dst, seq, a)` — no shared RNG state, no scheduling
+/// dependence — so the full retry timeline of every frame is known to the
+/// deterministic mirror before any thread spawns, and counters, backoff
+/// clocks, and trace events are byte-identical at any thread count.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TransportFaultPlan {
+    /// Probability an attempt is dropped outright.
+    pub drop_p: f64,
+    /// Probability an attempt arrives with one flipped bit.
+    pub corrupt_p: f64,
+    /// Probability an attempt is delayed by [`DELAY_NS`] (still delivered).
+    pub delay_p: f64,
+    /// Seed for the per-attempt fate stream.
+    pub seed: u64,
+    /// Retransmissions per frame before the destination is declared dead.
+    pub retry_max: u32,
+    /// Per-frame virtual-backoff budget; exceeding it declares the
+    /// destination dead even with retries remaining.
+    pub timeout_ns: u64,
+}
+
+impl TransportFaultPlan {
+    /// Plan with the given loss probabilities and default retry/timeout
+    /// policy.
+    pub fn new(drop_p: f64, corrupt_p: f64, seed: u64) -> Self {
+        Self {
+            drop_p,
+            corrupt_p,
+            delay_p: 0.0,
+            seed,
+            retry_max: DEFAULT_RETRY_MAX,
+            timeout_ns: DEFAULT_TIMEOUT_NS,
+        }
+    }
+
+    /// Builder-style delay probability.
+    pub fn with_delay(mut self, p: f64) -> Self {
+        self.delay_p = p;
+        self
+    }
+
+    /// Builder-style retry budget.
+    pub fn with_retry_max(mut self, n: u32) -> Self {
+        self.retry_max = n;
+        self
+    }
+
+    /// Builder-style per-frame delivery deadline.
+    pub fn with_timeout_ns(mut self, ns: u64) -> Self {
+        self.timeout_ns = ns;
+        self
+    }
+
+    /// Independent stream id for one `(src, dst, seq, attempt)` draw.
+    fn stream(src: usize, dst: usize, seq: u64, attempt: u32) -> u64 {
+        ((src as u64) << 52)
+            ^ ((dst as u64) << 40)
+            ^ ((seq & 0xFFFF_FFFF) << 8)
+            ^ u64::from(attempt & 0xFF)
+    }
+
+    /// Fate of one send attempt (pure function — see type docs).
+    pub fn fate(&self, src: usize, dst: usize, seq: u64, attempt: u32) -> AttemptFate {
+        let u = SplitRng::new(self.seed, Self::stream(src, dst, seq, attempt)).uniform();
+        if u < self.drop_p {
+            AttemptFate::Drop
+        } else if u < self.drop_p + self.corrupt_p {
+            AttemptFate::Corrupt
+        } else if u < self.drop_p + self.corrupt_p + self.delay_p {
+            AttemptFate::Delay
+        } else {
+            AttemptFate::Deliver
+        }
+    }
+
+    /// Deterministic bit position flipped by a corrupt attempt on a
+    /// frame of `nbits` bits.
+    pub fn corrupt_bit(&self, src: usize, dst: usize, seq: u64, attempt: u32, nbits: u64) -> u64 {
+        SplitRng::new(self.seed ^ 0xB17_F11F, Self::stream(src, dst, seq, attempt))
+            .below(nbits.max(1))
+    }
+}
+
+/// One fault-plan decision on the retry timeline, in deterministic mirror
+/// order. Rendered as chrome-only `FrameDropped` / `FrameRetried` trace
+/// events by the engines.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum FrameFault {
+    /// Attempt `attempt` of frame `(src, dst, seq)` was lost — dropped
+    /// outright, or (when `corrupt`) physically sent with one flipped bit
+    /// and rejected by the receiver's frame checksum.
+    Dropped { src: usize, dst: usize, seq: u64, attempt: u32, corrupt: bool },
+    /// The frame was retransmitted as attempt `attempt` after
+    /// `backoff_ns` of virtual exponential backoff.
+    Retried { src: usize, dst: usize, seq: u64, attempt: u32, backoff_ns: u64 },
+}
+
+/// Structured failure of a lossy transport run: every retry toward a
+/// destination exhausted (retry budget or delivery deadline), so the
+/// destination is declared dead. Returned before any physical frame
+/// moves — the timeline is fully known to the deterministic mirror — so
+/// the caller can degrade gracefully instead of hanging.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TransportError {
+    /// Destination declared dead.
+    pub node: usize,
+    /// Sender that gave up.
+    pub src: usize,
+    /// Frame sequence number that exhausted its budget.
+    pub seq: u64,
+    /// Send attempts consumed (initial send + retries).
+    pub attempts: u32,
+    /// Virtual backoff accumulated on the fatal frame.
+    pub backoff_ns: u64,
+}
+
+impl std::fmt::Display for TransportError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "transport: node {} timed out (frame {}->{} seq {}: {} attempts, {} ns backoff)",
+            self.node, self.src, self.node, self.seq, self.attempts, self.backoff_ns
+        )
+    }
+}
+
+impl std::error::Error for TransportError {}
 
 /// Per-(src → dst) frame tallies, for `FrameSent`/`TransportStall`
 /// trace events. Cross-node pairs with traffic only, src-major order.
@@ -78,17 +249,42 @@ pub struct TransportTotals {
     pub queue_peak_bytes: u64,
     /// Wall-clock nanoseconds spent in transport (measured).
     pub wall_ns: u64,
+    /// Retransmissions under a fault plan (`transport.retries` —
+    /// deterministic mirror count).
+    pub retries: u64,
+    /// Attempts dropped outright (`transport.drops` — deterministic).
+    pub drops: u64,
+    /// Attempts corrupted and checksum-rejected (`transport.corrupt` —
+    /// deterministic).
+    pub corrupt: u64,
+    /// Destinations declared dead by retry/deadline exhaustion
+    /// (`transport.timeouts`). Zero on every successful run; set by the
+    /// engine when it absorbs a [`TransportError`].
+    pub timeouts: u64,
+    /// Virtual backoff accumulated by the busiest sender (ns) — the
+    /// length of the `transport-backoff` virtual-time phase.
+    pub backoff_ns: u64,
+    /// True when a fault plan was active (the engines record the
+    /// `transport.{retries,drops,corrupt,timeouts}` counter family only
+    /// for faulted runs, so lossless runs keep their counter set).
+    pub faulted: bool,
 }
 
 impl TransportTotals {
-    /// Accumulate another phase/round: counts and wall time add, queue
-    /// peak takes the max.
+    /// Accumulate another phase/round: counts, wall time, and backoff
+    /// add, queue peak takes the max.
     pub fn merge(&mut self, other: TransportTotals) {
         self.frames += other.frames;
         self.bytes += other.bytes;
         self.stalls += other.stalls;
         self.queue_peak_bytes = self.queue_peak_bytes.max(other.queue_peak_bytes);
         self.wall_ns += other.wall_ns;
+        self.retries += other.retries;
+        self.drops += other.drops;
+        self.corrupt += other.corrupt;
+        self.timeouts += other.timeouts;
+        self.backoff_ns += other.backoff_ns;
+        self.faulted |= other.faulted;
     }
 }
 
@@ -129,6 +325,25 @@ pub struct TransportResult {
     /// threads. Surfaces as the `wall.transport.frame_wait_ns` histogram
     /// — measured time, observability only, never gated.
     pub frame_wait: Histogram,
+    /// Fault-plan decisions in deterministic mirror order (empty without
+    /// a plan). Feeds the chrome-only `FrameDropped`/`FrameRetried`
+    /// trace events.
+    pub faults: Vec<FrameFault>,
+    /// Retransmissions the mirror scheduled (`transport.retries`).
+    pub retries: u64,
+    /// Attempts the mirror dropped (`transport.drops`).
+    pub drops: u64,
+    /// Attempts the mirror corrupted (`transport.corrupt`).
+    pub corrupt: u64,
+    /// Corrupted physical frames the *receivers* actually rejected via
+    /// the frame checksum. Equals `corrupt` on every run — the physical
+    /// plane really sent each corrupted copy and really rejected it —
+    /// and the transport tests assert the equality.
+    pub corrupt_rejects: u64,
+    /// Virtual backoff of the busiest sender (ns).
+    pub backoff_ns: u64,
+    /// True when a fault plan was active.
+    pub faulted: bool,
 }
 
 impl TransportResult {
@@ -140,6 +355,12 @@ impl TransportResult {
             stalls: self.stalls,
             queue_peak_bytes: self.queue_peak_bytes,
             wall_ns: self.wall_ns,
+            retries: self.retries,
+            drops: self.drops,
+            corrupt: self.corrupt,
+            timeouts: 0,
+            backoff_ns: self.backoff_ns,
+            faulted: self.faulted,
         }
     }
 }
@@ -179,6 +400,146 @@ pub fn execute_pooled(
     window_bytes: u64,
     scratch: &Scratch<'_, u8>,
 ) -> TransportResult {
+    execute_inner(payloads, window_bytes, scratch, None)
+        .expect("lossless transport cannot time out")
+}
+
+/// [`execute_pooled`] under a [`TransportFaultPlan`]: every physical
+/// frame travels as a checksummed [`crate::ser::fastser`] frame, attempts
+/// are dropped / bit-flipped / delayed per the plan, corrupted arrivals
+/// are rejected by the receivers' frame checksum, and the sender
+/// retransmits with capped exponential (virtual) backoff. Delivered
+/// payloads, flows, stalls, and `peak_in_flight_bytes` remain
+/// byte-identical to the lossless transport — reliability costs surface
+/// only in the `retries`/`drops`/`corrupt` counters, the virtual backoff
+/// clock, and the fault records. Returns [`TransportError`] — before any
+/// physical frame moves, so never a hang — when some frame's retry
+/// budget or delivery deadline exhausts.
+pub fn execute_lossy(
+    payloads: ShufflePayloads,
+    window_bytes: u64,
+    plan: &TransportFaultPlan,
+    scratch: &Scratch<'_, u8>,
+) -> Result<TransportResult, TransportError> {
+    execute_inner(payloads, window_bytes, scratch, Some(plan))
+}
+
+/// Deterministic retry timeline of one frame under a fault plan.
+#[derive(Debug, Default)]
+struct FrameTimeline {
+    /// Attempts physically sent as bit-flipped copies.
+    corrupt_attempts: Vec<u32>,
+    /// Fault records in attempt order.
+    faults: Vec<FrameFault>,
+    drops: u64,
+    corrupt: u64,
+    retries: u64,
+    /// Virtual backoff accumulated across this frame's retries.
+    backoff_ns: u64,
+    /// Final attempt delivered with the extra [`DELAY_NS`] charge.
+    delayed: bool,
+}
+
+/// Walk attempts `0, 1, …` of frame `(src, dst, seq)` until one
+/// delivers, or the retry budget / delivery deadline exhausts.
+fn frame_timeline(
+    plan: &TransportFaultPlan,
+    src: usize,
+    dst: usize,
+    seq: u64,
+) -> Result<FrameTimeline, TransportError> {
+    let mut tl = FrameTimeline::default();
+    let mut attempt = 0u32;
+    loop {
+        match plan.fate(src, dst, seq, attempt) {
+            AttemptFate::Deliver => return Ok(tl),
+            AttemptFate::Delay => {
+                tl.delayed = true;
+                return Ok(tl);
+            }
+            bad => {
+                let corrupt = bad == AttemptFate::Corrupt;
+                if corrupt {
+                    tl.corrupt += 1;
+                    tl.corrupt_attempts.push(attempt);
+                } else {
+                    tl.drops += 1;
+                }
+                tl.faults.push(FrameFault::Dropped { src, dst, seq, attempt, corrupt });
+                if attempt >= plan.retry_max {
+                    return Err(TransportError {
+                        node: dst,
+                        src,
+                        seq,
+                        attempts: attempt + 1,
+                        backoff_ns: tl.backoff_ns,
+                    });
+                }
+                attempt += 1;
+                let b = backoff_ns(attempt);
+                tl.backoff_ns += b;
+                if tl.backoff_ns > plan.timeout_ns {
+                    return Err(TransportError {
+                        node: dst,
+                        src,
+                        seq,
+                        attempts: attempt,
+                        backoff_ns: tl.backoff_ns,
+                    });
+                }
+                tl.retries += 1;
+                tl.faults.push(FrameFault::Retried { src, dst, seq, attempt, backoff_ns: b });
+            }
+        }
+    }
+}
+
+/// Fault bookkeeping accumulated across the mirror loop.
+struct FaultAcc {
+    faults: Vec<FrameFault>,
+    retries: u64,
+    drops: u64,
+    corrupt: u64,
+    backoff_per_src: Vec<u64>,
+}
+
+/// Run one frame's fault timeline and push its physical sends: each
+/// corrupted attempt as a bit-flipped checksummed copy, then the one
+/// good checksummed frame. Dropped attempts are never physically sent.
+fn push_lossy(
+    plan: &TransportFaultPlan,
+    scratch: &Scratch<'_, u8>,
+    sends: &mut Vec<Frame>,
+    src: usize,
+    dst: usize,
+    seq: u64,
+    chunk: &[u8],
+    acc: &mut FaultAcc,
+) -> Result<(), TransportError> {
+    let tl = frame_timeline(plan, src, dst, seq)?;
+    let framed = encode_frame_into(chunk, scratch.get(FRAME_HEADER_BYTES + chunk.len()));
+    for &attempt in &tl.corrupt_attempts {
+        let mut bad = scratch.get(framed.len());
+        bad.extend_from_slice(&framed);
+        let bit = plan.corrupt_bit(src, dst, seq, attempt, (framed.len() as u64) * 8);
+        bad[(bit / 8) as usize] ^= 1 << (bit % 8);
+        sends.push(Frame { src, dst, seq, payload: bad });
+    }
+    sends.push(Frame { src, dst, seq, payload: framed });
+    acc.faults.extend(tl.faults);
+    acc.retries += tl.retries;
+    acc.drops += tl.drops;
+    acc.corrupt += tl.corrupt;
+    acc.backoff_per_src[src] += tl.backoff_ns + if tl.delayed { DELAY_NS } else { 0 };
+    Ok(())
+}
+
+fn execute_inner(
+    payloads: ShufflePayloads,
+    window_bytes: u64,
+    scratch: &Scratch<'_, u8>,
+    plan: Option<&TransportFaultPlan>,
+) -> Result<TransportResult, TransportError> {
     let n = payloads.len();
     let start = Instant::now();
 
@@ -194,6 +555,13 @@ pub fn execute_pooled(
     let mut bytes_total = 0u64;
     let mut pair_stats: Vec<PairStats> = Vec::new();
     let mut in_flight_samples: Vec<(usize, u64)> = Vec::new();
+    let mut acc = FaultAcc {
+        faults: Vec::new(),
+        retries: 0,
+        drops: 0,
+        corrupt: 0,
+        backoff_per_src: vec![0; n],
+    };
 
     for (src, dsts) in payloads.into_iter().enumerate() {
         assert_eq!(dsts.len(), n, "payload matrix must be n x n");
@@ -214,7 +582,14 @@ pub fn execute_pooled(
                 window.push(pair_bytes);
                 in_flight_samples.push((src, window.in_flight()));
                 flows.record(src, dst, pair_bytes);
-                sends[src].push(Frame { src, dst, seq, payload });
+                match plan {
+                    None => sends[src].push(Frame { src, dst, seq, payload }),
+                    Some(pl) => {
+                        push_lossy(pl, scratch, &mut sends[src], src, dst, seq, &payload, &mut acc)?;
+                        // The original served only as the framing source.
+                        scratch.put(payload);
+                    }
+                }
                 seq += 1;
                 pair_frames += 1;
                 window.drain(pair_bytes);
@@ -223,9 +598,16 @@ pub fn execute_pooled(
                     window.push(chunk.len() as u64);
                     in_flight_samples.push((src, window.in_flight()));
                     flows.record(src, dst, chunk.len() as u64);
-                    let mut copy = scratch.get(chunk.len());
-                    copy.extend_from_slice(chunk);
-                    sends[src].push(Frame { src, dst, seq, payload: copy });
+                    match plan {
+                        None => {
+                            let mut copy = scratch.get(chunk.len());
+                            copy.extend_from_slice(chunk);
+                            sends[src].push(Frame { src, dst, seq, payload: copy });
+                        }
+                        Some(pl) => {
+                            push_lossy(pl, scratch, &mut sends[src], src, dst, seq, chunk, &mut acc)?;
+                        }
+                    }
                     seq += 1;
                     pair_frames += 1;
                     window.drain(chunk.len() as u64);
@@ -248,11 +630,16 @@ pub fn execute_pooled(
     }
 
     // Physically move the cross-node frames: one bounded channel per
-    // destination, one sender thread per source with traffic.
+    // destination, one sender thread per source with traffic. Under a
+    // fault plan every frame travels checksummed and receivers verify
+    // before accepting — a corrupted copy is really rejected, and only
+    // the one good copy of each (src, seq) survives to delivery.
+    let lossy = plan.is_some();
     let queue_peak = AtomicU64::new(0);
+    let corrupt_rejects = AtomicU64::new(0);
     let frame_wait_shared = Mutex::new(Histogram::new());
     let mut received: Vec<Vec<(usize, u64, Vec<u8>)>> = (0..n).map(|_| Vec::new()).collect();
-    if frames_total > 0 {
+    if sends.iter().any(|s| !s.is_empty()) {
         let cap = ((window_bytes as usize) / CHUNK_BYTES).max(1);
         let queued = AtomicU64::new(0);
         let mut txs = Vec::with_capacity(n);
@@ -266,9 +653,17 @@ pub fn execute_pooled(
         std::thread::scope(|scope| {
             for (rx, slot) in rxs.into_iter().zip(recv_slots) {
                 let queued = &queued;
+                let corrupt_rejects = &corrupt_rejects;
                 scope.spawn(move || {
-                    while let Ok(frame) = rx.recv() {
+                    while let Ok(mut frame) = rx.recv() {
                         queued.fetch_sub(frame.payload.len() as u64, Ordering::Relaxed);
+                        if lossy {
+                            if decode_frame(&frame.payload).is_err() {
+                                corrupt_rejects.fetch_add(1, Ordering::Relaxed);
+                                continue;
+                            }
+                            frame.payload.drain(..FRAME_HEADER_BYTES);
+                        }
                         slot.push((frame.src, frame.seq, frame.payload));
                     }
                 });
@@ -312,7 +707,7 @@ pub fn execute_pooled(
         delivered[dst].extend(frames.into_iter().map(|(src, _, payload)| (src, payload)));
     }
 
-    TransportResult {
+    Ok(TransportResult {
         flows,
         delivered,
         peak_in_flight_bytes: peak,
@@ -324,7 +719,14 @@ pub fn execute_pooled(
         pair_stats,
         in_flight_samples,
         frame_wait: frame_wait_shared.into_inner().expect("frame-wait lock"),
-    }
+        faults: acc.faults,
+        retries: acc.retries,
+        drops: acc.drops,
+        corrupt: acc.corrupt,
+        corrupt_rejects: corrupt_rejects.load(Ordering::Relaxed),
+        backoff_ns: acc.backoff_per_src.into_iter().max().unwrap_or(0),
+        faulted: lossy,
+    })
 }
 
 #[cfg(test)]
@@ -421,6 +823,164 @@ mod tests {
         assert!(real.in_flight_samples.is_empty());
         assert!(real.frame_wait.is_empty(), "no frames, no wait records");
         assert_eq!(real.frame_wait.encode(), "0:0:0|", "empty histogram exports cleanly");
+    }
+
+    // ---- Lossy transport -------------------------------------------------
+
+    fn lossy_payloads() -> ShufflePayloads {
+        let n = 4;
+        let mut p = payloads(n);
+        for src in 0..n {
+            for dst in 0..n {
+                if src != dst {
+                    p[src][dst] = (0..200 + src * 17 + dst * 5).map(|i| i as u8).collect();
+                }
+            }
+        }
+        p[1][1] = vec![42; 9]; // a local rides along untouched
+        p
+    }
+
+    fn run_lossy(plan: &TransportFaultPlan) -> TransportResult {
+        let pool = BufferPool::new();
+        let scratch = Scratch::new(AllocMode::System, &pool);
+        execute_lossy(lossy_payloads(), 1 << 20, plan, &scratch).expect("plan survivable")
+    }
+
+    /// Loss, corruption, and delay change nothing the determinism gates
+    /// see: delivered payloads, flows, stalls, and peak are byte-identical
+    /// to the lossless transport; the cost surfaces only in the fault
+    /// counters and the virtual backoff clock.
+    #[test]
+    fn lossy_delivery_is_byte_identical_to_lossless() {
+        let plan = TransportFaultPlan::new(0.3, 0.1, 77).with_delay(0.05).with_retry_max(16);
+        let clean = execute(lossy_payloads(), 1 << 20);
+        let noisy = run_lossy(&plan);
+        assert_eq!(noisy.delivered, clean.delivered);
+        assert_eq!(noisy.flows.total_bytes(), clean.flows.total_bytes());
+        assert_eq!(noisy.stalls, clean.stalls);
+        assert_eq!(noisy.peak_in_flight_bytes, clean.peak_in_flight_bytes);
+        assert_eq!(noisy.frames, clean.frames, "frames counts the payload mirror");
+        assert_eq!(noisy.bytes, clean.bytes);
+        // 12 cross frames under 25% loss: overwhelmingly likely ≥ 1 retry.
+        assert!(noisy.retries > 0, "seed 77 must exercise the retry path");
+        assert_eq!(
+            noisy.retries,
+            noisy.drops + noisy.corrupt,
+            "every failed attempt schedules exactly one retry"
+        );
+        assert!(noisy.faulted && !clean.faulted);
+    }
+
+    /// The receiver really rejects every corrupted physical frame: the
+    /// measured reject count equals the mirror's corrupt count exactly.
+    #[test]
+    fn receivers_reject_exactly_the_corrupted_frames() {
+        let plan = TransportFaultPlan::new(0.0, 0.4, 123).with_retry_max(16);
+        let noisy = run_lossy(&plan);
+        assert!(noisy.corrupt > 0, "seed 123 at 40% must corrupt something");
+        assert_eq!(noisy.corrupt_rejects, noisy.corrupt);
+        assert_eq!(noisy.drops, 0);
+        // Fault records pair up: one Dropped{corrupt:true} per corrupt
+        // attempt, one Retried per retry.
+        let dropped = noisy
+            .faults
+            .iter()
+            .filter(|f| matches!(f, FrameFault::Dropped { corrupt: true, .. }))
+            .count() as u64;
+        let retried =
+            noisy.faults.iter().filter(|f| matches!(f, FrameFault::Retried { .. })).count() as u64;
+        assert_eq!(dropped, noisy.corrupt);
+        assert_eq!(retried, noisy.retries);
+    }
+
+    /// Same plan, two runs: counters, fault records, and backoff clocks
+    /// are identical — the timeline is a pure function of the seed.
+    #[test]
+    fn lossy_runs_are_deterministic() {
+        let plan = TransportFaultPlan::new(0.15, 0.1, 9).with_delay(0.1).with_retry_max(16);
+        let a = run_lossy(&plan);
+        let b = run_lossy(&plan);
+        assert_eq!(a.delivered, b.delivered);
+        assert_eq!(
+            (a.retries, a.drops, a.corrupt, a.backoff_ns),
+            (b.retries, b.drops, b.corrupt, b.backoff_ns)
+        );
+        assert_eq!(a.faults, b.faults);
+        // The timeline accounting matches replaying the pure fate
+        // function over the recorded fault stream.
+        for f in &a.faults {
+            if let FrameFault::Dropped { src, dst, seq, attempt, corrupt } = *f {
+                let fate = plan.fate(src, dst, seq, attempt);
+                assert_eq!(fate == AttemptFate::Corrupt, corrupt, "fault record matches fate");
+                assert!(matches!(fate, AttemptFate::Drop | AttemptFate::Corrupt));
+            }
+        }
+    }
+
+    /// drop = 1.0 exhausts the retry budget on the very first frame: a
+    /// structured error, returned before any thread spawns — no hang, no
+    /// panic, no partial delivery.
+    #[test]
+    fn retry_exhaustion_is_a_structured_error() {
+        let plan = TransportFaultPlan::new(1.0, 0.0, 1).with_retry_max(3);
+        let pool = BufferPool::new();
+        let scratch = Scratch::new(AllocMode::System, &pool);
+        let err = execute_lossy(lossy_payloads(), 1 << 20, &plan, &scratch).unwrap_err();
+        assert_eq!(err.attempts, 4, "initial send + retry_max retries");
+        assert_eq!(err.src, 0);
+        assert_eq!(err.node, 1, "first cross frame in mirror order is 0→1");
+        let msg = err.to_string();
+        assert!(msg.contains("timed out"), "{msg}");
+    }
+
+    /// A tiny delivery deadline trips before the retry budget does.
+    #[test]
+    fn delivery_deadline_beats_retry_budget() {
+        let plan = TransportFaultPlan::new(1.0, 0.0, 1).with_retry_max(1000).with_timeout_ns(1);
+        let pool = BufferPool::new();
+        let scratch = Scratch::new(AllocMode::System, &pool);
+        let err = execute_lossy(lossy_payloads(), 1 << 20, &plan, &scratch).unwrap_err();
+        assert_eq!(err.attempts, 1, "first backoff already exceeds the deadline");
+        assert!(err.backoff_ns > plan.timeout_ns);
+    }
+
+    /// Fault-free plan: identical to lossless in every observable except
+    /// the checksummed wire format (which the receiver strips).
+    #[test]
+    fn zero_probability_plan_is_transparent() {
+        let plan = TransportFaultPlan::new(0.0, 0.0, 5);
+        let clean = execute(lossy_payloads(), 1 << 20);
+        let noisy = run_lossy(&plan);
+        assert_eq!(noisy.delivered, clean.delivered);
+        assert_eq!((noisy.retries, noisy.drops, noisy.corrupt, noisy.backoff_ns), (0, 0, 0, 0));
+        assert!(noisy.faults.is_empty());
+        assert_eq!(noisy.corrupt_rejects, 0);
+    }
+
+    /// Chunked payloads frame per chunk; loss on individual chunks still
+    /// reassembles the exact payload.
+    #[test]
+    fn lossy_chunked_payload_reassembles() {
+        let mut p = payloads(2);
+        p[0][1] = (0..CHUNK_BYTES * 2 + 7).map(|i| (i * 31) as u8).collect();
+        let clean = shuffle::execute(p.clone(), 1 << 20);
+        let plan = TransportFaultPlan::new(0.3, 0.1, 4242).with_retry_max(16);
+        let pool = BufferPool::new();
+        let scratch = Scratch::new(AllocMode::System, &pool);
+        let noisy = execute_lossy(p, 1 << 20, &plan, &scratch).expect("survivable");
+        assert_eq!(noisy.delivered, clean.delivered);
+        assert_eq!(noisy.frames, 3);
+    }
+
+    /// Exponential backoff doubles up to the cap.
+    #[test]
+    fn backoff_schedule_doubles_and_caps() {
+        assert_eq!(backoff_ns(1), BACKOFF_BASE_NS);
+        assert_eq!(backoff_ns(2), BACKOFF_BASE_NS * 2);
+        assert_eq!(backoff_ns(3), BACKOFF_BASE_NS * 4);
+        assert_eq!(backoff_ns(40), BACKOFF_CAP_NS);
+        assert!(backoff_ns(7) <= BACKOFF_CAP_NS);
     }
 
     /// Many sources hammering one destination through a one-frame-deep

@@ -42,6 +42,23 @@
 //! what preserves the paper's "targets are merged into, never cleared"
 //! semantics without double counting.
 //!
+//! **Mid-block kills.** An [`FailureTrigger::AtItem`] trigger has
+//! sub-task granularity: it comes due the moment its block's map attempt
+//! finishes, *before* any of that output can commit. When the victim is
+//! the node executing the block, the attempt is aborted — the serial
+//! path and the pool worker stop mapping at the doomed item, the partial
+//! block-local reduction is discarded wholesale (never reaching a
+//! shard; see [`crate::exec::cache::EagerCache::poison`] for the
+//! threaded cache contract), and the block re-enters `pending` so kill
+//! step (1) reassigns it to a survivor. The aborted attempt contributes
+//! **zero** to every gated counter; only the canonical `MidblockAbort`
+//! event, the `fault.midblock_aborts` counter, and a deterministic
+//! trigger-clock charge of `min(item, block_items)` record it — so
+//! failure and failure-free runs stay byte-identical at any thread
+//! count. A kill whose victim is *not* the executing node still runs the
+//! ordinary machinery mid-block; the block's own commit then proceeds
+//! under post-restore routing.
+//!
 //! **Evacuation policy.** With [`FaultConfig::evacuate`](super::FaultConfig)
 //! set (CLI `--evacuate`), step (2)'s hot standby is only transitional:
 //! once the dead node's rollback replays drain, the engine re-homes its
@@ -81,7 +98,7 @@ use std::time::Instant;
 
 use crate::exec::pool;
 
-use crate::coordinator::cluster::EngineKind;
+use crate::coordinator::cluster::{Cluster, EngineKind};
 use crate::coordinator::metrics::RunStats;
 use crate::mapreduce::reducers::Reducer;
 use crate::mapreduce::{BlockCursor, DistInput, Emit, ReduceTarget, RunRecorder};
@@ -119,6 +136,10 @@ pub(crate) struct FtStats {
     pub evacuations: usize,
     /// Bytes migrated by recovery-time evacuation.
     pub evacuation_bytes: u64,
+    /// Map attempts aborted mid-block by sub-task (`AtItem`) kills. Each
+    /// aborted attempt's partials were discarded wholesale — they
+    /// contribute zero to every gated counter.
+    pub midblock_aborts: usize,
 }
 
 /// A block waiting to execute (or re-execute).
@@ -195,6 +216,114 @@ where
     (items, emitted, pairs)
 }
 
+/// Mutable engine state the kill machinery threads through
+/// [`inject_kill`] — bundled so the commit-boundary trigger loop and the
+/// mid-block abort pass drive the exact same steps (1)–(4).
+struct KillCtx<'a> {
+    nodes: usize,
+    alive: &'a mut [bool],
+    stats: &'a mut FtStats,
+    pending: &'a mut BTreeMap<usize, PendingBlock>,
+    rr: &'a mut usize,
+    latest: &'a Checkpoint,
+    restore_flows: &'a mut FlowMatrix,
+    ledger: &'a mut Ledger,
+    trace: &'a mut TraceBuf,
+    evacuate_on: bool,
+    evac_queue: &'a mut Vec<usize>,
+}
+
+/// Kill node `d` now: validity check (driver / range / liveness), then
+/// the recovery timeline — (1) reassign the victim's pending map blocks
+/// round-robin to survivors, (2) lose its shard and restore it from the
+/// latest checkpoint, (3) roll back its post-checkpoint commits into
+/// replays, (4) queue it for evacuation under that policy. Shared by the
+/// commit-boundary trigger loop and the mid-block (`AtItem`) abort pass
+/// so both granularities drive one machinery. Returns whether the kill
+/// was injected (`false` ⇒ `KillIgnored`).
+fn inject_kill<T: Recover + ?Sized>(
+    label: &str,
+    cluster: &Cluster,
+    target: &mut T,
+    d: usize,
+    ctx: KillCtx<'_>,
+) -> bool {
+    if d == 0 || d >= ctx.nodes || !ctx.alive[d] {
+        ctx.stats.failures_ignored += 1;
+        let ev_t =
+            TraceEvent::new(d, None, "map+block-reduce", TraceEventKind::KillIgnored { victim: d });
+        let note = ev_t.render_note(label).expect("KillIgnored renders a note");
+        cluster.metrics().record_note(note);
+        ctx.trace.push(ev_t);
+        return false;
+    }
+    ctx.alive[d] = false;
+    ctx.stats.failures += 1;
+
+    // (1) Reassign the dead node's pending map blocks to survivors.
+    let orphaned: Vec<usize> =
+        ctx.pending.iter().filter(|(_, pb)| pb.exec_node == d).map(|(&b2, _)| b2).collect();
+    for b2 in orphaned {
+        let s = next_alive_rr(ctx.alive, ctx.rr);
+        ctx.pending.get_mut(&b2).expect("orphaned block pending").exec_node = s;
+        ctx.stats.blocks_reassigned += 1;
+    }
+
+    // (2) Lose the shard, restore it from the latest checkpoint —
+    // fetched from the driver replica (node 0 holds every shard's
+    // checkpoint and is never killed, so the source always exists).
+    target.lose_shard(d);
+    let restored =
+        ctx.latest.restore_shard_into(target, d).expect("checkpoint shard must decode");
+    if restored > 0 {
+        ctx.restore_flows.record(0, d, restored);
+        ctx.stats.restore_bytes += restored;
+    }
+    ctx.trace.push(TraceEvent::new(
+        d,
+        None,
+        "map+block-reduce",
+        TraceEventKind::Kill { victim: d, restore_bytes: restored },
+    ));
+
+    // (3) Roll back post-checkpoint commits into that shard and replay
+    // their blocks on survivors (only the lost shard's partial
+    // re-reduces; the ledger keeps every other shard's).
+    let rollback: Vec<usize> = ctx
+        .ledger
+        .iter()
+        .filter(|&&(b2, dst)| dst == d && !ctx.latest.ledger.contains(&(b2, dst)))
+        .map(|&(b2, _)| b2)
+        .collect();
+    for b2 in rollback {
+        ctx.ledger.remove(&(b2, d));
+        ctx.stats.blocks_replayed += 1;
+        ctx.trace.push(TraceEvent::new(
+            d,
+            None,
+            "map+block-reduce",
+            TraceEventKind::Rollback { block: b2, shard: d },
+        ));
+        let s = next_alive_rr(ctx.alive, ctx.rr);
+        ctx.pending
+            .entry(b2)
+            .and_modify(|pb| {
+                if let Some(set) = pb.only.as_mut() {
+                    set.insert(d);
+                }
+            })
+            .or_insert_with(|| PendingBlock { exec_node: s, only: Some(BTreeSet::from([d])) });
+    }
+
+    // (4) Under the evacuation policy the hot standby is only
+    // transitional: queue the victim for re-homing once its rollback
+    // replays drain.
+    if ctx.evacuate_on {
+        ctx.evac_queue.push(d);
+    }
+    true
+}
+
 /// Deterministic round-robin pick over live nodes.
 fn next_alive_rr(alive: &[bool], rr: &mut usize) -> usize {
     let n = alive.len();
@@ -259,6 +388,10 @@ where
         .map(|b| (b, PendingBlock { exec_node: b / workers, only: None }))
         .collect();
     let mut exec_epoch = vec![0u32; n_blocks];
+    // A block's *first successful commit* is what advances the trigger
+    // and checkpoint cadences ("fresh"): epochs can be consumed by
+    // mid-block-aborted attempts, so epoch 1 is not a reliable marker.
+    let mut committed_once = vec![false; n_blocks];
     let mut fired = vec![false; fault.plan.events().len()];
     // Once-per-sequence plans: seed fired flags from the cluster's
     // persisted state so a kill already injected by an earlier job in the
@@ -316,6 +449,24 @@ where
         let (home, w) = (b / workers, b % workers);
         exec_epoch[b] += 1;
 
+        // Will an AtItem kill interrupt this very attempt? Resolved
+        // before execution — trigger state and exec-node attribution are
+        // both fixed by now — so the serial path and the pool worker can
+        // genuinely stop mapping at the doomed item. Whatever prefix the
+        // victim maps, the abort pass below discards it wholesale.
+        let abort_at: Option<u64> = fault.plan.events().iter().enumerate().find_map(|(i, ev)| {
+            if fired[i] {
+                return None;
+            }
+            let FailureTrigger::AtItem { block, item } = ev.trigger else { return None };
+            (block == b
+                && ev.node == p.exec_node
+                && ev.node != 0
+                && ev.node < nodes
+                && alive[ev.node])
+                .then_some(item)
+        });
+
         // ---- Execute block `b` on `p.exec_node` -------------------------
         // The RNG stream is keyed by the block's *home* identity, matching
         // the ordinary engines, so re-execution elsewhere is identical.
@@ -337,14 +488,36 @@ where
                     cursors[home] = Some((cur, w));
                 }
                 let (cur, next) = cursors[home].as_mut().expect("cursor installed");
-                let (items, emitted, pairs) = map_block(
-                    |f| {
-                        cur.next_block(|k, v| f(k, v));
-                    },
-                    mapper,
-                    red,
-                    conventional,
-                );
+                let (items, emitted, pairs) = match abort_at {
+                    None => map_block(
+                        |f| {
+                            cur.next_block(|k, v| f(k, v));
+                        },
+                        mapper,
+                        red,
+                        conventional,
+                    ),
+                    // Doomed attempt: the whole block still walks (the
+                    // cursor discipline is unchanged) but only the prefix
+                    // the victim reaches before dying is mapped.
+                    Some(stop) => {
+                        let mut walked = 0u64;
+                        let (_, emitted, pairs) = map_block(
+                            |f| {
+                                cur.next_block(|k, v| {
+                                    if walked < stop {
+                                        f(k, v);
+                                    }
+                                    walked += 1;
+                                });
+                            },
+                            mapper,
+                            red,
+                            conventional,
+                        );
+                        (walked, emitted, pairs)
+                    }
+                };
                 *next = w + 1;
                 MappedBlock { items, emitted, pairs, exec_secs: t0.elapsed().as_secs_f64() }
             }
@@ -387,16 +560,39 @@ where
                         // Same home-keyed stream as the serial path, on
                         // whichever OS thread stole the block.
                         crate::util::random::set_stream(seed, b2 as u64);
-                        let (n_items, emitted, pairs) = map_block(
-                            |f| {
-                                for (k, v) in &items {
-                                    f(k, v);
-                                }
-                            },
-                            mapper,
-                            red,
-                            conventional,
-                        );
+                        // Only the head block `b` can be a doomed attempt
+                        // (its exec-node attribution is fixed by now);
+                        // speculative blocks always map in full — their
+                        // output stays valid wherever commit-time
+                        // attribution lands them. The pool worker
+                        // genuinely stops mapping at the kill item; the
+                        // abort pass discards the prefix it produced.
+                        let stop = if b2 == b { abort_at } else { None };
+                        let (n_items, emitted, pairs) = match stop {
+                            None => map_block(
+                                |f| {
+                                    for (k, v) in &items {
+                                        f(k, v);
+                                    }
+                                },
+                                mapper,
+                                red,
+                                conventional,
+                            ),
+                            Some(stop) => {
+                                let (_, emitted, pairs) = map_block(
+                                    |f| {
+                                        for (k, v) in items.iter().take(stop as usize) {
+                                            f(k, v);
+                                        }
+                                    },
+                                    mapper,
+                                    red,
+                                    conventional,
+                                );
+                                (items.len() as u64, emitted, pairs)
+                            }
+                        };
                         debug_assert_eq!(n_items, items.len() as u64);
                         mapped_out.lock().expect("map batch poisoned").insert(
                             b2,
@@ -430,6 +626,70 @@ where
                 spec.remove(&b).expect("map batch buffers every pending block")
             }
         };
+        // ---- Mid-block failure triggers (sub-task granularity) ----------
+        // An AtItem trigger for block `b` comes due the moment `b`'s map
+        // attempt finishes — before any of its output can commit. When
+        // the victim is the executing node, the attempt is discarded
+        // wholesale: partial block-local reductions never reach a shard,
+        // gated counters see nothing, and the block re-enters `pending`
+        // still attributed to the victim so kill step (1) reassigns it
+        // to a survivor. A kill with any other victim runs the ordinary
+        // machinery; `b`'s own commit then proceeds under post-restore
+        // routing (hot-standby restore never changes key routing).
+        let mut aborted = false;
+        for (i, ev) in fault.plan.events().iter().enumerate() {
+            if fired[i] {
+                continue;
+            }
+            let FailureTrigger::AtItem { block, item } = ev.trigger else { continue };
+            if block != b {
+                continue;
+            }
+            fired[i] = true;
+            let d = ev.node;
+            if !aborted && d == p.exec_node && d != 0 && d < nodes && alive[d] {
+                aborted = true;
+                // The deterministic trigger clock charges the items the
+                // victim actually mapped; measured seconds stay on the
+                // victim (observability only). Nothing else from the
+                // attempt is recorded.
+                let charged = item.min(mapped.items);
+                det_secs[d] += charged as f64 * ATTIME_SEC_PER_ITEM;
+                per_node_secs[d] += mapped.exec_secs;
+                stats.midblock_aborts += 1;
+                counters.add_node(d, "fault.midblock_aborts", 1);
+                trace.push(TraceEvent::new(
+                    home,
+                    Some(w),
+                    "map+block-reduce",
+                    TraceEventKind::MidblockAbort { block: b, victim: d, items: charged },
+                ));
+                pending.insert(b, PendingBlock { exec_node: d, only: p.only.clone() });
+            }
+            inject_kill(
+                label,
+                &cluster,
+                target,
+                d,
+                KillCtx {
+                    nodes,
+                    alive: &mut alive,
+                    stats: &mut stats,
+                    pending: &mut pending,
+                    rr: &mut rr,
+                    latest: &latest,
+                    restore_flows: &mut restore_flows,
+                    ledger: &mut ledger,
+                    trace: &mut trace,
+                    evacuate_on,
+                    evac_queue: &mut evac_queue,
+                },
+            );
+        }
+        if aborted {
+            continue;
+        }
+
         let items_here = mapped.items;
         let emitted_here = mapped.emitted;
         // Partition by target shard at commit time (post-evacuation
@@ -549,7 +809,11 @@ where
         }
         peak_staged_bytes = peak_staged_bytes.max(staged_bytes);
         committed += 1;
-        let was_fresh = exec_epoch[b] == 1;
+        // First *commit* of this block, not first execution: an aborted
+        // attempt consumes an epoch without committing, so epoch counting
+        // would mis-classify the eventual commit as a replay.
+        let was_fresh = !committed_once[b];
+        committed_once[b] = true;
         if was_fresh {
             fresh_committed += 1;
         }
@@ -586,95 +850,33 @@ where
                 // Fresh commits only: replays never advance the boundary.
                 FailureTrigger::AtBlock(n) => fresh_committed >= n,
                 FailureTrigger::AtTime(secs) => elapsed >= secs,
+                // Sub-task granularity: evaluated by the mid-block pass
+                // above, never at a commit boundary.
+                FailureTrigger::AtItem { .. } => false,
             };
             if !due {
                 continue;
             }
             fired[i] = true;
-            let d = ev.node;
-            if d == 0 || d >= nodes || !alive[d] {
-                stats.failures_ignored += 1;
-                let ev_t = TraceEvent::new(
-                    d,
-                    None,
-                    "map+block-reduce",
-                    TraceEventKind::KillIgnored { victim: d },
-                );
-                let note = ev_t.render_note(label).expect("KillIgnored renders a note");
-                cluster.metrics().record_note(note);
-                trace.push(ev_t);
-                continue;
-            }
-            alive[d] = false;
-            stats.failures += 1;
-
-            // (1) Reassign the dead node's pending map blocks to survivors.
-            let orphaned: Vec<usize> = pending
-                .iter()
-                .filter(|(_, pb)| pb.exec_node == d)
-                .map(|(&b2, _)| b2)
-                .collect();
-            for b2 in orphaned {
-                let s = next_alive_rr(&alive, &mut rr);
-                pending.get_mut(&b2).expect("orphaned block pending").exec_node = s;
-                stats.blocks_reassigned += 1;
-            }
-
-            // (2) Lose the shard, restore it from the latest checkpoint —
-            // fetched from the driver replica (node 0 holds every shard's
-            // checkpoint and is never killed, so the source always exists).
-            target.lose_shard(d);
-            let restored = latest
-                .restore_shard_into(target, d)
-                .expect("checkpoint shard must decode");
-            if restored > 0 {
-                restore_flows.record(0, d, restored);
-                stats.restore_bytes += restored;
-            }
-            trace.push(TraceEvent::new(
-                d,
-                None,
-                "map+block-reduce",
-                TraceEventKind::Kill { victim: d, restore_bytes: restored },
-            ));
-
-            // (3) Roll back post-checkpoint commits into that shard and
-            // replay their blocks on survivors (only the lost shard's
-            // partial re-reduces; the ledger keeps every other shard's).
-            let rollback: Vec<usize> = ledger
-                .iter()
-                .filter(|&&(b2, dst)| dst == d && !latest.ledger.contains(&(b2, dst)))
-                .map(|&(b2, _)| b2)
-                .collect();
-            for b2 in rollback {
-                ledger.remove(&(b2, d));
-                stats.blocks_replayed += 1;
-                trace.push(TraceEvent::new(
-                    d,
-                    None,
-                    "map+block-reduce",
-                    TraceEventKind::Rollback { block: b2, shard: d },
-                ));
-                let s = next_alive_rr(&alive, &mut rr);
-                pending
-                    .entry(b2)
-                    .and_modify(|pb| {
-                        if let Some(set) = pb.only.as_mut() {
-                            set.insert(d);
-                        }
-                    })
-                    .or_insert_with(|| PendingBlock {
-                        exec_node: s,
-                        only: Some(BTreeSet::from([d])),
-                    });
-            }
-
-            // (4) Under the evacuation policy the hot standby is only
-            // transitional: queue the victim for re-homing once its
-            // rollback replays drain.
-            if evacuate_on {
-                evac_queue.push(d);
-            }
+            inject_kill(
+                label,
+                &cluster,
+                target,
+                ev.node,
+                KillCtx {
+                    nodes,
+                    alive: &mut alive,
+                    stats: &mut stats,
+                    pending: &mut pending,
+                    rr: &mut rr,
+                    latest: &latest,
+                    restore_flows: &mut restore_flows,
+                    ledger: &mut ledger,
+                    trace: &mut trace,
+                    evacuate_on,
+                    evac_queue: &mut evac_queue,
+                },
+            );
         }
 
         // ---- Deferred evacuation (the `--evacuate` recovery policy) -----
@@ -830,6 +1032,7 @@ where
     counters.add("evac.bytes", stats.evacuation_bytes);
     counters.add("replay.blocks", stats.blocks_replayed as u64);
     counters.add("reassign.blocks", stats.blocks_reassigned as u64);
+    counters.add("fault.midblock_aborts", stats.midblock_aborts as u64);
     if threads.is_some() {
         counters.max("pool.queue_peak", pool_queue_peak);
         for (t, blocks) in pool_thread_blocks.iter().enumerate() {

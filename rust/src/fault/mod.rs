@@ -7,8 +7,16 @@
 //!
 //! * [`plan`] — deterministic, [`crate::util::SplitRng`]-seeded
 //!   [`FailurePlan`]s that kill virtual nodes at chosen virtual-time
-//!   points or map-block boundaries, carried on the cluster config as a
-//!   [`FaultConfig`].
+//!   points, map-block boundaries, or *mid-block*
+//!   ([`FailureTrigger::AtItem`]: the kill lands a chosen number of
+//!   items into one block's map, aborting and discarding the in-flight
+//!   attempt before anything commits), carried on the cluster config as
+//!   a [`FaultConfig`]. Network faults are separate: a lossy-transport
+//!   plan ([`crate::exec::transport::TransportFaultPlan`], CLI
+//!   `--net-fault`) afflicts the threaded backend's shuffle channels
+//!   with seeded drop/corrupt/delay fates, checksum-verified frames,
+//!   capped-backoff retries, and timeout-driven node death — inert
+//!   under this engine, whose shuffle is flow-model only.
 //! * [`checkpoint`] — per-shard snapshots of the reduce targets
 //!   ([`Checkpoint`], with a manifest and the commit [`Ledger`]), encoded
 //!   with the [`crate::ser::fastser`] codec and replicated to the driver

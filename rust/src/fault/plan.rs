@@ -1,13 +1,15 @@
 //! Deterministic failure injection plans.
 //!
 //! A [`FailurePlan`] declares, ahead of a job, which virtual nodes die and
-//! when. Triggers fire at *map-block commit boundaries* — the only points
-//! where the simulated cluster's state is well defined — either after a
-//! chosen number of globally committed blocks ([`FailureTrigger::AtBlock`])
-//! or once the job's virtual makespan passes a chosen time
-//! ([`FailureTrigger::AtTime`]). Plans can also be drawn from a
-//! [`SplitRng`] stream ([`FailurePlan::random`]) so failure benchmarks are
-//! reproducible from a single seed.
+//! when. Block-granular triggers fire at *map-block commit boundaries* —
+//! either after a chosen number of globally committed blocks
+//! ([`FailureTrigger::AtBlock`]) or once the job's virtual makespan passes
+//! a chosen time ([`FailureTrigger::AtTime`]). Sub-task granularity is
+//! [`FailureTrigger::AtItem`]: the kill lands *inside* a chosen block's
+//! map, after a chosen number of input items, and the interrupted attempt
+//! is aborted and discarded before anything commits. Plans can also be
+//! drawn from a [`SplitRng`] stream ([`FailurePlan::random`]) so failure
+//! benchmarks are reproducible from a single seed.
 //!
 //! **`AtTime` semantics (deterministic block quantization).** An
 //! `AtTime(secs)` trigger is evaluated only at block commit boundaries,
@@ -59,6 +61,24 @@ pub enum FailureTrigger {
     /// `secs`. Quantized to commit boundaries and independent of host
     /// load — the same boundary in every run.
     AtTime(f64),
+    /// Fire *inside* the map of block-id `block`, after `item` input items
+    /// of that block have been mapped — sub-task granularity. When the
+    /// victim is the block's executing node, its in-flight map attempt is
+    /// aborted: already-emitted pairs and partial eager-cache flushes are
+    /// discarded (never reaching any shard), the block re-enters the
+    /// pending set, and the ordinary kill→rollback→replay machinery runs
+    /// before anything from the interrupted attempt commits. The aborted
+    /// attempt contributes nothing to the gated `map.*` counters (only
+    /// `fault.midblock_aborts`), so serial and threaded backends stay
+    /// byte-identical. `item` is clamped to the block's item count when it
+    /// overshoots; if `block` is never executed fresh the event is dropped
+    /// at job end like any other unfired trigger.
+    AtItem {
+        /// Block-id whose map is interrupted.
+        block: usize,
+        /// Input items of that block mapped before the abort.
+        item: u64,
+    },
 }
 
 /// One planned node death.
@@ -111,6 +131,18 @@ impl FailurePlan {
     /// Add a virtual-time kill (builder style).
     pub fn and_kill_at_time(mut self, node: usize, secs: f64) -> Self {
         self.events.push(FailureEvent { node, trigger: FailureTrigger::AtTime(secs) });
+        self
+    }
+
+    /// Kill `node` mid-map, after `item` items of block `block` have been
+    /// mapped (sub-task granularity — see [`FailureTrigger::AtItem`]).
+    pub fn kill_at_item(node: usize, block: usize, item: u64) -> Self {
+        Self::none().and_kill_at_item(node, block, item)
+    }
+
+    /// Add a mid-block kill (builder style).
+    pub fn and_kill_at_item(mut self, node: usize, block: usize, item: u64) -> Self {
+        self.events.push(FailureEvent { node, trigger: FailureTrigger::AtItem { block, item } });
         self
     }
 
@@ -230,6 +262,18 @@ mod tests {
     }
 
     #[test]
+    fn at_item_builder_and_identity() {
+        let plan = FailurePlan::kill_at_item(2, 3, 40).and_kill_at_block(1, 5);
+        assert_eq!(plan.events().len(), 2);
+        assert_eq!(plan.events()[0].node, 2);
+        assert_eq!(plan.events()[0].trigger, FailureTrigger::AtItem { block: 3, item: 40 });
+        // Copy + PartialEq survive the struct variant.
+        let t = plan.events()[0].trigger;
+        assert_eq!(t, t);
+        assert_ne!(t, FailureTrigger::AtItem { block: 3, item: 41 });
+    }
+
+    #[test]
     fn random_is_deterministic_and_spares_driver() {
         let a = FailurePlan::random(42, 8, 5, 100);
         let b = FailurePlan::random(42, 8, 5, 100);
@@ -239,7 +283,7 @@ mod tests {
             assert!(ev.node >= 1 && ev.node < 8, "victim {}", ev.node);
             match ev.trigger {
                 FailureTrigger::AtBlock(b) => assert!((1..=100).contains(&b)),
-                FailureTrigger::AtTime(_) => panic!("random plans are block-based"),
+                _ => panic!("random plans are block-based"),
             }
         }
         assert_ne!(a, FailurePlan::random(43, 8, 5, 100));

@@ -35,8 +35,13 @@
 //!   `--transport-window`, stalls/frames/bytes surfaced as `transport.*`
 //!   counters with real shuffle wall clock in `phase_wall_ns` — while a
 //!   deterministic accounting mirror keeps flows and stall counts
-//!   byte-identical to the simulated flow model. Fault-tolerant jobs
-//!   replay killed blocks on the same live pool. The node-local hot
+//!   byte-identical to the simulated flow model. The channels can be
+//!   made *lossy* ([`exec::transport::TransportFaultPlan`], CLI
+//!   `--net-fault`): seeded per-attempt drop/corrupt/delay fates,
+//!   checksummed frames, capped exponential-backoff retries, and
+//!   timeout-driven node death that degrades gracefully to the
+//!   flow-model path — byte-identical results either way. Fault-tolerant
+//!   jobs replay killed blocks on the same live pool. The node-local hot
 //!   path batches its hashing, recycles flush/frame/chunk buffers
 //!   through per-worker and cluster pools under `AllocMode::Pool`
 //!   (`alloc.pool.*` counters), sizes shard stripes from the thread
@@ -61,7 +66,11 @@
 //!   fields and threshold-checks wall-clock ones, and emits a markdown
 //!   diff (nonzero exit under `--gate` on regression).
 //! * [`fault`] — fault tolerance: deterministic failure injection
-//!   ([`fault::FailurePlan`]), per-shard target checkpoints replicated
+//!   ([`fault::FailurePlan`]) at block-commit, virtual-time, and
+//!   mid-block granularity (`AtItem` kills abort the in-flight map,
+//!   discard the partial flush, and charge the wasted items before
+//!   recovery runs — DESIGN.md §Failure spectrum), per-shard target
+//!   checkpoints replicated
 //!   through the network model, and a recoverable engine that re-executes
 //!   a dead node's map blocks on survivors and recovers its reduce shard
 //!   under one of two policies — the default *hot-standby* restore (the

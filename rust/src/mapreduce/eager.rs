@@ -15,7 +15,7 @@ use std::time::Instant;
 use crate::coordinator::cluster::Cluster;
 use crate::coordinator::metrics::RunStats;
 use crate::coordinator::shuffle::{self, ShufflePayloads, Transport};
-use crate::exec::transport::TransportTotals;
+use crate::exec::transport::{FrameFault, TransportTotals};
 use crate::net::vtime::VirtualTime;
 use crate::ser::fastser::{decode_pairs, encode_pairs_into, FastSer};
 use crate::trace::histogram::Histograms;
@@ -334,51 +334,110 @@ where
     let (sres, transport_totals) = match transport {
         Transport::FlowModel => (shuffle::execute(payloads, window), None),
         Transport::Channels => {
-            // Chunk-copy buffers ride the same scratch as the payloads
-            // they split; the absorb loop below recycles both.
-            let tres = crate::exec::transport::execute_pooled(payloads, window, &scratch);
-            // Occupancy gauge + per-frame wait: Chrome-only / wall-only
-            // observability from the real transport.
-            for &(src, in_flight) in &tres.in_flight_samples {
-                trace.push_sample(
-                    src,
-                    "shuffle+async-reduce",
-                    0,
-                    "transport.in_flight_bytes",
-                    in_flight,
-                );
-            }
-            hist.merge_global("wall.transport.frame_wait_ns", &tres.frame_wait);
-            // Chrome-only transport events, in deterministic src-major
-            // pair order (they never reach the canonical export).
-            for ps in &tres.pair_stats {
-                trace.push(TraceEvent::new(
-                    ps.src,
-                    None,
-                    "shuffle+async-reduce",
-                    TraceEventKind::FrameSent {
-                        dst: ps.dst,
-                        frames: ps.frames,
-                        bytes: ps.bytes,
-                    },
-                ));
-                if ps.stalls > 0 {
+            // Under a lossy plan, stage an untouched copy first: when the
+            // retry/timeout budget is exhausted the transport returns a
+            // structured error (never a hang) and the shuffle degrades
+            // gracefully onto the flow model, so results stay identical.
+            let net_fault = cfg.net_fault;
+            let lossy_fallback = net_fault.is_some().then(|| payloads.clone());
+            let attempt = match net_fault {
+                None => Ok(crate::exec::transport::execute_pooled(payloads, window, &scratch)),
+                Some(plan) => {
+                    crate::exec::transport::execute_lossy(payloads, window, &plan, &scratch)
+                }
+            };
+            match attempt {
+                Ok(tres) => {
+                    // Occupancy gauge + per-frame wait: Chrome-only /
+                    // wall-only observability from the real transport.
+                    for &(src, in_flight) in &tres.in_flight_samples {
+                        trace.push_sample(
+                            src,
+                            "shuffle+async-reduce",
+                            0,
+                            "transport.in_flight_bytes",
+                            in_flight,
+                        );
+                    }
+                    hist.merge_global("wall.transport.frame_wait_ns", &tres.frame_wait);
+                    // Chrome-only transport events, in deterministic
+                    // src-major pair order (they never reach the
+                    // canonical export).
+                    for ps in &tres.pair_stats {
+                        trace.push(TraceEvent::new(
+                            ps.src,
+                            None,
+                            "shuffle+async-reduce",
+                            TraceEventKind::FrameSent {
+                                dst: ps.dst,
+                                frames: ps.frames,
+                                bytes: ps.bytes,
+                            },
+                        ));
+                        if ps.stalls > 0 {
+                            trace.push(TraceEvent::new(
+                                ps.src,
+                                None,
+                                "shuffle+async-reduce",
+                                TraceEventKind::TransportStall { dst: ps.dst, stalls: ps.stalls },
+                            ));
+                        }
+                    }
+                    // Injected frame fates, in the mirror's deterministic
+                    // resolution order (Chrome-only, like FrameSent).
+                    for fault in &tres.faults {
+                        match *fault {
+                            FrameFault::Dropped { src, dst, seq, attempt, corrupt } => {
+                                trace.push(TraceEvent::new(
+                                    src,
+                                    None,
+                                    "shuffle+async-reduce",
+                                    TraceEventKind::FrameDropped { dst, seq, attempt, corrupt },
+                                ));
+                            }
+                            FrameFault::Retried { src, dst, seq, attempt, backoff_ns } => {
+                                trace.push(TraceEvent::new(
+                                    src,
+                                    None,
+                                    "shuffle+async-reduce",
+                                    TraceEventKind::FrameRetried { dst, seq, attempt, backoff_ns },
+                                ));
+                            }
+                        }
+                    }
+                    // The deterministic backoff mirror extends the
+                    // virtual clock; no trace event carries this label,
+                    // so the canonical export is untouched.
+                    if tres.backoff_ns > 0 {
+                        vt.fixed_phase("transport-backoff", tres.backoff_ns as f64 * 1e-9);
+                    }
+                    let totals = tres.totals();
+                    let sres = shuffle::ShuffleResult {
+                        flows: tres.flows,
+                        delivered: tres.delivered,
+                        peak_in_flight_bytes: tres.peak_in_flight_bytes,
+                        stalls: tres.stalls,
+                    };
+                    (sres, Some(totals))
+                }
+                Err(err) => {
                     trace.push(TraceEvent::new(
-                        ps.src,
+                        err.src,
                         None,
                         "shuffle+async-reduce",
-                        TraceEventKind::TransportStall { dst: ps.dst, stalls: ps.stalls },
+                        TraceEventKind::NodeTimedOut { dst: err.node, attempts: err.attempts },
                     ));
+                    let totals = TransportTotals {
+                        timeouts: 1,
+                        backoff_ns: err.backoff_ns,
+                        faulted: true,
+                        ..Default::default()
+                    };
+                    let fallback =
+                        lossy_fallback.expect("fallback staged for every lossy transport run");
+                    (shuffle::execute(fallback, window), Some(totals))
                 }
             }
-            let totals = tres.totals();
-            let sres = shuffle::ShuffleResult {
-                flows: tres.flows,
-                delivered: tres.delivered,
-                peak_in_flight_bytes: tres.peak_in_flight_bytes,
-                stalls: tres.stalls,
-            };
-            (sres, Some(totals))
         }
     };
     let mut per_node_reduce_secs = vec![0.0f64; nodes];

@@ -15,7 +15,7 @@ use std::time::Instant;
 use crate::coordinator::cluster::Cluster;
 use crate::coordinator::metrics::RunStats;
 use crate::coordinator::shuffle::{ShufflePayloads, Transport};
-use crate::exec::transport::TransportTotals;
+use crate::exec::transport::{FrameFault, TransportTotals};
 use crate::net::sim::FlowMatrix;
 use crate::net::vtime::VirtualTime;
 use crate::ser::fastser::{decode_pairs, encode_pairs_into, FastSer};
@@ -258,73 +258,165 @@ where
                 for (src, dst, buf) in bufs {
                     matrix[src][dst] = buf;
                 }
-                let tres = crate::exec::transport::execute_pooled(
-                    matrix,
-                    cfg.transport_window_bytes,
-                    &scratch,
-                );
-                for &(src, in_flight) in &tres.in_flight_samples {
-                    trace.push_sample(
-                        src,
-                        "tree-reduce-round",
-                        round,
-                        "transport.in_flight_bytes",
-                        in_flight,
-                    );
-                }
-                hist.merge_global("wall.transport.frame_wait_ns", &tres.frame_wait);
-                for ps in &tres.pair_stats {
-                    trace.push(
-                        TraceEvent::new(
-                            ps.src,
-                            None,
-                            "tree-reduce-round",
-                            TraceEventKind::FrameSent {
-                                dst: ps.dst,
-                                frames: ps.frames,
-                                bytes: ps.bytes,
-                            },
-                        )
-                        .at_phase_ix(round),
-                    );
-                    if ps.stalls > 0 {
+                // Under a lossy plan, stage an untouched copy: retry
+                // exhaustion degrades this round onto the flow model
+                // (structured error, never a hang) with identical bytes.
+                let net_fault = cfg.net_fault;
+                let mut lossy_fallback = net_fault.is_some().then(|| matrix.clone());
+                let attempt = match net_fault {
+                    None => Ok(crate::exec::transport::execute_pooled(
+                        matrix,
+                        cfg.transport_window_bytes,
+                        &scratch,
+                    )),
+                    Some(plan) => crate::exec::transport::execute_lossy(
+                        matrix,
+                        cfg.transport_window_bytes,
+                        &plan,
+                        &scratch,
+                    ),
+                };
+                match attempt {
+                    Ok(tres) => {
+                        for &(src, in_flight) in &tres.in_flight_samples {
+                            trace.push_sample(
+                                src,
+                                "tree-reduce-round",
+                                round,
+                                "transport.in_flight_bytes",
+                                in_flight,
+                            );
+                        }
+                        hist.merge_global("wall.transport.frame_wait_ns", &tres.frame_wait);
+                        for ps in &tres.pair_stats {
+                            trace.push(
+                                TraceEvent::new(
+                                    ps.src,
+                                    None,
+                                    "tree-reduce-round",
+                                    TraceEventKind::FrameSent {
+                                        dst: ps.dst,
+                                        frames: ps.frames,
+                                        bytes: ps.bytes,
+                                    },
+                                )
+                                .at_phase_ix(round),
+                            );
+                            if ps.stalls > 0 {
+                                trace.push(
+                                    TraceEvent::new(
+                                        ps.src,
+                                        None,
+                                        "tree-reduce-round",
+                                        TraceEventKind::TransportStall {
+                                            dst: ps.dst,
+                                            stalls: ps.stalls,
+                                        },
+                                    )
+                                    .at_phase_ix(round),
+                                );
+                            }
+                        }
+                        // Injected frame fates, in the mirror's
+                        // deterministic resolution order (Chrome-only).
+                        for fault in &tres.faults {
+                            match *fault {
+                                FrameFault::Dropped { src, dst, seq, attempt, corrupt } => {
+                                    trace.push(
+                                        TraceEvent::new(
+                                            src,
+                                            None,
+                                            "tree-reduce-round",
+                                            TraceEventKind::FrameDropped {
+                                                dst,
+                                                seq,
+                                                attempt,
+                                                corrupt,
+                                            },
+                                        )
+                                        .at_phase_ix(round),
+                                    );
+                                }
+                                FrameFault::Retried { src, dst, seq, attempt, backoff_ns } => {
+                                    trace.push(
+                                        TraceEvent::new(
+                                            src,
+                                            None,
+                                            "tree-reduce-round",
+                                            TraceEventKind::FrameRetried {
+                                                dst,
+                                                seq,
+                                                attempt,
+                                                backoff_ns,
+                                            },
+                                        )
+                                        .at_phase_ix(round),
+                                    );
+                                }
+                            }
+                        }
+                        // The deterministic backoff mirror extends the
+                        // virtual clock; no trace event carries this
+                        // label, so the canonical export is untouched.
+                        if tres.backoff_ns > 0 {
+                            vt.fixed_phase("transport-backoff", tres.backoff_ns as f64 * 1e-9);
+                        }
+                        if let Some(t) = transport_totals.as_mut() {
+                            t.merge(tres.totals());
+                        }
+                        // Each destination hears from exactly one source
+                        // per round; its (src, seq)-sorted frames
+                        // concatenate back into the original payload.
+                        let mut per_dst = tres.delivered;
+                        order
+                            .into_iter()
+                            .map(|(src, dst)| {
+                                let mut buf = Vec::new();
+                                for (s, chunk) in std::mem::take(&mut per_dst[dst]) {
+                                    debug_assert_eq!(s, src, "one sender per dst per round");
+                                    if buf.is_empty() {
+                                        buf = chunk;
+                                    } else {
+                                        buf.extend_from_slice(&chunk);
+                                        scratch.put(chunk); // recycle the copied tail
+                                    }
+                                }
+                                (src, dst, buf)
+                            })
+                            .collect()
+                    }
+                    Err(err) => {
                         trace.push(
                             TraceEvent::new(
-                                ps.src,
+                                err.src,
                                 None,
                                 "tree-reduce-round",
-                                TraceEventKind::TransportStall {
-                                    dst: ps.dst,
-                                    stalls: ps.stalls,
+                                TraceEventKind::NodeTimedOut {
+                                    dst: err.node,
+                                    attempts: err.attempts,
                                 },
                             )
                             .at_phase_ix(round),
                         );
+                        if let Some(t) = transport_totals.as_mut() {
+                            t.merge(TransportTotals {
+                                timeouts: 1,
+                                backoff_ns: err.backoff_ns,
+                                faulted: true,
+                                ..Default::default()
+                            });
+                        }
+                        // Degraded round: the staged payloads move by the
+                        // flow model instead — byte-identical outcome.
+                        let mut fb = lossy_fallback
+                            .take()
+                            .expect("fallback staged for every lossy transport run");
+                        order
+                            .into_iter()
+                            .map(|(src, dst)| (src, dst, std::mem::take(&mut fb[src][dst])))
+                            .collect()
                     }
                 }
-                if let Some(t) = transport_totals.as_mut() {
-                    t.merge(tres.totals());
-                }
-                // Each destination hears from exactly one source per
-                // round; its (src, seq)-sorted frames concatenate back
-                // into the original payload.
-                let mut per_dst = tres.delivered;
-                order
-                    .into_iter()
-                    .map(|(src, dst)| {
-                        let mut buf = Vec::new();
-                        for (s, chunk) in std::mem::take(&mut per_dst[dst]) {
-                            debug_assert_eq!(s, src, "one sender per dst per round");
-                            if buf.is_empty() {
-                                buf = chunk;
-                            } else {
-                                buf.extend_from_slice(&chunk);
-                                scratch.put(chunk); // recycle the copied tail
-                            }
-                        }
-                        (src, dst, buf)
-                    })
-                    .collect()
             }
         };
         // Decode + fold, in send order (Reduce events).

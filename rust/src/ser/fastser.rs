@@ -535,6 +535,75 @@ fn decode_pairs_from<K: FastSer, V: FastSer>(
     Ok(out)
 }
 
+// ---- Checksummed frames (lossy-transport wire unit) ------------------------
+//
+// The bare pair-batch encoding cannot promise to reject arbitrary bit
+// corruption: a flipped bit inside a varint *value* still decodes to a
+// well-formed (wrong) number. A transport that may corrupt bytes therefore
+// wraps each physical frame in a 16-byte header — fixed-width little-endian
+// payload length + FNV-1a checksum — and verifies both before the payload is
+// allowed anywhere near the pair decoder. FNV-1a's per-byte step
+// (`h = (h ^ byte) * PRIME`) composes xor-with-constant and multiply-by-odd,
+// both bijections on u64, so two payloads differing in exactly one byte can
+// never collide: every single-bit (indeed single-byte) corruption of a valid
+// frame — header or payload — is detected with certainty, not probability.
+
+/// Bytes of frame header prepended by [`encode_frame_into`]: 8-byte LE
+/// payload length + 8-byte LE FNV-1a checksum.
+pub const FRAME_HEADER_BYTES: usize = 16;
+
+/// FNV-1a 64-bit checksum over `bytes`.
+#[inline]
+pub fn frame_checksum(bytes: &[u8]) -> u64 {
+    const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+    let mut h = OFFSET;
+    for &b in bytes {
+        h = (h ^ u64::from(b)).wrapping_mul(PRIME);
+    }
+    h
+}
+
+/// Wrap `payload` in a checksummed frame, writing into a caller-provided
+/// (possibly pooled) buffer. The buffer is length-reset first so a recycled
+/// longer buffer can never leak stale tail bytes into a shorter frame.
+pub fn encode_frame_into(payload: &[u8], mut buf: Vec<u8>) -> Vec<u8> {
+    buf.clear();
+    buf.reserve(FRAME_HEADER_BYTES + payload.len());
+    buf.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+    buf.extend_from_slice(&frame_checksum(payload).to_le_bytes());
+    buf.extend_from_slice(payload);
+    buf
+}
+
+/// [`encode_frame_into`] with a fresh buffer.
+pub fn encode_frame(payload: &[u8]) -> Vec<u8> {
+    encode_frame_into(payload, Vec::new())
+}
+
+/// Verify a checksummed frame and return its payload slice.
+///
+/// The slice must hold exactly one frame: the header length must equal the
+/// bytes that actually follow (no over-read from a corrupted length prefix,
+/// no silent truncation) and the checksum must match. Any single-bit
+/// corruption — length, checksum, or payload — yields a structured
+/// [`DecodeError`], never a panic or a misparse.
+pub fn decode_frame(frame: &[u8]) -> Result<&[u8], DecodeError> {
+    if frame.len() < FRAME_HEADER_BYTES {
+        return Err(DecodeError { at: frame.len(), what: "frame header truncated" });
+    }
+    let len = u64::from_le_bytes(frame[0..8].try_into().unwrap());
+    let sum = u64::from_le_bytes(frame[8..16].try_into().unwrap());
+    let payload = &frame[FRAME_HEADER_BYTES..];
+    if len != payload.len() as u64 {
+        return Err(DecodeError { at: 0, what: "frame length mismatch" });
+    }
+    if frame_checksum(payload) != sum {
+        return Err(DecodeError { at: 8, what: "frame checksum mismatch" });
+    }
+    Ok(payload)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -772,6 +841,91 @@ mod tests {
         let buf = encode_pairs(&hollow);
         assert_eq!(buf.len(), 1 + 2 * 17, "1 count byte + 2 bytes per hollow pair");
         assert_eq!(decode_pairs_exact::<String, u64>(&buf).unwrap(), hollow);
+    }
+
+    // ---- Checksummed-frame hardening -----------------------------------
+
+    #[test]
+    fn frame_roundtrip_and_header_shape() {
+        let payload = encode_pairs(&[(1u64, 2u64), (3, 4)]);
+        let frame = encode_frame(&payload);
+        assert_eq!(frame.len(), FRAME_HEADER_BYTES + payload.len());
+        assert_eq!(decode_frame(&frame).unwrap(), payload.as_slice());
+        // Empty payloads are valid frames.
+        let empty = encode_frame(&[]);
+        assert_eq!(empty.len(), FRAME_HEADER_BYTES);
+        assert_eq!(decode_frame(&empty).unwrap(), &[] as &[u8]);
+        // Sub-header buffers are a structured error.
+        assert_eq!(decode_frame(&frame[..7]).unwrap_err().what, "frame header truncated");
+    }
+
+    #[test]
+    fn frame_rejects_every_single_bit_flip_exhaustively() {
+        // The lossy transport's corruption model flips one bit per corrupt
+        // attempt; the receiver must reject *every* such frame. Exhaustive
+        // over all bit positions of a realistic frame — header included.
+        let mut rng = SplitRng::new(0xC0FFEE, 0);
+        let pairs: Vec<(String, i64)> = (0..20)
+            .map(|_| (random_string(&mut rng, 10), rng.next_u64() as i64))
+            .collect();
+        let frame = encode_frame(&encode_pairs(&pairs));
+        for bit in 0..frame.len() * 8 {
+            let mut bad = frame.clone();
+            bad[bit / 8] ^= 1 << (bit % 8);
+            assert!(
+                decode_frame(&bad).is_err(),
+                "bit flip at {bit} (byte {}) accepted",
+                bit / 8
+            );
+        }
+    }
+
+    #[test]
+    fn frame_rejects_sampled_bit_flips_of_large_payloads() {
+        let mut rng = SplitRng::new(0xC0FFEE, 1);
+        let payload: Vec<u8> = (0..128 * 1024).map(|_| rng.next_u64() as u8).collect();
+        let frame = encode_frame(&payload);
+        assert_eq!(decode_frame(&frame).unwrap(), payload.as_slice());
+        for _ in 0..2000 {
+            let bit = rng.below((frame.len() * 8) as u64) as usize;
+            let mut bad = frame.clone();
+            bad[bit / 8] ^= 1 << (bit % 8);
+            assert!(decode_frame(&bad).is_err(), "bit flip at {bit} accepted");
+        }
+    }
+
+    #[test]
+    fn frame_rejects_truncation_and_extension() {
+        let frame = encode_frame(b"blaze frame payload");
+        for cut in 0..frame.len() {
+            assert!(decode_frame(&frame[..cut]).is_err(), "cut {cut} accepted");
+        }
+        let mut long = frame.clone();
+        long.push(0);
+        assert_eq!(decode_frame(&long).unwrap_err().what, "frame length mismatch");
+    }
+
+    #[test]
+    fn frame_length_prefix_cannot_over_read() {
+        // A corrupted length prefix claiming more bytes than follow must be
+        // rejected up front — the payload slice is never sized from the
+        // untrusted header.
+        let mut frame = encode_frame(b"short");
+        frame[0] = 0xFF;
+        frame[7] = 0x7F;
+        assert_eq!(decode_frame(&frame).unwrap_err().what, "frame length mismatch");
+    }
+
+    #[test]
+    fn encode_frame_into_length_resets_pooled_buffers() {
+        // Regression (retry path): a pooled buffer that previously held a
+        // longer frame must not leak stale tail bytes into a shorter one.
+        let mut stale = encode_frame(&[0xAAu8; 256]);
+        assert!(stale.len() > FRAME_HEADER_BYTES + 4);
+        stale.extend_from_slice(&[0xBB; 32]); // simulate un-cleared reuse
+        let frame = encode_frame_into(b"tiny", stale);
+        assert_eq!(frame.len(), FRAME_HEADER_BYTES + 4);
+        assert_eq!(decode_frame(&frame).unwrap(), b"tiny");
     }
 
     #[test]

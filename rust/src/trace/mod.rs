@@ -98,6 +98,23 @@ pub enum TraceEventKind {
     /// backpressure window toward `dst` and had to wait for a drain.
     /// Chrome-view only, like [`TraceEventKind::FrameSent`].
     TransportStall { dst: usize, stalls: u64 },
+    /// A mid-block kill ([`crate::fault::FailureTrigger::AtItem`]) aborted
+    /// `victim`'s in-flight map of `block` after `items` input items; the
+    /// partial attempt was discarded and the block re-entered the pending
+    /// set. Deterministic across backends, so it lives in the canonical
+    /// export (the paired Kill event follows it).
+    MidblockAbort { block: usize, victim: usize, items: u64 },
+    /// Lossy transport: one send attempt of frame `seq` toward `dst` was
+    /// dropped (or corrupted and rejected by the receiver's frame
+    /// checksum) under the active `TransportFaultPlan`. Chrome-view only.
+    FrameDropped { dst: usize, seq: u64, attempt: u32, corrupt: bool },
+    /// Lossy transport: frame `seq` toward `dst` was retransmitted as
+    /// attempt `attempt` after `backoff_ns` of (virtual) exponential
+    /// backoff. Chrome-view only.
+    FrameRetried { dst: usize, seq: u64, attempt: u32, backoff_ns: u64 },
+    /// Lossy transport: every retry toward `dst` exhausted; the per-node
+    /// delivery timeout declared it dead. Chrome-view only.
+    NodeTimedOut { dst: usize, attempts: u32 },
     /// End-of-job recovery bookkeeping (the old `fault[...]` note).
     FaultSummary {
         checkpoints: u64,
@@ -132,6 +149,10 @@ impl TraceEventKind {
             Self::Migrate { .. } => "Migrate",
             Self::FrameSent { .. } => "FrameSent",
             Self::TransportStall { .. } => "TransportStall",
+            Self::MidblockAbort { .. } => "MidblockAbort",
+            Self::FrameDropped { .. } => "FrameDropped",
+            Self::FrameRetried { .. } => "FrameRetried",
+            Self::NodeTimedOut { .. } => "NodeTimedOut",
             Self::FaultSummary { .. } => "FaultSummary",
         }
     }
@@ -141,7 +162,14 @@ impl TraceEventKind {
     /// export skips them: a simulated run moves no real frames, and the
     /// canonical log must stay byte-identical across backends.
     pub fn chrome_only(&self) -> bool {
-        matches!(self, Self::FrameSent { .. } | Self::TransportStall { .. })
+        matches!(
+            self,
+            Self::FrameSent { .. }
+                | Self::TransportStall { .. }
+                | Self::FrameDropped { .. }
+                | Self::FrameRetried { .. }
+                | Self::NodeTimedOut { .. }
+        )
     }
 
     /// Append this kind's fields as `,"k":v` JSON pairs.
@@ -199,6 +227,24 @@ impl TraceEventKind {
             }
             Self::TransportStall { dst, stalls } => {
                 let _ = write!(out, ",\"dst\":{dst},\"stalls\":{stalls}");
+            }
+            Self::MidblockAbort { block, victim, items } => {
+                let _ = write!(out, ",\"block\":{block},\"victim\":{victim},\"items\":{items}");
+            }
+            Self::FrameDropped { dst, seq, attempt, corrupt } => {
+                let _ = write!(
+                    out,
+                    ",\"dst\":{dst},\"seq\":{seq},\"attempt\":{attempt},\"corrupt\":{corrupt}"
+                );
+            }
+            Self::FrameRetried { dst, seq, attempt, backoff_ns } => {
+                let _ = write!(
+                    out,
+                    ",\"dst\":{dst},\"seq\":{seq},\"attempt\":{attempt},\"backoff_ns\":{backoff_ns}"
+                );
+            }
+            Self::NodeTimedOut { dst, attempts } => {
+                let _ = write!(out, ",\"dst\":{dst},\"attempts\":{attempts}");
             }
             Self::FaultSummary {
                 checkpoints,
@@ -902,6 +948,9 @@ mod tests {
         buf.push(ev(0, TraceEventKind::Reduce { from: 1, pairs: 8 }));
         buf.push(ev(0, TraceEventKind::FrameSent { dst: 1, frames: 3, bytes: 96 }));
         buf.push(ev(0, TraceEventKind::TransportStall { dst: 1, stalls: 2 }));
+        buf.push(ev(0, TraceEventKind::FrameDropped { dst: 1, seq: 5, attempt: 0, corrupt: true }));
+        buf.push(ev(0, TraceEventKind::FrameRetried { dst: 1, seq: 5, attempt: 1, backoff_ns: 200_000 }));
+        buf.push(ev(0, TraceEventKind::NodeTimedOut { dst: 1, attempts: 9 }));
         let mut col = TraceCollector::new(true);
         col.absorb_job("j", buf);
         // Canonical view: only the schedule-invariant Reduce line survives.
@@ -910,12 +959,33 @@ mod tests {
         assert!(jsonl.contains("\"ev\":\"Reduce\""));
         assert!(!jsonl.contains("FrameSent"));
         assert!(!jsonl.contains("TransportStall"));
+        assert!(!jsonl.contains("FrameDropped"));
+        assert!(!jsonl.contains("FrameRetried"));
+        assert!(!jsonl.contains("NodeTimedOut"));
         // Chrome view keeps them, with the transport fields in args.
         let chrome = col.chrome_json();
         assert_eq!(chrome.matches("\"name\":\"FrameSent\"").count(), 1);
         assert_eq!(chrome.matches("\"name\":\"TransportStall\"").count(), 1);
+        assert_eq!(chrome.matches("\"name\":\"FrameDropped\"").count(), 1);
+        assert_eq!(chrome.matches("\"name\":\"FrameRetried\"").count(), 1);
+        assert_eq!(chrome.matches("\"name\":\"NodeTimedOut\"").count(), 1);
         assert!(chrome.contains("\"frames\":3"));
         assert!(chrome.contains("\"stalls\":2"));
+        assert!(chrome.contains("\"corrupt\":true"));
+        assert!(chrome.contains("\"backoff_ns\":200000"));
+        assert!(chrome.contains("\"attempts\":9"));
+    }
+
+    #[test]
+    fn midblock_abort_is_canonical() {
+        let mut buf = TraceBuf::new(true);
+        buf.push(ev(2, TraceEventKind::MidblockAbort { block: 3, victim: 2, items: 40 }));
+        let mut col = TraceCollector::new(true);
+        col.absorb_job("j", buf);
+        let jsonl = col.canonical_jsonl();
+        assert_eq!(jsonl.lines().count(), 1);
+        assert!(jsonl.contains("\"ev\":\"MidblockAbort\""));
+        assert!(jsonl.contains("\"block\":3,\"victim\":2,\"items\":40"));
     }
 
     #[test]

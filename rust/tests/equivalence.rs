@@ -33,6 +33,7 @@
 
 use blaze::containers::{DistHashMap, DistRange, DistVector};
 use blaze::coordinator::cluster::{Backend, Cluster, ClusterConfig, EngineKind};
+use blaze::exec::transport::TransportFaultPlan;
 use blaze::fault::{FailurePlan, FaultConfig};
 use blaze::mapreduce::{mapreduce, mapreduce_range, Reducer};
 use blaze::util::SplitRng;
@@ -588,6 +589,186 @@ fn chained_and_iterative_trace_logs_byte_identical_across_backends() {
             }
         }
     }
+}
+
+// ---- Chaos leg: mid-block kills × lossy transport ----------------------
+
+/// Run the two-stage wordcount pipeline under `cfg`, returning the sorted
+/// results, the canonical trace log, and the summed `transport.*` run
+/// counters.
+fn run_wordcount_chaos(
+    cfg: &ClusterConfig,
+    lines: &[String],
+) -> ((Vec<(String, u64)>, Vec<(u64, u64)>), String, Vec<(String, u64)>) {
+    let c = Cluster::new(cfg.clone());
+    let dv = DistVector::from_vec(&c, lines.to_vec());
+    let mut words: DistHashMap<String, u64> = DistHashMap::new(&c);
+    mapreduce(
+        &dv,
+        |_, line: &String, emit| {
+            for w in line.split_whitespace() {
+                emit(w.to_string(), 1u64);
+            }
+        },
+        "sum",
+        &mut words,
+    );
+    let mut hist: DistHashMap<u64, u64> = DistHashMap::new(&c);
+    mapreduce(
+        &words,
+        |w: &String, n: &u64, emit| emit((w.len() as u64 % 5) * 100 + n % 7, *n),
+        "sum",
+        &mut hist,
+    );
+    let mut counts: Vec<(String, u64)> = words.collect().into_iter().collect();
+    counts.sort_unstable();
+    let mut classes: Vec<(u64, u64)> = hist.collect().into_iter().collect();
+    classes.sort_unstable();
+    let log = c.trace().canonical_jsonl();
+    let m = c.metrics();
+    let mut totals: std::collections::BTreeMap<String, u64> = Default::default();
+    for run in m.runs() {
+        for (name, v) in &run.counters {
+            if name.starts_with("transport.") || name.starts_with("fault.") {
+                *totals.entry(name.clone()).or_insert(0) += v;
+            }
+        }
+    }
+    ((counts, classes), log, totals.into_iter().collect())
+}
+
+/// Full-spectrum chaos grid: {mid-block kill, lossy transport, both} ×
+/// {simulated, threaded 1/2/4} × {hot-standby, evacuate}. Every leg's
+/// *results* must be byte-identical to the failure-free reference.
+/// Canonical traces are gated per failure mode: lossy-only legs must match
+/// the lossless reference log byte-for-byte (retries, drops, and backoff
+/// are chrome-only observability), and each kill config's log must be
+/// byte-identical across all four backends (the `MidblockAbort` / `Kill`
+/// timeline is part of the canonical record).
+#[test]
+fn chaos_midblock_kills_and_lossy_transport_byte_identical() {
+    let backends = [
+        ("simulated", Backend::Simulated),
+        ("threaded1", Backend::Threaded(1)),
+        ("threaded2", Backend::Threaded(2)),
+        ("threaded4", Backend::Threaded(4)),
+    ];
+    let lines = gen_lines(0xC4A0_5EED, 90);
+    for &(nodes, workers) in &[(3usize, 2usize), (5usize, 4usize)] {
+        let base = ClusterConfig::sized(nodes, workers)
+            .with_backend(Backend::Simulated)
+            .with_seed(0xC4A0_0001)
+            .with_trace(true);
+        let (ref_result, ref_log, _) = run_wordcount_chaos(&base, &lines);
+
+        // Mid-block kill: node 1 dies while its first block's map is two
+        // items in; the prefix partials must never leak into any shard.
+        let kill = FailurePlan::kill_at_item(1, workers, 2);
+        // Lossy transport, the chaos rates from the bench matrix; the
+        // retry budget is generous so no leg exhausts it here.
+        let lossy = TransportFaultPlan::new(0.2, 0.05, 0xC4A0_1055).with_retry_max(16);
+
+        // Lossy-only legs (ordinary engines, channel transport under the
+        // threaded backend; the simulated backend ignores the plan).
+        let mut kept: Option<(&str, String)> = None;
+        for (name, backend) in backends {
+            let cfg = base.clone().with_backend(backend).with_net_fault(lossy);
+            let (result, log, _) = run_wordcount_chaos(&cfg, &lines);
+            assert_eq!(
+                ref_result, result,
+                "lossy/{name} result diverged (shape {nodes}x{workers})"
+            );
+            assert_eq!(
+                ref_log, log,
+                "lossy/{name} canonical trace diverged from lossless \
+                 (shape {nodes}x{workers})"
+            );
+            kept = kept.or(Some((name, log)));
+        }
+        drop(kept);
+
+        // Kill legs (and kill+lossy legs) × recovery policy: the
+        // recoverable engine's shuffle is flow-model by design, so the
+        // lossy plan is inert there — the combined leg locks that in.
+        for evac in [false, true] {
+            for lossy_too in [false, true] {
+                let mut reference: Option<(&str, String)> = None;
+                for (name, backend) in backends {
+                    let mut cfg = base.clone().with_backend(backend).with_fault(
+                        FaultConfig::default()
+                            .with_checkpoint_every(3)
+                            .with_plan(kill.clone())
+                            .with_evacuation(evac),
+                    );
+                    if lossy_too {
+                        cfg = cfg.with_net_fault(lossy);
+                    }
+                    let (result, log, counters) = run_wordcount_chaos(&cfg, &lines);
+                    assert_eq!(
+                        ref_result, result,
+                        "kill(evac={evac},lossy={lossy_too})/{name} result diverged \
+                         (shape {nodes}x{workers})"
+                    );
+                    assert!(
+                        log.contains("\"ev\":\"MidblockAbort\""),
+                        "kill leg must record the abort under {name} \
+                         (shape {nodes}x{workers})"
+                    );
+                    assert!(
+                        counters.iter().any(|(n, v)| n == "fault.midblock_aborts" && *v > 0),
+                        "kill leg must count the abort under {name}"
+                    );
+                    match &reference {
+                        None => reference = Some((name, log)),
+                        Some((ref_name, want)) => assert_eq!(
+                            want, &log,
+                            "kill(evac={evac},lossy={lossy_too}) trace: {name} diverged \
+                             from {ref_name} (shape {nodes}x{workers})"
+                        ),
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// The lossy legs really exercise the retry machinery: under aggressive
+/// loss rates the threaded backends must record retransmissions (the
+/// fates are a pure function of the plan seed, so the counts are exact
+/// and identical at every thread count) while results and canonical
+/// traces still match the lossless reference.
+#[test]
+fn lossy_transport_retries_observed_and_results_identical() {
+    let lines = gen_lines(0xC4A0_5EED, 90);
+    let (nodes, workers) = (3usize, 2usize);
+    let base = ClusterConfig::sized(nodes, workers)
+        .with_backend(Backend::Simulated)
+        .with_seed(0xC4A0_0002)
+        .with_trace(true);
+    let (ref_result, ref_log, _) = run_wordcount_chaos(&base, &lines);
+    // Half the attempts fail; a deep retry budget and an effectively
+    // unbounded deadline keep every frame deliverable.
+    let plan = TransportFaultPlan::new(0.4, 0.1, 0xC4A0_2066)
+        .with_retry_max(64)
+        .with_timeout_ns(u64::MAX);
+    let mut retry_counts = Vec::new();
+    for threads in [1usize, 2, 4] {
+        let cfg = base.clone().with_backend(Backend::Threaded(threads)).with_net_fault(plan);
+        let (result, log, counters) = run_wordcount_chaos(&cfg, &lines);
+        assert_eq!(ref_result, result, "threaded{threads} lossy result diverged");
+        assert_eq!(ref_log, log, "threaded{threads} lossy canonical trace diverged");
+        let retries = counters
+            .iter()
+            .find(|(n, _)| n == "transport.retries")
+            .map(|&(_, v)| v)
+            .unwrap_or(0);
+        assert!(retries > 0, "threaded{threads} must observe retransmissions");
+        retry_counts.push(retries);
+    }
+    // The mirror resolves fates coordinator-side: identical counts at
+    // every thread count.
+    assert_eq!(retry_counts[0], retry_counts[1]);
+    assert_eq!(retry_counts[1], retry_counts[2]);
 }
 
 // ---- Harness self-check ------------------------------------------------

@@ -96,6 +96,49 @@ fn prop_overlong_varints_rejected_minimal_accepted() {
     }
 }
 
+/// Retry-path buffer hygiene: the lossy transport re-encodes frames into
+/// recycled [`BufferPool`] buffers, so a *shorter* frame written over a
+/// buffer that previously held a longer one must leave no stale tail —
+/// `encode_frame_into` resets the length, the header's length field is
+/// exact, and the checksum verifies over exactly the payload. Covers both
+/// direct in-place reuse (the retransmit path) and a pool round-trip.
+#[test]
+fn prop_frame_reencode_into_recycled_buffers_has_no_stale_tail() {
+    use blaze::ser::fastser::{decode_frame, encode_frame_into, FRAME_HEADER_BYTES};
+    use blaze::util::alloc::BufferPool;
+
+    let mut rng = SplitRng::new(0xF4A_3E6, 12);
+    let pool: BufferPool = BufferPool::new();
+    for case in 0..200 {
+        let long: Vec<u8> = (0..64 + rng.below(900)).map(|_| rng.below(256) as u8).collect();
+        let short: Vec<u8> = (0..rng.below(60)).map(|_| rng.below(256) as u8).collect();
+
+        // Direct reuse: the same buffer carries attempt 1 (long), then is
+        // re-encoded in place for a different, shorter frame.
+        let buf = pool.get(FRAME_HEADER_BYTES + long.len());
+        let buf = encode_frame_into(&long, buf);
+        assert_eq!(decode_frame(&buf).unwrap(), &long[..], "case {case}: long frame");
+        let buf = encode_frame_into(&short, buf);
+        assert_eq!(
+            buf.len(),
+            FRAME_HEADER_BYTES + short.len(),
+            "case {case}: stale tail survived in-place re-encode"
+        );
+        assert_eq!(decode_frame(&buf).unwrap(), &short[..], "case {case}: short frame");
+
+        // Pool round-trip: recycle, reacquire (same class ⇒ same buffer),
+        // and encode the short frame into whatever came back.
+        pool.put(buf);
+        let buf = pool.get(FRAME_HEADER_BYTES + long.len());
+        let buf = encode_frame_into(&short, buf);
+        assert_eq!(buf.len(), FRAME_HEADER_BYTES + short.len(), "case {case}");
+        assert_eq!(decode_frame(&buf).unwrap(), &short[..], "case {case}: pooled reuse");
+        pool.put(buf);
+    }
+    let (hits, _) = pool.stats();
+    assert!(hits > 0, "the pool round-trip really recycled buffers");
+}
+
 /// Frame-level rejection: a batch whose count varint (or any interior
 /// varint) is re-encoded overlong must fail `decode_pairs_exact`, and
 /// truncating a frame at every byte boundary must error — never panic,

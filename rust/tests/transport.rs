@@ -21,6 +21,7 @@
 
 use blaze::containers::{DistHashMap, DistRange, DistVector};
 use blaze::coordinator::cluster::{Backend, Cluster, ClusterConfig};
+use blaze::exec::transport::TransportFaultPlan;
 use blaze::mapreduce::{mapreduce, mapreduce_range};
 use blaze::util::SplitRng;
 
@@ -183,6 +184,89 @@ fn degenerate_shapes_keep_transport_accounting() {
     assert_eq!(reference, got);
     assert_eq!(run.counter("transport.frames"), Some(0), "locals bypass channels");
     assert_eq!(run.counter("transport.stalls"), Some(0));
+}
+
+/// Lossy transport, exact counts: the per-attempt fates are a pure
+/// function of `(plan seed, src, dst, seq, attempt)`, so the reliability
+/// counters are *exactly* reproducible — identical across thread counts,
+/// across repeat runs, and internally consistent (`retries = drops +
+/// corrupt` when nothing times out) — while the skewed-f64 results stay
+/// bit-identical to the lossless simulated reference.
+#[test]
+fn lossy_counters_exact_and_thread_invariant() {
+    let items = gen_skewed(0x7A_4001, 3000);
+    let base = ClusterConfig::sized(3, 2).with_seed(0x7A_4002);
+    let (reference, sim_run) =
+        run_sum_f64(&base.clone().with_backend(Backend::Simulated), &items);
+    assert!(sim_run.counter("transport.retries").is_none());
+
+    // Aggressive loss so retransmissions are certain, with a retry budget
+    // and deadline deep enough that no frame can exhaust them.
+    let plan = TransportFaultPlan::new(0.5, 0.1, 0x7A_4003)
+        .with_retry_max(64)
+        .with_timeout_ns(u64::MAX);
+    let mut seen: Option<(u64, u64, u64, u64)> = None;
+    for &threads in THREADS {
+        for rep in 0..2 {
+            let cfg =
+                base.clone().with_backend(Backend::Threaded(threads)).with_net_fault(plan);
+            let (got, run) = run_sum_f64(&cfg, &items);
+            assert_eq!(reference, got, "lossy run diverged (threads={threads}, rep={rep})");
+            let retries = run.counter("transport.retries").expect("retries counted");
+            let drops = run.counter("transport.drops").expect("drops counted");
+            let corrupt = run.counter("transport.corrupt").expect("corruptions counted");
+            let backoff = run.counter("transport.backoff_ns").expect("backoff counted");
+            assert_eq!(run.counter("transport.timeouts"), Some(0), "budget never exhausts");
+            assert!(retries > 0, "half the attempts fail: retransmissions are certain");
+            assert_eq!(
+                retries,
+                drops + corrupt,
+                "every lost attempt retries exactly once (threads={threads})"
+            );
+            assert!(backoff > 0, "retries pay virtual backoff");
+            match seen {
+                None => seen = Some((retries, drops, corrupt, backoff)),
+                Some(want) => assert_eq!(
+                    want,
+                    (retries, drops, corrupt, backoff),
+                    "reliability counters drifted (threads={threads}, rep={rep})"
+                ),
+            }
+        }
+    }
+
+    // A lossless threaded run records none of the reliability counters.
+    let (_, clean) = run_sum_f64(&base.clone().with_backend(Backend::Threaded(2)), &items);
+    assert!(clean.counter("transport.retries").is_none());
+    assert!(clean.counter("transport.timeouts").is_none());
+}
+
+/// Retry exhaustion is a structured error, not a hang: with every attempt
+/// dropped and a 3-retry budget the first cross-node frame fails after
+/// exactly 4 sends and 100+200+400 µs of virtual backoff, the transport
+/// declares the destination dead, and the shuffle degrades onto the flow
+/// model — results still bit-identical, `transport.timeouts` and
+/// `transport.backoff_ns` exact.
+#[test]
+fn retry_exhaustion_degrades_gracefully_with_exact_counts() {
+    let items = gen_skewed(0x7A_5001, 2000);
+    let base = ClusterConfig::sized(3, 2).with_seed(0x7A_5002);
+    let (reference, _) = run_sum_f64(&base.clone().with_backend(Backend::Simulated), &items);
+    let plan = TransportFaultPlan::new(1.0, 0.0, 0x7A_5003).with_retry_max(3);
+    for &threads in THREADS {
+        let cfg = base.clone().with_backend(Backend::Threaded(threads)).with_net_fault(plan);
+        let (got, run) = run_sum_f64(&cfg, &items);
+        assert_eq!(reference, got, "degraded run diverged (threads={threads})");
+        assert_eq!(
+            run.counter("transport.timeouts"),
+            Some(1),
+            "one structured failure per phase (threads={threads})"
+        );
+        // The fatal frame retried 3 times: backoff 100k + 200k + 400k ns.
+        assert_eq!(run.counter("transport.backoff_ns"), Some(700_000));
+        assert_eq!(run.counter("transport.retries"), Some(0), "failure path records no retry");
+        assert!(run.wall_ns("transport").is_some(), "transport phase still recorded");
+    }
 }
 
 /// The dense small-key path moves tree-reduce rounds through the same
